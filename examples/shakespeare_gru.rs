@@ -1,0 +1,49 @@
+//! Figure 6 on the XLA path: the char-GRU next-character task with
+//! n = 32 cohort and m ∈ {2, 6}, comparing all three strategies.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example shakespeare_gru \
+//!     [-- --rounds 40 --pool 120 --workers 4]
+//! ```
+
+use fedsamp::config::{presets, DataSpec};
+use fedsamp::exp::figures::print_summary;
+use fedsamp::exp::{default_artifacts_dir, have_artifacts, run_comparison};
+use fedsamp::fl::TrainOptions;
+use fedsamp::util::args::Cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("shakespeare_gru", "XLA-path Figure 6 driver")
+        .opt("rounds", Some("40"), "communication rounds")
+        .opt("pool", Some("120"), "client pool (paper: 715 roles)")
+        .opt("workers", Some("4"), "PJRT worker threads")
+        .opt("ms", Some("2,6"), "budgets to run");
+    let p = cli.parse(&argv).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+
+    let artifacts = default_artifacts_dir();
+    if !have_artifacts(&artifacts) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    for m in p.usize_list("ms") {
+        let mut cfg = presets::shakespeare(32, m);
+        cfg.rounds = p.usize("rounds");
+        cfg.data = DataSpec::ShakespeareLike { pool: p.usize("pool") };
+        cfg.workers = p.usize("workers");
+        cfg.eval_examples = 512;
+        println!(
+            "\nshakespeare GRU: n=32, m={m}, {} rounds, pool {}",
+            cfg.rounds,
+            p.usize("pool")
+        );
+        let opts = TrainOptions { compressor: None, verbose_every: 10 };
+        let arms = run_comparison(&cfg, 1, &artifacts, &opts)
+            .expect("shakespeare run failed");
+        print_summary(&format!("Figure 6 (m={m}, XLA path)"), &arms);
+    }
+}

@@ -1,0 +1,112 @@
+"""AOT pipeline: lower every registry model's train/eval step to HLO text.
+
+Build-time only — `make artifacts` runs this once; the rust coordinator
+then loads `artifacts/*.hlo.txt` through PJRT and python never appears on
+the training path again.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model NAME:
+  NAME_train.hlo.txt    (params…, xb, onehot, lr) -> (params…, loss)
+  NAME_eval.hlo.txt     (params…, xb, onehot)     -> (loss_sum, correct)
+  NAME_init.bin         f32-LE concat of initial params (seeded)
+plus a single manifest.json describing shapes/dtypes/sizes for rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (ModelDef, build_registry, example_args, make_eval_step,
+                    make_train_step)
+
+INIT_SEED = 20200530  # arXiv id of the paper, why not
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_model(model: ModelDef, out_dir: str) -> dict:
+    train = jax.jit(make_train_step(model))
+    evalf = jax.jit(make_eval_step(model))
+    train_hlo = to_hlo_text(train.lower(*example_args(model, train=True)))
+    eval_hlo = to_hlo_text(evalf.lower(*example_args(model, train=False)))
+
+    train_path = f"{model.name}_train.hlo.txt"
+    eval_path = f"{model.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(eval_hlo)
+
+    # Deterministic initial parameters (rust can also re-init per seed).
+    params = model.init(jax.random.PRNGKey(INIT_SEED))
+    init_path = f"{model.name}_init.bin"
+    with open(os.path.join(out_dir, init_path), "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+    return {
+        "kind": model.kind,
+        "train_hlo": train_path,
+        "eval_hlo": eval_path,
+        "init_params": init_path,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "size": s.size}
+            for s in model.param_specs
+        ],
+        "num_params": model.num_params,
+        "input_shape": list(model.input_shape),
+        "input_dtype": model.input_dtype,
+        "num_classes": model.num_classes,
+        "batch_size": model.batch_size,
+        "eval_batch": model.eval_batch,
+        "use_pallas": model.use_pallas,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of registry names (default: all)")
+    ap.add_argument("--small", action="store_true",
+                    help="small hidden sizes (test builds)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    registry = build_registry(small=args.small)
+    names = args.models or list(registry)
+
+    manifest = {"format_version": 1, "seed": INIT_SEED, "models": {}}
+    for name in names:
+        model = registry[name]
+        print(f"[aot] lowering {name} "
+              f"({model.num_params} params, pallas={model.use_pallas}) ...")
+        manifest["models"][name] = lower_model(model, args.out_dir)
+
+    blob = json.dumps(manifest, indent=1, sort_keys=True)
+    manifest["sha256"] = hashlib.sha256(blob.encode()).hexdigest()
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(names)} models to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .fused_linear import (  # noqa: F401
+    ACTIVATIONS,
+    fused_linear,
+    matmul,
+    mxu_utilization,
+    pmatmul,
+    vmem_bytes,
+)
+from .sgd_update import sgd_update, sgd_update_flat  # noqa: F401
+from .softmax_xent import softmax_xent, xent_loss  # noqa: F401

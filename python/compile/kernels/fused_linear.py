@@ -1,0 +1,199 @@
+"""L1 Pallas kernels: tiled matmul and fused linear (matmul + bias + activation).
+
+These are the compute hot-spots of every client's local training epoch
+(dense layers of the MLP/CNN heads and all GRU gate projections).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles M×N×K into
+MXU-friendly blocks (default 128×128×128, f32). Each (i, j) output block
+stays resident in VMEM while the k-loop streams x/w blocks HBM→VMEM via
+BlockSpec; the epilogue (bias + activation) runs on the final k step so
+the activation never round-trips to HBM. On this image we execute under
+``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls); correctness
+is asserted against ``ref.py`` by pytest and the real-TPU efficiency is
+estimated structurally in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Everything in this repo runs the interpret path (CPU PJRT target).
+INTERPRET = True
+
+ACTIVATIONS = ("none", "relu", "tanh", "sigmoid")
+
+
+def _apply_activation(x, activation: str):
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _block(dim: int, target: int, multiple: int = 8) -> int:
+    """Pick a block size: full (rounded-up) dim for small axes, else `target`.
+
+    `target`=128 matches the MXU systolic-array tile; small axes round up
+    to the 8-sublane granule instead of wasting a full 128 tile.
+    """
+    return target if dim >= target else _round_up(max(dim, 1), multiple)
+
+
+def _pad2(a, m0: int, m1: int):
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """Accumulating matmul tile: o[i,j] += x[i,k] @ w[k,j] over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _fused_linear_kernel(
+    x_ref, w_ref, b_ref, o_ref, *, k_steps: int, activation: str
+):
+    """Matmul tile with a bias+activation epilogue on the last k step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = _apply_activation(o_ref[...] + b_ref[...], activation)
+
+
+def matmul(x, w, *, bm: int | None = None, bn: int | None = None,
+           bk: int | None = None, interpret: bool = INTERPRET):
+    """Tiled Pallas matmul ``x @ w`` for f32 operands of any 2-D shape.
+
+    Inputs are zero-padded up to block multiples and the result sliced
+    back, so arbitrary (M, K) x (K, N) shapes are supported.
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    if k != k2:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+    bm = bm or _block(m, 128)
+    bn = bn or _block(n, 128)
+    bk = bk or _block(k, 128)
+    xp = _pad2(x.astype(jnp.float32), bm, bk)
+    wp = _pad2(w.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def fused_linear(x, w, b, *, activation: str = "none",
+                 bm: int | None = None, bn: int | None = None,
+                 bk: int | None = None, interpret: bool = INTERPRET):
+    """Fused ``activation(x @ w + b)`` — one VMEM-resident epilogue, no
+    extra HBM round-trip for the pre-activation. ``b`` has shape (N,)."""
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    (m, k), (k2, n) = x.shape, w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(
+            f"fused_linear shape mismatch: {x.shape} @ {w.shape} + {b.shape}"
+        )
+    bm = bm or _block(m, 128)
+    bn = bn or _block(n, 128)
+    bk = bk or _block(k, 128)
+    xp = _pad2(x.astype(jnp.float32), bm, bk)
+    wp = _pad2(w.astype(jnp.float32), bk, bn)
+    bp = _pad2(b.astype(jnp.float32)[None, :], 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_linear_kernel, k_steps=grid[2], activation=activation
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper: autodiff cannot see through pallas_call, so the
+# VJP is spelled out with the same tiled kernel (dA = g @ B^T, dB = A^T @ g).
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def pmatmul(x, w):
+    """Differentiable Pallas matmul used by the L2 models."""
+    return matmul(x, w)
+
+
+def _pmatmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _pmatmul_bwd(res, g):
+    x, w = res
+    return matmul(g, w.T), matmul(x.T, g)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM footprint of one grid step (x, w, bias, acc blocks).
+
+    Used by EXPERIMENTS.md §Perf to check the default tiling fits the
+    ~16 MiB/core VMEM budget with room for double buffering.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs doing useful work after padding."""
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+pytest asserts ``assert_allclose(kernel(...), ref(...))`` under hypothesis
+shape/dtype sweeps — this file must stay free of pallas imports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def fused_linear_ref(x, w, b, *, activation: str = "none"):
+    z = matmul_ref(x, w) + b.astype(jnp.float32)
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(z)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def softmax_xent_ref(logits, onehot):
+    logits = logits.astype(jnp.float32)
+    onehot = onehot.astype(jnp.float32)
+    log_probs = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.sum(onehot * log_probs, axis=-1)
+    dlogits = jnp.exp(log_probs) - onehot
+    return loss, dlogits
+
+
+def sgd_update_flat_ref(p, g, lr):
+    return p.astype(jnp.float32) - jnp.float32(lr) * g.astype(jnp.float32)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: fused in-place SGD parameter update ``p - lr * g``.
+
+Elementwise over the flattened parameter vector, gridded in VPU-friendly
+1-D blocks. The learning rate arrives as a (1,)-shaped array replicated
+to every grid step via a constant index map (scalar-prefetch is a
+TPU-Mosaic feature; a broadcast block is the portable spelling).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import INTERPRET
+
+BLOCK = 4096
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update_flat(p, g, lr, *, block: int = BLOCK,
+                    interpret: bool = INTERPRET):
+    """SGD step over 1-D f32 arrays. ``lr`` is a scalar or (1,) array."""
+    if p.shape != g.shape or p.ndim != 1:
+        raise ValueError(f"sgd_update_flat shapes: {p.shape} vs {g.shape}")
+    n = p.shape[0]
+    lr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    pad = (-n) % block
+    pp = jnp.pad(p.astype(jnp.float32), (0, pad))
+    gp = jnp.pad(g.astype(jnp.float32), (0, pad))
+    grid = (pp.shape[0] // block,)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+        interpret=interpret,
+    )(pp, gp, lr)
+    return out[:n]
+
+
+def sgd_update(params, grads, lr, *, interpret: bool = INTERPRET):
+    """Apply the fused SGD kernel leaf-wise over a parameter pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    new = [
+        sgd_update_flat(p.reshape(-1), g.reshape(-1), lr,
+                        interpret=interpret).reshape(p.shape)
+        for p, g in zip(leaves, gleaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new)

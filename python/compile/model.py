@@ -1,0 +1,340 @@
+"""L2: JAX model definitions (fwd/bwd) built on the L1 Pallas kernels.
+
+Three model families cover the paper's workloads:
+
+* ``mlp``   — image classification head (FEMNIST-like / CIFAR-like).
+* ``cnn``   — the McMahan-et-al. CNN (2 conv blocks + dense) used by the
+              paper's FEMNIST experiments; conv layers use ``lax.conv``
+              (XLA already fuses these optimally), dense layers and the
+              loss head use the Pallas kernels.
+* ``gru``   — next-character model (Shakespeare-like): embedding + N GRU
+              layers + dense head, gates via the Pallas matmul.
+
+Every model exposes two AOT entry points, each lowered once by
+``aot.py`` and executed forever after from the rust coordinator:
+
+* ``train_step(params…, xb, yb_onehot, lr) -> (params…, loss)``
+  one mini-batch SGD step; the rust client loop iterates it R times.
+* ``eval_step(params…, xb, yb_onehot) -> (loss_sum, correct)``
+  summed loss + correct-count over an eval batch.
+
+Parameters travel as a *flat ordered list* of f32 arrays; the order is
+frozen in ``param_specs`` and mirrored in artifacts/manifest.json so the
+rust side can (de)serialize without pytree knowledge.
+
+``use_pallas=False`` builds a structurally identical variant where the
+dense ops are plain jnp — the interpret-mode Pallas while-loops are a
+CPU-only artifact, so the rust benches use the XLA variant for wall-clock
+runs while pytest pins pallas ≡ jnp ≡ ref (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import pmatmul, xent_loss
+from .kernels.ref import matmul_ref, softmax_xent_ref
+
+# --------------------------------------------------------------------------
+# primitives parameterized on the kernel backend
+# --------------------------------------------------------------------------
+
+
+def _dense(x, w, b, *, activation: str, use_pallas: bool):
+    mm = pmatmul if use_pallas else matmul_ref
+    z = mm(x, w) + b
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(z)
+    raise ValueError(activation)
+
+
+def _ce_loss_vec(logits, onehot, *, use_pallas: bool):
+    if use_pallas:
+        return xent_loss(logits, onehot)
+    loss, _ = softmax_xent_ref(logits, onehot)
+    return loss
+
+
+# --------------------------------------------------------------------------
+# model specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Everything aot.py needs to lower + describe one model variant."""
+
+    name: str
+    kind: str                      # mlp | cnn | gru
+    param_specs: tuple[ParamSpec, ...]
+    forward: Callable              # (params list, x int/f32 batch) -> logits
+    input_shape: tuple[int, ...]   # per-example shape (images: flat; text: (seq,))
+    num_classes: int
+    batch_size: int
+    eval_batch: int
+    input_dtype: str               # "f32" | "i32"
+    use_pallas: bool
+
+    def init(self, key) -> list:
+        params = []
+        for spec in self.param_specs:
+            key, sub = jax.random.split(key)
+            if len(spec.shape) >= 2:
+                fan_in = 1
+                for s in spec.shape[:-1]:
+                    fan_in *= s
+                scale = 1.0 / float(max(fan_in, 1)) ** 0.5
+                params.append(
+                    scale * jax.random.truncated_normal(
+                        sub, -2.0, 2.0, spec.shape, jnp.float32))
+            else:
+                params.append(jnp.zeros(spec.shape, jnp.float32))
+        return params
+
+    @property
+    def num_params(self) -> int:
+        return sum(s.size for s in self.param_specs)
+
+
+# ---------------------------------- MLP ----------------------------------
+
+
+def make_mlp(name: str, *, input_dim: int, hidden: Sequence[int],
+             num_classes: int, batch_size: int, eval_batch: int,
+             use_pallas: bool) -> ModelDef:
+    dims = [input_dim, *hidden, num_classes]
+    specs = []
+    for i in range(len(dims) - 1):
+        specs.append(ParamSpec(f"w{i}", (dims[i], dims[i + 1])))
+        specs.append(ParamSpec(f"b{i}", (dims[i + 1],)))
+
+    def forward(params, x):
+        h = x
+        nlayer = len(dims) - 1
+        for i in range(nlayer):
+            act = "relu" if i < nlayer - 1 else "none"
+            h = _dense(h, params[2 * i], params[2 * i + 1],
+                       activation=act, use_pallas=use_pallas)
+        return h
+
+    return ModelDef(name, "mlp", tuple(specs), forward, (input_dim,),
+                    num_classes, batch_size, eval_batch, "f32", use_pallas)
+
+
+# ---------------------------------- CNN ----------------------------------
+
+
+def make_cnn(name: str, *, side: int, channels: int, num_classes: int,
+             batch_size: int, eval_batch: int, use_pallas: bool,
+             conv1: int = 32, conv2: int = 64, dense: int = 128) -> ModelDef:
+    """McMahan-style CNN: conv5x5(c1) → pool2 → conv5x5(c2) → pool2 → dense."""
+    flat_side = side // 4
+    flat = flat_side * flat_side * conv2
+    specs = (
+        ParamSpec("conv1_w", (5, 5, channels, conv1)),
+        ParamSpec("conv1_b", (conv1,)),
+        ParamSpec("conv2_w", (5, 5, conv1, conv2)),
+        ParamSpec("conv2_b", (conv2,)),
+        ParamSpec("dense_w", (flat, dense)),
+        ParamSpec("dense_b", (dense,)),
+        ParamSpec("head_w", (dense, num_classes)),
+        ParamSpec("head_b", (num_classes,)),
+    )
+
+    def _conv(x, w, b):
+        y = lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jnp.maximum(y + b, 0.0)
+
+    def _pool(x):
+        return lax.reduce_window(
+            x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    def forward(params, x):
+        b = x.shape[0]
+        img = x.reshape(b, side, side, channels)
+        h = _pool(_conv(img, params[0], params[1]))
+        h = _pool(_conv(h, params[2], params[3]))
+        h = h.reshape(b, flat)
+        h = _dense(h, params[4], params[5], activation="relu",
+                   use_pallas=use_pallas)
+        return _dense(h, params[6], params[7], activation="none",
+                      use_pallas=use_pallas)
+
+    return ModelDef(name, "cnn", specs, forward,
+                    (side * side * channels,), num_classes, batch_size,
+                    eval_batch, "f32", use_pallas)
+
+
+# ---------------------------------- GRU ----------------------------------
+
+
+def make_gru(name: str, *, vocab: int, embed: int, hidden: int, layers: int,
+             seq_len: int, batch_size: int, eval_batch: int,
+             use_pallas: bool) -> ModelDef:
+    """Char-level GRU stack predicting the next character after seq_len."""
+    specs = [ParamSpec("embed", (vocab, embed))]
+    in_dim = embed
+    for ell in range(layers):
+        specs.append(ParamSpec(f"gru{ell}_wx", (in_dim, 3 * hidden)))
+        specs.append(ParamSpec(f"gru{ell}_wh", (hidden, 3 * hidden)))
+        specs.append(ParamSpec(f"gru{ell}_b", (3 * hidden,)))
+        in_dim = hidden
+    specs.append(ParamSpec("head_w", (hidden, vocab)))
+    specs.append(ParamSpec("head_b", (vocab,)))
+
+    mm = (lambda a, b: pmatmul(a, b)) if use_pallas else matmul_ref
+
+    def _gru_cell(h, x_t, wx, wh, b):
+        gx = mm(x_t, wx)
+        gh = mm(h, wh)
+        zx, rx, nx = jnp.split(gx + b, 3, axis=-1)
+        zh, rh, nh = jnp.split(gh, 3, axis=-1)
+        z = jax.nn.sigmoid(zx + zh)
+        r = jax.nn.sigmoid(rx + rh)
+        n = jnp.tanh(nx + r * nh)
+        return (1.0 - z) * n + z * h
+
+    def forward(params, tokens):
+        b = tokens.shape[0]
+        emb = params[0]
+        x = jnp.take(emb, tokens.astype(jnp.int32), axis=0)  # (B, T, E)
+        h_in = x
+        idx = 1
+        for _ in range(layers):
+            wx, wh, bb = params[idx], params[idx + 1], params[idx + 2]
+            idx += 3
+            h0 = jnp.zeros((b, wh.shape[0]), jnp.float32)
+
+            def step(h, x_t, wx=wx, wh=wh, bb=bb):
+                hn = _gru_cell(h, x_t, wx, wh, bb)
+                return hn, hn
+
+            _, hs = lax.scan(step, h0, jnp.swapaxes(h_in, 0, 1))
+            h_in = jnp.swapaxes(hs, 0, 1)  # (B, T, H)
+        last = h_in[:, -1, :]
+        return _dense(last, params[idx], params[idx + 1],
+                      activation="none", use_pallas=use_pallas)
+
+    return ModelDef(name, "gru", tuple(specs), forward, (seq_len,), vocab,
+                    batch_size, eval_batch, "i32", use_pallas)
+
+
+# --------------------------------------------------------------------------
+# train / eval steps
+# --------------------------------------------------------------------------
+
+
+def loss_fn(model: ModelDef, params, xb, onehot):
+    logits = model.forward(params, xb)
+    # Padded examples carry an all-zero one-hot row => masked out of the mean.
+    per_ex = _ce_loss_vec(logits, onehot, use_pallas=model.use_pallas)
+    mask = jnp.sum(onehot, axis=-1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_ex * mask) / denom
+
+
+def make_train_step(model: ModelDef):
+    def train_step(*args):
+        n = len(model.param_specs)
+        params = list(args[:n])
+        xb, onehot, lr = args[n], args[n + 1], args[n + 2]
+        loss, grads = jax.value_and_grad(
+            functools.partial(loss_fn, model))(params, xb, onehot)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return (*new_params, loss)
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef):
+    def eval_step(*args):
+        n = len(model.param_specs)
+        params = list(args[:n])
+        xb, onehot = args[n], args[n + 1]
+        logits = model.forward(params, xb)
+        per_ex = _ce_loss_vec(logits, onehot, use_pallas=model.use_pallas)
+        mask = jnp.sum(onehot, axis=-1)
+        pred = jnp.argmax(logits, axis=-1)
+        label = jnp.argmax(onehot, axis=-1)
+        correct = jnp.sum(jnp.where(mask > 0, (pred == label).astype(
+            jnp.float32), 0.0))
+        return jnp.sum(per_ex * mask), correct
+
+    return eval_step
+
+
+def example_args(model: ModelDef, *, train: bool):
+    """ShapeDtypeStructs matching the AOT entry-point signature."""
+    f32, i32 = jnp.float32, jnp.int32
+    b = model.batch_size if train else model.eval_batch
+    params = [jax.ShapeDtypeStruct(s.shape, f32) for s in model.param_specs]
+    xdt = f32 if model.input_dtype == "f32" else i32
+    xb = jax.ShapeDtypeStruct((b, *model.input_shape), xdt)
+    onehot = jax.ShapeDtypeStruct((b, model.num_classes), f32)
+    if train:
+        return (*params, xb, onehot, jax.ShapeDtypeStruct((), f32))
+    return (*params, xb, onehot)
+
+
+# --------------------------------------------------------------------------
+# registry — the set of artifacts `make artifacts` builds
+# --------------------------------------------------------------------------
+
+
+def build_registry(*, small: bool = False) -> dict:
+    """All AOT model variants.
+
+    ``small=True`` shrinks hidden sizes for fast pytest runs; the real
+    artifact build uses the full sizes below.
+    """
+    h = (64, 32) if small else (256, 128)
+    gru_h = 32 if small else 64
+    models = [
+        # FEMNIST-like: 28x28 grayscale, 62 classes, local batch 20 (paper §5.2)
+        make_mlp("femnist_mlp", input_dim=784, hidden=h, num_classes=62,
+                 batch_size=20, eval_batch=64, use_pallas=False),
+        make_mlp("femnist_mlp_pallas", input_dim=784, hidden=h,
+                 num_classes=62, batch_size=20, eval_batch=64,
+                 use_pallas=True),
+        # McMahan CNN used by the paper's FEMNIST runs
+        make_cnn("femnist_cnn", side=28, channels=1, num_classes=62,
+                 batch_size=20, eval_batch=64, use_pallas=False),
+        # CIFAR100-like: 32x32x3, 100 classes, balanced (paper Appendix G)
+        make_mlp("cifar_mlp", input_dim=3072, hidden=h, num_classes=100,
+                 batch_size=20, eval_batch=64, use_pallas=False),
+        # Shakespeare-like: 86-char vocab, seq len 5, batch 8 (paper §5.3)
+        make_gru("shakespeare_gru", vocab=86, embed=8, hidden=gru_h,
+                 layers=2, seq_len=5, batch_size=8, eval_batch=64,
+                 use_pallas=False),
+        make_gru("shakespeare_gru_pallas", vocab=86, embed=8, hidden=gru_h,
+                 layers=2, seq_len=5, batch_size=8, eval_batch=64,
+                 use_pallas=True),
+    ]
+    return {m.name: m for m in models}

@@ -1,0 +1,82 @@
+"""AOT pipeline: HLO text artifacts parse, manifest schema is sound."""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile.aot import INIT_SEED, lower_model, to_hlo_text
+from compile.model import build_registry, make_train_step, example_args
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    reg = build_registry(small=True)
+    with tempfile.TemporaryDirectory() as td:
+        entry = lower_model(reg["femnist_mlp"], td)
+        files = {name: open(os.path.join(td, entry[name])).read()
+                 if name.endswith("hlo") else None
+                 for name in ("train_hlo", "eval_hlo")}
+        with open(os.path.join(td, entry["init_params"]), "rb") as f:
+            init_blob = f.read()
+        yield reg["femnist_mlp"], entry, files, init_blob
+
+
+def test_hlo_text_is_parseable_module(artifacts):
+    _, entry, files, _ = artifacts
+    for key in ("train_hlo", "eval_hlo"):
+        text = files[key]
+        assert text.startswith("HloModule"), text[:40]
+        assert "ENTRY" in text
+
+
+def test_manifest_entry_schema(artifacts):
+    model, entry, _, _ = artifacts
+    assert entry["num_params"] == model.num_params
+    assert sum(p["size"] for p in entry["params"]) == model.num_params
+    assert entry["batch_size"] == model.batch_size
+    assert [p["name"] for p in entry["params"]] == \
+        [s.name for s in model.param_specs]
+
+
+def test_init_bin_round_trips(artifacts):
+    model, entry, _, blob = artifacts
+    assert len(blob) == 4 * model.num_params
+    vals = np.frombuffer(blob, dtype="<f4")
+    params = model.init(jax.random.PRNGKey(INIT_SEED))
+    flat = np.concatenate([np.asarray(p).reshape(-1) for p in params])
+    np.testing.assert_allclose(vals, flat, rtol=1e-6)
+
+
+def _entry_param_count(text: str) -> int:
+    """Count parameter() instructions inside the ENTRY computation only."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    count = 0
+    for line in lines[start + 1:]:
+        if line.startswith("}"):
+            break
+        if "= " in line and "parameter(" in line:
+            count += 1
+    return count
+
+
+def test_hlo_entry_signature_counts(artifacts):
+    model, entry, files, _ = artifacts
+    # train: nparams + 3 inputs (xb, onehot, lr); eval: nparams + 2
+    assert _entry_param_count(files["train_hlo"]) == len(model.param_specs) + 3
+    assert _entry_param_count(files["eval_hlo"]) == len(model.param_specs) + 2
+
+
+def test_to_hlo_text_deterministic():
+    reg = build_registry(small=True)
+    model = reg["shakespeare_gru"]
+    lowered = jax.jit(make_train_step(model)).lower(
+        *example_args(model, train=True))
+    assert to_hlo_text(lowered) == to_hlo_text(lowered)

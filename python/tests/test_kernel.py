@@ -1,0 +1,171 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and block sizes) so padding paths, single-block
+paths and multi-block grids are all exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (ACTIVATIONS, fused_linear, matmul,
+                             mxu_utilization, pmatmul, sgd_update,
+                             sgd_update_flat, softmax_xent, vmem_bytes,
+                             xent_loss)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ------------------------------ matmul -----------------------------------
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70))
+def test_matmul_matches_ref(m, k, n):
+    x, w = _rand(0, (m, k)), _rand(1, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+       bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([8, 16, 32]),
+       bk=st.sampled_from([8, 16, 32]))
+def test_matmul_block_sweep(m, k, n, bm, bn, bk):
+    x, w = _rand(2, (m, k)), _rand(3, (k, n))
+    got = matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_large_multiblock():
+    x, w = _rand(4, (256, 384)), _rand(5, (384, 256))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+# --------------------------- fused linear --------------------------------
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_fused_linear_activations(activation):
+    x, w, b = _rand(6, (20, 37)), _rand(7, (37, 62)), _rand(8, (62,))
+    got = fused_linear(x, w, b, activation=activation)
+    want = ref.fused_linear_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 50), k=st.integers(1, 50), n=st.integers(1, 50),
+       act=st.sampled_from(ACTIVATIONS))
+def test_fused_linear_shape_sweep(m, k, n, act):
+    x, w, b = _rand(9, (m, k)), _rand(10, (k, n)), _rand(11, (n,))
+    got = fused_linear(x, w, b, activation=act)
+    want = ref.fused_linear_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_bad_activation():
+    with pytest.raises(ValueError):
+        fused_linear(jnp.zeros((2, 3)), jnp.zeros((3, 4)), jnp.zeros((4,)),
+                     activation="gelu6")
+
+
+# --------------------------- softmax xent --------------------------------
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 64), c=st.sampled_from([2, 10, 62, 86, 100]))
+def test_softmax_xent_matches_ref(b, c):
+    logits = _rand(12, (b, c))
+    labels = jax.random.randint(jax.random.PRNGKey(13), (b,), 0, c)
+    onehot = jax.nn.one_hot(labels, c)
+    l1, d1 = softmax_xent(logits, onehot)
+    l2, d2 = ref.softmax_xent_ref(logits, onehot)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0], [50.0, 50.0, 50.0]], jnp.float32)
+    onehot = jax.nn.one_hot(jnp.array([0, 2]), 3)
+    loss, dlog = softmax_xent(logits, onehot)
+    assert np.all(np.isfinite(loss)) and np.all(np.isfinite(dlog))
+    np.testing.assert_allclose(loss[0], 0.0, atol=1e-5)
+
+
+def test_xent_loss_grad_matches_ref():
+    x, w = _rand(14, (16, 24)), _rand(15, (24, 10))
+    onehot = jax.nn.one_hot(
+        jax.random.randint(jax.random.PRNGKey(16), (16,), 0, 10), 10)
+
+    def f_kernel(w):
+        return xent_loss(pmatmul(x, w), onehot).mean()
+
+    def f_ref(w):
+        return ref.softmax_xent_ref(ref.matmul_ref(x, w), onehot)[0].mean()
+
+    np.testing.assert_allclose(jax.grad(f_kernel)(w), jax.grad(f_ref)(w),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_xent_zero_rows_masked():
+    """All-zero one-hot rows (padding) must yield zero gradient wrt labels."""
+    logits = _rand(17, (4, 5))
+    onehot = jnp.zeros((4, 5))
+    loss, dlog = softmax_xent(logits, onehot)
+    # loss = lse - 0: finite; dlogits = softmax (sums to 1 per row)
+    np.testing.assert_allclose(np.sum(np.asarray(dlog), axis=-1),
+                               np.ones(4), rtol=1e-5)
+
+
+# ---------------------------- sgd update ---------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 10000), lr=st.floats(0.0, 1.0))
+def test_sgd_update_flat(n, lr):
+    p, g = _rand(18, (n,)), _rand(19, (n,))
+    np.testing.assert_allclose(sgd_update_flat(p, g, lr),
+                               ref.sgd_update_flat_ref(p, g, lr),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_update_tree():
+    params = {"w": _rand(20, (8, 4)), "b": _rand(21, (4,))}
+    grads = {"w": _rand(22, (8, 4)), "b": _rand(23, (4,))}
+    new = sgd_update(params, grads, 0.5)
+    np.testing.assert_allclose(new["w"], params["w"] - 0.5 * grads["w"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(new["b"], params["b"] - 0.5 * grads["b"],
+                               rtol=1e-6)
+
+
+def test_sgd_update_shape_mismatch():
+    with pytest.raises(ValueError):
+        sgd_update_flat(jnp.zeros((3,)), jnp.zeros((4,)), 0.1)
+
+
+# --------------------------- perf estimators ------------------------------
+
+
+def test_vmem_budget_default_tiles():
+    # default 128³ f32 tiling must fit well under 16 MiB VMEM
+    assert vmem_bytes(128, 128, 128) < 1 << 20
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization(128, 128, 128, 128, 128, 128) == 1.0
+    u = mxu_utilization(20, 62, 784, 24, 64, 128)
+    assert 0.0 < u <= 1.0

@@ -1,0 +1,124 @@
+"""L2 model correctness: shapes, gradients, pallas/jnp variant agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (build_registry, example_args, loss_fn,
+                           make_eval_step, make_train_step)
+
+REG = build_registry(small=True)
+
+
+def _batch(model, seed=0):
+    rng = np.random.RandomState(seed)
+    b = model.batch_size
+    if model.input_dtype == "f32":
+        xb = rng.randn(b, *model.input_shape).astype("float32")
+    else:
+        xb = rng.randint(0, model.num_classes,
+                         (b, *model.input_shape)).astype("int32")
+    onehot = jax.nn.one_hot(
+        rng.randint(0, model.num_classes, b), model.num_classes)
+    return jnp.asarray(xb), onehot
+
+
+@pytest.mark.parametrize("name", sorted(REG))
+def test_train_step_shapes_and_loss_finite(name):
+    model = REG[name]
+    params = model.init(jax.random.PRNGKey(0))
+    xb, onehot = _batch(model)
+    out = make_train_step(model)(*params, xb, onehot, jnp.float32(0.05))
+    assert len(out) == len(params) + 1
+    for p, spec in zip(out[:-1], model.param_specs):
+        assert p.shape == spec.shape
+    assert np.isfinite(float(out[-1]))
+
+
+@pytest.mark.parametrize("name", sorted(REG))
+def test_eval_step_counts(name):
+    model = REG[name]
+    params = model.init(jax.random.PRNGKey(1))
+    xb, onehot = _batch(model)
+    # pad eval batch up to eval_batch with zero-onehot rows
+    eb = model.eval_batch
+    xb = jnp.concatenate([xb] * ((eb + xb.shape[0] - 1) // xb.shape[0]))[:eb]
+    oh = jnp.concatenate([onehot] * ((eb + onehot.shape[0] - 1)
+                                     // onehot.shape[0]))[:eb]
+    # zero out the last quarter (padding)
+    mask_from = 3 * eb // 4
+    oh = oh.at[mask_from:].set(0.0)
+    loss_sum, correct = make_eval_step(model)(*params, xb, oh)
+    assert 0.0 <= float(correct) <= mask_from
+    assert np.isfinite(float(loss_sum))
+
+
+def test_training_reduces_loss_mlp():
+    model = REG["femnist_mlp"]
+    params = model.init(jax.random.PRNGKey(2))
+    xb, onehot = _batch(model, seed=7)
+    step = jax.jit(make_train_step(model))
+    first = None
+    for _ in range(30):
+        out = step(*params, xb, onehot, jnp.float32(0.2))
+        params, loss = list(out[:-1]), float(out[-1])
+        first = first if first is not None else loss
+    assert loss < first * 0.5, (first, loss)
+
+
+def test_pallas_and_jnp_variants_agree():
+    """femnist_mlp vs femnist_mlp_pallas: same init => same loss/grads."""
+    m_ref, m_pal = REG["femnist_mlp"], REG["femnist_mlp_pallas"]
+    params = m_ref.init(jax.random.PRNGKey(3))
+    xb, onehot = _batch(m_ref, seed=9)
+    out_ref = make_train_step(m_ref)(*params, xb, onehot, jnp.float32(0.1))
+    out_pal = make_train_step(m_pal)(*params, xb, onehot, jnp.float32(0.1))
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_gru_variants_agree():
+    m_ref, m_pal = REG["shakespeare_gru"], REG["shakespeare_gru_pallas"]
+    params = m_ref.init(jax.random.PRNGKey(4))
+    xb, onehot = _batch(m_ref, seed=11)
+    out_ref = make_train_step(m_ref)(*params, xb, onehot, jnp.float32(0.1))
+    out_pal = make_train_step(m_pal)(*params, xb, onehot, jnp.float32(0.1))
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_loss_fn_masking():
+    """Zero-onehot rows must not contribute to the mean loss."""
+    model = REG["femnist_mlp"]
+    params = model.init(jax.random.PRNGKey(5))
+    xb, onehot = _batch(model, seed=13)
+    full = float(loss_fn(model, params, xb, onehot))
+    oh_masked = onehot.at[10:].set(0.0)
+    masked = float(loss_fn(model, params, xb, oh_masked))
+    oh_first = onehot[:10]
+    xb_first = xb[:10]
+    want = float(loss_fn(model, params, xb_first, oh_first))
+    np.testing.assert_allclose(masked, want, rtol=1e-5)
+    assert masked != pytest.approx(full)
+
+
+def test_example_args_match_signature():
+    for model in REG.values():
+        n = len(model.param_specs)
+        args = example_args(model, train=True)
+        assert len(args) == n + 3
+        assert args[n].shape[0] == model.batch_size
+        eargs = example_args(model, train=False)
+        assert len(eargs) == n + 2
+        assert eargs[n].shape[0] == model.eval_batch
+
+
+def test_init_deterministic():
+    model = REG["femnist_mlp"]
+    p1 = model.init(jax.random.PRNGKey(42))
+    p2 = model.init(jax.random.PRNGKey(42))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,50 @@
+//! Bench: footnote 4 ("results of Algorithms 1 and 2 are identical") and
+//! Remark 3 (extra communication cost) — AOCS fixed-point quality and
+//! negotiation overhead vs j_max.
+
+use fedsamp::bench::{f, Table};
+use fedsamp::sampling::aocs::aocs_probabilities;
+use fedsamp::sampling::ocs::ocs_probabilities;
+use fedsamp::sampling::variance::sampling_variance;
+use fedsamp::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(21);
+    let n = 128;
+    println!("=== AOCS → OCS convergence vs j_max (n={n}, heavy-tail) ===");
+    let mut t = Table::new(&[
+        "m", "j_max", "max|p_aocs-p_ocs|", "var_ratio", "iters",
+        "extra_floats/client",
+    ]);
+    for m in [4usize, 13, 32] {
+        let norms: Vec<f64> =
+            (0..n).map(|_| rng.exponential(0.25) + 1e-4).collect();
+        let exact = ocs_probabilities(&norms, m);
+        let v_exact = sampling_variance(&norms, &exact.probs);
+        for j_max in [0usize, 1, 2, 4, 8, 16] {
+            let a = aocs_probabilities(&norms, m, j_max);
+            let max_gap = a
+                .probs
+                .iter()
+                .zip(&exact.probs)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            let v_a = sampling_variance(&norms, &a.probs);
+            t.row(vec![
+                m.to_string(),
+                j_max.to_string(),
+                format!("{max_gap:.2e}"),
+                f(v_a / v_exact.max(1e-300), 4),
+                a.iterations.to_string(),
+                a.extra_uplink_floats_per_client.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexpected shape: the paper's j_max=4 already drives the \
+         probability gap to ~float tolerance and var_ratio → 1.000 \
+         (footnote 4); cost grows as 1 + 2·iters floats per client \
+         (Remark 3) — negligible vs d=242k-float updates."
+    );
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Figure 4 — FEMNIST dataset 2 (n=32, m∈{3,6}).
+//!
+//! Sim-path reduced-scale regeneration (quick scale, 1 seed). The series
+//! and summary printed here are the figure's data; the paper-scale run is
+//! `fedsamp figures --fig 4 --scale full --seeds 5` (or the XLA path
+//! via --sim false). Also reports wall-clock per round.
+
+use fedsamp::exp::figures::{run_figure, Scale};
+use fedsamp::fl::TrainOptions;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let arms = run_figure(
+        "4",
+        Scale::Quick,
+        1,
+        &fedsamp::exp::default_artifacts_dir(),
+        true, // sim engine: benches stay fast; examples cover the XLA path
+        None,
+        &TrainOptions::default(),
+    )
+    .expect("figure run failed");
+    let rounds: usize = arms
+        .iter()
+        .flat_map(|panel| panel.iter().map(|a| a.result.rounds.len()))
+        .sum();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\n[bench] fig4_femnist2: {rounds} strategy-rounds in {wall:.2}s          ({:.1} ms/round)",
+        1e3 * wall / rounds.max(1) as f64
+    );
+}

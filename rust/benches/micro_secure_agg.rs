@@ -1,0 +1,39 @@
+//! Micro-bench: secure aggregation masking/summing cost vs participant
+//! count and update dimension (the O(k²·d)-mask-stream trade the paper's
+//! deployable path pays).
+
+use fedsamp::bench::Bench;
+use fedsamp::secure_agg::SecureAggregator;
+use fedsamp::util::rng::Rng;
+use std::hint::black_box;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    for &(k, d) in &[(4usize, 10_000usize), (12, 10_000), (12, 250_000)] {
+        let agg = SecureAggregator::new(99);
+        let roster: Vec<u64> = (0..k as u64).collect();
+        let data: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let b = Bench::new(&format!("secure_agg/k={k},d={d}"))
+            .with_min_time(Duration::from_millis(400));
+        b.run("mask_one_client", || {
+            black_box(agg.mask(0, &roster, black_box(&data[0])));
+        });
+        let masked: Vec<Vec<u64>> = roster
+            .iter()
+            .zip(&data)
+            .map(|(&id, v)| agg.mask(id, &roster, v))
+            .collect();
+        b.run("sum_and_decode", || {
+            let s = SecureAggregator::sum(black_box(&masked));
+            black_box(SecureAggregator::decode_sum(&s));
+        });
+    }
+    println!(
+        "\nexpected: masking scales with (k−1)·d PRG draws per client; \
+         at the paper's m≈3–12 participants this stays millisecond-scale \
+         even for 250k-parameter updates."
+    );
+}

@@ -1,0 +1,42 @@
+//! Bench: the §5.4 "optimal sampling allows larger learning rates" claim,
+//! measured as the maximum stable DSGD step size per strategy on the
+//! quadratic testbed (cf. the tuned η_l gaps in Appendix F).
+
+use fedsamp::bench::{f, Table};
+use fedsamp::model::quadratic::QuadraticProblem;
+use fedsamp::sampling::Sampler;
+use fedsamp::sim::theory::max_stable_eta;
+
+fn main() {
+    println!("=== max stable step size per strategy (quadratic testbed) ===");
+    let mut t = Table::new(&[
+        "skew", "m", "full", "ocs", "aocs", "uniform", "ocs/uniform",
+    ]);
+    for &skew in &[0.0, 1.0, 2.0] {
+        let p = QuadraticProblem::generate_skewed(
+            32, 32, 3.0, skew, 8.0, None, 11,
+        );
+        for &m in &[3usize, 8] {
+            let eta = |s: &Sampler| max_stable_eta(&p, s, m, 150, 5);
+            let e_full = eta(&Sampler::Full);
+            let e_ocs = eta(&Sampler::Ocs);
+            let e_aocs = eta(&Sampler::Aocs { j_max: 4 });
+            let e_uni = eta(&Sampler::Uniform);
+            t.row(vec![
+                f(skew, 1),
+                m.to_string(),
+                f(e_full, 4),
+                f(e_ocs, 4),
+                f(e_aocs, 4),
+                f(e_uni, 4),
+                f(e_ocs / e_uni.max(1e-12), 2),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexpected shape: η_max(ocs) ≈ η_max(aocs) ≥ η_max(uniform), \
+         with the ocs/uniform ratio growing with client heterogeneity \
+         (skew) — the paper found 4× (2^-3 vs 2^-5) on FEMNIST dataset 1."
+    );
+}

@@ -1,0 +1,163 @@
+//! Bench harness substrate (no criterion available offline).
+//!
+//! `cargo bench` targets use [`Bench`] for wall-clock micro/meso
+//! benchmarks (adaptive iteration count, warmup, mean ± std, throughput),
+//! and [`Table`] for printing the paper's figure series as aligned rows.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::summarize;
+
+/// One benchmark group; prints rows like
+/// `name                      12.345 µs/iter (± 0.6) [n=480]`.
+pub struct Bench {
+    group: String,
+    min_time: Duration,
+    max_iters: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        println!("\n== bench group: {group} ==");
+        Bench {
+            group: group.to_string(),
+            min_time: Duration::from_millis(300),
+            max_iters: 1_000_000,
+        }
+    }
+
+    pub fn with_min_time(mut self, d: Duration) -> Self {
+        self.min_time = d;
+        self
+    }
+
+    /// Measure `f`, auto-scaling iteration count; returns ns/iter mean.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> f64 {
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_nanos().max(1) as u64;
+        let target = self.min_time.as_nanos() as u64;
+        let batch = (target / once / 10).clamp(1, self.max_iters);
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_time && samples.len() < 50 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        let s = summarize(&samples);
+        println!(
+            "{:<44} {:>12}/iter (± {}) [batch={} samples={}]",
+            format!("{}/{}", self.group, name),
+            fmt_ns(s.mean),
+            fmt_ns(s.std),
+            batch,
+            s.n
+        );
+        s.mean
+    }
+
+    /// Measure and report throughput in `items/s`.
+    pub fn run_throughput<F: FnMut()>(&self, name: &str, items: u64, f: F) -> f64 {
+        let ns = self.run(name, f);
+        let per_s = items as f64 / (ns * 1e-9);
+        println!("{:<44} {:>12.0} items/s", format!("{}/{name}", self.group), per_s);
+        per_s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns.is_nan() {
+        "nan".into()
+    } else if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.3} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Aligned-table printer for figure/table regeneration output.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        for (w, c) in self.widths.iter_mut().zip(&cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:>width$}  ", width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * self.widths.len();
+        println!("{}", "-".repeat(total));
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Format a float with fixed precision (helper for Table rows).
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench::new("test").with_min_time(Duration::from_millis(10));
+        let mut acc = 0u64;
+        let ns = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(ns > 0.0 && ns < 1e7);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["1".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Update compression operators composed with OCS (the paper's §6
+//! future-work direction: "combine our proposed optimal sampling approach
+//! with communication compression methods").
+//!
+//! Two standard unbiased compressors:
+//! * [`RandK`] — random-k sparsification (Stich et al., 2018): keep k
+//!   coordinates chosen uniformly, scale by d/k.
+//! * [`QsgdQuant`] — QSGD-style random dithering (Alistarh et al., 2017)
+//!   with `levels` quantization levels.
+//!
+//! Both satisfy `E[C(x)] = x`, so the FL estimator stays unbiased when a
+//! participating client compresses its scaled update. Bit accounting:
+//! [`Compressor::bits`] reports the uplink cost of one compressed vector.
+
+use crate::util::rng::Rng;
+
+/// An unbiased compression operator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Compressor {
+    /// No compression: d × 32 bits.
+    None,
+    /// Random-k sparsification: k × (32 value + 32 index) bits.
+    RandK { k: usize },
+    /// Random dithering with s levels: sign+level per coordinate plus one
+    /// norm float; ⌈log2(s+1)⌉+1 bits per coordinate + 32.
+    QsgdQuant { levels: u32 },
+}
+
+impl Compressor {
+    pub fn name(&self) -> String {
+        match self {
+            Compressor::None => "none".into(),
+            Compressor::RandK { k } => format!("randk{k}"),
+            Compressor::QsgdQuant { levels } => format!("qsgd{levels}"),
+        }
+    }
+
+    /// Apply the operator (unbiased): returns the decompressed-equivalent
+    /// vector the master will add into the aggregate.
+    pub fn apply(&self, x: &[f32], rng: &mut Rng) -> Vec<f32> {
+        match self {
+            Compressor::None => x.to_vec(),
+            Compressor::RandK { k } => {
+                let d = x.len();
+                let k = (*k).min(d).max(1);
+                let mut out = vec![0.0f32; d];
+                let scale = d as f32 / k as f32;
+                for idx in rng.choose_k(d, k) {
+                    out[idx] = x[idx] * scale;
+                }
+                out
+            }
+            Compressor::QsgdQuant { levels } => {
+                let s = (*levels).max(1) as f32;
+                let norm = crate::tensor::norm(x) as f32;
+                if norm == 0.0 {
+                    return vec![0.0; x.len()];
+                }
+                x.iter()
+                    .map(|&v| {
+                        let a = v.abs() / norm * s;
+                        let low = a.floor();
+                        let p = a - low;
+                        let level = low + (rng.bernoulli(p as f64) as u8 as f32);
+                        v.signum() * norm * level / s
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Uplink bits for one compressed vector of dimension d.
+    pub fn bits(&self, d: usize) -> u64 {
+        match self {
+            Compressor::None => 32 * d as u64,
+            Compressor::RandK { k } => {
+                let k = (*k).min(d).max(1) as u64;
+                k * (32 + 32)
+            }
+            Compressor::QsgdQuant { levels } => {
+                let bits_per = 64 - (u64::from(*levels) + 1).leading_zeros() as u64 + 1;
+                32 + bits_per * d as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+
+    #[test]
+    fn none_is_identity() {
+        let x = [1.0f32, -2.0, 3.0];
+        let mut rng = Rng::new(0);
+        assert_eq!(Compressor::None.apply(&x, &mut rng), x.to_vec());
+        assert_eq!(Compressor::None.bits(3), 96);
+    }
+
+    #[test]
+    fn randk_keeps_k_coords_scaled() {
+        let x: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let mut rng = Rng::new(1);
+        let y = Compressor::RandK { k: 3 }.apply(&x, &mut rng);
+        let nz = y.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 3);
+        for (i, &v) in y.iter().enumerate() {
+            if v != 0.0 {
+                assert!((v - x[i] * 10.0 / 3.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn randk_unbiased() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) - 8.0).collect();
+        let mut rng = Rng::new(2);
+        let c = Compressor::RandK { k: 4 };
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; x.len()];
+        for _ in 0..trials {
+            for (m, v) in mean.iter_mut().zip(c.apply(&x, &mut rng)) {
+                *m += v as f64;
+            }
+        }
+        for (m, &v) in mean.iter().zip(&x) {
+            let avg = m / trials as f64;
+            assert!((avg - v as f64).abs() < 0.2, "{avg} vs {v}");
+        }
+    }
+
+    #[test]
+    fn qsgd_unbiased_and_bounded() {
+        let x = [0.3f32, -0.7, 1.2, 0.0];
+        let c = Compressor::QsgdQuant { levels: 4 };
+        let mut rng = Rng::new(3);
+        let trials = 40_000;
+        let mut mean = vec![0.0f64; 4];
+        for _ in 0..trials {
+            let y = c.apply(&x, &mut rng);
+            for (m, v) in mean.iter_mut().zip(y) {
+                *m += v as f64;
+            }
+        }
+        for (m, &v) in mean.iter().zip(&x) {
+            let avg = m / trials as f64;
+            assert!((avg - v as f64).abs() < 0.02, "{avg} vs {v}");
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_vector() {
+        let mut rng = Rng::new(4);
+        let y = Compressor::QsgdQuant { levels: 4 }.apply(&[0.0; 5], &mut rng);
+        assert_eq!(y, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn bits_ordering() {
+        // with aggressive settings both compressors beat dense f32
+        let d = 10_000;
+        assert!(Compressor::RandK { k: 100 }.bits(d) < Compressor::None.bits(d));
+        assert!(
+            Compressor::QsgdQuant { levels: 4 }.bits(d)
+                < Compressor::None.bits(d)
+        );
+    }
+
+    #[test]
+    fn prop_randk_preserves_support() {
+        quick("randk-support", |rng, _| {
+            let d = rng.range(1, 64);
+            let k = rng.range(1, d + 1);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let y = Compressor::RandK { k }.apply(&x, rng);
+            if y.len() != d {
+                return Err("length changed".into());
+            }
+            let nz = y.iter().filter(|&&v| v != 0.0).count();
+            if nz > k {
+                return Err(format!("{nz} > k={k}"));
+            }
+            Ok(())
+        });
+    }
+}

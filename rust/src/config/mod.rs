@@ -1,0 +1,344 @@
+//! Experiment configuration: typed config structs, JSON (de)serialization,
+//! and presets for every figure in the paper's evaluation.
+
+pub mod presets;
+
+use crate::util::json::Json;
+
+/// Client sampling strategy (the paper's comparison axis).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Strategy {
+    /// Every cohort client communicates (upper baseline).
+    Full,
+    /// Independent uniform sampling with p_i = m/n (lower baseline).
+    Uniform,
+    /// Exact optimal client sampling, Eq. (7) / Algorithm 1.
+    Ocs,
+    /// Approximate OCS, Algorithm 2 (secure-aggregation compatible).
+    Aocs { j_max: usize },
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Full => "full",
+            Strategy::Uniform => "uniform",
+            Strategy::Ocs => "ocs",
+            Strategy::Aocs { .. } => "aocs",
+        }
+    }
+
+    pub fn parse(s: &str, j_max: usize) -> Result<Strategy, String> {
+        match s {
+            "full" => Ok(Strategy::Full),
+            "uniform" => Ok(Strategy::Uniform),
+            "ocs" => Ok(Strategy::Ocs),
+            "aocs" => Ok(Strategy::Aocs { j_max }),
+            other => Err(format!("unknown strategy '{other}'")),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Strategy::Aocs { j_max } => Json::obj(vec![
+                ("kind", Json::str("aocs")),
+                ("j_max", Json::num(*j_max as f64)),
+            ]),
+            s => Json::obj(vec![("kind", Json::str(s.name()))]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Strategy, String> {
+        let kind = v.get("kind").as_str().ok_or("strategy.kind missing")?;
+        let j_max = v.get("j_max").as_usize().unwrap_or(4);
+        Strategy::parse(kind, j_max)
+    }
+}
+
+/// Underlying learning method.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Algorithm {
+    /// FedAvg (Algorithm 3): R local SGD steps, global step η_g on Δx.
+    FedAvg { local_epochs: usize, eta_g: f64, eta_l: f64 },
+    /// Distributed SGD (Eq. 2): one gradient per client per round.
+    Dsgd { eta: f64 },
+}
+
+impl Algorithm {
+    fn to_json(&self) -> Json {
+        match self {
+            Algorithm::FedAvg { local_epochs, eta_g, eta_l } => Json::obj(vec![
+                ("kind", Json::str("fedavg")),
+                ("local_epochs", Json::num(*local_epochs as f64)),
+                ("eta_g", Json::num(*eta_g)),
+                ("eta_l", Json::num(*eta_l)),
+            ]),
+            Algorithm::Dsgd { eta } => Json::obj(vec![
+                ("kind", Json::str("dsgd")),
+                ("eta", Json::num(*eta)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Algorithm, String> {
+        match v.get("kind").as_str() {
+            Some("fedavg") => Ok(Algorithm::FedAvg {
+                local_epochs: v.get("local_epochs").as_usize().unwrap_or(1),
+                eta_g: v.get("eta_g").as_f64().unwrap_or(1.0),
+                eta_l: v.get("eta_l").as_f64().ok_or("fedavg.eta_l missing")?,
+            }),
+            Some("dsgd") => Ok(Algorithm::Dsgd {
+                eta: v.get("eta").as_f64().ok_or("dsgd.eta missing")?,
+            }),
+            _ => Err("algorithm.kind must be fedavg|dsgd".into()),
+        }
+    }
+
+    pub fn local_lr(&self) -> f64 {
+        match self {
+            Algorithm::FedAvg { eta_l, .. } => *eta_l,
+            Algorithm::Dsgd { eta } => *eta,
+        }
+    }
+}
+
+/// Synthetic federated dataset selector (DESIGN.md substitution table).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// FEMNIST-like synthetic images. `variant`: 0 = original balance,
+    /// 1..=3 = the paper's three (s, a, b) unbalanced modifications.
+    FemnistLike { pool: usize, variant: u8 },
+    /// Shakespeare-like synthetic char sequences (715-client pool).
+    ShakespeareLike { pool: usize },
+    /// CIFAR100-like balanced images (Appendix G).
+    CifarLike { pool: usize, per_client: usize },
+}
+
+impl DataSpec {
+    pub fn name(&self) -> String {
+        match self {
+            DataSpec::FemnistLike { variant, .. } => format!("femnist{variant}"),
+            DataSpec::ShakespeareLike { .. } => "shakespeare".into(),
+            DataSpec::CifarLike { .. } => "cifar".into(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            DataSpec::FemnistLike { pool, variant } => Json::obj(vec![
+                ("kind", Json::str("femnist")),
+                ("pool", Json::num(*pool as f64)),
+                ("variant", Json::num(*variant as f64)),
+            ]),
+            DataSpec::ShakespeareLike { pool } => Json::obj(vec![
+                ("kind", Json::str("shakespeare")),
+                ("pool", Json::num(*pool as f64)),
+            ]),
+            DataSpec::CifarLike { pool, per_client } => Json::obj(vec![
+                ("kind", Json::str("cifar")),
+                ("pool", Json::num(*pool as f64)),
+                ("per_client", Json::num(*per_client as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<DataSpec, String> {
+        match v.get("kind").as_str() {
+            Some("femnist") => Ok(DataSpec::FemnistLike {
+                pool: v.get("pool").as_usize().unwrap_or(350),
+                variant: v.get("variant").as_usize().unwrap_or(1) as u8,
+            }),
+            Some("shakespeare") => Ok(DataSpec::ShakespeareLike {
+                pool: v.get("pool").as_usize().unwrap_or(715),
+            }),
+            Some("cifar") => Ok(DataSpec::CifarLike {
+                pool: v.get("pool").as_usize().unwrap_or(500),
+                per_client: v.get("per_client").as_usize().unwrap_or(100),
+            }),
+            _ => Err("data.kind must be femnist|shakespeare|cifar".into()),
+        }
+    }
+}
+
+/// Full experiment description — everything a run needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// communication rounds (paper: 151)
+    pub rounds: usize,
+    /// cohort size sampled from the pool each round (paper: n = 32/128)
+    pub cohort: usize,
+    /// expected communication budget m ≤ n
+    pub budget: usize,
+    pub strategy: Strategy,
+    pub algorithm: Algorithm,
+    pub data: DataSpec,
+    /// artifact model name (XLA path) or "native:<kind>" (sim path)
+    pub model: String,
+    pub batch_size: usize,
+    /// evaluate every this many rounds (paper: 5)
+    pub eval_every: usize,
+    /// validation examples
+    pub eval_examples: usize,
+    /// worker threads for client training (XLA path)
+    pub workers: usize,
+    /// mask update vectors through the secure-aggregation protocol
+    /// (always on for the AOCS scalar negotiation; this flag covers the
+    /// O(|S|²·d) vector masking, which large benches may disable)
+    pub secure_updates: bool,
+    /// per-round client availability probability q (Appendix E); 1.0 = the
+    /// main-paper setting where every pool client is always available
+    pub availability: f64,
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.budget == 0 || self.budget > self.cohort {
+            return Err(format!(
+                "budget m={} must satisfy 1 <= m <= cohort n={}",
+                self.budget, self.cohort
+            ));
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be positive".into());
+        }
+        if self.eval_every == 0 {
+            return Err("eval_every must be positive".into());
+        }
+        if let Algorithm::FedAvg { local_epochs, .. } = self.algorithm {
+            if local_epochs == 0 {
+                return Err("local_epochs must be positive".into());
+            }
+        }
+        if !(0.0 < self.availability && self.availability <= 1.0) {
+            return Err("availability must be in (0, 1]".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("cohort", Json::num(self.cohort as f64)),
+            ("budget", Json::num(self.budget as f64)),
+            ("strategy", self.strategy.to_json()),
+            ("algorithm", self.algorithm.to_json()),
+            ("data", self.data.to_json()),
+            ("model", Json::str(self.model.clone())),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_examples", Json::num(self.eval_examples as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("secure_updates", Json::Bool(self.secure_updates)),
+            ("availability", Json::num(self.availability)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig, String> {
+        let cfg = ExperimentConfig {
+            name: v.get("name").as_str().unwrap_or("experiment").to_string(),
+            seed: v.get("seed").as_f64().unwrap_or(0.0) as u64,
+            rounds: v.get("rounds").as_usize().ok_or("rounds missing")?,
+            cohort: v.get("cohort").as_usize().ok_or("cohort missing")?,
+            budget: v.get("budget").as_usize().ok_or("budget missing")?,
+            strategy: Strategy::from_json(v.get("strategy"))?,
+            algorithm: Algorithm::from_json(v.get("algorithm"))?,
+            data: DataSpec::from_json(v.get("data"))?,
+            model: v.get("model").as_str().unwrap_or("native:logistic").into(),
+            batch_size: v.get("batch_size").as_usize().unwrap_or(20),
+            eval_every: v.get("eval_every").as_usize().unwrap_or(5),
+            eval_examples: v.get("eval_examples").as_usize().unwrap_or(1024),
+            workers: v.get("workers").as_usize().unwrap_or(4),
+            secure_updates: v.get("secure_updates").as_bool().unwrap_or(true),
+            availability: v.get("availability").as_f64().unwrap_or(1.0),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        ExperimentConfig::from_json(&v)
+    }
+
+    /// Derive a copy with a different strategy (for the 3-way comparison).
+    pub fn with_strategy(&self, strategy: Strategy) -> ExperimentConfig {
+        let mut c = self.clone();
+        c.name = format!("{}_{}", self.name, strategy.name());
+        c.strategy = strategy;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "t".into(),
+            seed: 1,
+            rounds: 151,
+            cohort: 32,
+            budget: 3,
+            strategy: Strategy::Aocs { j_max: 4 },
+            algorithm: Algorithm::FedAvg {
+                local_epochs: 1,
+                eta_g: 1.0,
+                eta_l: 0.125,
+            },
+            data: DataSpec::FemnistLike { pool: 350, variant: 1 },
+            model: "femnist_mlp".into(),
+            batch_size: 20,
+            eval_every: 5,
+            eval_examples: 1024,
+            workers: 4,
+            secure_updates: true,
+            availability: 1.0,
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = sample();
+        let v = c.to_json();
+        let c2 = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c, c2);
+        // and through text
+        let c3 =
+            ExperimentConfig::from_json(&Json::parse(&v.to_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(c, c3);
+    }
+
+    #[test]
+    fn validation_catches_bad_budget() {
+        let mut c = sample();
+        c.budget = 33;
+        assert!(c.validate().is_err());
+        c.budget = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("ocs", 4).unwrap(), Strategy::Ocs);
+        assert_eq!(
+            Strategy::parse("aocs", 7).unwrap(),
+            Strategy::Aocs { j_max: 7 }
+        );
+        assert!(Strategy::parse("magic", 4).is_err());
+    }
+
+    #[test]
+    fn with_strategy_renames() {
+        let c = sample().with_strategy(Strategy::Uniform);
+        assert_eq!(c.strategy, Strategy::Uniform);
+        assert!(c.name.ends_with("_uniform"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic federated datasets (the LEAF substitution — DESIGN.md §3).
+//!
+//! The sampling math only ever sees *update norms*, which are driven by
+//! per-client example counts and data heterogeneity; these generators
+//! reproduce exactly those properties of FEMNIST / Shakespeare / CIFAR100
+//! while staying procedurally generated and fully deterministic.
+
+pub mod partition;
+pub mod synth_image;
+pub mod synth_text;
+
+use crate::config::DataSpec;
+use crate::util::rng::Rng;
+
+/// One client's local dataset. Dense features (images) and token
+/// sequences (text) share the struct; exactly one of `x_dense`/`x_tokens`
+/// is populated.
+#[derive(Clone, Debug, Default)]
+pub struct ClientData {
+    /// row-major `len × dim` dense features
+    pub x_dense: Vec<f32>,
+    /// row-major `len × dim` token ids
+    pub x_tokens: Vec<i32>,
+    /// class labels, `len` entries
+    pub labels: Vec<u32>,
+    /// feature dimension (dense) or sequence length (tokens)
+    pub dim: usize,
+}
+
+impl ClientData {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn is_tokens(&self) -> bool {
+        !self.x_tokens.is_empty()
+    }
+
+    /// Dense feature row i.
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        &self.x_dense[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Token row i.
+    pub fn token_row(&self, i: usize) -> &[i32] {
+        &self.x_tokens[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Truncate to the first `keep` examples (the paper's unbalancing op).
+    pub fn truncate(&mut self, keep: usize) {
+        let keep = keep.min(self.len());
+        self.labels.truncate(keep);
+        if self.is_tokens() {
+            self.x_tokens.truncate(keep * self.dim);
+        } else {
+            self.x_dense.truncate(keep * self.dim);
+        }
+    }
+
+    /// Shuffled epoch batches of `batch` indices; a final partial batch
+    /// wraps around (sampling with replacement for the tail), matching
+    /// the fixed-batch AOT entry points.
+    pub fn epoch_batches(&self, batch: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        assert!(batch > 0);
+        if self.is_empty() {
+            return Vec::new();
+        }
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < idx.len() {
+            let mut b: Vec<usize> = idx[i..(i + batch).min(idx.len())].to_vec();
+            while b.len() < batch {
+                b.push(idx[rng.range(0, idx.len())]);
+            }
+            out.push(b);
+            i += batch;
+        }
+        out
+    }
+}
+
+/// A federated dataset: client pool + held-out validation split.
+#[derive(Clone, Debug)]
+pub struct FederatedData {
+    pub clients: Vec<ClientData>,
+    pub validation: ClientData,
+    pub num_classes: usize,
+    pub input_dim: usize,
+    /// sequence data (GRU models) vs dense data (MLP/CNN models)
+    pub is_tokens: bool,
+}
+
+impl FederatedData {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn client_sizes(&self) -> Vec<usize> {
+        self.clients.iter().map(ClientData::len).collect()
+    }
+
+    pub fn total_examples(&self) -> usize {
+        self.client_sizes().iter().sum()
+    }
+}
+
+/// Build the dataset described by a [`DataSpec`] (deterministic in seed).
+pub fn build(spec: &DataSpec, val_examples: usize, seed: u64) -> FederatedData {
+    match spec {
+        DataSpec::FemnistLike { pool, variant } => {
+            synth_image::femnist_like(*pool, *variant, val_examples, seed)
+        }
+        DataSpec::ShakespeareLike { pool } => {
+            synth_text::shakespeare_like(*pool, val_examples, seed)
+        }
+        DataSpec::CifarLike { pool, per_client } => {
+            synth_image::cifar_like(*pool, *per_client, val_examples, seed)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_client(n: usize, dim: usize) -> ClientData {
+        ClientData {
+            x_dense: (0..n * dim).map(|i| i as f32).collect(),
+            x_tokens: vec![],
+            labels: (0..n as u32).collect(),
+            dim,
+        }
+    }
+
+    #[test]
+    fn rows_are_views() {
+        let c = dense_client(3, 4);
+        assert_eq!(c.dense_row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn truncate_consistent() {
+        let mut c = dense_client(5, 2);
+        c.truncate(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.x_dense.len(), 4);
+        c.truncate(10); // no-op beyond length
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn epoch_batches_cover_all_and_pad() {
+        let c = dense_client(7, 1);
+        let mut rng = Rng::new(3);
+        let batches = c.epoch_batches(3, &mut rng);
+        assert_eq!(batches.len(), 3); // ceil(7/3)
+        assert!(batches.iter().all(|b| b.len() == 3));
+        let mut seen: Vec<usize> = batches.concat();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_client_no_batches() {
+        let c = ClientData::default();
+        let mut rng = Rng::new(1);
+        assert!(c.epoch_batches(4, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn build_dispatches_all_specs() {
+        for spec in [
+            DataSpec::FemnistLike { pool: 20, variant: 1 },
+            DataSpec::ShakespeareLike { pool: 10 },
+            DataSpec::CifarLike { pool: 8, per_client: 16 },
+        ] {
+            let fd = build(&spec, 64, 7);
+            assert!(fd.num_clients() > 0, "{spec:?}");
+            assert!(fd.validation.len() >= 32, "{spec:?}");
+            assert!(fd.total_examples() > 0);
+        }
+    }
+}

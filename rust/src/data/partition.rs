@@ -1,0 +1,210 @@
+//! Client-pool partitioning utilities: the paper's (s, a, b) unbalancing
+//! procedure (footnote 6) and a Dirichlet label partitioner.
+
+use super::ClientData;
+use crate::util::rng::Rng;
+
+/// The paper's unbalancing procedure (footnote 6):
+///
+/// > Let s ∈ (0,1) and a, b ∈ N₊ with a < b. For a given client with n_c
+/// > examples, we keep this client unchanged if n_c ≤ a or n_c ≥ b,
+/// > otherwise we remove this client from the dataset with probability s
+/// > or only keep a randomly sampled examples in this client with
+/// > probability 1 − s.
+pub fn unbalance(
+    clients: Vec<ClientData>,
+    s: f64,
+    a: usize,
+    b: usize,
+    rng: &mut Rng,
+) -> Vec<ClientData> {
+    assert!(a < b, "unbalance requires a < b");
+    assert!((0.0..=1.0).contains(&s));
+    let mut out = Vec::with_capacity(clients.len());
+    for mut c in clients {
+        let n = c.len();
+        if n <= a || n >= b {
+            out.push(c);
+        } else if rng.bernoulli(s) {
+            // removed from the pool
+        } else {
+            // keep a randomly sampled examples: shuffle-select then truncate
+            subsample_in_place(&mut c, a, rng);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Keep `keep` uniformly chosen examples of a client (in-place rebuild).
+pub fn subsample_in_place(c: &mut ClientData, keep: usize, rng: &mut Rng) {
+    let n = c.len();
+    if keep >= n {
+        return;
+    }
+    let chosen = rng.choose_k(n, keep);
+    let dim = c.dim;
+    let mut labels = Vec::with_capacity(keep);
+    if c.is_tokens() {
+        let mut xt = Vec::with_capacity(keep * dim);
+        for &i in &chosen {
+            xt.extend_from_slice(&c.x_tokens[i * dim..(i + 1) * dim]);
+            labels.push(c.labels[i]);
+        }
+        c.x_tokens = xt;
+    } else {
+        let mut xd = Vec::with_capacity(keep * dim);
+        for &i in &chosen {
+            xd.extend_from_slice(&c.x_dense[i * dim..(i + 1) * dim]);
+            labels.push(c.labels[i]);
+        }
+        c.x_dense = xd;
+    }
+    c.labels = labels;
+}
+
+/// Dirichlet(α) non-IID label partition: split a flat labelled corpus
+/// into `num_clients` shards whose class mixtures are Dirichlet draws
+/// (the standard federated-benchmark partitioner; complements the
+/// generative palettes in synth_image/synth_text).
+pub fn dirichlet_partition(
+    labels: &[u32],
+    num_classes: usize,
+    num_clients: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(num_clients > 0);
+    // index lists per class, shuffled
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        per_class[l as usize].push(i);
+    }
+    for list in &mut per_class {
+        rng.shuffle(list);
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); num_clients];
+    for list in per_class {
+        if list.is_empty() {
+            continue;
+        }
+        let props = rng.dirichlet(alpha, num_clients);
+        // convert proportions to contiguous slice boundaries
+        let n = list.len();
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (ci, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if ci + 1 == num_clients {
+                n
+            } else {
+                (acc * n as f64).round() as usize
+            }
+            .clamp(start, n);
+            shards[ci].extend_from_slice(&list[start..end]);
+            start = end;
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+
+    fn client(n: usize) -> ClientData {
+        ClientData {
+            x_dense: vec![0.5; n * 3],
+            x_tokens: vec![],
+            labels: vec![1; n],
+            dim: 3,
+        }
+    }
+
+    #[test]
+    fn keeps_small_and_large_clients() {
+        let mut rng = Rng::new(1);
+        let out = unbalance(vec![client(5), client(500)], 0.9, 8, 100, &mut rng);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 5);
+        assert_eq!(out[1].len(), 500);
+    }
+
+    #[test]
+    fn middle_clients_removed_or_truncated() {
+        let mut rng = Rng::new(2);
+        let clients: Vec<ClientData> = (0..200).map(|_| client(50)).collect();
+        let out = unbalance(clients, 0.5, 8, 100, &mut rng);
+        assert!(out.len() < 200, "some removed");
+        assert!(!out.is_empty(), "some kept");
+        assert!(out.iter().all(|c| c.len() == 8), "kept ones truncated to a");
+        // removal fraction ≈ s
+        let frac = 1.0 - out.len() as f64 / 200.0;
+        assert!((frac - 0.5).abs() < 0.15, "removal fraction {frac}");
+    }
+
+    #[test]
+    fn subsample_preserves_rows() {
+        let mut c = ClientData {
+            x_dense: (0..20).map(|i| i as f32).collect(),
+            x_tokens: vec![],
+            labels: (0..10).collect(),
+            dim: 2,
+        };
+        let mut rng = Rng::new(3);
+        subsample_in_place(&mut c, 4, &mut rng);
+        assert_eq!(c.len(), 4);
+        // each kept row must be an original (feature, label) pair
+        for i in 0..4 {
+            let row = c.dense_row(i);
+            let label = c.labels[i];
+            assert_eq!(row[0], (label * 2) as f32);
+            assert_eq!(row[1], (label * 2 + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn dirichlet_partition_is_a_partition() {
+        quick("dirichlet-partition", |rng, _| {
+            let n = rng.range(10, 300);
+            let classes = rng.range(2, 10);
+            let clients = rng.range(1, 12);
+            let labels: Vec<u32> =
+                (0..n).map(|_| rng.below(classes as u64) as u32).collect();
+            let shards =
+                dirichlet_partition(&labels, classes, clients, 0.5, rng);
+            let mut all: Vec<usize> = shards.concat();
+            all.sort_unstable();
+            let want: Vec<usize> = (0..n).collect();
+            if all == want {
+                Ok(())
+            } else {
+                Err(format!("lost/dup indices: {} vs {}", all.len(), n))
+            }
+        });
+    }
+
+    #[test]
+    fn low_alpha_is_skewed() {
+        let mut rng = Rng::new(5);
+        let labels: Vec<u32> = (0..2000).map(|i| (i % 4) as u32).collect();
+        let shards = dirichlet_partition(&labels, 4, 8, 0.05, &mut rng);
+        // with α=0.05 most clients should be dominated by one class
+        let mut dominated = 0;
+        for shard in &shards {
+            if shard.is_empty() {
+                continue;
+            }
+            let mut counts = [0usize; 4];
+            for &i in shard {
+                counts[labels[i] as usize] += 1;
+            }
+            let maxc = *counts.iter().max().unwrap();
+            if maxc as f64 / shard.len() as f64 > 0.6 {
+                dominated += 1;
+            }
+        }
+        assert!(dominated >= 4, "only {dominated} skewed shards");
+    }
+}

@@ -1,0 +1,229 @@
+//! Per-figure regeneration: builds the config for each paper figure,
+//! runs the comparison, and prints the series the paper plots.
+
+use crate::bench::{f, Table};
+use crate::config::{presets, ExperimentConfig};
+use crate::data;
+use crate::fl::TrainOptions;
+use crate::util::stats::Histogram;
+
+use super::{run_comparison, save_arms, Arm};
+
+/// Scale knob: `quick` shrinks rounds/pool so benches finish in seconds;
+/// `full` is the paper's setting (151 rounds, pool-scale data).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        match s {
+            "quick" => Ok(Scale::Quick),
+            "full" => Ok(Scale::Full),
+            other => Err(format!("scale must be quick|full, got '{other}'")),
+        }
+    }
+}
+
+/// Apply the scale knob to a preset.
+pub fn scaled(mut cfg: ExperimentConfig, scale: Scale) -> ExperimentConfig {
+    if scale == Scale::Quick {
+        cfg.rounds = 30;
+        cfg.eval_every = 5;
+        cfg.eval_examples = 320;
+        cfg.data = match cfg.data {
+            crate::config::DataSpec::FemnistLike { variant, .. } => {
+                crate::config::DataSpec::FemnistLike { pool: 80, variant }
+            }
+            crate::config::DataSpec::ShakespeareLike { .. } => {
+                crate::config::DataSpec::ShakespeareLike { pool: 120 }
+            }
+            crate::config::DataSpec::CifarLike { .. } => {
+                crate::config::DataSpec::CifarLike { pool: 60, per_client: 60 }
+            }
+        };
+        cfg.secure_updates = false; // masking cost off the quick path
+    }
+    cfg
+}
+
+/// Figure 2: client-size distributions of the three modified FEMNIST
+/// training sets.
+pub fn figure2(pool: usize, seed: u64) {
+    println!("\n=== Figure 2: FEMNIST client-size distributions ===");
+    for variant in 1..=3u8 {
+        let fd = data::build(
+            &crate::config::DataSpec::FemnistLike { pool, variant },
+            16,
+            seed,
+        );
+        let sizes = fd.client_sizes();
+        let (s, a, b) = data::synth_image::unbalance_params(variant);
+        let mut h = Histogram::new(0.0, 400.0, 10);
+        for &n in &sizes {
+            h.push(n as f64);
+        }
+        println!(
+            "\nDataset {variant} (s={s}, a={a}, b={b}): {} clients, \
+             {} examples total",
+            sizes.len(),
+            fd.total_examples()
+        );
+        print!("{}", h.ascii(40));
+    }
+}
+
+/// The per-figure series table: one row per (strategy, eval round).
+pub fn print_series(fig: &str, arms: &[Arm]) {
+    println!("\n=== {fig}: validation accuracy / train loss series ===");
+    let mut t = Table::new(&[
+        "strategy", "round", "train_loss", "val_acc", "best_acc",
+        "uplink_Mbits",
+    ]);
+    for arm in arms {
+        let mut best = f64::NAN;
+        for r in &arm.result.rounds {
+            if r.val_accuracy.is_nan() {
+                continue;
+            }
+            best = if best.is_nan() {
+                r.val_accuracy
+            } else {
+                best.max(r.val_accuracy)
+            };
+            t.row(vec![
+                arm.strategy.name().into(),
+                r.round.to_string(),
+                f(r.train_loss, 4),
+                f(r.val_accuracy, 4),
+                f(best, 4),
+                f(r.uplink_bits as f64 / 1e6, 2),
+            ]);
+        }
+    }
+    t.print();
+}
+
+/// The headline summary the paper narrates (§5.4): rounds- and
+/// bits-to-target-accuracy per strategy.
+pub fn print_summary(fig: &str, arms: &[Arm]) {
+    // target = 90% of the best accuracy any arm reached
+    let best_overall = arms
+        .iter()
+        .map(|a| a.result.best_accuracy())
+        .fold(f64::NAN, f64::max);
+    let target = best_overall * 0.9;
+    println!(
+        "\n=== {fig}: summary (target = {:.3} = 90% of best) ===",
+        target
+    );
+    let mut t = Table::new(&[
+        "strategy",
+        "final_acc",
+        "best_acc",
+        "rounds_to_target",
+        "Mbits_to_target",
+        "total_Mbits",
+        "mean_alpha",
+    ]);
+    for arm in arms {
+        let r = &arm.result;
+        t.row(vec![
+            arm.strategy.name().into(),
+            f(r.final_accuracy(), 4),
+            f(r.best_accuracy(), 4),
+            r.rounds_to_accuracy(target)
+                .map(|x| x.to_string())
+                .unwrap_or_else(|| "-".into()),
+            r.bits_to_accuracy(target)
+                .map(|b| f(b as f64 / 1e6, 2))
+                .unwrap_or_else(|| "-".into()),
+            f(r.total_uplink_bits() as f64 / 1e6, 2),
+            f(r.mean_alpha(), 3),
+        ]);
+    }
+    t.print();
+}
+
+/// Build the preset list for a figure id ("3".."7", "13").
+pub fn figure_configs(fig: &str, scale: Scale) -> Vec<ExperimentConfig> {
+    presets::by_figure(fig)
+        .into_iter()
+        .map(|c| scaled(c, scale))
+        .collect()
+}
+
+/// Run and print one whole figure; returns the arms of each sub-panel.
+pub fn run_figure(
+    fig: &str,
+    scale: Scale,
+    seeds: u64,
+    artifacts_dir: &str,
+    use_sim: bool,
+    out_dir: Option<&str>,
+    opts: &TrainOptions,
+) -> Result<Vec<Vec<Arm>>, String> {
+    if fig == "2" {
+        figure2(350, 1);
+        return Ok(vec![]);
+    }
+    let mut all = Vec::new();
+    for mut cfg in figure_configs(fig, scale) {
+        if use_sim {
+            cfg.model = "native:logistic".into();
+        }
+        let label = format!("Figure {fig} ({})", cfg.name);
+        let arms = run_comparison(&cfg, seeds, artifacts_dir, opts)?;
+        print_series(&label, &arms);
+        print_summary(&label, &arms);
+        if let Some(dir) = out_dir {
+            save_arms(&arms, dir)?;
+        }
+        all.push(arms);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("quick").unwrap(), Scale::Quick);
+        assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
+        assert!(Scale::parse("medium").is_err());
+    }
+
+    #[test]
+    fn quick_scale_shrinks() {
+        let cfg = scaled(presets::femnist(1, 3), Scale::Quick);
+        assert_eq!(cfg.rounds, 30);
+        assert!(!cfg.secure_updates);
+        let full = scaled(presets::femnist(1, 3), Scale::Full);
+        assert_eq!(full.rounds, 151);
+    }
+
+    #[test]
+    fn figure_configs_cover_eval() {
+        for fig in ["3", "4", "5", "6", "7", "13"] {
+            assert!(!figure_configs(fig, Scale::Quick).is_empty());
+        }
+    }
+
+    #[test]
+    fn sim_figure_runs_end_to_end() {
+        let mut cfgs = figure_configs("3", Scale::Quick);
+        let mut cfg = cfgs.remove(0);
+        cfg.rounds = 6;
+        cfg.model = "native:logistic".into();
+        cfg.data = crate::config::DataSpec::FemnistLike { pool: 30, variant: 1 };
+        let arms = run_comparison(&cfg, 1, "/nonexistent",
+            &TrainOptions::default()).unwrap();
+        print_series("test", &arms);
+        print_summary("test", &arms);
+        assert_eq!(arms.len(), 3);
+    }
+}

@@ -1,0 +1,156 @@
+//! Experiment drivers: the code that regenerates every figure of the
+//! paper's evaluation (used by the CLI, the examples and the benches).
+
+pub mod figures;
+
+use crate::config::{presets, ExperimentConfig, Strategy};
+use crate::data;
+use crate::fl::{train, ClientEngine, TrainOptions};
+use crate::metrics::{average_runs, RunResult};
+use crate::runtime::engine::XlaEngine;
+use crate::sim::run_sim_with;
+
+/// Default artifacts directory (relative to the crate root).
+pub fn default_artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Whether AOT artifacts are present.
+pub fn have_artifacts(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+/// Run one experiment, picking the engine from `cfg.model`:
+/// `native:*` → sim path; otherwise the XLA path via `artifacts_dir`.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    artifacts_dir: &str,
+    opts: &TrainOptions,
+) -> Result<RunResult, String> {
+    if cfg.model.starts_with("native:") {
+        return run_sim_with(cfg, opts);
+    }
+    if !have_artifacts(artifacts_dir) {
+        return Err(format!(
+            "artifacts missing in {artifacts_dir}; run `make artifacts` \
+             (or use a native:* model for the sim path)"
+        ));
+    }
+    let fd = data::build(&cfg.data, cfg.eval_examples, cfg.seed);
+    let mut engine = XlaEngine::new(
+        artifacts_dir,
+        &cfg.model,
+        fd,
+        cfg.algorithm.clone(),
+        cfg.workers,
+        cfg.seed,
+    )
+    .map_err(|e| e.to_string())?;
+    train(cfg, &mut engine as &mut dyn ClientEngine, opts)
+}
+
+/// One comparison arm: strategy + per-seed-averaged result.
+pub struct Arm {
+    pub strategy: Strategy,
+    pub result: RunResult,
+}
+
+/// Run the paper's three-way comparison (full / uniform / AOCS) for a
+/// base config, averaging over `seeds` seeds, with the per-arm tuned
+/// local step size from Appendix F (presets::tuned_eta_l).
+pub fn run_comparison(
+    base: &ExperimentConfig,
+    seeds: u64,
+    artifacts_dir: &str,
+    opts: &TrainOptions,
+) -> Result<Vec<Arm>, String> {
+    let strategies = [
+        Strategy::Full,
+        Strategy::Uniform,
+        Strategy::Aocs { j_max: 4 },
+    ];
+    let dataset = base.data.name();
+    let mut arms = Vec::new();
+    for s in strategies {
+        let mut cfg = base.with_strategy(s.clone());
+        // re-tune η_l per arm as the paper does (Appendix F)
+        if let crate::config::Algorithm::FedAvg { local_epochs, eta_g, .. } =
+            cfg.algorithm
+        {
+            cfg.algorithm = crate::config::Algorithm::FedAvg {
+                local_epochs,
+                eta_g,
+                eta_l: presets::tuned_eta_l(&dataset, &s),
+            };
+        }
+        let mut runs = Vec::new();
+        for seed in 0..seeds {
+            let mut c = cfg.clone();
+            c.seed = base.seed + seed;
+            runs.push(run_experiment(&c, artifacts_dir, opts)?);
+        }
+        arms.push(Arm { strategy: s, result: average_runs(&runs) });
+    }
+    Ok(arms)
+}
+
+/// Save each arm's series to `<out>/<name>.json` + `.csv`.
+pub fn save_arms(arms: &[Arm], out_dir: &str) -> Result<Vec<String>, String> {
+    std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
+    let mut paths = Vec::new();
+    for arm in arms {
+        let p = arm
+            .result
+            .save(out_dir)
+            .map_err(|e| e.to_string())?;
+        let csv_path = p.replace(".json", ".csv");
+        std::fs::write(&csv_path, arm.result.to_csv())
+            .map_err(|e| e.to_string())?;
+        paths.push(p);
+        paths.push(csv_path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataSpec;
+
+    #[test]
+    fn native_model_routes_to_sim() {
+        let mut cfg = presets::dsgd_theory(4, 0.05);
+        cfg.rounds = 5;
+        cfg.data = DataSpec::FemnistLike { pool: 16, variant: 1 };
+        cfg.secure_updates = false;
+        let run = run_experiment(&cfg, "/nonexistent", &TrainOptions::default())
+            .unwrap();
+        assert_eq!(run.rounds.len(), 5);
+    }
+
+    #[test]
+    fn missing_artifacts_is_a_clear_error() {
+        let mut cfg = presets::femnist(1, 3);
+        cfg.rounds = 2;
+        let err = run_experiment(&cfg, "/nonexistent", &TrainOptions::default());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("artifacts missing"));
+    }
+
+    #[test]
+    fn comparison_retunes_eta_per_arm() {
+        let mut base = presets::femnist(1, 3);
+        base.rounds = 4;
+        base.model = "native:logistic".into();
+        base.data = DataSpec::FemnistLike { pool: 24, variant: 1 };
+        base.eval_examples = 124;
+        base.secure_updates = false;
+        let arms =
+            run_comparison(&base, 1, "/nonexistent", &TrainOptions::default())
+                .unwrap();
+        assert_eq!(arms.len(), 3);
+        let names: Vec<_> =
+            arms.iter().map(|a| a.strategy.name()).collect();
+        assert_eq!(names, vec!["full", "uniform", "aocs"]);
+    }
+}

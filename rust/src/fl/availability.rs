@@ -1,0 +1,142 @@
+//! Client availability (Appendix E): which pool clients can be reached in
+//! a given round, and cohort selection among them.
+//!
+//! The main-paper experiments sample the round cohort uniformly from an
+//! always-available pool; Appendix E extends the analysis to a known
+//! availability distribution Q with `q_i = Prob(i ∈ Q^k)` — modelled here
+//! as independent Bernoulli availability.
+
+use crate::util::rng::Rng;
+
+/// Availability model for the client pool.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Availability {
+    /// Every client reachable every round (main-paper setting).
+    AlwaysOn,
+    /// Client i is reachable with probability q (iid across rounds).
+    Bernoulli { q: f64 },
+    /// Per-client probabilities q_i (heterogeneous devices).
+    PerClient { q: Vec<f64> },
+}
+
+impl Availability {
+    pub fn from_probability(q: f64) -> Availability {
+        if q >= 1.0 {
+            Availability::AlwaysOn
+        } else {
+            Availability::Bernoulli { q }
+        }
+    }
+
+    /// The subset Q^k of reachable clients this round.
+    pub fn available(&self, pool: usize, rng: &mut Rng) -> Vec<usize> {
+        match self {
+            Availability::AlwaysOn => (0..pool).collect(),
+            Availability::Bernoulli { q } => (0..pool)
+                .filter(|_| rng.bernoulli(*q))
+                .collect(),
+            Availability::PerClient { q } => {
+                assert_eq!(q.len(), pool, "q length must match pool");
+                (0..pool).filter(|&i| rng.bernoulli(q[i])).collect()
+            }
+        }
+    }
+
+    /// Probability q_i that client i is available.
+    pub fn probability(&self, i: usize) -> f64 {
+        match self {
+            Availability::AlwaysOn => 1.0,
+            Availability::Bernoulli { q } => *q,
+            Availability::PerClient { q } => q[i],
+        }
+    }
+}
+
+/// Sample a round cohort of (at most) `n` clients uniformly from the
+/// available set (paper §5.2: "n = 32 clients are sampled uniformly from
+/// the client pool").
+pub fn sample_cohort(
+    availability: &Availability,
+    pool: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let avail = availability.available(pool, rng);
+    if avail.len() <= n {
+        return avail;
+    }
+    let picks = rng.choose_k(avail.len(), n);
+    picks.into_iter().map(|i| avail[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_full_pool() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Availability::AlwaysOn.available(5, &mut rng).len(), 5);
+    }
+
+    #[test]
+    fn bernoulli_rate_respected() {
+        let mut rng = Rng::new(2);
+        let a = Availability::Bernoulli { q: 0.3 };
+        let total: usize =
+            (0..2000).map(|_| a.available(50, &mut rng).len()).sum();
+        let rate = total as f64 / (2000.0 * 50.0);
+        assert!((rate - 0.3).abs() < 0.02, "{rate}");
+    }
+
+    #[test]
+    fn per_client_rates() {
+        let mut rng = Rng::new(3);
+        let a = Availability::PerClient { q: vec![0.0, 1.0, 0.5] };
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            for i in a.available(3, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[1], 4000);
+        assert!((counts[2] as f64 / 4000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn cohort_size_and_distinctness() {
+        let mut rng = Rng::new(4);
+        let cohort = sample_cohort(&Availability::AlwaysOn, 100, 32, &mut rng);
+        assert_eq!(cohort.len(), 32);
+        let mut s = cohort.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 32);
+    }
+
+    #[test]
+    fn cohort_shrinks_when_pool_scarce() {
+        let mut rng = Rng::new(5);
+        let cohort = sample_cohort(&Availability::AlwaysOn, 8, 32, &mut rng);
+        assert_eq!(cohort.len(), 8);
+        let a = Availability::Bernoulli { q: 0.1 };
+        let c2 = sample_cohort(&a, 20, 32, &mut rng);
+        assert!(c2.len() <= 20);
+    }
+
+    #[test]
+    fn cohort_is_uniform_over_pool() {
+        let mut rng = Rng::new(6);
+        let mut counts = vec![0usize; 10];
+        for _ in 0..5000 {
+            for i in sample_cohort(&Availability::AlwaysOn, 10, 3, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        for &c in &counts {
+            let f = c as f64 / 5000.0;
+            assert!((f - 0.3).abs() < 0.03, "{counts:?}");
+        }
+    }
+}

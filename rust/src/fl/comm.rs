@@ -1,0 +1,70 @@
+//! Communication accounting — the paper's x-axis in every "vs bits" plot.
+//!
+//! Only client→master (uplink) traffic is counted, per footnote 5: the
+//! master→client broadcast is orders of magnitude cheaper in FL systems.
+
+use crate::compress::Compressor;
+
+pub const BITS_PER_FLOAT: u64 = 32;
+
+/// Running uplink-bit meter for one experiment arm.
+#[derive(Clone, Debug, Default)]
+pub struct BitMeter {
+    total: u64,
+}
+
+impl BitMeter {
+    pub fn new() -> Self {
+        BitMeter { total: 0 }
+    }
+
+    /// One full-precision update vector of dimension `d`.
+    pub fn add_update(&mut self, d: usize) {
+        self.total += BITS_PER_FLOAT * d as u64;
+    }
+
+    /// One compressed update vector.
+    pub fn add_compressed_update(&mut self, d: usize, c: &Compressor) {
+        self.total += c.bits(d);
+    }
+
+    /// Sampling-negotiation extras (Remark 3): `floats` per client across
+    /// `clients` cohort members.
+    pub fn add_negotiation(&mut self, clients: usize, floats_per_client: usize) {
+        self.total += BITS_PER_FLOAT * (clients * floats_per_client) as u64;
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_updates_and_negotiation() {
+        let mut m = BitMeter::new();
+        m.add_update(100); // 3200
+        m.add_negotiation(32, 9); // 32*9*32 = 9216
+        assert_eq!(m.total_bits(), 3200 + 9216);
+    }
+
+    #[test]
+    fn compressed_updates_cost_less() {
+        let mut dense = BitMeter::new();
+        dense.add_update(10_000);
+        let mut sparse = BitMeter::new();
+        sparse.add_compressed_update(10_000, &Compressor::RandK { k: 100 });
+        assert!(sparse.total_bits() < dense.total_bits());
+    }
+
+    #[test]
+    fn zero_cost_paths() {
+        let mut m = BitMeter::new();
+        m.add_negotiation(0, 5);
+        m.add_negotiation(5, 0);
+        assert_eq!(m.total_bits(), 0);
+    }
+}

@@ -1,0 +1,51 @@
+//! # fedsamp — Optimal Client Sampling for Federated Learning
+//!
+//! Production-oriented reproduction of Chen, Horváth & Richtárik,
+//! *Optimal Client Sampling for Federated Learning* (TMLR).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack
+//! (see DESIGN.md): JAX/Pallas author the per-client compute at build
+//! time (`python/compile/`), AOT-lowered to HLO text artifacts, which the
+//! [`runtime`] module executes through the PJRT C API. The federated
+//! orchestration — and the paper's contribution, the optimal client
+//! [`sampling`] schemes — live entirely in rust; python never runs on the
+//! training path.
+//!
+//! ## Quick tour
+//!
+//! * [`sampling`] — OCS (Eq. 7), AOCS (Alg. 2), uniform/full baselines,
+//!   variance & improvement-factor machinery (Defs. 11–12).
+//! * [`fl`] — FedAvg (Alg. 3) / DSGD (Eq. 2) master-client protocol with
+//!   secure aggregation and per-round communication accounting.
+//! * [`secure_agg`] — pairwise-mask additive secure aggregation.
+//! * [`data`] — synthetic federated datasets (FEMNIST-like, Shakespeare-
+//!   like, CIFAR-like) incl. the paper's (s,a,b) unbalancing procedure.
+//! * [`sim`] — pure-rust FL simulator over [`model`] (logistic/quadratic)
+//!   for theory experiments and fast sweeps.
+//! * [`runtime`] — PJRT artifact loading + execution (XLA path).
+//! * [`config`] — experiment configs + per-figure presets.
+//! * [`compress`] — optional update compression composed with OCS (§6).
+//!
+//! ```no_run
+//! use fedsamp::config::presets;
+//! use fedsamp::sim::run_sim;
+//!
+//! let cfg = presets::femnist(1, 3); // Figure 3, m = 3
+//! let result = run_sim(&cfg).unwrap();
+//! println!("final accuracy {:.3}", result.final_accuracy());
+//! ```
+
+pub mod bench;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod fl;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod secure_agg;
+pub mod sim;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,349 @@
+//! `fedsamp` — launcher CLI for the Optimal Client Sampling reproduction.
+//!
+//! Subcommands:
+//!   train    run one experiment (preset or JSON config, with overrides)
+//!   figures  regenerate a paper figure's data (2–7, 13)
+//!   sweep    budget/step-size sweeps on the theory testbed
+//!   inspect  list AOT artifacts and dataset statistics
+
+use fedsamp::bench::{f, Table};
+use fedsamp::config::{presets, ExperimentConfig, Strategy};
+use fedsamp::exp::figures::{run_figure, Scale};
+use fedsamp::exp::{default_artifacts_dir, run_experiment};
+use fedsamp::fl::TrainOptions;
+use fedsamp::model::quadratic::QuadraticProblem;
+use fedsamp::runtime::manifest::load_manifests;
+use fedsamp::sampling::Sampler;
+use fedsamp::sim::theory::{max_stable_eta, run_dsgd_quadratic};
+use fedsamp::util::args::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("figures") => cmd_figures(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "fedsamp — Optimal Client Sampling for Federated Learning\n\n\
+         USAGE: fedsamp <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+           train    run one experiment\n\
+           figures  regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
+           sweep    theory sweeps (budget m, step size)\n\
+           inspect  show artifacts + dataset statistics\n\n\
+         Run `fedsamp <subcommand> --help` for options."
+    );
+}
+
+fn parse_or_exit(cli: &Cli, args: &[String]) -> fedsamp::util::args::Parsed {
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", cli.usage());
+        std::process::exit(0);
+    }
+    match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let cli = Cli::new("fedsamp train", "run one federated experiment")
+        .opt("config", None, "JSON config file (see config module schema)")
+        .opt("preset", None, "preset: femnist<V>, shakespeare<N>, cifar")
+        .opt("strategy", Some("aocs"), "full|uniform|ocs|aocs")
+        .opt("rounds", None, "override communication rounds")
+        .opt("m", None, "override expected budget m")
+        .opt("seed", Some("1"), "RNG seed")
+        .opt("seeds", Some("1"), "number of seeds to average")
+        .opt("workers", None, "override worker threads")
+        .opt("sim", Some("false"), "true = force native sim engine")
+        .opt("out", None, "directory for JSON/CSV results")
+        .opt("artifacts", None, "artifacts directory")
+        .flag("verbose", "print per-round progress");
+    let p = parse_or_exit(&cli, args);
+
+    let mut cfg: ExperimentConfig = if let Some(path) = p.get("config") {
+        match ExperimentConfig::load(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let preset = p.get("preset").unwrap_or("femnist1");
+        match preset {
+            "femnist1" => presets::femnist(1, 3),
+            "femnist2" => presets::femnist(2, 3),
+            "femnist3" => presets::femnist(3, 3),
+            "shakespeare32" => presets::shakespeare(32, 2),
+            "shakespeare128" => presets::shakespeare(128, 4),
+            "cifar" => presets::cifar(3),
+            other => {
+                eprintln!("unknown preset '{other}'");
+                return 2;
+            }
+        }
+    };
+
+    let strategy = match Strategy::parse(&p.str("strategy"), 4) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    cfg = cfg.with_strategy(strategy);
+    if let Some(r) = p.get("rounds") {
+        cfg.rounds = r.parse().expect("--rounds");
+    }
+    if let Some(m) = p.get("m") {
+        cfg.budget = m.parse().expect("--m");
+    }
+    if let Some(w) = p.get("workers") {
+        cfg.workers = w.parse().expect("--workers");
+    }
+    cfg.seed = p.u64("seed");
+    if p.str("sim") == "true" {
+        cfg.model = "native:logistic".into();
+    }
+    let artifacts = p
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let opts = TrainOptions {
+        compressor: None,
+        verbose_every: if p.flag("verbose") { 1 } else { 10 },
+    };
+
+    let seeds = p.u64("seeds");
+    let mut runs = Vec::new();
+    for s in 0..seeds {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed + s;
+        match run_experiment(&c, &artifacts, &opts) {
+            Ok(r) => runs.push(r),
+            Err(e) => {
+                eprintln!("run failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let avg = fedsamp::metrics::average_runs(&runs);
+    println!(
+        "\n{}: final_acc={:.4} best_acc={:.4} final_loss={:.4} \
+         total_uplink={:.2} Mbit mean_alpha={:.3}",
+        avg.name,
+        avg.final_accuracy(),
+        avg.best_accuracy(),
+        avg.final_train_loss(),
+        avg.total_uplink_bits() as f64 / 1e6,
+        avg.mean_alpha()
+    );
+    if let Some(out) = p.get("out") {
+        match avg.save(out) {
+            Ok(path) => println!("saved {path}"),
+            Err(e) => eprintln!("save failed: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_figures(args: &[String]) -> i32 {
+    let cli = Cli::new("fedsamp figures", "regenerate a paper figure")
+        .opt("fig", Some("3"), "figure id: 2, 3, 4, 5, 6, 7, 13")
+        .opt("scale", Some("quick"), "quick|full (full = paper scale)")
+        .opt("seeds", Some("1"), "seeds to average (paper: 5)")
+        .opt("sim", Some("true"), "true = sim engine, false = XLA engine")
+        .opt("out", None, "directory for JSON/CSV series")
+        .opt("artifacts", None, "artifacts directory");
+    let p = parse_or_exit(&cli, args);
+    let scale = match Scale::parse(&p.str("scale")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let artifacts = p
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let use_sim = p.str("sim") == "true";
+    match run_figure(
+        &p.str("fig"),
+        scale,
+        p.u64("seeds"),
+        &artifacts,
+        use_sim,
+        p.get("out"),
+        &TrainOptions::default(),
+    ) {
+        Ok(_) => 0,
+        Err(e) => {
+            eprintln!("figure failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cli = Cli::new("fedsamp sweep", "theory sweeps on the quadratic testbed")
+        .opt("kind", Some("stepsize"), "stepsize|budget")
+        .opt("n", Some("32"), "number of clients")
+        .opt("dim", Some("32"), "problem dimension")
+        .opt("ms", Some("2,4,8,16"), "budgets to sweep (kind=budget)")
+        .opt("m", Some("4"), "budget (kind=stepsize)")
+        .opt("rounds", Some("200"), "rounds per run")
+        .opt("seed", Some("1"), "seed");
+    let p = parse_or_exit(&cli, args);
+    let n = p.usize("n");
+    let problem = QuadraticProblem::generate(
+        n,
+        p.usize("dim"),
+        3.0,
+        8.0,
+        None,
+        p.u64("seed"),
+    );
+    println!(
+        "quadratic testbed: n={n} dim={} L={:.3} mu={:.3}",
+        p.usize("dim"),
+        problem.smoothness(),
+        problem.strong_convexity()
+    );
+    match p.str("kind").as_str() {
+        "stepsize" => {
+            let m = p.usize("m");
+            let mut t = Table::new(&["strategy", "max_stable_eta", "eta*L"]);
+            for s in [Sampler::Full, Sampler::Ocs, Sampler::Uniform] {
+                let eta = max_stable_eta(&problem, &s, m, p.usize("rounds"), 5);
+                t.row(vec![
+                    s.name().into(),
+                    f(eta, 4),
+                    f(eta * problem.smoothness(), 3),
+                ]);
+            }
+            t.print();
+        }
+        "budget" => {
+            let rounds = p.usize("rounds");
+            let mut t =
+                Table::new(&["m", "strategy", "final_dist_sq", "mean_gamma"]);
+            for m in p.usize_list("ms") {
+                for s in [Sampler::Ocs, Sampler::Uniform] {
+                    let eta = 0.25 / problem.smoothness();
+                    let run = run_dsgd_quadratic(
+                        &problem,
+                        &s,
+                        m,
+                        eta,
+                        rounds,
+                        0.0,
+                        p.u64("seed"),
+                    );
+                    t.row(vec![
+                        m.to_string(),
+                        s.name().into(),
+                        format!("{:.3e}", run.final_dist()),
+                        f(run.mean_gamma(), 3),
+                    ]);
+                }
+            }
+            t.print();
+        }
+        other => {
+            eprintln!("unknown sweep kind '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_inspect(args: &[String]) -> i32 {
+    let cli = Cli::new("fedsamp inspect", "show artifacts + dataset stats")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("data", None, "dataset: femnist1..3|shakespeare|cifar");
+    let p = parse_or_exit(&cli, args);
+    let artifacts = p
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(default_artifacts_dir);
+    match load_manifests(&artifacts) {
+        Ok(models) => {
+            let mut t = Table::new(&[
+                "model", "kind", "params", "batch", "classes", "pallas",
+            ]);
+            for m in models {
+                t.row(vec![
+                    m.name.clone(),
+                    m.kind.clone(),
+                    m.num_params.to_string(),
+                    m.batch_size.to_string(),
+                    m.num_classes.to_string(),
+                    m.use_pallas.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    if let Some(ds) = p.get("data") {
+        let spec = match ds {
+            "femnist1" => {
+                fedsamp::config::DataSpec::FemnistLike { pool: 350, variant: 1 }
+            }
+            "femnist2" => {
+                fedsamp::config::DataSpec::FemnistLike { pool: 350, variant: 2 }
+            }
+            "femnist3" => {
+                fedsamp::config::DataSpec::FemnistLike { pool: 350, variant: 3 }
+            }
+            "shakespeare" => {
+                fedsamp::config::DataSpec::ShakespeareLike { pool: 715 }
+            }
+            "cifar" => fedsamp::config::DataSpec::CifarLike {
+                pool: 500,
+                per_client: 100,
+            },
+            other => {
+                eprintln!("unknown dataset '{other}'");
+                return 2;
+            }
+        };
+        let fd = fedsamp::data::build(&spec, 64, 1);
+        let sizes: Vec<f64> =
+            fd.client_sizes().iter().map(|&s| s as f64).collect();
+        let s = fedsamp::util::stats::summarize(&sizes);
+        println!(
+            "\n{ds}: {} clients, {} examples; per-client n: mean {:.1} \
+             std {:.1} min {} max {} median {:.0}",
+            fd.num_clients(),
+            fd.total_examples(),
+            s.mean,
+            s.std,
+            s.min,
+            s.max,
+            s.median
+        );
+    }
+    0
+}

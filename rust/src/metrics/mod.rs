@@ -1,0 +1,297 @@
+//! Metrics recording: per-round records (loss, accuracy, bits, α/γ),
+//! run-level series, CSV/JSON export — the data behind every figure.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One communication round's observables.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// weighted mean local training loss across the cohort
+    pub train_loss: f64,
+    /// validation accuracy (NaN on non-eval rounds)
+    pub val_accuracy: f64,
+    /// cumulative client→master uplink bits after this round
+    pub uplink_bits: u64,
+    /// clients that actually transmitted updates this round
+    pub transmitted: usize,
+    /// expected budget Σ p_i
+    pub expected_budget: f64,
+    /// improvement factor α^k (Definition 11)
+    pub alpha: f64,
+    /// relative improvement factor γ^k (Eq. 16)
+    pub gamma: f64,
+}
+
+/// A full experiment trajectory.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub name: String,
+    pub strategy: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunResult {
+    pub fn new(name: &str, strategy: &str) -> Self {
+        RunResult { name: name.into(), strategy: strategy.into(), rounds: vec![] }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.rounds.push(rec);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find(|r| !r.val_accuracy.is_nan())
+            .map(|r| r.val_accuracy)
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter(|r| !r.val_accuracy.is_nan())
+            .map(|r| r.val_accuracy)
+            .fold(f64::NAN, f64::max)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.rounds.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.rounds.last().map(|r| r.uplink_bits).unwrap_or(0)
+    }
+
+    /// First round reaching `target` validation accuracy (None if never).
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.val_accuracy >= target)
+            .map(|r| r.round)
+    }
+
+    /// Uplink bits spent when `target` accuracy was first reached.
+    pub fn bits_to_accuracy(&self, target: f64) -> Option<u64> {
+        self.rounds
+            .iter()
+            .find(|r| r.val_accuracy >= target)
+            .map(|r| r.uplink_bits)
+    }
+
+    /// Mean α over rounds where it was defined.
+    pub fn mean_alpha(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .rounds
+            .iter()
+            .map(|r| r.alpha)
+            .filter(|a| !a.is_nan())
+            .collect();
+        if xs.is_empty() {
+            f64::NAN
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    /// "Current best" accuracy series (Figures 8–12).
+    pub fn best_so_far_series(&self) -> Vec<(usize, f64)> {
+        let mut best = f64::NAN;
+        let mut out = Vec::new();
+        for r in &self.rounds {
+            if !r.val_accuracy.is_nan() {
+                best = if best.is_nan() {
+                    r.val_accuracy
+                } else {
+                    best.max(r.val_accuracy)
+                };
+                out.push((r.round, best));
+            }
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,train_loss,val_accuracy,uplink_bits,transmitted,\
+             expected_budget,alpha,gamma\n",
+        );
+        for r in &self.rounds {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{},{}",
+                r.round,
+                r.train_loss,
+                r.val_accuracy,
+                r.uplink_bits,
+                r.transmitted,
+                r.expected_budget,
+                r.alpha,
+                r.gamma
+            );
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::num(r.round as f64)),
+                                ("train_loss", Json::num(r.train_loss)),
+                                ("val_accuracy", Json::num(r.val_accuracy)),
+                                ("uplink_bits", Json::num(r.uplink_bits as f64)),
+                                ("transmitted", Json::num(r.transmitted as f64)),
+                                ("expected_budget", Json::num(r.expected_budget)),
+                                ("alpha", Json::num(r.alpha)),
+                                ("gamma", Json::num(r.gamma)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.json", self.name);
+        std::fs::write(&path, self.to_json().to_pretty())?;
+        Ok(path)
+    }
+}
+
+/// Average several seeds' runs pointwise (mean over matching rounds) —
+/// the paper reports mean ± std over 5 seeds.
+pub fn average_runs(runs: &[RunResult]) -> RunResult {
+    assert!(!runs.is_empty());
+    let n = runs[0].rounds.len();
+    assert!(
+        runs.iter().all(|r| r.rounds.len() == n),
+        "seed runs must align"
+    );
+    let mut out = RunResult::new(&runs[0].name, &runs[0].strategy);
+    for i in 0..n {
+        let k = runs.len() as f64;
+        let get = |f: &dyn Fn(&RoundRecord) -> f64| -> f64 {
+            let vals: Vec<f64> =
+                runs.iter().map(|r| f(&r.rounds[i])).filter(|v| !v.is_nan()).collect();
+            if vals.is_empty() {
+                f64::NAN
+            } else {
+                vals.iter().sum::<f64>() / vals.len() as f64
+            }
+        };
+        out.push(RoundRecord {
+            round: runs[0].rounds[i].round,
+            train_loss: get(&|r| r.train_loss),
+            val_accuracy: get(&|r| r.val_accuracy),
+            uplink_bits: (runs.iter().map(|r| r.rounds[i].uplink_bits).sum::<u64>()
+                as f64
+                / k) as u64,
+            transmitted: (runs.iter().map(|r| r.rounds[i].transmitted).sum::<usize>()
+                as f64
+                / k) as usize,
+            expected_budget: get(&|r| r.expected_budget),
+            alpha: get(&|r| r.alpha),
+            gamma: get(&|r| r.gamma),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, loss: f64, acc: f64, bits: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: loss,
+            val_accuracy: acc,
+            uplink_bits: bits,
+            transmitted: 3,
+            expected_budget: 3.0,
+            alpha: 0.5,
+            gamma: 0.6,
+        }
+    }
+
+    #[test]
+    fn accuracy_queries() {
+        let mut r = RunResult::new("t", "ocs");
+        r.push(rec(0, 2.0, f64::NAN, 100));
+        r.push(rec(1, 1.5, 0.3, 200));
+        r.push(rec(2, 1.0, 0.6, 300));
+        r.push(rec(3, 0.9, 0.5, 400));
+        assert_eq!(r.final_accuracy(), 0.5);
+        assert_eq!(r.best_accuracy(), 0.6);
+        assert_eq!(r.rounds_to_accuracy(0.55), Some(2));
+        assert_eq!(r.bits_to_accuracy(0.55), Some(300));
+        assert_eq!(r.rounds_to_accuracy(0.9), None);
+        assert_eq!(r.total_uplink_bits(), 400);
+    }
+
+    #[test]
+    fn best_so_far_is_monotone() {
+        let mut r = RunResult::new("t", "ocs");
+        for (i, acc) in [0.2, 0.5, 0.4, 0.7, 0.6].iter().enumerate() {
+            r.push(rec(i, 1.0, *acc, 0));
+        }
+        let series = r.best_so_far_series();
+        assert_eq!(series.len(), 5);
+        for w in series.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(series.last().unwrap().1, 0.7);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = RunResult::new("t", "ocs");
+        r.push(rec(0, 2.0, 0.1, 10));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_round_trips_name() {
+        let mut r = RunResult::new("myrun", "aocs");
+        r.push(rec(0, 2.0, 0.1, 10));
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("myrun"));
+        assert_eq!(j.get("rounds").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn averaging_aligned_runs() {
+        let mk = |acc: f64| {
+            let mut r = RunResult::new("t", "ocs");
+            r.push(rec(0, 1.0, acc, 100));
+            r
+        };
+        let avg = average_runs(&[mk(0.4), mk(0.6)]);
+        assert!((avg.rounds[0].val_accuracy - 0.5).abs() < 1e-12);
+        assert_eq!(avg.rounds[0].uplink_bits, 100);
+    }
+
+    #[test]
+    fn empty_run_queries_are_nan() {
+        let r = RunResult::new("t", "ocs");
+        assert!(r.final_accuracy().is_nan());
+        assert!(r.final_train_loss().is_nan());
+        assert_eq!(r.total_uplink_bits(), 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Multinomial logistic regression with closed-form gradients.
+//!
+//! Parameters are `[W (dim × classes) row-major | b (classes)]` flattened.
+//! Convex and L-smooth, matching the assumptions of Theorems 13/17; used
+//! by the sim path for fast end-to-end federated runs.
+
+use super::NativeModel;
+use crate::data::ClientData;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Logistic {
+    pub input_dim: usize,
+    pub classes: usize,
+    /// L2 regularization (λ/2‖θ‖²) — λ > 0 makes the objective strongly
+    /// convex (Theorem 13's setting).
+    pub l2: f64,
+}
+
+impl Logistic {
+    pub fn new(input_dim: usize, classes: usize, l2: f64) -> Logistic {
+        Logistic { input_dim, classes, l2 }
+    }
+
+    fn logits(&self, params: &[f32], x: &[f32], out: &mut [f32]) {
+        let c = self.classes;
+        let bias = &params[self.input_dim * c..];
+        out.copy_from_slice(bias);
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &params[j * c..(j + 1) * c];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += xj * w;
+            }
+        }
+    }
+
+    /// log-softmax in place; returns logsumexp.
+    fn log_softmax(logits: &mut [f32]) -> f32 {
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = max
+            + logits
+                .iter()
+                .map(|&z| (z - max).exp())
+                .sum::<f32>()
+                .ln();
+        for z in logits.iter_mut() {
+            *z -= lse;
+        }
+        lse
+    }
+}
+
+impl NativeModel for Logistic {
+    fn dim(&self) -> usize {
+        (self.input_dim + 1) * self.classes
+    }
+
+    fn loss_grad(
+        &self,
+        params: &[f32],
+        data: &ClientData,
+        batch: &[usize],
+        grad: &mut [f32],
+    ) -> f64 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        assert!(!batch.is_empty());
+        let c = self.classes;
+        grad.fill(0.0);
+        let mut logits = vec![0.0f32; c];
+        let mut total = 0.0f64;
+        for &i in batch {
+            let x = data.dense_row(i);
+            let y = data.labels[i] as usize;
+            self.logits(params, x, &mut logits);
+            Self::log_softmax(&mut logits);
+            total += -logits[y] as f64;
+            // dlogits = softmax - onehot
+            for (j, z) in logits.iter().enumerate() {
+                let d = z.exp() - (j == y) as u8 as f32;
+                // bias grad
+                grad[self.input_dim * c + j] += d;
+                // weight grads (only non-zero features)
+                for (k, &xk) in x.iter().enumerate() {
+                    if xk != 0.0 {
+                        grad[k * c + j] += d * xk;
+                    }
+                }
+            }
+        }
+        let inv = 1.0 / batch.len() as f32;
+        for (g, p) in grad.iter_mut().zip(params) {
+            *g = *g * inv + self.l2 as f32 * p;
+        }
+        total / batch.len() as f64
+            + 0.5 * self.l2 * params.iter().map(|&p| (p as f64) * p as f64).sum::<f64>()
+    }
+
+    fn loss(&self, params: &[f32], data: &ClientData) -> f64 {
+        let c = self.classes;
+        let mut logits = vec![0.0f32; c];
+        let mut total = 0.0f64;
+        for i in 0..data.len() {
+            self.logits(params, data.dense_row(i), &mut logits);
+            Self::log_softmax(&mut logits);
+            total += -logits[data.labels[i] as usize] as f64;
+        }
+        total / data.len().max(1) as f64
+            + 0.5 * self.l2 * params.iter().map(|&p| (p as f64) * p as f64).sum::<f64>()
+    }
+
+    fn accuracy(&self, params: &[f32], data: &ClientData) -> f64 {
+        let c = self.classes;
+        let mut logits = vec![0.0f32; c];
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            self.logits(params, data.dense_row(i), &mut logits);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += (pred == data.labels[i] as usize) as usize;
+        }
+        correct as f64 / data.len().max(1) as f64
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x10615_71C);
+        let scale = 1.0 / (self.input_dim as f32).sqrt();
+        let mut p: Vec<f32> = (0..self.input_dim * self.classes)
+            .map(|_| rng.normal_f32(0.0, scale))
+            .collect();
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::finite_diff_check;
+
+    fn toy_data(n: usize, dim: usize, classes: usize, seed: u64) -> ClientData {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * dim);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let y = rng.range(0, classes) as u32;
+            for j in 0..dim {
+                // class-dependent mean => separable-ish
+                let mu = if j % classes == y as usize { 1.0 } else { 0.0 };
+                x.push(rng.normal_f32(mu, 0.5));
+            }
+            labels.push(y);
+        }
+        ClientData { x_dense: x, x_tokens: vec![], labels, dim }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let model = Logistic::new(6, 3, 0.01);
+        let data = toy_data(12, 6, 3, 1);
+        let params = model.init_params(2);
+        let batch: Vec<usize> = (0..12).collect();
+        finite_diff_check(&model, &params, &data, &batch, 2e-2);
+    }
+
+    #[test]
+    fn sgd_reduces_loss_and_learns() {
+        let model = Logistic::new(8, 4, 0.0);
+        let data = toy_data(200, 8, 4, 3);
+        let mut params = model.init_params(4);
+        let mut grad = vec![0.0f32; model.dim()];
+        let first = model.loss(&params, &data);
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            let batch: Vec<usize> =
+                (0..16).map(|_| rng.range(0, data.len())).collect();
+            model.loss_grad(&params, &data, &batch, &mut grad);
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= 0.3 * g;
+            }
+        }
+        let last = model.loss(&params, &data);
+        assert!(last < first * 0.7, "{first} -> {last}");
+        assert!(model.accuracy(&params, &data) > 0.5);
+    }
+
+    #[test]
+    fn l2_pulls_loss_up_and_grad_toward_params() {
+        let m0 = Logistic::new(4, 2, 0.0);
+        let m1 = Logistic::new(4, 2, 1.0);
+        let data = toy_data(8, 4, 2, 7);
+        let params = vec![0.5f32; m0.dim()];
+        assert!(m1.loss(&params, &data) > m0.loss(&params, &data));
+        let batch: Vec<usize> = (0..8).collect();
+        let mut g0 = vec![0.0f32; m0.dim()];
+        let mut g1 = vec![0.0f32; m1.dim()];
+        m0.loss_grad(&params, &data, &batch, &mut g0);
+        m1.loss_grad(&params, &data, &batch, &mut g1);
+        for (a, b) in g0.iter().zip(&g1) {
+            assert!((b - a - 0.5).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = Logistic::new(5, 3, 0.0);
+        assert_eq!(m.init_params(9), m.init_params(9));
+        assert_ne!(m.init_params(9), m.init_params(10));
+    }
+}

@@ -1,0 +1,73 @@
+//! Rust-native models with closed-form gradients for the sim path.
+//!
+//! The sim path runs the *same* FL orchestration as the XLA path but
+//! swaps the per-client compute for exact-gradient rust models — fast
+//! enough for 10⁴-round theory sweeps (Theorems 13/15/17/18) and for the
+//! property tests. Two models:
+//!
+//! * [`logistic`] — multinomial logistic regression over [`crate::data`]
+//!   features (convex, L-smooth: matches the convex theory sections);
+//! * [`quadratic`] — per-client quadratics with controllable conditioning
+//!   and heterogeneity (strongly convex; exact minimizer known, so the
+//!   `E‖x^k − x*‖²` recursion of Theorem 13 is directly measurable).
+
+pub mod logistic;
+pub mod quadratic;
+
+use crate::data::ClientData;
+
+/// A model usable by the native FL engine.
+pub trait NativeModel: Send + Sync {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Mean loss and gradient over the given example indices of a client
+    /// dataset. The gradient is written into `grad` (len = dim()).
+    fn loss_grad(
+        &self,
+        params: &[f32],
+        data: &ClientData,
+        batch: &[usize],
+        grad: &mut [f32],
+    ) -> f64;
+
+    /// Mean loss over a full dataset (no gradient).
+    fn loss(&self, params: &[f32], data: &ClientData) -> f64;
+
+    /// Classification accuracy over a dataset (NaN if not a classifier).
+    fn accuracy(&self, params: &[f32], data: &ClientData) -> f64;
+
+    /// Deterministic parameter initialization.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+}
+
+/// Numerical gradient check helper shared by model tests.
+#[cfg(test)]
+pub(crate) fn finite_diff_check(
+    model: &dyn NativeModel,
+    params: &[f32],
+    data: &ClientData,
+    batch: &[usize],
+    tol: f64,
+) {
+    let d = model.dim();
+    let mut grad = vec![0.0f32; d];
+    model.loss_grad(params, data, batch, &mut grad);
+    let eps = 5e-3f32;
+    // spot-check a handful of coordinates
+    let stride = (d / 7).max(1);
+    for i in (0..d).step_by(stride) {
+        let mut p = params.to_vec();
+        p[i] += eps;
+        let mut scratch = vec![0.0f32; d];
+        let up = model.loss_grad(&p, data, batch, &mut scratch);
+        p[i] -= 2.0 * eps;
+        let down = model.loss_grad(&p, data, batch, &mut scratch);
+        let fd = (up - down) / (2.0 * eps as f64);
+        assert!(
+            (fd - grad[i] as f64).abs() < tol * (1.0 + fd.abs()),
+            "coord {i}: finite-diff {fd} vs analytic {}",
+            grad[i]
+        );
+    }
+}

@@ -1,0 +1,263 @@
+//! Per-client quadratic objectives with a known global minimizer.
+//!
+//! `f_i(x) = ½ (x − c_i)ᵀ A_i (x − c_i)` with diagonal PSD `A_i`.
+//! `f = Σ w_i f_i` is µ-strongly convex and L-smooth with
+//! `µ = min_j Σ_i w_i a_{ij}`, `L = max_j Σ_i w_i a_{ij}`, and the global
+//! minimizer solves the weighted normal equations coordinate-wise —
+//! so Theorem 13's `E‖x^k − x*‖²` recursion is directly measurable.
+//!
+//! Client heterogeneity (how far apart the `c_i` sit, how skewed the
+//! curvatures are) controls the update-norm spread and therefore α^k.
+
+use crate::tensor;
+use crate::util::rng::Rng;
+
+/// One client's quadratic.
+#[derive(Clone, Debug)]
+pub struct ClientQuadratic {
+    /// diagonal of A_i (all entries > 0)
+    pub curvature: Vec<f32>,
+    /// minimizer c_i of the local objective
+    pub center: Vec<f32>,
+}
+
+impl ClientQuadratic {
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for ((&a, &c), &xi) in
+            self.curvature.iter().zip(&self.center).zip(x)
+        {
+            let d = (xi - c) as f64;
+            acc += 0.5 * a as f64 * d * d;
+        }
+        acc
+    }
+
+    /// ∇f_i(x) = A_i (x − c_i), written into `grad`.
+    pub fn grad(&self, x: &[f32], grad: &mut [f32]) {
+        for (g, ((&a, &c), &xi)) in grad
+            .iter_mut()
+            .zip(self.curvature.iter().zip(&self.center).zip(x))
+        {
+            *g = a * (xi - c);
+        }
+    }
+}
+
+/// The federated quadratic problem: n clients + weights.
+#[derive(Clone, Debug)]
+pub struct QuadraticProblem {
+    pub clients: Vec<ClientQuadratic>,
+    pub weights: Vec<f64>,
+    pub dim: usize,
+}
+
+impl QuadraticProblem {
+    /// Build a heterogeneous problem.
+    ///
+    /// * `spread` — scale of the distance between client centers
+    ///   (larger ⇒ more heterogeneous gradients ⇒ smaller α^k);
+    /// * `cond` — curvature range [1, cond] (condition number knob);
+    /// * `weights` — client weights (normalized internally).
+    pub fn generate(
+        n: usize,
+        dim: usize,
+        spread: f64,
+        cond: f64,
+        weights: Option<Vec<f64>>,
+        seed: u64,
+    ) -> QuadraticProblem {
+        Self::generate_skewed(n, dim, spread, 1.0, cond, weights, seed)
+    }
+
+    /// [`QuadraticProblem::generate`] with an explicit heterogeneity knob.
+    ///
+    /// Per-client center scales are log-normal `spread·exp(skew·g_i)`:
+    /// `skew = 0` makes all client objectives equally far from the origin
+    /// (similar update norms ⇒ α^k → 1, OCS ≈ uniform), large `skew`
+    /// concentrates the gradient mass on a few clients (α^k → 0, OCS ≈
+    /// full participation). Note α^k is invariant to `spread` itself —
+    /// it only sets the absolute scale.
+    pub fn generate_skewed(
+        n: usize,
+        dim: usize,
+        spread: f64,
+        skew: f64,
+        cond: f64,
+        weights: Option<Vec<f64>>,
+        seed: u64,
+    ) -> QuadraticProblem {
+        assert!(n > 0 && dim > 0 && cond >= 1.0);
+        let root = Rng::new(seed ^ 0x0112_AD);
+        let clients = (0..n)
+            .map(|i| {
+                let mut rng = root.fork(i as u64);
+                // log-normal center scale: heterogeneity ∝ skew
+                let scale = spread * (skew * rng.gaussian()).exp();
+                ClientQuadratic {
+                    curvature: (0..dim)
+                        .map(|_| (1.0 + rng.f64() * (cond - 1.0)) as f32)
+                        .collect(),
+                    center: (0..dim)
+                        .map(|_| rng.normal_f32(0.0, scale as f32))
+                        .collect(),
+                }
+            })
+            .collect();
+        let mut w = weights.unwrap_or_else(|| vec![1.0; n]);
+        let total: f64 = w.iter().sum();
+        for wi in &mut w {
+            *wi /= total;
+        }
+        QuadraticProblem { clients, weights: w, dim }
+    }
+
+    /// Global objective f(x) = Σ w_i f_i(x).
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        self.clients
+            .iter()
+            .zip(&self.weights)
+            .map(|(c, &w)| w * c.loss(x))
+            .sum()
+    }
+
+    /// Exact global minimizer: x*_j = Σ_i w_i a_ij c_ij / Σ_i w_i a_ij.
+    pub fn minimizer(&self) -> Vec<f32> {
+        let mut num = vec![0.0f64; self.dim];
+        let mut den = vec![0.0f64; self.dim];
+        for (c, &w) in self.clients.iter().zip(&self.weights) {
+            for j in 0..self.dim {
+                num[j] += w * c.curvature[j] as f64 * c.center[j] as f64;
+                den[j] += w * c.curvature[j] as f64;
+            }
+        }
+        num.iter().zip(&den).map(|(n, d)| (n / d) as f32).collect()
+    }
+
+    /// Smoothness constant L of f (max aggregated curvature).
+    pub fn smoothness(&self) -> f64 {
+        (0..self.dim)
+            .map(|j| {
+                self.clients
+                    .iter()
+                    .zip(&self.weights)
+                    .map(|(c, &w)| w * c.curvature[j] as f64)
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Strong-convexity constant µ of f (min aggregated curvature).
+    pub fn strong_convexity(&self) -> f64 {
+        (0..self.dim)
+            .map(|j| {
+                self.clients
+                    .iter()
+                    .zip(&self.weights)
+                    .map(|(c, &w)| w * c.curvature[j] as f64)
+                    .sum::<f64>()
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Squared distance to the optimum (the Theorem-13 Lyapunov value).
+    pub fn dist_to_opt_sq(&self, x: &[f32]) -> f64 {
+        tensor::dist_sq(x, &self.minimizer())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem() -> QuadraticProblem {
+        QuadraticProblem::generate(8, 16, 2.0, 10.0, None, 5)
+    }
+
+    #[test]
+    fn minimizer_has_zero_gradient() {
+        let p = problem();
+        let xstar = p.minimizer();
+        let mut agg = vec![0.0f64; p.dim];
+        let mut g = vec![0.0f32; p.dim];
+        for (c, &w) in p.clients.iter().zip(&p.weights) {
+            c.grad(&xstar, &mut g);
+            for (a, &gi) in agg.iter_mut().zip(&g) {
+                *a += w * gi as f64;
+            }
+        }
+        for a in agg {
+            assert!(a.abs() < 1e-4, "∇f(x*) component {a}");
+        }
+    }
+
+    #[test]
+    fn minimizer_is_a_minimum() {
+        let p = problem();
+        let xstar = p.minimizer();
+        let fstar = p.loss(&xstar);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let perturbed: Vec<f32> = xstar
+                .iter()
+                .map(|&x| x + rng.normal_f32(0.0, 0.5))
+                .collect();
+            assert!(p.loss(&perturbed) >= fstar - 1e-9);
+        }
+    }
+
+    #[test]
+    fn constants_ordering() {
+        let p = problem();
+        assert!(p.strong_convexity() > 0.0);
+        assert!(p.smoothness() >= p.strong_convexity());
+    }
+
+    #[test]
+    fn gradient_descent_converges_linearly() {
+        let p = problem();
+        let mut x = vec![0.0f32; p.dim];
+        let eta = 1.0 / p.smoothness();
+        let mut g = vec![0.0f32; p.dim];
+        let mut agg = vec![0.0f32; p.dim];
+        let d0 = p.dist_to_opt_sq(&x);
+        for _ in 0..200 {
+            agg.fill(0.0);
+            for (c, &w) in p.clients.iter().zip(&p.weights) {
+                c.grad(&x, &mut g);
+                tensor::axpy(&mut agg, w as f32, &g);
+            }
+            tensor::axpy(&mut x, -(eta as f32), &agg);
+        }
+        assert!(p.dist_to_opt_sq(&x) < d0 * 1e-4);
+    }
+
+    #[test]
+    fn weights_normalized() {
+        let p = QuadraticProblem::generate(4, 3, 1.0, 2.0,
+            Some(vec![1.0, 2.0, 3.0, 4.0]), 7);
+        assert!((p.weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p.weights[3] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spread_controls_heterogeneity() {
+        let tight = QuadraticProblem::generate(16, 8, 0.1, 2.0, None, 9);
+        let wide = QuadraticProblem::generate(16, 8, 10.0, 2.0, None, 9);
+        let x = vec![0.0f32; 8];
+        let grad_norms = |p: &QuadraticProblem| -> f64 {
+            let mut g = vec![0.0f32; p.dim];
+            let norms: Vec<f64> = p
+                .clients
+                .iter()
+                .map(|c| {
+                    c.grad(&x, &mut g);
+                    tensor::norm(&g)
+                })
+                .collect();
+            let m = norms.iter().sum::<f64>() / norms.len() as f64;
+            norms.iter().map(|n| (n - m) * (n - m)).sum::<f64>().sqrt()
+        };
+        assert!(grad_norms(&wide) > grad_norms(&tight) * 5.0);
+    }
+}

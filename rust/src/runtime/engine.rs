@@ -1,0 +1,374 @@
+//! The XLA-path [`ClientEngine`]: per-client local training through the
+//! AOT artifacts, with an optional persistent worker pool.
+//!
+//! PJRT handles are thread-local (`Rc`), so each worker thread constructs
+//! its *own* [`Runtime`] at startup (one compile per worker, amortized
+//! over the whole run) and pulls `(round, client)` jobs from a shared
+//! queue; only plain `Vec<f32>` data crosses threads.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::Algorithm;
+use crate::data::{ClientData, FederatedData};
+use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
+use crate::tensor;
+use crate::util::rng::Rng;
+
+use super::Runtime;
+
+/// Gather batch rows into contiguous buffers.
+fn gather_batch(
+    data: &ClientData,
+    idx: &[usize],
+) -> (Vec<f32>, Vec<i32>, Vec<u32>) {
+    let dim = data.dim;
+    let mut labels = Vec::with_capacity(idx.len());
+    if data.is_tokens() {
+        let mut toks = Vec::with_capacity(idx.len() * dim);
+        for &i in idx {
+            toks.extend_from_slice(data.token_row(i));
+            labels.push(data.labels[i]);
+        }
+        (Vec::new(), toks, labels)
+    } else {
+        let mut xs = Vec::with_capacity(idx.len() * dim);
+        for &i in idx {
+            xs.extend_from_slice(data.dense_row(i));
+            labels.push(data.labels[i]);
+        }
+        (xs, Vec::new(), labels)
+    }
+}
+
+/// One client's local pass on a [`Runtime`] (shared by the single-thread
+/// path and the pool workers).
+pub fn local_train(
+    rt: &Runtime,
+    data: &ClientData,
+    round: usize,
+    client_id: usize,
+    global: &[f32],
+    algorithm: &Algorithm,
+    seed: u64,
+) -> Result<LocalOutcome> {
+    let batch_size = rt.manifest.batch_size;
+    let mut rng =
+        Rng::new(seed ^ 0x10CA1).fork(round as u64).fork(client_id as u64);
+    let mut params = rt.params_to_literals(global)?;
+    let mut loss_sum = 0.0f64;
+    let mut steps = 0usize;
+
+    match algorithm {
+        Algorithm::Dsgd { .. } => {
+            // one stochastic batch, lr=1 ⇒ delta = exact minibatch gradient
+            let idx: Vec<usize> = (0..batch_size)
+                .map(|_| rng.range(0, data.len()))
+                .collect();
+            let (xs, toks, labels) = gather_batch(data, &idx);
+            let xb = rt.input_literal(
+                Some(&xs).filter(|v| !v.is_empty()).map(Vec::as_slice),
+                Some(&toks).filter(|v| !v.is_empty()).map(Vec::as_slice),
+                batch_size,
+            )?;
+            let oh = rt.onehot_literal(&labels, batch_size)?;
+            loss_sum += rt.train_step(&mut params, &xb, &oh, 1.0)?;
+            steps += 1;
+        }
+        Algorithm::FedAvg { local_epochs, eta_l, .. } => {
+            for _ in 0..*local_epochs {
+                for bidx in data.epoch_batches(batch_size, &mut rng) {
+                    let (xs, toks, labels) = gather_batch(data, &bidx);
+                    let xb = rt.input_literal(
+                        Some(&xs).filter(|v| !v.is_empty()).map(Vec::as_slice),
+                        Some(&toks)
+                            .filter(|v| !v.is_empty())
+                            .map(Vec::as_slice),
+                        batch_size,
+                    )?;
+                    let oh = rt.onehot_literal(&labels, batch_size)?;
+                    loss_sum +=
+                        rt.train_step(&mut params, &xb, &oh, *eta_l as f32)?;
+                    steps += 1;
+                }
+            }
+        }
+    }
+
+    let y = rt.literals_to_params(&params)?;
+    Ok(LocalOutcome {
+        delta: tensor::sub(global, &y),
+        train_loss: loss_sum / steps.max(1) as f64,
+        examples: data.len(),
+    })
+}
+
+/// Evaluate a flat parameter vector over a validation split.
+pub fn evaluate(
+    rt: &Runtime,
+    val: &ClientData,
+    global: &[f32],
+) -> Result<EvalOutcome> {
+    let eb = rt.manifest.eval_batch;
+    let params = rt.params_to_literals(global)?;
+    let per = rt.manifest.input_elems();
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let n = val.len();
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(eb);
+        let idx: Vec<usize> = (i..i + take).collect();
+        let (mut xs, mut toks, mut labels) = gather_batch(val, &idx);
+        // pad the tail with masked rows (all-zero one-hot)
+        if take < eb {
+            labels.resize(eb, u32::MAX);
+            if val.is_tokens() {
+                toks.resize(eb * per, 0);
+            } else {
+                xs.resize(eb * per, 0.0);
+            }
+        }
+        let xb = rt.input_literal(
+            Some(&xs).filter(|v| !v.is_empty()).map(Vec::as_slice),
+            Some(&toks).filter(|v| !v.is_empty()).map(Vec::as_slice),
+            eb,
+        )?;
+        let oh = rt.onehot_literal(&labels, eb)?;
+        let (l, c) = rt.eval_step(&params, &xb, &oh)?;
+        loss += l;
+        correct += c;
+        i += take;
+    }
+    Ok(EvalOutcome {
+        loss: loss / n.max(1) as f64,
+        accuracy: correct / n.max(1) as f64,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// worker pool
+// ---------------------------------------------------------------------------
+
+struct Job {
+    order: usize,
+    round: usize,
+    client: usize,
+    global: Arc<Vec<f32>>,
+}
+
+struct Reply {
+    order: usize,
+    outcome: Result<LocalOutcome, String>,
+}
+
+struct WorkerPool {
+    jobs: mpsc::Sender<Job>,
+    replies: mpsc::Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn spawn(
+        workers: usize,
+        artifacts_dir: String,
+        model: String,
+        data: Arc<FederatedData>,
+        algorithm: Algorithm,
+        seed: u64,
+    ) -> WorkerPool {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (rep_tx, rep_rx) = mpsc::channel::<Reply>();
+        let handles = (0..workers)
+            .map(|_| {
+                let job_rx = Arc::clone(&job_rx);
+                let rep_tx = rep_tx.clone();
+                let dir = artifacts_dir.clone();
+                let model = model.clone();
+                let data = Arc::clone(&data);
+                let algorithm = algorithm.clone();
+                std::thread::spawn(move || {
+                    // thread-local runtime (PJRT handles are not Send)
+                    let rt = match Runtime::load(&dir, &model) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            // surface the error on the first job instead
+                            while let Ok(job) = recv_job(&job_rx) {
+                                let _ = rep_tx.send(Reply {
+                                    order: job.order,
+                                    outcome: Err(format!("worker init: {e}")),
+                                });
+                            }
+                            return;
+                        }
+                    };
+                    while let Ok(job) = recv_job(&job_rx) {
+                        let outcome = local_train(
+                            &rt,
+                            &data.clients[job.client],
+                            job.round,
+                            job.client,
+                            &job.global,
+                            &algorithm,
+                            seed,
+                        )
+                        .map_err(|e| e.to_string());
+                        if rep_tx
+                            .send(Reply { order: job.order, outcome })
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { jobs: job_tx, replies: rep_rx, handles }
+    }
+}
+
+fn recv_job(rx: &Arc<Mutex<mpsc::Receiver<Job>>>) -> Result<Job, mpsc::RecvError> {
+    rx.lock().expect("job queue poisoned").recv()
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channel stops the workers
+        let (dead_tx, _) = mpsc::channel();
+        self.jobs = dead_tx;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine
+// ---------------------------------------------------------------------------
+
+/// XLA-backed [`ClientEngine`].
+pub struct XlaEngine {
+    runtime: Runtime, // main-thread runtime (eval + single-thread path)
+    data: Arc<FederatedData>,
+    algorithm: Algorithm,
+    seed: u64,
+    pool: Option<WorkerPool>,
+}
+
+impl XlaEngine {
+    /// `workers == 0 or 1` runs clients sequentially on the main thread;
+    /// more spawns that many persistent PJRT workers.
+    pub fn new(
+        artifacts_dir: &str,
+        model: &str,
+        data: FederatedData,
+        algorithm: Algorithm,
+        workers: usize,
+        seed: u64,
+    ) -> Result<XlaEngine> {
+        let runtime = Runtime::load(artifacts_dir, model)?;
+        let data = Arc::new(data);
+        let pool = if workers > 1 {
+            Some(WorkerPool::spawn(
+                workers,
+                artifacts_dir.to_string(),
+                model.to_string(),
+                Arc::clone(&data),
+                algorithm.clone(),
+                seed,
+            ))
+        } else {
+            None
+        };
+        Ok(XlaEngine { runtime, data, algorithm, seed, pool })
+    }
+
+    pub fn manifest(&self) -> &super::manifest::ModelManifest {
+        &self.runtime.manifest
+    }
+}
+
+impl ClientEngine for XlaEngine {
+    fn dim(&self) -> usize {
+        self.runtime.manifest.num_params
+    }
+
+    fn num_clients(&self) -> usize {
+        self.data.clients.len()
+    }
+
+    fn client_examples(&self, id: usize) -> usize {
+        self.data.clients[id].len()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        // deterministic AOT init, plus a seed-dependent jitter so seed
+        // sweeps explore different basins (matches the paper's 5-seed
+        // protocol)
+        let mut p = self.runtime.init_params().expect("init params");
+        if seed != 0 {
+            let mut rng = Rng::new(seed ^ 0x1217);
+            for v in p.iter_mut() {
+                if *v != 0.0 {
+                    *v *= 1.0 + 0.02 * rng.gaussian() as f32;
+                }
+            }
+        }
+        p
+    }
+
+    fn run_local(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        cohort: &[usize],
+    ) -> Vec<LocalOutcome> {
+        match &self.pool {
+            None => cohort
+                .iter()
+                .map(|&id| {
+                    local_train(
+                        &self.runtime,
+                        &self.data.clients[id],
+                        round,
+                        id,
+                        global,
+                        &self.algorithm,
+                        self.seed,
+                    )
+                    .expect("local training failed")
+                })
+                .collect(),
+            Some(pool) => {
+                let global = Arc::new(global.to_vec());
+                for (order, &client) in cohort.iter().enumerate() {
+                    pool.jobs
+                        .send(Job {
+                            order,
+                            round,
+                            client,
+                            global: Arc::clone(&global),
+                        })
+                        .expect("worker pool dead");
+                }
+                let mut out: Vec<Option<LocalOutcome>> =
+                    vec![None; cohort.len()];
+                for _ in 0..cohort.len() {
+                    let rep = pool.replies.recv().expect("worker pool dead");
+                    out[rep.order] =
+                        Some(rep.outcome.expect("local training failed"));
+                }
+                out.into_iter().map(Option::unwrap).collect()
+            }
+        }
+    }
+
+    fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
+        evaluate(&self.runtime, &self.data.validation, global)
+            .expect("evaluation failed")
+    }
+}

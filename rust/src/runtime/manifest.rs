@@ -1,0 +1,224 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` (L2)
+//! and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shape+name of one parameter tensor (order matters: it is the AOT
+/// entry-point argument order and the layout of the flat parameter vec).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// One AOT model's manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelManifest {
+    pub name: String,
+    pub kind: String,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub init_params: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub num_params: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String, // "f32" | "i32"
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub eval_batch: usize,
+    pub use_pallas: bool,
+}
+
+impl ModelManifest {
+    fn from_json(name: &str, dir: &Path, v: &Json) -> Result<Self, String> {
+        let get_usize = |k: &str| {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| format!("manifest[{name}].{k} missing"))
+        };
+        let get_str = |k: &str| {
+            v.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("manifest[{name}].{k} missing"))
+        };
+        let params = v
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| format!("manifest[{name}].params missing"))?
+            .iter()
+            .map(|p| {
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .as_str()
+                        .ok_or("param.name missing")?
+                        .to_string(),
+                    size: p.get("size").as_usize().ok_or("param.size missing")?,
+                    shape,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let m = ModelManifest {
+            name: name.to_string(),
+            kind: get_str("kind")?,
+            train_hlo: dir.join(get_str("train_hlo")?),
+            eval_hlo: dir.join(get_str("eval_hlo")?),
+            init_params: dir.join(get_str("init_params")?),
+            num_params: get_usize("num_params")?,
+            input_shape: v
+                .get("input_shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            input_dtype: get_str("input_dtype")?,
+            num_classes: get_usize("num_classes")?,
+            batch_size: get_usize("batch_size")?,
+            eval_batch: get_usize("eval_batch")?,
+            use_pallas: v.get("use_pallas").as_bool().unwrap_or(false),
+            params,
+        };
+        let total: usize = m.params.iter().map(|p| p.size).sum();
+        if total != m.num_params {
+            return Err(format!(
+                "manifest[{name}]: param sizes sum {total} != num_params {}",
+                m.num_params
+            ));
+        }
+        for p in &m.params {
+            let prod: usize = p.shape.iter().product();
+            if prod != p.size {
+                return Err(format!(
+                    "manifest[{name}].{}: shape {:?} != size {}",
+                    p.name, p.shape, p.size
+                ));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Per-example input element count.
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// Load all model manifests from an artifacts directory.
+pub fn load_manifests(dir: &str) -> Result<Vec<ModelManifest>, String> {
+    let dir_path = Path::new(dir);
+    let text = std::fs::read_to_string(dir_path.join("manifest.json"))
+        .map_err(|e| format!("read {dir}/manifest.json: {e}"))?;
+    let v = Json::parse(&text).map_err(|e| e.to_string())?;
+    let models = v
+        .get("models")
+        .as_obj()
+        .ok_or("manifest.models missing")?;
+    let mut out = Vec::new();
+    for (name, entry) in models {
+        out.push(ModelManifest::from_json(name, dir_path, entry)?);
+    }
+    Ok(out)
+}
+
+/// Load one model's manifest by name.
+pub fn load_manifest(dir: &str, model: &str) -> Result<ModelManifest, String> {
+    load_manifests(dir)?
+        .into_iter()
+        .find(|m| m.name == model)
+        .ok_or_else(|| format!("model '{model}' not in {dir}/manifest.json"))
+}
+
+/// Read the init-params binary (f32 little-endian concat).
+pub fn load_init_params(m: &ModelManifest) -> Result<Vec<f32>, String> {
+    let bytes = std::fs::read(&m.init_params)
+        .map_err(|e| format!("read {:?}: {e}", m.init_params))?;
+    if bytes.len() != 4 * m.num_params {
+        return Err(format!(
+            "{:?}: {} bytes, expected {}",
+            m.init_params,
+            bytes.len(),
+            4 * m.num_params
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+    fn have_artifacts() -> bool {
+        Path::new(ART).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let ms = load_manifests(ART).unwrap();
+        assert!(!ms.is_empty());
+        let mlp = ms.iter().find(|m| m.name == "femnist_mlp").unwrap();
+        assert_eq!(mlp.input_dtype, "f32");
+        assert_eq!(mlp.num_classes, 62);
+        assert_eq!(mlp.input_elems(), 784);
+        assert!(mlp.train_hlo.exists());
+        assert!(mlp.eval_hlo.exists());
+    }
+
+    #[test]
+    fn init_params_round_trip() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = load_manifest(ART, "femnist_mlp").unwrap();
+        let p = load_init_params(&m).unwrap();
+        assert_eq!(p.len(), m.num_params);
+        assert!(p.iter().all(|v| v.is_finite()));
+        // weights non-zero, biases zero-initialized
+        assert!(p.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        assert!(load_manifest(ART, "nonexistent_model").is_err());
+    }
+
+    #[test]
+    fn schema_validation_rejects_bad_sizes() {
+        let bad = Json::parse(
+            r#"{"kind":"mlp","train_hlo":"a","eval_hlo":"b",
+                "init_params":"c","num_params":10,
+                "params":[{"name":"w","shape":[2,2],"size":4}],
+                "input_shape":[4],"input_dtype":"f32","num_classes":2,
+                "batch_size":2,"eval_batch":2}"#,
+        )
+        .unwrap();
+        let err = ModelManifest::from_json("bad", Path::new("."), &bad);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("param sizes"));
+    }
+}

@@ -1,0 +1,213 @@
+//! Approximate Optimal Client Sampling — Algorithm 2 of the paper.
+//!
+//! The exact solver (Eq. 7) needs the master to see *individual* norms
+//! and partially sort them, which breaks secure aggregation. Algorithm 2
+//! reaches the same fixed point using only aggregated sums:
+//!
+//! 1. clients send `u_i = w_i‖U_i‖`; master aggregates `u = Σ u_i` and
+//!    broadcasts it;
+//! 2. each client sets `p_i = min(m·u_i/u, 1)`;
+//! 3. for up to `j_max` rounds: clients with `p_i < 1` send `(1, p_i)`
+//!    (others `(0, 0)`); master aggregates `(I, P)`, broadcasts
+//!    `C = (m − n + I)/P`; clients rescale `p_i ← min(C·p_i, 1)`;
+//!    stop when `C ≤ 1`.
+//!
+//! Every message is a plain sum, so the whole exchange runs under the
+//! [`crate::secure_agg`] protocol; clients keep no state between rounds.
+
+/// Result of one AOCS probability negotiation.
+#[derive(Clone, Debug)]
+pub struct AocsResult {
+    /// Final inclusion probabilities (client order preserved).
+    pub probs: Vec<f64>,
+    /// Number of rescaling iterations actually executed (≤ j_max).
+    pub iterations: usize,
+    /// True iff the loop exited via the `C ≤ 1` fixed-point test.
+    pub converged: bool,
+    /// Extra uplink floats *per client* spent on the negotiation
+    /// (Remark 3): 1 norm + 2 per iteration.
+    pub extra_uplink_floats_per_client: usize,
+    /// Extra broadcast floats (u, then C per iteration) — not counted in
+    /// the paper's uplink-bits metric (footnote 5) but tracked anyway.
+    pub extra_downlink_floats: usize,
+}
+
+/// Run Algorithm 2 over the (already securely aggregated) norms.
+///
+/// This free function computes what the distributed exchange converges
+/// to; [`crate::fl`] drives the same arithmetic through the actual
+/// masked-aggregation message flow.
+pub fn aocs_probabilities(norms: &[f64], m: usize, j_max: usize) -> AocsResult {
+    let n = norms.len();
+    assert!(m >= 1 && m <= n, "budget m={m} out of range for n={n}");
+    let u: f64 = norms.iter().sum();
+
+    let mut probs: Vec<f64> = if u <= 0.0 {
+        vec![m as f64 / n as f64; n]
+    } else {
+        norms.iter().map(|&ui| (m as f64 * ui / u).min(1.0)).collect()
+    };
+
+    let mut iterations = 0;
+    let mut converged = u <= 0.0; // degenerate input needs no rescaling
+    for _ in 0..j_max {
+        if converged {
+            break;
+        }
+        iterations += 1;
+        // master-side aggregate of t_i = (1[p_i<1], p_i·1[p_i<1])
+        let mut count_open = 0usize; // I^k
+        let mut mass_open = 0.0f64; // P^k
+        for &p in &probs {
+            if p < 1.0 {
+                count_open += 1;
+                mass_open += p;
+            }
+        }
+        if count_open == 0 || mass_open <= 0.0 {
+            // all clients capped (m = n) or all open probs are zero —
+            // nothing left to rescale
+            converged = true;
+            break;
+        }
+        let c = (m as f64 - n as f64 + count_open as f64) / mass_open;
+        if c > 1.0 {
+            for p in probs.iter_mut() {
+                if *p < 1.0 {
+                    *p = (c * *p).min(1.0);
+                }
+            }
+        } else {
+            converged = true;
+        }
+    }
+
+    AocsResult {
+        probs,
+        iterations,
+        converged,
+        extra_uplink_floats_per_client: 1 + 2 * iterations,
+        extra_downlink_floats: 1 + iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::ocs::ocs_probabilities;
+    use crate::util::prop::{norm_profile, quick};
+
+    #[test]
+    fn no_caps_means_single_iteration() {
+        // norms proportional enough that min() never truncates
+        let r = aocs_probabilities(&[1.0, 1.0, 1.0, 1.0], 2, 4);
+        assert!(r.converged);
+        assert_eq!(r.iterations, 1); // first check sees C = 1 and stops
+        for &p in &r.probs {
+            assert!((p - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_exact_on_capped_profile() {
+        let norms = [100.0, 1.0, 1.0];
+        let r = aocs_probabilities(&norms, 2, 4);
+        let exact = ocs_probabilities(&norms, 2).probs;
+        for (a, b) in r.probs.iter().zip(&exact) {
+            assert!((a - b).abs() < 1e-9, "{:?} vs {exact:?}", r.probs);
+        }
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn zero_norms_uniform_fallback() {
+        let r = aocs_probabilities(&[0.0; 5], 2, 4);
+        for &p in &r.probs {
+            assert!((p - 0.4).abs() < 1e-12);
+        }
+        assert_eq!(r.iterations, 0);
+    }
+
+    #[test]
+    fn j_max_zero_skips_rescaling() {
+        let norms = [100.0, 1.0, 1.0];
+        let r = aocs_probabilities(&norms, 2, 0);
+        assert_eq!(r.iterations, 0);
+        assert!(!r.converged);
+        // initial truncation only: Σp < m (the gap Alg. 2 exists to fix)
+        let b: f64 = r.probs.iter().sum();
+        assert!(b < 2.0);
+    }
+
+    #[test]
+    fn communication_accounting_matches_remark3() {
+        let norms = [100.0, 50.0, 1.0, 1.0, 1.0, 1.0];
+        let r = aocs_probabilities(&norms, 3, 4);
+        assert_eq!(r.extra_uplink_floats_per_client, 1 + 2 * r.iterations);
+        assert_eq!(r.extra_downlink_floats, 1 + r.iterations);
+        assert!(r.extra_uplink_floats_per_client <= 1 + 2 * 4);
+    }
+
+    #[test]
+    fn prop_valid_probabilities_and_budget() {
+        quick("aocs-valid", |rng, _| {
+            let n = rng.range(1, 80);
+            let m = rng.range(1, n + 1);
+            let norms = norm_profile(rng, n);
+            let r = aocs_probabilities(&norms, m, 4);
+            for &p in &r.probs {
+                if !(0.0..=1.0 + 1e-12).contains(&p) {
+                    return Err(format!("p={p}"));
+                }
+            }
+            let b: f64 = r.probs.iter().sum();
+            if b > m as f64 + 1e-6 {
+                return Err(format!("Σp={b} > m={m}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_converges_to_exact_ocs() {
+        // §5.1 footnote 4: Algorithms 1 and 2 give identical results.
+        // Each rescaling round either caps a new client or reaches the
+        // fixed point, so j_max = n + 2 guarantees full convergence.
+        quick("aocs-eq-ocs", |rng, _| {
+            let n = rng.range(2, 64);
+            let m = rng.range(1, n + 1);
+            let norms: Vec<f64> =
+                (0..n).map(|_| rng.exponential(0.3) + 1e-3).collect();
+            let approx = aocs_probabilities(&norms, m, n + 2);
+            let exact = ocs_probabilities(&norms, m).probs;
+            for (i, (a, b)) in approx.probs.iter().zip(&exact).enumerate() {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!(
+                        "client {i}: aocs={a} ocs={b} (n={n} m={m})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_monotone_under_iterations() {
+        // more rescaling iterations only move Σp upward toward m
+        quick("aocs-monotone-budget", |rng, _| {
+            let n = rng.range(2, 40);
+            let m = rng.range(1, n + 1);
+            let norms = norm_profile(rng, n);
+            let mut last = -1.0;
+            for j in 0..5 {
+                let b: f64 =
+                    aocs_probabilities(&norms, m, j).probs.iter().sum();
+                if b + 1e-9 < last {
+                    return Err(format!("budget shrank at j={j}: {b} < {last}"));
+                }
+                last = b;
+            }
+            Ok(())
+        });
+    }
+}

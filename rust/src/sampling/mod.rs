@@ -1,0 +1,164 @@
+//! Client sampling schemes — the paper's contribution (Section 2).
+//!
+//! [`Sampler`] unifies the four strategies compared in the evaluation:
+//! full participation, independent uniform sampling, exact OCS
+//! (Algorithm 1 / Eq. 7) and approximate OCS (Algorithm 2). All of them
+//! consume the per-round weighted update norms `ũ_i = w_i‖U_i^k‖` and
+//! produce inclusion probabilities for an independent sampling.
+
+pub mod aocs;
+pub mod ocs;
+pub mod probability;
+pub mod variance;
+
+use crate::config::Strategy;
+
+/// Per-round sampling decision handed to the FL round driver.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Inclusion probability per cohort client.
+    pub probs: Vec<f64>,
+    /// Extra uplink floats per client spent negotiating probabilities
+    /// (0 for full/uniform/exact-OCS*, 1 + 2·iters for AOCS — Remark 3).
+    ///
+    /// *exact OCS still uploads one norm float per client (Algorithm 1
+    /// line 3); that is accounted here too.
+    pub extra_uplink_floats_per_client: usize,
+    /// Extra synchronous communication rounds used by the negotiation.
+    pub negotiation_rounds: usize,
+}
+
+/// Strategy dispatcher.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sampler {
+    Full,
+    Uniform,
+    Ocs,
+    Aocs { j_max: usize },
+}
+
+impl Sampler {
+    pub fn from_strategy(s: &Strategy) -> Sampler {
+        match s {
+            Strategy::Full => Sampler::Full,
+            Strategy::Uniform => Sampler::Uniform,
+            Strategy::Ocs => Sampler::Ocs,
+            Strategy::Aocs { j_max } => Sampler::Aocs { j_max: *j_max },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sampler::Full => "full",
+            Sampler::Uniform => "uniform",
+            Sampler::Ocs => "ocs",
+            Sampler::Aocs { .. } => "aocs",
+        }
+    }
+
+    /// Compute this round's inclusion probabilities.
+    ///
+    /// `norms[i] = w_i‖U_i^k‖` (weighted); `m` = expected budget.
+    pub fn decide(&self, norms: &[f64], m: usize) -> Decision {
+        let n = norms.len();
+        assert!(n > 0, "empty cohort");
+        match self {
+            Sampler::Full => Decision {
+                probs: vec![1.0; n],
+                extra_uplink_floats_per_client: 0,
+                negotiation_rounds: 0,
+            },
+            Sampler::Uniform => Decision {
+                probs: vec![(m as f64 / n as f64).min(1.0); n],
+                extra_uplink_floats_per_client: 0,
+                negotiation_rounds: 0,
+            },
+            Sampler::Ocs => {
+                let r = ocs::ocs_probabilities(norms, m.min(n));
+                Decision {
+                    probs: r.probs,
+                    // Algorithm 1 line 3: one norm float per client
+                    extra_uplink_floats_per_client: 1,
+                    negotiation_rounds: 1,
+                }
+            }
+            Sampler::Aocs { j_max } => {
+                let r = aocs::aocs_probabilities(norms, m.min(n), *j_max);
+                Decision {
+                    probs: r.probs,
+                    extra_uplink_floats_per_client:
+                        r.extra_uplink_floats_per_client,
+                    negotiation_rounds: 1 + r.iterations,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::variance::{sampling_variance, uniform_variance};
+    use crate::util::prop::{norm_profile, quick};
+
+    #[test]
+    fn full_and_uniform_ignore_norms() {
+        let norms = [9.0, 1.0, 4.0, 2.0];
+        let f = Sampler::Full.decide(&norms, 2);
+        assert_eq!(f.probs, vec![1.0; 4]);
+        let u = Sampler::Uniform.decide(&norms, 2);
+        assert_eq!(u.probs, vec![0.5; 4]);
+        assert_eq!(u.extra_uplink_floats_per_client, 0);
+    }
+
+    #[test]
+    fn from_strategy_round_trips() {
+        for s in [
+            Strategy::Full,
+            Strategy::Uniform,
+            Strategy::Ocs,
+            Strategy::Aocs { j_max: 4 },
+        ] {
+            let smp = Sampler::from_strategy(&s);
+            assert_eq!(smp.name(), s.name());
+        }
+    }
+
+    #[test]
+    fn ocs_charges_norm_float() {
+        let d = Sampler::Ocs.decide(&[1.0, 2.0], 1);
+        assert_eq!(d.extra_uplink_floats_per_client, 1);
+    }
+
+    #[test]
+    fn prop_strategy_variance_ordering() {
+        // Var(full)=0 ≤ Var(OCS) ≤ Var(AOCS(j_max=4)) ≲ Var(uniform)
+        quick("variance-order", |rng, _| {
+            let n = rng.range(2, 48);
+            let m = rng.range(1, n);
+            let norms = norm_profile(rng, n);
+            if norms.iter().sum::<f64>() <= 0.0 {
+                return Ok(());
+            }
+            let v_full =
+                sampling_variance(&norms, &Sampler::Full.decide(&norms, m).probs);
+            let v_ocs =
+                sampling_variance(&norms, &Sampler::Ocs.decide(&norms, m).probs);
+            let v_aocs = sampling_variance(
+                &norms,
+                &Sampler::Aocs { j_max: 4 }.decide(&norms, m).probs,
+            );
+            let v_uni = uniform_variance(&norms, m);
+            if v_full != 0.0 {
+                return Err("full variance not zero".into());
+            }
+            if v_ocs > v_uni * (1.0 + 1e-9) + 1e-12 {
+                return Err(format!("ocs {v_ocs} > uniform {v_uni}"));
+            }
+            if v_ocs > v_aocs * (1.0 + 1e-9) + 1e-12 {
+                return Err(format!("ocs {v_ocs} > aocs {v_aocs}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,276 @@
+//! Exact Optimal Client Sampling — Equation (7) / Lemma 20 of the paper.
+//!
+//! Given weighted update norms `ũ_i = w_i‖U_i‖` and an expected budget
+//! `m`, the inclusion probabilities minimizing the sampling variance
+//! `Σ_i (1−p_i)/p_i · ũ_i²` subject to `Σ_i p_i ≤ m`, `0 ≤ p_i ≤ 1` are
+//!
+//! ```text
+//! p_i = (m + l − n) · ũ_i / Σ_{j≤l} ũ_(j)    for i outside the cap set
+//! p_i = 1                                      for the n − l largest ũ_i
+//! ```
+//!
+//! where `ũ_(j)` is the j-th *smallest* norm and `l` is the largest
+//! integer with `0 < m + l − n` and `(m + l − n)·ũ_(l) ≤ Σ_{j≤l} ũ_(j)`
+//! (the multiplicative form is division-free and handles ũ_(l) = 0).
+//!
+//! Cost: O(n log n) for the sort + O(m) for the cap search (the loop
+//! visits at most m values of l, since l ≥ n − m + 1 always terminates).
+
+/// Output of the exact solver.
+#[derive(Clone, Debug)]
+pub struct OcsProbs {
+    /// p_i aligned with the input `norms` order.
+    pub probs: Vec<f64>,
+    /// The threshold index l from Eq. (7) (number of non-capped clients).
+    pub l: usize,
+    /// Number of clients assigned p_i = 1.
+    pub capped: usize,
+}
+
+/// Compute the exact optimal probabilities for one round.
+///
+/// `norms[i]` must be the *weighted* norm `w_i‖U_i^k‖ ≥ 0`. `m` is the
+/// expected participation budget, `1 ≤ m ≤ n`.
+///
+/// Degenerate inputs follow the paper's conventions:
+/// * all-zero norms → uniform `p_i = m/n` (any sampling has variance 0);
+/// * clients with `ũ_i = 0` get `p_i = 0` — their update contributes
+///   nothing, so unbiasedness is unaffected (`w_i U_i = 0` a.s.).
+pub fn ocs_probabilities(norms: &[f64], m: usize) -> OcsProbs {
+    let n = norms.len();
+    assert!(m >= 1 && m <= n, "budget m={m} out of range for n={n}");
+    assert!(
+        norms.iter().all(|&u| u.is_finite() && u >= 0.0),
+        "norms must be finite and non-negative"
+    );
+
+    let total: f64 = norms.iter().sum();
+    if total <= 0.0 {
+        return OcsProbs { probs: vec![m as f64 / n as f64; n], l: n, capped: 0 };
+    }
+
+    // Ascending sort of packed (norm, index) pairs. Packing beats an
+    // indirect argsort ~2× at n = 10⁶: comparisons read the key from the
+    // element being moved instead of chasing `norms[i]` (EXPERIMENTS.md
+    // §Perf L3-1).
+    let mut pairs: Vec<(f64, u32)> = norms
+        .iter()
+        .enumerate()
+        .map(|(i, &u)| (u, i as u32))
+        .collect();
+    pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let mut prefix = vec![0.0f64; n + 1];
+    for (rank, &(u, _)) in pairs.iter().enumerate() {
+        prefix[rank + 1] = prefix[rank] + u;
+    }
+
+    // Largest feasible l, scanning down from n (at most m iterations).
+    let mut l = n;
+    loop {
+        let c = (m + l) as f64 - n as f64; // m + l - n
+        if c > 0.0 && c * pairs[l - 1].0 <= prefix[l] * (1.0 + 1e-12) {
+            break;
+        }
+        l -= 1;
+        debug_assert!(l + m >= n, "l search passed the guaranteed bound");
+    }
+
+    let c = (m + l) as f64 - n as f64;
+    let denom = prefix[l];
+    // NB: keep the `c * u / denom` form — hoisting `c/denom` loses the
+    // exact p = 1.0 on boundary clients (u == S_l/c) to rounding, which
+    // breaks the α = 0 sparse-profile guarantee the tests pin down.
+    let mut probs = vec![0.0f64; n];
+    for (rank, &(u, idx)) in pairs.iter().enumerate() {
+        probs[idx as usize] = if rank < l {
+            if denom > 0.0 {
+                (c * u / denom).min(1.0)
+            } else {
+                0.0
+            }
+        } else {
+            1.0
+        };
+    }
+    OcsProbs { probs, l, capped: n - l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{norm_profile, quick};
+
+    fn expected_size(p: &[f64]) -> f64 {
+        p.iter().sum()
+    }
+
+    #[test]
+    fn all_equal_norms_give_uniform() {
+        let p = ocs_probabilities(&[2.0; 10], 3).probs;
+        for &pi in &p {
+            assert!((pi - 0.3).abs() < 1e-12, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn all_zero_norms_fall_back_to_uniform() {
+        let p = ocs_probabilities(&[0.0; 8], 2).probs;
+        for &pi in &p {
+            assert!((pi - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_dominant_client_is_capped() {
+        let r = ocs_probabilities(&[100.0, 1.0, 1.0], 2);
+        assert_eq!(r.capped, 1);
+        assert!((r.probs[0] - 1.0).abs() < 1e-12);
+        assert!((r.probs[1] - 0.5).abs() < 1e-12);
+        assert!((r.probs[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn at_most_m_nonzero_all_get_one() {
+        // ≤ m clients with non-zero updates => variance can reach 0
+        let r = ocs_probabilities(&[0.0, 5.0, 0.0, 3.0, 0.0], 2);
+        assert!((r.probs[1] - 1.0).abs() < 1e-12);
+        assert!((r.probs[3] - 1.0).abs() < 1e-12);
+        assert_eq!(r.probs[0], 0.0);
+        assert_eq!(r.probs[2], 0.0);
+    }
+
+    #[test]
+    fn m_equals_n_gives_full_participation() {
+        let r = ocs_probabilities(&[3.0, 1.0, 7.0, 0.5], 4);
+        for &pi in &r.probs {
+            assert!((pi - 1.0).abs() < 1e-12, "{:?}", r.probs);
+        }
+    }
+
+    #[test]
+    fn m_equals_one_matches_zhao_zhang() {
+        // m=1 recovers Zhao & Zhang (2015): p_i ∝ ũ_i
+        let norms = [1.0, 2.0, 3.0, 4.0];
+        let r = ocs_probabilities(&norms, 1);
+        let total: f64 = norms.iter().sum();
+        for (pi, ui) in r.probs.iter().zip(&norms) {
+            assert!((pi - ui / total).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn proportional_when_no_cap_needed() {
+        let norms = [1.0, 1.0, 1.0, 3.0];
+        // m=2: 2*3/6 = 1.0 exactly — boundary: still l = n
+        let r = ocs_probabilities(&norms, 2);
+        assert!((r.probs[3] - 1.0).abs() < 1e-9);
+        assert!((r.probs[0] - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(r.l, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "budget m=0")]
+    fn zero_budget_rejected() {
+        ocs_probabilities(&[1.0], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn negative_norm_rejected() {
+        ocs_probabilities(&[1.0, -0.5], 1);
+    }
+
+    #[test]
+    fn prop_probabilities_valid_and_budget_respected() {
+        quick("ocs-valid", |rng, _| {
+            let n = rng.range(1, 64);
+            let m = rng.range(1, n + 1);
+            let norms = norm_profile(rng, n);
+            let r = ocs_probabilities(&norms, m);
+            for &p in &r.probs {
+                if !(0.0..=1.0 + 1e-12).contains(&p) {
+                    return Err(format!("p={p} out of range"));
+                }
+            }
+            let b = expected_size(&r.probs);
+            if b > m as f64 + 1e-6 {
+                return Err(format!("budget violated: Σp={b} > m={m}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_budget_tight_when_all_positive() {
+        // With every norm > 0 the optimum saturates the constraint Σp = m.
+        quick("ocs-tight", |rng, _| {
+            let n = rng.range(2, 64);
+            let m = rng.range(1, n + 1);
+            let norms: Vec<f64> =
+                (0..n).map(|_| 0.05 + rng.exponential(0.5)).collect();
+            let r = ocs_probabilities(&norms, m);
+            let b = expected_size(&r.probs);
+            if (b - m as f64).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("Σp={b} != m={m}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_norms() {
+        // larger ũ_i ⇒ p_i at least as large
+        quick("ocs-monotone", |rng, _| {
+            let n = rng.range(2, 40);
+            let m = rng.range(1, n + 1);
+            let norms = norm_profile(rng, n);
+            let r = ocs_probabilities(&norms, m);
+            for i in 0..n {
+                for j in 0..n {
+                    if norms[i] > norms[j] && r.probs[i] + 1e-12 < r.probs[j] {
+                        return Err(format!(
+                            "monotonicity broken: u{i}={} p{i}={} vs u{j}={} p{j}={}",
+                            norms[i], r.probs[i], norms[j], r.probs[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_optimality_vs_random_feasible() {
+        // OCS variance never exceeds the variance of random feasible probs.
+        use crate::sampling::variance::sampling_variance;
+        quick("ocs-optimal", |rng, _| {
+            let n = rng.range(2, 24);
+            let m = rng.range(1, n + 1);
+            let norms: Vec<f64> =
+                (0..n).map(|_| rng.exponential(0.5) + 0.01).collect();
+            let opt = ocs_probabilities(&norms, m);
+            let v_opt = sampling_variance(&norms, &opt.probs);
+            // random feasible point: dirichlet scaled into the budget
+            let mut q: Vec<f64> =
+                rng.dirichlet(1.0, n).iter().map(|&d| d * m as f64).collect();
+            for qi in &mut q {
+                *qi = qi.clamp(1e-6, 1.0);
+            }
+            // keep q strictly inside the budget so it cannot beat the
+            // optimum by borrowing extra expected participants
+            let s: f64 = q.iter().sum();
+            if s > m as f64 {
+                for qi in &mut q {
+                    *qi *= m as f64 / s;
+                }
+            }
+            let v_q = sampling_variance(&norms, &q);
+            if v_opt <= v_q + 1e-9 + v_q.abs() * 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("v_opt={v_opt} > v_q={v_q}"))
+            }
+        });
+    }
+}

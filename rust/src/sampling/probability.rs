@@ -1,0 +1,134 @@
+//! Independent-sampling machinery: Bernoulli set draws and the
+//! probability matrix P_{ij} = Prob({i,j} ⊆ S) (Section 2).
+
+use crate::util::rng::Rng;
+
+/// Draw an independent sampling S: include i with probability p_i.
+pub fn draw_independent(probs: &[f64], rng: &mut Rng) -> Vec<bool> {
+    probs.iter().map(|&p| rng.bernoulli(p)).collect()
+}
+
+/// Indices of the drawn set.
+pub fn draw_indices(probs: &[f64], rng: &mut Rng) -> Vec<usize> {
+    probs
+        .iter()
+        .enumerate()
+        .filter(|(_, &p)| rng.bernoulli(p))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// The probability matrix of an *independent* sampling:
+/// `P_ij = p_i p_j` off-diagonal, `P_ii = p_i` (row-major, n×n).
+pub fn independent_prob_matrix(probs: &[f64]) -> Vec<f64> {
+    let n = probs.len();
+    let mut mat = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            mat[i * n + j] = if i == j {
+                probs[i]
+            } else {
+                probs[i] * probs[j]
+            };
+        }
+    }
+    mat
+}
+
+/// Expected sample size b = Trace(P) = Σ p_i.
+pub fn expected_size(probs: &[f64]) -> f64 {
+    probs.iter().sum()
+}
+
+/// Whether the sampling is proper (p_i > 0 ∀i). The paper's estimator
+/// requires properness except on zero-norm clients.
+pub fn is_proper(probs: &[f64]) -> bool {
+    probs.iter().all(|&p| p > 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+
+    #[test]
+    fn draw_respects_edge_probabilities() {
+        let mut rng = Rng::new(4);
+        let probs = [0.0, 1.0, 0.5];
+        let mut counts = [0usize; 3];
+        let trials = 40_000;
+        for _ in 0..trials {
+            for (c, s) in counts.iter_mut().zip(draw_independent(&probs, &mut rng))
+            {
+                *c += s as usize;
+            }
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[1], trials);
+        let f = counts[2] as f64 / trials as f64;
+        assert!((f - 0.5).abs() < 0.02, "{f}");
+    }
+
+    #[test]
+    fn indices_match_bools() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let probs = [0.3, 0.9, 0.1, 0.7];
+        let bools = draw_independent(&probs, &mut r1);
+        let idx = draw_indices(&probs, &mut r2);
+        let from_bools: Vec<usize> = bools
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(idx, from_bools);
+    }
+
+    #[test]
+    fn prob_matrix_diag_and_symmetry() {
+        let p = [0.2, 0.5, 1.0];
+        let m = independent_prob_matrix(&p);
+        for i in 0..3 {
+            assert_eq!(m[i * 3 + i], p[i]);
+            for j in 0..3 {
+                assert_eq!(m[i * 3 + j], m[j * 3 + i]);
+            }
+        }
+        assert!((m[1] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_is_expected_size() {
+        quick("trace-b", |rng, _| {
+            let n = rng.range(1, 20);
+            let p: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let m = independent_prob_matrix(&p);
+            let trace: f64 = (0..n).map(|i| m[i * n + i]).sum();
+            if (trace - expected_size(&p)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("trace != Σp".into())
+            }
+        });
+    }
+
+    #[test]
+    fn empirical_set_size_matches_b() {
+        let probs: Vec<f64> = (0..20).map(|i| (i as f64 + 1.0) / 40.0).collect();
+        let b = expected_size(&probs);
+        let mut rng = Rng::new(12);
+        let trials = 30_000;
+        let total: usize = (0..trials)
+            .map(|_| draw_indices(&probs, &mut rng).len())
+            .sum();
+        let mean = total as f64 / trials as f64;
+        assert!((mean - b).abs() < 0.08, "mean={mean} b={b}");
+    }
+
+    #[test]
+    fn properness() {
+        assert!(is_proper(&[0.1, 1.0]));
+        assert!(!is_proper(&[0.1, 0.0]));
+    }
+}

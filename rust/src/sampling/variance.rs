@@ -1,0 +1,165 @@
+//! Sampling-variance machinery: Eq. (6), the improvement factor α^k
+//! (Definition 11) and the relative improvement factor γ^k (Eq. 16).
+
+use super::ocs::ocs_probabilities;
+
+/// Sampling variance of an independent sampling with probabilities `p`
+/// over weighted norms `ũ` (Eq. 6): `Σ_i (1−p_i)/p_i · ũ_i²`.
+///
+/// Clients with `ũ_i = 0` contribute nothing regardless of `p_i`
+/// (including `p_i = 0`); a zero probability on a non-zero norm is an
+/// improper sampling and returns infinity.
+pub fn sampling_variance(norms: &[f64], probs: &[f64]) -> f64 {
+    assert_eq!(norms.len(), probs.len());
+    let mut acc = 0.0f64;
+    for (&u, &p) in norms.iter().zip(probs) {
+        if u == 0.0 {
+            continue;
+        }
+        if p <= 0.0 {
+            return f64::INFINITY;
+        }
+        acc += (1.0 - p) / p * u * u;
+    }
+    acc
+}
+
+/// Variance of independent *uniform* sampling with p_i = m/n.
+pub fn uniform_variance(norms: &[f64], m: usize) -> f64 {
+    let n = norms.len();
+    assert!(m >= 1 && m <= n);
+    let sum_sq: f64 = norms.iter().map(|u| u * u).sum();
+    (n as f64 - m as f64) / m as f64 * sum_sq
+}
+
+/// Improvement factor α^k (Definition 11): optimal variance / uniform
+/// variance for this round's norms. α ∈ [0, 1]; 0 when ≤ m non-zero
+/// updates (optimal behaves like full participation), 1 when all norms
+/// are equal (nothing beats uniform).
+pub fn improvement_factor(norms: &[f64], m: usize) -> f64 {
+    let vu = uniform_variance(norms, m);
+    if vu <= 0.0 {
+        return 0.0; // all norms zero, or m = n — any sampling is exact
+    }
+    let probs = ocs_probabilities(norms, m).probs;
+    (sampling_variance(norms, &probs) / vu).clamp(0.0, 1.0)
+}
+
+/// Relative improvement factor γ^k = m / (α^k(n − m) + m) (Eq. 16).
+/// γ ∈ [m/n, 1]: 1 ⇔ full-participation-like, m/n ⇔ uniform-like.
+pub fn gamma(alpha: f64, n: usize, m: usize) -> f64 {
+    assert!(m >= 1 && m <= n);
+    m as f64 / (alpha * (n - m) as f64 + m as f64)
+}
+
+/// Effective number of uniformly-sampled clients the round is worth
+/// (the paper's intuition: OCS with budget m behaves like uniform
+/// sampling with m̃ = γ·n ∈ [m, n] clients).
+pub fn effective_clients(alpha: f64, n: usize, m: usize) -> f64 {
+    gamma(alpha, n, m) * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::probability::draw_independent;
+    use crate::util::prop::{norm_profile, quick};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn variance_zero_at_full_participation() {
+        let norms = [3.0, 1.0, 2.0];
+        assert_eq!(sampling_variance(&norms, &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn improper_sampling_is_infinite() {
+        assert!(sampling_variance(&[1.0], &[0.0]).is_infinite());
+    }
+
+    #[test]
+    fn zero_norm_ignores_probability() {
+        assert_eq!(sampling_variance(&[0.0, 2.0], &[0.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn uniform_variance_formula() {
+        // (n-m)/m Σu² with n=4, m=2, Σu²=30 → 30
+        let v = uniform_variance(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert!((v - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_one_for_equal_norms() {
+        let a = improvement_factor(&[2.0; 8], 3);
+        assert!((a - 1.0).abs() < 1e-9, "alpha={a}");
+    }
+
+    #[test]
+    fn alpha_zero_for_sparse_updates() {
+        // ≤ m non-zero norms → OCS variance 0 → α = 0
+        let a = improvement_factor(&[0.0, 7.0, 0.0, 0.0, 1.0, 0.0], 2);
+        assert_eq!(a, 0.0);
+    }
+
+    #[test]
+    fn gamma_bounds_and_edges() {
+        assert!((gamma(1.0, 32, 4) - 4.0 / 32.0).abs() < 1e-12);
+        assert!((gamma(0.0, 32, 4) - 1.0).abs() < 1e-12);
+        let g = gamma(0.5, 32, 4);
+        assert!(g > 4.0 / 32.0 && g < 1.0);
+        assert!((effective_clients(0.0, 32, 4) - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_alpha_in_unit_interval() {
+        quick("alpha-range", |rng, _| {
+            let n = rng.range(2, 64);
+            let m = rng.range(1, n); // m < n so uniform variance > 0
+            let norms = norm_profile(rng, n);
+            let a = improvement_factor(&norms, m);
+            if (0.0..=1.0).contains(&a) {
+                Ok(())
+            } else {
+                Err(format!("alpha={a}"))
+            }
+        });
+    }
+
+    #[test]
+    fn empirical_estimator_is_unbiased_and_variance_matches_eq6() {
+        // Monte-Carlo check of Lemma 1 equality for independent sampling:
+        // E‖Σ_{i∈S} ũ_i/p_i − Σ ũ_i‖² == Σ (1−p_i)/p_i ũ_i² (scalar case)
+        let norms = [5.0, 2.0, 1.0, 0.5, 0.25, 3.0];
+        let m = 3;
+        let probs = ocs_probabilities(&norms, m).probs;
+        let target: f64 = norms.iter().sum();
+        let mut rng = Rng::new(99);
+        let trials = 200_000;
+        let mut mean_est = 0.0f64;
+        let mut second = 0.0f64;
+        for _ in 0..trials {
+            let sel = draw_independent(&probs, &mut rng);
+            let est: f64 = sel
+                .iter()
+                .zip(norms.iter().zip(&probs))
+                .filter(|(s, _)| **s)
+                .map(|(_, (u, p))| u / p)
+                .sum();
+            mean_est += est;
+            let d = est - target;
+            second += d * d;
+        }
+        mean_est /= trials as f64;
+        second /= trials as f64;
+        let predicted = sampling_variance(&norms, &probs);
+        assert!(
+            (mean_est - target).abs() / target < 0.01,
+            "biased: {mean_est} vs {target}"
+        );
+        assert!(
+            (second - predicted).abs() / predicted < 0.05,
+            "variance mismatch: {second} vs {predicted}"
+        );
+    }
+}

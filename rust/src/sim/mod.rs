@@ -1,0 +1,294 @@
+//! Pure-rust simulation path: the same FL protocol as the XLA path, with
+//! exact-gradient native models — fast enough for the theory experiments
+//! (Theorems 13/15/17/18) and large parameter sweeps.
+
+pub mod theory;
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::data::{self, ClientData, FederatedData};
+use crate::fl::{train, ClientEngine, EvalOutcome, LocalOutcome, TrainOptions};
+use crate::metrics::RunResult;
+use crate::model::logistic::Logistic;
+use crate::model::NativeModel;
+use crate::tensor;
+use crate::util::rng::Rng;
+
+/// Native engine: clients run SGD on a [`NativeModel`] over
+/// [`FederatedData`] with closed-form gradients.
+pub struct NativeEngine<M: NativeModel> {
+    pub model: M,
+    pub dataset: FederatedData,
+    pub algorithm: Algorithm,
+    pub batch_size: usize,
+    seed: u64,
+}
+
+impl<M: NativeModel> NativeEngine<M> {
+    pub fn new(
+        model: M,
+        dataset: FederatedData,
+        algorithm: Algorithm,
+        batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        NativeEngine { model, dataset, algorithm, batch_size, seed }
+    }
+
+    fn local_pass(
+        &self,
+        round: usize,
+        global: &[f32],
+        client_id: usize,
+    ) -> LocalOutcome {
+        let data = &self.dataset.clients[client_id];
+        let mut rng =
+            Rng::new(self.seed ^ 0x10CA1).fork(round as u64).fork(client_id as u64);
+        let dim = self.model.dim();
+        let mut grad = vec![0.0f32; dim];
+        match self.algorithm {
+            Algorithm::Dsgd { .. } => {
+                // one stochastic gradient g_i^k (Eq. 2); U_i = g_i
+                let batch: Vec<usize> = (0..self.batch_size.min(data.len()))
+                    .map(|_| rng.range(0, data.len()))
+                    .collect();
+                let loss =
+                    self.model.loss_grad(global, data, &batch, &mut grad);
+                LocalOutcome { delta: grad, train_loss: loss, examples: data.len() }
+            }
+            Algorithm::FedAvg { local_epochs, eta_l, .. } => {
+                // R local SGD steps; U_i = x^k − y_{i,R} (Algorithm 3)
+                let mut y = global.to_vec();
+                let mut loss_sum = 0.0f64;
+                let mut steps = 0usize;
+                for _ in 0..local_epochs {
+                    for batch in data.epoch_batches(self.batch_size, &mut rng)
+                    {
+                        let loss =
+                            self.model.loss_grad(&y, data, &batch, &mut grad);
+                        tensor::axpy(&mut y, -(eta_l as f32), &grad);
+                        loss_sum += loss;
+                        steps += 1;
+                    }
+                }
+                LocalOutcome {
+                    delta: tensor::sub(global, &y),
+                    train_loss: loss_sum / steps.max(1) as f64,
+                    examples: data.len(),
+                }
+            }
+        }
+    }
+}
+
+impl<M: NativeModel> ClientEngine for NativeEngine<M> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.dataset.clients.len()
+    }
+
+    fn client_examples(&self, id: usize) -> usize {
+        self.dataset.clients[id].len()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        self.model.init_params(seed)
+    }
+
+    fn run_local(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        cohort: &[usize],
+    ) -> Vec<LocalOutcome> {
+        cohort
+            .iter()
+            .map(|&id| self.local_pass(round, global, id))
+            .collect()
+    }
+
+    fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
+        EvalOutcome {
+            loss: self.model.loss(global, &self.dataset.validation),
+            accuracy: self.model.accuracy(global, &self.dataset.validation),
+        }
+    }
+}
+
+/// Feature-space compression for the sim path: the native logistic model
+/// on raw 784/3072-dim images is slow at pool scale, so sim runs reduce
+/// images via a fixed random projection (deterministic in the seed).
+pub fn project_dataset(fd: &FederatedData, out_dim: usize, seed: u64) -> FederatedData {
+    assert!(!fd.is_tokens, "projection applies to dense data");
+    let in_dim = fd.input_dim;
+    let mut rng = Rng::new(seed ^ 0x9801);
+    let scale = 1.0 / (in_dim as f32).sqrt();
+    let proj: Vec<f32> =
+        (0..in_dim * out_dim).map(|_| rng.normal_f32(0.0, scale)).collect();
+    let project_client = |c: &ClientData| -> ClientData {
+        let n = c.len();
+        let mut x = vec![0.0f32; n * out_dim];
+        for i in 0..n {
+            let row = c.dense_row(i);
+            let out = &mut x[i * out_dim..(i + 1) * out_dim];
+            for (j, &v) in row.iter().enumerate() {
+                if v == 0.0 {
+                    continue;
+                }
+                let prow = &proj[j * out_dim..(j + 1) * out_dim];
+                for (o, &p) in out.iter_mut().zip(prow) {
+                    *o += v * p;
+                }
+            }
+        }
+        ClientData { x_dense: x, x_tokens: vec![], labels: c.labels.clone(), dim: out_dim }
+    };
+    FederatedData {
+        clients: fd.clients.iter().map(project_client).collect(),
+        validation: project_client(&fd.validation),
+        num_classes: fd.num_classes,
+        input_dim: out_dim,
+        is_tokens: false,
+    }
+}
+
+/// Sim-path projected feature dimension.
+pub const SIM_FEATURE_DIM: usize = 64;
+
+/// Run a config end-to-end on the sim path (native logistic model).
+///
+/// Token datasets are represented by bag-of-context features (mean of
+/// one-hot context characters) — crude, but enough for relative
+/// strategy comparisons at sim speed.
+pub fn run_sim(cfg: &ExperimentConfig) -> Result<RunResult, String> {
+    run_sim_with(cfg, &TrainOptions::default())
+}
+
+/// [`run_sim`] with explicit [`TrainOptions`].
+pub fn run_sim_with(
+    cfg: &ExperimentConfig,
+    opts: &TrainOptions,
+) -> Result<RunResult, String> {
+    let fd = data::build(&cfg.data, cfg.eval_examples, cfg.seed);
+    let fd = if fd.is_tokens {
+        tokens_to_positional_onehot(&fd)
+    } else {
+        project_dataset(&fd, SIM_FEATURE_DIM, cfg.seed)
+    };
+    let model = Logistic::new(fd.input_dim, fd.num_classes, 1e-4);
+    let mut engine = NativeEngine::new(
+        model,
+        fd,
+        cfg.algorithm.clone(),
+        cfg.batch_size,
+        cfg.seed,
+    );
+    train(cfg, &mut engine, opts)
+}
+
+/// Positional one-hot featurization for token data (sim path only):
+/// each of the seq_len positions contributes a one-hot block, so the
+/// logistic model can read the order-sensitive context (bag-of-chars
+/// would destroy the Markov structure).
+fn tokens_to_positional_onehot(fd: &FederatedData) -> FederatedData {
+    let vocab = fd.num_classes;
+    let conv = |c: &ClientData| -> ClientData {
+        let n = c.len();
+        let seq = c.dim;
+        let dim = seq * vocab;
+        let mut x = vec![0.0f32; n * dim];
+        for i in 0..n {
+            for (pos, &t) in c.token_row(i).iter().enumerate() {
+                x[i * dim + pos * vocab + t as usize] = 1.0;
+            }
+        }
+        ClientData { x_dense: x, x_tokens: vec![], labels: c.labels.clone(), dim }
+    };
+    FederatedData {
+        clients: fd.clients.iter().map(conv).collect(),
+        validation: conv(&fd.validation),
+        num_classes: vocab,
+        input_dim: fd.input_dim * vocab,
+        is_tokens: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::{DataSpec, Strategy};
+
+    fn quick_cfg(strategy: Strategy) -> ExperimentConfig {
+        let mut cfg = presets::femnist(1, 3).with_strategy(strategy);
+        cfg.rounds = 25;
+        cfg.eval_examples = 248;
+        cfg.data = DataSpec::FemnistLike { pool: 60, variant: 1 };
+        cfg.secure_updates = false; // speed
+        cfg
+    }
+
+    #[test]
+    fn sim_femnist_loss_decreases() {
+        let run = run_sim(&quick_cfg(Strategy::Aocs { j_max: 4 })).unwrap();
+        let first = run.rounds[0].train_loss;
+        let last = run.final_train_loss();
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+        assert!(run.final_accuracy() > 1.0 / 62.0 * 3.0, "no learning");
+    }
+
+    #[test]
+    fn sim_token_dataset_runs() {
+        let mut cfg = quick_cfg(Strategy::Uniform);
+        cfg.data = DataSpec::ShakespeareLike { pool: 30 };
+        cfg.batch_size = 8;
+        cfg.rounds = 10;
+        let run = run_sim(&cfg).unwrap();
+        assert_eq!(run.rounds.len(), 10);
+        assert!(run.final_train_loss().is_finite());
+    }
+
+    #[test]
+    fn projection_preserves_labels_and_count() {
+        let fd = data::build(
+            &DataSpec::FemnistLike { pool: 5, variant: 0 },
+            64,
+            3,
+        );
+        let p = project_dataset(&fd, 16, 3);
+        assert_eq!(p.input_dim, 16);
+        assert_eq!(p.num_clients(), fd.num_clients());
+        for (a, b) in p.clients.iter().zip(&fd.clients) {
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.x_dense.len(), a.len() * 16);
+        }
+    }
+
+    #[test]
+    fn strategies_rank_as_paper_predicts() {
+        // full ≥ ocs > uniform in final train loss (averaged over seeds)
+        let loss_for = |s: Strategy| -> f64 {
+            let mut acc = 0.0;
+            for seed in 0..3 {
+                let mut cfg = quick_cfg(s.clone());
+                cfg.seed = seed;
+                cfg.rounds = 40;
+                acc += run_sim(&cfg).unwrap().final_train_loss();
+            }
+            acc / 3.0
+        };
+        let full = loss_for(Strategy::Full);
+        let ocs = loss_for(Strategy::Ocs);
+        let uniform = loss_for(Strategy::Uniform);
+        assert!(
+            ocs < uniform,
+            "optimal sampling must beat uniform: {ocs} vs {uniform}"
+        );
+        assert!(
+            full <= ocs * 1.15,
+            "full participation should be ≈ best: {full} vs {ocs}"
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Theory-validation drivers: measure the quantities Theorems 13–18 bound
+//! on the quadratic testbed where `x*`, L and µ are known exactly.
+
+use crate::model::quadratic::QuadraticProblem;
+use crate::sampling::{probability, variance, Sampler};
+use crate::tensor;
+use crate::util::rng::Rng;
+
+/// Per-round observables of a DSGD run on a quadratic problem.
+#[derive(Clone, Debug)]
+pub struct TheoryRound {
+    pub round: usize,
+    /// ‖x^k − x*‖² — the Theorem-13 Lyapunov value
+    pub dist_sq: f64,
+    /// f(x^k) − f*
+    pub suboptimality: f64,
+    pub alpha: f64,
+    pub gamma: f64,
+}
+
+/// Result of a DSGD theory run.
+#[derive(Clone, Debug)]
+pub struct TheoryRun {
+    pub strategy: String,
+    pub eta: f64,
+    pub rounds: Vec<TheoryRound>,
+    pub diverged: bool,
+}
+
+impl TheoryRun {
+    pub fn final_dist(&self) -> f64 {
+        self.rounds.last().map(|r| r.dist_sq).unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_gamma(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return f64::NAN;
+        }
+        self.rounds.iter().map(|r| r.gamma).sum::<f64>()
+            / self.rounds.len() as f64
+    }
+}
+
+/// Run DSGD (Eq. 2) with *exact* local gradients on a quadratic problem,
+/// tracking the Theorem-13 recursion quantities.
+///
+/// `noise` adds optional gradient noise with std σ (Assumption 7's σ).
+pub fn run_dsgd_quadratic(
+    problem: &QuadraticProblem,
+    sampler: &Sampler,
+    m: usize,
+    eta: f64,
+    rounds: usize,
+    noise: f64,
+    seed: u64,
+) -> TheoryRun {
+    let n = problem.clients.len();
+    let dim = problem.dim;
+    let xstar = problem.minimizer();
+    let fstar = problem.loss(&xstar);
+    let mut rng = Rng::new(seed ^ 0x7E0);
+    let mut x = vec![0.0f32; dim];
+    let mut out = TheoryRun {
+        strategy: sampler.name().into(),
+        eta,
+        rounds: Vec::with_capacity(rounds),
+        diverged: false,
+    };
+
+    let mut grads: Vec<Vec<f32>> = vec![vec![0.0; dim]; n];
+    for round in 0..rounds {
+        // every client computes g_i = ∇f_i(x) (+ noise)
+        for (i, c) in problem.clients.iter().enumerate() {
+            c.grad(&x, &mut grads[i]);
+            if noise > 0.0 {
+                for g in grads[i].iter_mut() {
+                    *g += rng.normal_f32(0.0, noise as f32);
+                }
+            }
+        }
+        let norms: Vec<f64> = grads
+            .iter()
+            .zip(&problem.weights)
+            .map(|(g, &w)| w * tensor::norm(g))
+            .collect();
+        if norms.iter().any(|u| !u.is_finite()) {
+            out.diverged = true; // gradient overflow: count as divergence
+            break;
+        }
+        let decision = sampler.decide(&norms, m);
+        let alpha = if n > m {
+            variance::improvement_factor(&norms, m)
+        } else {
+            0.0
+        };
+        let gamma = variance::gamma(alpha, n, m);
+        let sel = probability::draw_independent(&decision.probs, &mut rng);
+        let mut agg = vec![0.0f32; dim];
+        for i in 0..n {
+            if sel[i] && decision.probs[i] > 0.0 {
+                let f = (problem.weights[i] / decision.probs[i]) as f32;
+                tensor::axpy(&mut agg, f, &grads[i]);
+            }
+        }
+        tensor::axpy(&mut x, -(eta as f32), &agg);
+        if !tensor::all_finite(&x) {
+            out.diverged = true;
+            break;
+        }
+        out.rounds.push(TheoryRound {
+            round,
+            dist_sq: tensor::dist_sq(&x, &xstar),
+            suboptimality: problem.loss(&x) - fstar,
+            alpha,
+            gamma,
+        });
+    }
+    out
+}
+
+/// Largest *usable* step size for a strategy: bisection over "the run
+/// makes clear progress on ‖x − x*‖² within the horizon" — the §5.4
+/// "optimal sampling allows larger learning rates" experiment. (The
+/// paper tunes η_l for best accuracy; a step size whose sampling-
+/// variance floor swallows all progress is not usable even if it does
+/// not blow up, so the criterion is progress, not mere non-divergence.)
+pub fn max_stable_eta(
+    problem: &QuadraticProblem,
+    sampler: &Sampler,
+    m: usize,
+    rounds: usize,
+    seed: u64,
+) -> f64 {
+    let stable = |eta: f64| -> bool {
+        let run =
+            run_dsgd_quadratic(problem, sampler, m, eta, rounds, 0.0, seed);
+        if run.diverged || run.rounds.is_empty() {
+            return false;
+        }
+        // progress: the tail must sit well below the first-round value
+        // (averaging the tail de-noises the stochastic floor)
+        let first = run.rounds[0].dist_sq;
+        let tail = run.rounds.iter().rev().take(10);
+        let tail_mean =
+            tail.clone().map(|r| r.dist_sq).sum::<f64>() / 10.0_f64.min(run.rounds.len() as f64);
+        tail_mean < first * 0.5
+    };
+    let mut lo = 1e-4;
+    let mut hi = 64.0;
+    if !stable(lo) {
+        return 0.0;
+    }
+    while stable(hi) {
+        hi *= 2.0;
+        if hi > 1e6 {
+            return hi;
+        }
+    }
+    for _ in 0..30 {
+        let mid = 0.5 * (lo + hi);
+        if stable(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem() -> QuadraticProblem {
+        QuadraticProblem::generate(32, 16, 3.0, 8.0, None, 11)
+    }
+
+    #[test]
+    fn dsgd_converges_with_safe_step() {
+        let p = problem();
+        let eta = 0.5 / p.smoothness();
+        let run =
+            run_dsgd_quadratic(&p, &Sampler::Full, 32, eta, 300, 0.0, 1);
+        assert!(!run.diverged);
+        assert!(run.final_dist() < run.rounds[0].dist_sq * 1e-3);
+    }
+
+    #[test]
+    fn gamma_tracks_strategy_order() {
+        // Theorem 13: full ⇒ γ=1; uniform ⇒ γ=m/n; OCS in between
+        let p = problem();
+        let eta = 0.2 / p.smoothness();
+        let m = 4;
+        let g = |s: &Sampler| {
+            run_dsgd_quadratic(&p, s, m, eta, 60, 0.0, 2).mean_gamma()
+        };
+        let ocs = g(&Sampler::Ocs);
+        assert!(ocs > 4.0 / 32.0 - 1e-9, "γ below m/n: {ocs}");
+        assert!(ocs <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn ocs_converges_faster_than_uniform_at_same_eta() {
+        // single trajectories are noisy at the variance floor: compare the
+        // mean tail suboptimality over several seeds
+        let p = problem();
+        let eta = 0.25 / p.smoothness();
+        let m = 3;
+        let tail_mean = |s: &Sampler| -> f64 {
+            let mut acc = 0.0;
+            let mut count = 0usize;
+            for seed in 0..5 {
+                let run = run_dsgd_quadratic(&p, s, m, eta, 400, 0.0, seed);
+                assert!(!run.diverged, "{} diverged", s.name());
+                for r in run.rounds.iter().rev().take(100) {
+                    acc += r.suboptimality;
+                    count += 1;
+                }
+            }
+            acc / count as f64
+        };
+        let ocs = tail_mean(&Sampler::Ocs);
+        let uni = tail_mean(&Sampler::Uniform);
+        assert!(
+            ocs < uni,
+            "ocs tail suboptimality {ocs} !< uniform {uni}"
+        );
+    }
+
+    #[test]
+    fn larger_stable_step_for_ocs_than_uniform() {
+        // the §5.4 claim on the measurable testbed; needs genuine norm
+        // heterogeneity (skewed client scales), else the two coincide
+        let p = QuadraticProblem::generate_skewed(
+            32, 16, 3.0, 2.0, 8.0, None, 11,
+        );
+        let m = 3;
+        let e_ocs = max_stable_eta(&p, &Sampler::Ocs, m, 150, 5);
+        let e_uni = max_stable_eta(&p, &Sampler::Uniform, m, 150, 5);
+        assert!(
+            e_ocs >= e_uni * 0.98,
+            "OCS max stable η {e_ocs} < uniform {e_uni}"
+        );
+    }
+
+    #[test]
+    fn alpha_decreases_with_skew() {
+        // the heterogeneity knob works: skew ↑ ⇒ α ↓
+        let mean_alpha = |skew: f64| {
+            let p = QuadraticProblem::generate_skewed(
+                32, 16, 3.0, skew, 8.0, None, 13,
+            );
+            let eta = 0.05 / p.smoothness();
+            let run =
+                run_dsgd_quadratic(&p, &Sampler::Ocs, 4, eta, 80, 0.0, 3);
+            run.rounds.iter().map(|r| r.alpha).sum::<f64>()
+                / run.rounds.len() as f64
+        };
+        let lo = mean_alpha(0.0);
+        let hi = mean_alpha(3.0);
+        assert!(hi < lo, "alpha(skew=3)={hi} !< alpha(skew=0)={lo}");
+    }
+
+    #[test]
+    fn noise_floor_scales_with_sigma() {
+        let p = problem();
+        let eta = 0.1 / p.smoothness();
+        let quiet =
+            run_dsgd_quadratic(&p, &Sampler::Full, 32, eta, 400, 0.01, 7);
+        let loud =
+            run_dsgd_quadratic(&p, &Sampler::Full, 32, eta, 400, 1.0, 7);
+        assert!(quiet.final_dist() < loud.final_dist());
+    }
+}

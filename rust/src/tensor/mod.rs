@@ -1,0 +1,140 @@
+//! Flat f32 vector math used on the coordinator hot path (update norms,
+//! weighted aggregation, parameter updates).
+//!
+//! Everything here operates on `&[f32]` so the same code path serves the
+//! rust-native sim models and the PJRT-backed parameter vectors. The hot
+//! functions are written as simple indexed loops that LLVM auto-vectorizes
+//! (verified in the perf pass; see EXPERIMENTS.md §Perf).
+
+/// Squared L2 norm. f64 accumulator: client updates can have ~1e6 entries
+/// and the norm drives sampling probabilities, so precision matters.
+pub fn norm_sq(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in x {
+        acc += (v as f64) * (v as f64);
+    }
+    acc
+}
+
+/// L2 norm.
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// y += a * x (the aggregation primitive: `Δx += (w_i/p_i)·Δ_i`).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * y.
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+/// out = a - b (elementwise); used for Δ_i = x^k − y_i.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len(), "sub length mismatch");
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// In-place a -= b.
+pub fn sub_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "sub_assign length mismatch");
+    for (x, y) in a.iter_mut().zip(b) {
+        *x -= y;
+    }
+}
+
+/// Dot product with f64 accumulator.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+/// Squared distance ‖a − b‖².
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dist_sq length mismatch");
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// True iff every entry is finite (NaN/Inf guard after aggregation).
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{quick, vec_f64};
+
+    #[test]
+    fn norms_and_dot() {
+        let x = [3.0f32, 4.0];
+        assert!((norm(&x) - 5.0).abs() < 1e-9);
+        assert!((norm_sq(&x) - 25.0).abs() < 1e-9);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![10.5, 21.0]);
+    }
+
+    #[test]
+    fn sub_ops() {
+        let a = [5.0f32, 7.0];
+        let b = [1.0f32, 2.0];
+        assert_eq!(sub(&a, &b), vec![4.0, 5.0]);
+        let mut c = a;
+        sub_assign(&mut c, &b);
+        assert_eq!(c.to_vec(), vec![4.0, 5.0]);
+        assert!((dist_sq(&a, &b) - 41.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finite_guard() {
+        assert!(all_finite(&[1.0, -2.0]));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy length mismatch")]
+    fn axpy_length_checked() {
+        axpy(&mut [0.0], 1.0, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_triangle_inequality() {
+        quick("norm-triangle", |rng, _| {
+            let xs: Vec<f32> =
+                vec_f64(rng, 64, |r| r.gaussian()).iter().map(|&v| v as f32).collect();
+            let ys: Vec<f32> =
+                (0..xs.len()).map(|_| rng.gaussian() as f32).collect();
+            let sum: Vec<f32> = xs.iter().zip(&ys).map(|(a, b)| a + b).collect();
+            if norm(&sum) <= norm(&xs) + norm(&ys) + 1e-6 {
+                Ok(())
+            } else {
+                Err("triangle violated".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,229 @@
+//! CLI argument substrate (no clap available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positionals,
+//! and subcommands, with typed getters and generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option for usage text + validation.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parse result: option map + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), opts: Vec::new() }
+    }
+
+    /// Declare a value option with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: default.map(String::from),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "{head:<32} {}{def}", o.help);
+        }
+        s
+    }
+
+    /// Parse an argv slice (excluding the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    out.flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    out.values.insert(name, v);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| panic!("missing option --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an unsigned int"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a u64"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a float"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list of usizes, e.g. "3,6,12".
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad int '{s}'"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "t")
+            .opt("rounds", Some("10"), "rounds")
+            .opt("name", None, "name")
+            .flag("verbose", "talk")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(p.usize("rounds"), 10);
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.get("name"), None);
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = cli().parse(&argv(&["--rounds", "5", "--name=x"])).unwrap();
+        assert_eq!(p.usize("rounds"), 5);
+        assert_eq!(p.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = cli().parse(&argv(&["run", "--verbose", "extra"])).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&argv(&["--rounds"])).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let c = Cli::new("t", "t").opt("ms", Some("3,6,12"), "");
+        let p = c.parse(&argv(&[])).unwrap();
+        assert_eq!(p.usize_list("ms"), vec![3, 6, 12]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Substrate utilities built in-tree (the offline environment provides no
+//! rand/serde/clap/criterion — see DESIGN.md §2).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

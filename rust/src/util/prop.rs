@@ -1,0 +1,128 @@
+//! Mini property-based testing substrate (no proptest available offline).
+//!
+//! `check` runs a property over many seeded random cases and, on failure,
+//! reports the failing case index + seed so the case can be replayed
+//! deterministically. Generators are just closures over [`Rng`].
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, seed: 0xFED5_A310 }
+    }
+}
+
+/// Run `property(case_rng, case_index)`; panic with replay info on failure.
+///
+/// The property should itself `assert!`/`panic!` on violation; returning
+/// `Err(msg)` is also supported for nicer messages.
+pub fn check<F>(name: &str, cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork(case as u64);
+        if let Err(msg) = property(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn quick<F>(name: &str, property: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check(name, Config::default(), property)
+}
+
+/// Generator helpers -------------------------------------------------------
+
+/// Random vector of length in [1, max_len] with values from `gen`.
+pub fn vec_f64(
+    rng: &mut Rng,
+    max_len: usize,
+    gen: impl Fn(&mut Rng) -> f64,
+) -> Vec<f64> {
+    let n = rng.range(1, max_len + 1);
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+/// Non-negative "update norm"-like values: mixture of zeros, small and
+/// heavy-tailed entries — the shapes OCS cares about.
+pub fn norm_profile(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|_| match rng.below(10) {
+            0..=1 => 0.0,
+            2..=6 => rng.f64(),
+            _ => rng.exponential(0.2),
+        })
+        .collect()
+}
+
+/// Simplex weights (w_i >= 0, sum = 1).
+pub fn simplex(rng: &mut Rng, n: usize) -> Vec<f64> {
+    rng.dirichlet(1.0, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        quick("sum-commutes", |rng, _| {
+            let xs = vec_f64(rng, 20, |r| r.f64());
+            let a: f64 = xs.iter().sum();
+            let b: f64 = xs.iter().rev().sum();
+            if (a - b).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("{a} vs {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure_with_case() {
+        check("always-fails", Config { cases: 3, seed: 1 }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn norm_profile_non_negative() {
+        quick("norm-profile", |rng, _| {
+            let p = norm_profile(rng, 50);
+            if p.iter().all(|&x| x >= 0.0) {
+                Ok(())
+            } else {
+                Err("negative norm".into())
+            }
+        });
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        quick("simplex", |rng, _| {
+            let w = simplex(rng, 12);
+            if (w.iter().sum::<f64>() - 1.0).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("not a simplex".into())
+            }
+        });
+    }
+}

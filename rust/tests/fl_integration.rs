@@ -1,0 +1,142 @@
+//! Integration: the full FL protocol over the XLA engine (artifacts →
+//! PJRT → FedAvg with OCS/AOCS) — the three-layer stack end to end.
+
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::data;
+use fedsamp::fl::{train, TrainOptions};
+use fedsamp::runtime::engine::XlaEngine;
+
+const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("manifest.json").exists()
+}
+
+fn tiny_cfg(strategy: Strategy) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("it_{}", strategy.name()),
+        seed: 5,
+        rounds: 6,
+        cohort: 8,
+        budget: 2,
+        strategy,
+        algorithm: Algorithm::FedAvg { local_epochs: 1, eta_g: 1.0, eta_l: 0.125 },
+        data: DataSpec::FemnistLike { pool: 12, variant: 1 },
+        model: "femnist_mlp".into(),
+        batch_size: 20,
+        eval_every: 2,
+        eval_examples: 124,
+        workers: 1,
+        secure_updates: true,
+        availability: 1.0,
+    }
+}
+
+fn build_engine(cfg: &ExperimentConfig, workers: usize) -> XlaEngine {
+    let fd = data::build(&cfg.data, cfg.eval_examples, cfg.seed);
+    XlaEngine::new(ART, &cfg.model, fd, cfg.algorithm.clone(), workers, cfg.seed)
+        .expect("engine")
+}
+
+#[test]
+fn fedavg_aocs_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cfg = tiny_cfg(Strategy::Aocs { j_max: 4 });
+    let mut engine = build_engine(&cfg, 1);
+    let run = train(&cfg, &mut engine, &TrainOptions::default()).unwrap();
+    assert_eq!(run.rounds.len(), 6);
+    assert!(run.rounds.iter().all(|r| r.train_loss.is_finite()));
+    assert!(run.final_accuracy().is_finite());
+    assert!(run.total_uplink_bits() > 0);
+    // budget respected
+    for r in &run.rounds {
+        assert!(r.expected_budget <= 2.0 + 1e-6);
+        assert!(r.transmitted <= 8);
+    }
+    // training signal: loss at end below loss at start
+    assert!(
+        run.final_train_loss() < run.rounds[0].train_loss,
+        "{} -> {}",
+        run.rounds[0].train_loss,
+        run.final_train_loss()
+    );
+}
+
+#[test]
+fn worker_pool_reproduces_single_thread_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // per-(round, client) RNG forking makes results independent of the
+    // thread schedule: 3 workers must equal 1 worker bit-for-bit on the
+    // recorded metrics
+    let cfg = tiny_cfg(Strategy::Ocs);
+    let mut e1 = build_engine(&cfg, 1);
+    let r1 = train(&cfg, &mut e1, &TrainOptions::default()).unwrap();
+    let mut e3 = build_engine(&cfg, 3);
+    let r3 = train(&cfg, &mut e3, &TrainOptions::default()).unwrap();
+    for (a, b) in r1.rounds.iter().zip(&r3.rounds) {
+        assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+        assert_eq!(a.transmitted, b.transmitted);
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+    }
+}
+
+#[test]
+fn ocs_uses_fewer_bits_than_full_for_same_rounds() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cfg_f = tiny_cfg(Strategy::Full);
+    let mut ef = build_engine(&cfg_f, 1);
+    let full = train(&cfg_f, &mut ef, &TrainOptions::default()).unwrap();
+    let cfg_o = tiny_cfg(Strategy::Aocs { j_max: 4 });
+    let mut eo = build_engine(&cfg_o, 1);
+    let ocs = train(&cfg_o, &mut eo, &TrainOptions::default()).unwrap();
+    // m=2 of n=8 → ~4× fewer update uploads (negotiation floats are noise)
+    assert!(
+        ocs.total_uplink_bits() < full.total_uplink_bits() / 2,
+        "{} vs {}",
+        ocs.total_uplink_bits(),
+        full.total_uplink_bits()
+    );
+}
+
+#[test]
+fn gru_model_trains_through_fl() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = tiny_cfg(Strategy::Aocs { j_max: 4 });
+    cfg.model = "shakespeare_gru".into();
+    cfg.data = DataSpec::ShakespeareLike { pool: 10 };
+    cfg.batch_size = 8;
+    cfg.algorithm =
+        Algorithm::FedAvg { local_epochs: 1, eta_g: 1.0, eta_l: 0.25 };
+    cfg.rounds = 4;
+    let mut engine = build_engine(&cfg, 1);
+    let run = train(&cfg, &mut engine, &TrainOptions::default()).unwrap();
+    assert_eq!(run.rounds.len(), 4);
+    assert!(run.rounds.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn seed_changes_trajectory() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = tiny_cfg(Strategy::Uniform);
+    let mut e1 = build_engine(&cfg, 1);
+    let r1 = train(&cfg, &mut e1, &TrainOptions::default()).unwrap();
+    cfg.seed = 6;
+    let mut e2 = build_engine(&cfg, 1);
+    let r2 = train(&cfg, &mut e2, &TrainOptions::default()).unwrap();
+    assert_ne!(r1.rounds[1].train_loss, r2.rounds[1].train_loss);
+}

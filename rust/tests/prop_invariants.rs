@@ -1,0 +1,199 @@
+//! Cross-module property tests: invariants that span sampling, secure
+//! aggregation and the FL round protocol.
+
+use fedsamp::sampling::aocs::aocs_probabilities;
+use fedsamp::sampling::ocs::ocs_probabilities;
+use fedsamp::sampling::probability::draw_independent;
+use fedsamp::sampling::variance::{
+    improvement_factor, sampling_variance, uniform_variance,
+};
+use fedsamp::secure_agg::SecureAggregator;
+use fedsamp::tensor;
+use fedsamp::util::prop::{check, norm_profile, Config};
+use fedsamp::util::rng::Rng;
+
+#[test]
+fn estimator_unbiased_through_full_pipeline() {
+    // Monte-Carlo over random vector updates: E[Σ_{i∈S} (w_i/p_i)U_i]
+    // must equal Σ w_i U_i for OCS probabilities + independent draws +
+    // secure aggregation.
+    check("pipeline-unbiased", Config { cases: 12, seed: 42 }, |rng, case| {
+        let n = rng.range(3, 10);
+        let d = rng.range(2, 12);
+        let m = rng.range(1, n + 1);
+        let updates: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect())
+            .collect();
+        let weights: Vec<f64> = vec![1.0 / n as f64; n];
+        let norms: Vec<f64> = updates
+            .iter()
+            .zip(&weights)
+            .map(|(u, &w)| w * tensor::norm(u))
+            .collect();
+        let probs = ocs_probabilities(&norms, m).probs;
+
+        let mut target = vec![0.0f64; d];
+        for (u, &w) in updates.iter().zip(&weights) {
+            for (t, &v) in target.iter_mut().zip(u) {
+                *t += w * v as f64;
+            }
+        }
+
+        let trials = 30_000;
+        let mut mean = vec![0.0f64; d];
+        let mut draw_rng = Rng::new(case as u64 ^ 0xDEAD);
+        for t in 0..trials {
+            let sel = draw_independent(&probs, &mut draw_rng);
+            // secure-aggregate the selected scaled updates
+            let scaled: Vec<(u64, Vec<f32>)> = (0..n)
+                .filter(|&i| sel[i] && probs[i] > 0.0)
+                .map(|i| {
+                    let f = (weights[i] / probs[i]) as f32;
+                    let mut v = updates[i].clone();
+                    tensor::scale(&mut v, f);
+                    (i as u64, v)
+                })
+                .collect();
+            if scaled.is_empty() {
+                continue;
+            }
+            let agg = SecureAggregator::new(t as u64);
+            let roster: Vec<u64> = scaled.iter().map(|(i, _)| *i).collect();
+            let masked: Vec<Vec<u64>> = scaled
+                .iter()
+                .map(|(i, v)| agg.mask(*i, &roster, v))
+                .collect();
+            let sum =
+                SecureAggregator::decode_sum(&SecureAggregator::sum(&masked));
+            for (mm, v) in mean.iter_mut().zip(sum) {
+                *mm += v as f64;
+            }
+        }
+        for (mm, t) in mean.iter().zip(&target) {
+            let avg = mm / trials as f64;
+            // Monte-Carlo tolerance: generous but catches systematic bias
+            if (avg - t).abs() > 0.08 * (1.0 + t.abs()) {
+                return Err(format!("bias: {avg} vs {t} (n={n} m={m})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lemma1_variance_equality_for_independent_sampling() {
+    // Empirical second moment matches Eq. (6) exactly (Lemma 1 equality)
+    check("lemma1-equality", Config { cases: 10, seed: 7 }, |rng, case| {
+        let n = rng.range(3, 12);
+        let m = rng.range(1, n + 1);
+        let norms: Vec<f64> =
+            (0..n).map(|_| rng.exponential(0.5) + 0.05).collect();
+        let probs = ocs_probabilities(&norms, m).probs;
+        let target: f64 = norms.iter().sum();
+        let predicted = sampling_variance(&norms, &probs);
+        let trials = 120_000;
+        let mut second = 0.0f64;
+        let mut draw_rng = Rng::new(case as u64 ^ 0xBEEF);
+        for _ in 0..trials {
+            let sel = draw_independent(&probs, &mut draw_rng);
+            let est: f64 = (0..n)
+                .filter(|&i| sel[i] && probs[i] > 0.0)
+                .map(|i| norms[i] / probs[i])
+                .sum();
+            let dd = est - target;
+            second += dd * dd;
+        }
+        second /= trials as f64;
+        if predicted == 0.0 {
+            if second < 1e-9 {
+                return Ok(());
+            }
+            return Err(format!("expected zero variance, got {second}"));
+        }
+        let rel = (second - predicted).abs() / predicted;
+        if rel < 0.08 {
+            Ok(())
+        } else {
+            Err(format!(
+                "variance mismatch: measured {second} vs Eq.6 {predicted}"
+            ))
+        }
+    });
+}
+
+#[test]
+fn aocs_never_worse_than_uniform_variance() {
+    check("aocs-vs-uniform", Config { cases: 300, seed: 3 }, |rng, _| {
+        let n = rng.range(2, 64);
+        let m = rng.range(1, n);
+        let norms = norm_profile(rng, n);
+        if norms.iter().sum::<f64>() <= 0.0 {
+            return Ok(());
+        }
+        let probs = aocs_probabilities(&norms, m, 4).probs;
+        let v = sampling_variance(&norms, &probs);
+        let vu = uniform_variance(&norms, m);
+        if v <= vu * (1.0 + 1e-9) + 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("aocs variance {v} > uniform {vu} (n={n} m={m})"))
+        }
+    });
+}
+
+#[test]
+fn improvement_factor_extremes() {
+    // sparse profiles → α → 0; constant profiles → α = 1
+    check("alpha-extremes", Config { cases: 100, seed: 9 }, |rng, _| {
+        let n = rng.range(3, 50);
+        let m = rng.range(1, n);
+        // sparse: ≤ m nonzero
+        let mut sparse = vec![0.0f64; n];
+        for i in 0..m {
+            sparse[i] = rng.exponential(1.0) + 0.1;
+        }
+        if improvement_factor(&sparse, m) != 0.0 {
+            return Err("sparse α != 0".into());
+        }
+        let constant = vec![1.0 + rng.f64(); n];
+        let a = improvement_factor(&constant, m);
+        if (a - 1.0).abs() > 1e-9 {
+            return Err(format!("constant α = {a} != 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn secure_agg_dropout_recovery_is_exact() {
+    check("dropout-recovery", Config { cases: 60, seed: 17 }, |rng, case| {
+        let n = rng.range(2, 10);
+        let d = rng.range(1, 16);
+        let agg = SecureAggregator::new(case as u64);
+        let roster: Vec<u64> = (0..n as u64).collect();
+        let data: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 5.0)).collect())
+            .collect();
+        let masked: Vec<Vec<u64>> = roster
+            .iter()
+            .zip(&data)
+            .map(|(&id, v)| agg.mask(id, &roster, v))
+            .collect();
+        // drop a random nonempty strict subset
+        let k = rng.range(0, n - 1);
+        let dropped: Vec<u64> = (0..k as u64).collect();
+        let survivors: Vec<u64> = (k as u64..n as u64).collect();
+        let mut sum = SecureAggregator::sum(
+            &masked[k..].iter().cloned().collect::<Vec<_>>(),
+        );
+        agg.recover(&mut sum, &survivors, &dropped);
+        let got = SecureAggregator::decode_sum(&sum);
+        for lane in 0..d {
+            let want: f32 = data[k..].iter().map(|v| v[lane]).sum();
+            if (got[lane] - want).abs() > 1e-3 {
+                return Err(format!("lane {lane}: {} vs {want}", got[lane]));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,129 @@
+//! Integration: sim-path end-to-end runs (native logistic engine) and the
+//! 3-way strategy comparison of the paper's evaluation.
+
+use fedsamp::config::presets;
+use fedsamp::config::{DataSpec, Strategy};
+use fedsamp::metrics::average_runs;
+use fedsamp::sim::run_sim;
+
+fn quick(strategy: Strategy, seed: u64) -> fedsamp::metrics::RunResult {
+    let mut cfg = presets::femnist(1, 3).with_strategy(strategy);
+    cfg.seed = seed;
+    cfg.rounds = 30;
+    cfg.eval_examples = 248;
+    cfg.data = DataSpec::FemnistLike { pool: 60, variant: 1 };
+    cfg.secure_updates = false;
+    run_sim(&cfg).unwrap()
+}
+
+#[test]
+fn three_way_comparison_matches_paper_shape() {
+    // Figures 3–5 qualitative shape on the sim substrate:
+    // per-round: full ≤ ocs < uniform loss; per-bit: ocs beats full
+    let avg_loss = |s: Strategy| {
+        let runs: Vec<_> = (0..3).map(|i| quick(s.clone(), i)).collect();
+        average_runs(&runs)
+    };
+    let full = avg_loss(Strategy::Full);
+    let aocs = avg_loss(Strategy::Aocs { j_max: 4 });
+    let uniform = avg_loss(Strategy::Uniform);
+
+    let fl = full.final_train_loss();
+    let al = aocs.final_train_loss();
+    let ul = uniform.final_train_loss();
+    assert!(al < ul, "optimal {al} !< uniform {ul}");
+    assert!(fl <= al * 1.15, "full {fl} should be ≈ best vs {al}");
+
+    // bits-to-loss: AOCS reaches full's final loss with far fewer bits
+    let target = fl * 1.1;
+    let bits_full = full
+        .rounds
+        .iter()
+        .find(|r| r.train_loss <= target)
+        .map(|r| r.uplink_bits);
+    let bits_aocs = aocs
+        .rounds
+        .iter()
+        .find(|r| r.train_loss <= target)
+        .map(|r| r.uplink_bits);
+    if let (Some(bf), Some(ba)) = (bits_full, bits_aocs) {
+        assert!(ba < bf, "aocs bits {ba} !< full bits {bf}");
+    }
+}
+
+#[test]
+fn alpha_below_one_on_unbalanced_data() {
+    // the unbalanced FEMNIST variant must produce heterogeneous update
+    // norms, i.e. a strict advantage for optimal sampling (α < 1)
+    let run = quick(Strategy::Aocs { j_max: 4 }, 0);
+    let mean_alpha = run.mean_alpha();
+    assert!(
+        mean_alpha < 0.95,
+        "α ≈ 1 means no norm heterogeneity: {mean_alpha}"
+    );
+    assert!(mean_alpha > 0.0);
+}
+
+#[test]
+fn gamma_bounds_hold_every_round() {
+    let run = quick(Strategy::Ocs, 1);
+    for r in &run.rounds {
+        let m = 3.0;
+        let n = 32.0;
+        assert!(
+            r.gamma >= m / n - 1e-9 && r.gamma <= 1.0 + 1e-9,
+            "round {}: γ={} outside [m/n, 1]",
+            r.round,
+            r.gamma
+        );
+    }
+}
+
+#[test]
+fn run_result_saves_and_reloads() {
+    let run = quick(Strategy::Uniform, 2);
+    let dir = std::env::temp_dir().join("fedsamp_test_results");
+    let path = run.save(dir.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = fedsamp::util::json::Json::parse(&text).unwrap();
+    assert_eq!(v.get("strategy").as_str(), Some("uniform"));
+    assert_eq!(
+        v.get("rounds").as_arr().unwrap().len(),
+        run.rounds.len()
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn dsgd_theory_preset_runs() {
+    let mut cfg = presets::dsgd_theory(8, 0.05);
+    cfg.rounds = 40;
+    cfg.data = DataSpec::FemnistLike { pool: 32, variant: 1 };
+    cfg.secure_updates = false;
+    let run = run_sim(&cfg).unwrap();
+    assert_eq!(run.rounds.len(), 40);
+    assert!(run.final_train_loss().is_finite());
+}
+
+#[test]
+fn cifar_balanced_still_benefits() {
+    // Appendix G: OCS ≥ uniform even on balanced data (norms still differ)
+    let mk = |s: Strategy| {
+        let mut cfg = presets::cifar(3).with_strategy(s);
+        cfg.rounds = 25;
+        cfg.eval_examples = 200;
+        cfg.data = DataSpec::CifarLike { pool: 40, per_client: 40 };
+        cfg.secure_updates = false;
+        let runs: Vec<_> = (0..3)
+            .map(|i| {
+                let mut c = cfg.clone();
+                c.seed = i;
+                run_sim(&c).unwrap()
+            })
+            .collect();
+        average_runs(&runs).final_train_loss()
+    };
+    let ocs = mk(Strategy::Ocs);
+    let uni = mk(Strategy::Uniform);
+    assert!(ocs <= uni * 1.02, "balanced: ocs {ocs} worse than uniform {uni}");
+}
