@@ -1,0 +1,116 @@
+//! Micro-bench: coordinator round throughput (rounds/sec) vs shard count
+//! on the quadratic sim model — exact closed-form gradients, so the
+//! measurement isolates protocol overhead (registry split, worker-pool
+//! dispatch, norm report, negotiation, partial tree-aggregation) from
+//! model compute.
+
+use fedsamp::bench::Bench;
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{
+    ClientCompute, Coordinator, CoordinatorOptions, ParallelRunner,
+};
+use fedsamp::fl::{EvalOutcome, LocalOutcome, TrainOptions};
+use fedsamp::model::quadratic::QuadraticProblem;
+use std::hint::black_box;
+use std::time::Duration;
+
+/// [`ClientCompute`] over the quadratic testbed: DSGD with exact local
+/// gradients, uniform client weights.
+struct QuadraticCompute {
+    problem: QuadraticProblem,
+}
+
+impl ClientCompute for QuadraticCompute {
+    fn dim(&self) -> usize {
+        self.problem.dim
+    }
+
+    fn num_clients(&self) -> usize {
+        self.problem.clients.len()
+    }
+
+    fn init_params(&self, _seed: u64) -> Vec<f32> {
+        vec![0.0; self.problem.dim]
+    }
+
+    fn local_one(
+        &self,
+        _round: usize,
+        global: &[f32],
+        client: usize,
+    ) -> LocalOutcome {
+        let c = &self.problem.clients[client];
+        let mut grad = vec![0.0f32; self.problem.dim];
+        c.grad(global, &mut grad);
+        LocalOutcome {
+            train_loss: c.loss(global),
+            delta: grad,
+            examples: 1,
+        }
+    }
+
+    fn evaluate(&self, global: &[f32]) -> EvalOutcome {
+        EvalOutcome { loss: self.problem.loss(global), accuracy: f64::NAN }
+    }
+}
+
+fn bench_cfg(rounds: usize, cohort: usize, secure: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "bench_coordinator".into(),
+        seed: 1,
+        rounds,
+        cohort,
+        budget: (cohort / 8).max(1),
+        strategy: Strategy::Ocs,
+        algorithm: Algorithm::Dsgd { eta: 0.05 },
+        data: DataSpec::FemnistLike { pool: 0, variant: 0 }, // unused: compute is explicit
+        model: "native:quadratic".into(),
+        batch_size: 1,
+        eval_every: rounds.max(1),
+        eval_examples: 1,
+        workers: 1,
+        secure_updates: secure,
+        availability: 1.0,
+    }
+}
+
+fn main() {
+    let n = 256;
+    let dim = 4096;
+    let rounds = 20;
+    let cohort = 64;
+    let problem = QuadraticProblem::generate(n, dim, 3.0, 8.0, None, 7);
+    println!(
+        "coordinator throughput: pool={n} dim={dim} cohort={cohort} \
+         rounds/run={rounds}"
+    );
+
+    for &secure in &[false, true] {
+        for &shards in &[1usize, 2, 4, 8] {
+            let workers = shards;
+            let compute = QuadraticCompute { problem: problem.clone() };
+            let mut runner = ParallelRunner::new(compute, workers);
+            let cfg = bench_cfg(rounds, cohort, secure);
+            let b = Bench::new(&format!(
+                "coordinator/secure={secure}/shards={shards}"
+            ))
+            .with_min_time(Duration::from_millis(400));
+            b.run_throughput("rounds", rounds as u64, || {
+                let mut coordinator = Coordinator::new(CoordinatorOptions {
+                    shards,
+                    deadline: None,
+                });
+                let run = coordinator
+                    .run(&cfg, &mut runner, &TrainOptions::default())
+                    .unwrap();
+                black_box(run);
+            });
+        }
+    }
+    println!(
+        "\nexpected: plain-path rounds/sec grows with shards until the \
+         master-side negotiation and O(shards) tree combine dominate; the \
+         secure path pays the O(|S|²·d) mask streams regardless of shard \
+         count — that cost is per-participant, not per-shard."
+    );
+}

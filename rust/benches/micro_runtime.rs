@@ -1,77 +1,96 @@
 //! Micro-bench: PJRT runtime hot path — train-step latency, param
 //! conversion overhead, and eval throughput on the AOT artifacts.
 //!
-//! Skips (with a message) when `make artifacts` has not run.
+//! Skips (with a message) when `make artifacts` has not run, and is a
+//! no-op in default builds: the PJRT path needs `--features xla`.
 
-use fedsamp::bench::Bench;
-use fedsamp::exp::{default_artifacts_dir, have_artifacts};
-use fedsamp::runtime::Runtime;
-use fedsamp::util::rng::Rng;
-use std::hint::black_box;
-use std::time::Duration;
+#[cfg(feature = "xla")]
+mod real {
+    use fedsamp::bench::Bench;
+    use fedsamp::exp::{default_artifacts_dir, have_artifacts};
+    use fedsamp::runtime::Runtime;
+    use fedsamp::util::rng::Rng;
+    use std::hint::black_box;
+    use std::time::Duration;
 
-fn batch_inputs(
-    rt: &Runtime,
-    bsz: usize,
-    rng: &mut Rng,
-) -> (xla::Literal, xla::Literal) {
-    let per = rt.manifest.input_elems();
-    let labels: Vec<u32> = (0..bsz)
-        .map(|_| rng.below(rt.manifest.num_classes as u64) as u32)
-        .collect();
-    let xb = if rt.manifest.input_dtype == "f32" {
-        let xs: Vec<f32> = (0..bsz * per).map(|_| rng.f32()).collect();
-        rt.input_literal(Some(&xs), None, bsz).unwrap()
-    } else {
-        let toks: Vec<i32> = (0..bsz * per)
-            .map(|_| rng.below(rt.manifest.num_classes as u64) as i32)
+    fn batch_inputs(
+        rt: &Runtime,
+        bsz: usize,
+        rng: &mut Rng,
+    ) -> (xla::Literal, xla::Literal) {
+        let per = rt.manifest.input_elems();
+        let labels: Vec<u32> = (0..bsz)
+            .map(|_| rng.below(rt.manifest.num_classes as u64) as u32)
             .collect();
-        rt.input_literal(None, Some(&toks), bsz).unwrap()
-    };
-    let oh = rt.onehot_literal(&labels, bsz).unwrap();
-    (xb, oh)
+        let xb = if rt.manifest.input_dtype == "f32" {
+            let xs: Vec<f32> = (0..bsz * per).map(|_| rng.f32()).collect();
+            rt.input_literal(Some(&xs), None, bsz).unwrap()
+        } else {
+            let toks: Vec<i32> = (0..bsz * per)
+                .map(|_| rng.below(rt.manifest.num_classes as u64) as i32)
+                .collect();
+            rt.input_literal(None, Some(&toks), bsz).unwrap()
+        };
+        let oh = rt.onehot_literal(&labels, bsz).unwrap();
+        (xb, oh)
+    }
+
+    pub fn run() {
+        let dir = default_artifacts_dir();
+        if !have_artifacts(&dir) {
+            println!("micro_runtime: artifacts missing — run `make artifacts`");
+            return;
+        }
+        let mut rng = Rng::new(5);
+        for model in ["femnist_mlp", "femnist_mlp_pallas", "shakespeare_gru"] {
+            let rt = match Runtime::load(&dir, model) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    println!("skip {model}: {e}");
+                    continue;
+                }
+            };
+            let flat = rt.init_params().unwrap();
+            let (xb, oh) = batch_inputs(&rt, rt.manifest.batch_size, &mut rng);
+            let (exb, eoh) = batch_inputs(&rt, rt.manifest.eval_batch, &mut rng);
+
+            let b = Bench::new(&format!("runtime/{model}"))
+                .with_min_time(Duration::from_millis(500));
+            b.run("params_to_literals", || {
+                black_box(rt.params_to_literals(black_box(&flat)).unwrap());
+            });
+            let mut params = rt.params_to_literals(&flat).unwrap();
+            b.run("train_step", || {
+                black_box(rt.train_step(&mut params, &xb, &oh, 0.01).unwrap());
+            });
+            b.run("literals_to_params", || {
+                black_box(rt.literals_to_params(black_box(&params)).unwrap());
+            });
+            b.run("eval_step", || {
+                black_box(rt.eval_step(&params, &exb, &eoh).unwrap());
+            });
+        }
+        println!(
+            "\nexpected: train_step dominates (the actual compute); the \
+             flat↔literal conversions must stay ≪ one train_step — that's \
+             why the client loop keeps params in literal form across batches. \
+             femnist_mlp_pallas quantifies the interpret-mode overhead \
+             (CPU-only artifact; see DESIGN.md §Hardware-Adaptation)."
+        );
+    }
 }
 
+#[cfg(feature = "xla")]
 fn main() {
-    let dir = default_artifacts_dir();
-    if !have_artifacts(&dir) {
-        println!("micro_runtime: artifacts missing — run `make artifacts`");
-        return;
-    }
-    let mut rng = Rng::new(5);
-    for model in ["femnist_mlp", "femnist_mlp_pallas", "shakespeare_gru"] {
-        let rt = match Runtime::load(&dir, model) {
-            Ok(rt) => rt,
-            Err(e) => {
-                println!("skip {model}: {e}");
-                continue;
-            }
-        };
-        let flat = rt.init_params().unwrap();
-        let (xb, oh) = batch_inputs(&rt, rt.manifest.batch_size, &mut rng);
-        let (exb, eoh) = batch_inputs(&rt, rt.manifest.eval_batch, &mut rng);
+    real::run();
+}
 
-        let b = Bench::new(&format!("runtime/{model}"))
-            .with_min_time(Duration::from_millis(500));
-        b.run("params_to_literals", || {
-            black_box(rt.params_to_literals(black_box(&flat)).unwrap());
-        });
-        let mut params = rt.params_to_literals(&flat).unwrap();
-        b.run("train_step", || {
-            black_box(rt.train_step(&mut params, &xb, &oh, 0.01).unwrap());
-        });
-        b.run("literals_to_params", || {
-            black_box(rt.literals_to_params(black_box(&params)).unwrap());
-        });
-        b.run("eval_step", || {
-            black_box(rt.eval_step(&params, &exb, &eoh).unwrap());
-        });
-    }
+#[cfg(not(feature = "xla"))]
+fn main() {
     println!(
-        "\nexpected: train_step dominates (the actual compute); the \
-         flat↔literal conversions must stay ≪ one train_step — that's \
-         why the client loop keeps params in literal form across batches. \
-         femnist_mlp_pallas quantifies the interpret-mode overhead \
-         (CPU-only artifact; see DESIGN.md §Hardware-Adaptation)."
+        "micro_runtime: PJRT path disabled in this build — vendor the \
+         xla bindings, add them to Cargo.toml [dependencies], and rerun \
+         with `cargo bench --features xla`. See micro_coordinator for \
+         the std-only round-protocol bench."
     );
 }

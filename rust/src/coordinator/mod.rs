@@ -1,1 +1,164 @@
-// paper's L3 coordination contribution
+//! The sharded round coordinator — the paper's L3 master/client protocol
+//! (norm collection, optimal-probability negotiation, secure aggregation)
+//! as an explicit, scalable subsystem.
+//!
+//! Structure:
+//!
+//! * [`registry`] — sharded client registry (round-robin ownership,
+//!   cohort partitioning);
+//! * [`round`] — the round state machine
+//!   `Announce → LocalCompute → NormReport → Negotiate → SecureAggregate
+//!   → Commit`, one phase per method, seed-trajectory-faithful;
+//! * [`shard`] — execution backends: [`EngineRunner`] adapts any legacy
+//!   [`ClientEngine`], [`ParallelRunner`] fans shard cohorts over a
+//!   persistent worker-thread pool;
+//! * [`aggregate`] — per-shard partial aggregation with a deterministic
+//!   tree combine (the combine stage reduces O(shards) partials instead
+//!   of folding O(clients) vectors — the seam a streaming master
+//!   plugs into).
+//!
+//! `fl::train` is now a thin adapter over a single-shard [`Coordinator`]
+//! — the sim and XLA paths both run through this subsystem — and the
+//! single-shard trajectory is bit-identical to the historical sequential
+//! loop. Under `secure_updates` the multi-shard trajectory is *also*
+//! bit-identical (fixed-point ring sums commute); the plain-f32 path may
+//! differ in the last ulp across shard counts.
+//!
+//! Deadline/straggler handling sits on top of `fl::availability`: a
+//! shard that misses the round deadline contributes nothing that round.
+//! AOCS tolerates this because the negotiation only consumes aggregates
+//! of thresholded norms from whoever reported in time.
+//!
+//! [`ClientEngine`]: crate::fl::ClientEngine
+
+pub mod aggregate;
+pub mod registry;
+pub mod round;
+pub mod shard;
+
+pub use registry::{CohortPartition, Registry};
+pub use round::{Phase, RoundMachine};
+pub use shard::{ClientCompute, EngineRunner, LocalRunner, ParallelRunner};
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::fl::availability::Availability;
+use crate::fl::comm::BitMeter;
+use crate::fl::TrainOptions;
+use crate::metrics::RunResult;
+use crate::sampling::Sampler;
+use crate::util::rng::Rng;
+
+/// Straggler model: each shard independently misses the round deadline
+/// with probability `miss_prob` (drawn from a dedicated seed stream, so
+/// enabling it never perturbs cohort/selection RNG).
+#[derive(Clone, Debug)]
+pub struct DeadlinePolicy {
+    pub miss_prob: f64,
+}
+
+/// How the coordinator is sharded. Worker-thread provisioning lives
+/// with the execution backend (the `workers` argument of
+/// [`ParallelRunner::new`]) — the coordinator itself is agnostic to how
+/// a runner parallelizes.
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    /// Client-registry shards (clamped to the pool size).
+    pub shards: usize,
+    /// Optional per-round shard deadline model.
+    pub deadline: Option<DeadlinePolicy>,
+}
+
+impl CoordinatorOptions {
+    /// The configuration `fl::train` uses: one shard — trajectory-
+    /// identical to the seed sequential loop.
+    pub fn single_shard() -> CoordinatorOptions {
+        CoordinatorOptions { shards: 1, deadline: None }
+    }
+}
+
+/// Aggregate observability counters for one coordinator run.
+#[derive(Clone, Debug, Default)]
+pub struct CoordStats {
+    /// Shard-rounds lost to missed deadlines.
+    pub shards_dropped: usize,
+    /// Rounds that ended with an empty cohort (no-op rounds).
+    pub noop_rounds: usize,
+}
+
+/// The master-side driver: owns the shard registry and round loop and
+/// walks the [`RoundMachine`] through its phases each round.
+pub struct Coordinator {
+    pub opts: CoordinatorOptions,
+    pub stats: CoordStats,
+}
+
+impl Coordinator {
+    pub fn new(opts: CoordinatorOptions) -> Coordinator {
+        Coordinator { opts, stats: CoordStats::default() }
+    }
+
+    /// Run a full federated experiment over `runner`.
+    pub fn run(
+        &mut self,
+        cfg: &ExperimentConfig,
+        runner: &mut dyn LocalRunner,
+        opts: &TrainOptions,
+    ) -> Result<RunResult, String> {
+        cfg.validate()?;
+        let sampler = Sampler::from_strategy(&cfg.strategy);
+        let pool = runner.num_clients();
+        if pool == 0 {
+            return Err("empty client pool".into());
+        }
+        let dim = runner.dim();
+        let avail = Availability::from_probability(cfg.availability);
+        let eta_g = match cfg.algorithm {
+            Algorithm::FedAvg { eta_g, .. } => eta_g,
+            // DSGD folds its step size into the master update (Eq. 2)
+            Algorithm::Dsgd { eta } => eta,
+        };
+        let registry = Registry::new(pool, self.opts.shards);
+
+        let rng = Rng::new(cfg.seed).fork(0xF1);
+        let mut x = runner.init_params(cfg.seed);
+        let mut meter = BitMeter::new();
+        let mut result = RunResult::new(&cfg.name, sampler.name());
+
+        for round in 0..cfg.rounds {
+            let mut round_rng = rng.fork(round as u64);
+            let mut machine = RoundMachine::new(round);
+            self.stats.shards_dropped += machine.announce(
+                cfg,
+                &avail,
+                &registry,
+                self.opts.deadline.as_ref(),
+                &mut round_rng,
+            );
+            if machine.cohort().is_empty() {
+                self.stats.noop_rounds += 1;
+                result.push(round::noop_record(round, &meter));
+                continue;
+            }
+            machine.local_compute(runner, &x);
+            machine.norm_report();
+            machine.negotiate(&sampler, cfg, &mut meter, &mut round_rng);
+            machine.secure_aggregate(
+                cfg,
+                opts,
+                &registry,
+                dim,
+                &mut meter,
+                &mut round_rng,
+            );
+            result.push(machine.commit(
+                cfg,
+                opts,
+                eta_g,
+                &mut x,
+                runner,
+                &meter,
+            )?);
+        }
+        Ok(result)
+    }
+}

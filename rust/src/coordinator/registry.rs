@@ -1,0 +1,149 @@
+//! Sharded client registry: which shard owns which slice of the client
+//! pool, and how a round cohort splits across shards.
+//!
+//! Sharding is round-robin (`client % shards`): deterministic, balanced
+//! to within one client, and stable under pool growth at the tail (new
+//! clients land on existing shards without reshuffling earlier ids —
+//! the property a production registry needs for incremental scale-out).
+
+/// Shard assignment over a fixed client pool.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pool: usize,
+    shards: usize,
+}
+
+/// A round cohort split by owning shard. `clients[s]` are shard `s`'s
+/// cohort members (in cohort order) and `positions[s]` their positions
+/// in the global cohort, so per-shard results can be reassembled into
+/// the exact order the protocol saw.
+#[derive(Clone, Debug)]
+pub struct CohortPartition {
+    pub clients: Vec<Vec<usize>>,
+    pub positions: Vec<Vec<usize>>,
+}
+
+impl Registry {
+    /// Build a registry of `shards` shards over `pool` clients. The shard
+    /// count is clamped to `[1, pool]` — more shards than clients would
+    /// leave permanently idle shards.
+    pub fn new(pool: usize, shards: usize) -> Registry {
+        assert!(pool > 0, "registry needs a non-empty client pool");
+        Registry { pool, shards: shards.clamp(1, pool) }
+    }
+
+    pub fn pool(&self) -> usize {
+        self.pool
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard owning `client`.
+    pub fn shard_of(&self, client: usize) -> usize {
+        assert!(
+            client < self.pool,
+            "client {client} outside pool of {}",
+            self.pool
+        );
+        client % self.shards
+    }
+
+    /// All pool clients owned by `shard`, ascending.
+    pub fn clients_of(&self, shard: usize) -> Vec<usize> {
+        assert!(shard < self.shards, "shard {shard} out of range");
+        (shard..self.pool).step_by(self.shards).collect()
+    }
+
+    /// Number of pool clients owned by `shard`.
+    pub fn shard_size(&self, shard: usize) -> usize {
+        assert!(shard < self.shards, "shard {shard} out of range");
+        (self.pool - shard + self.shards - 1) / self.shards
+    }
+
+    /// Split a cohort by owning shard, preserving cohort order within
+    /// each shard and remembering global cohort positions.
+    pub fn split_cohort(&self, cohort: &[usize]) -> CohortPartition {
+        let mut clients = vec![Vec::new(); self.shards];
+        let mut positions = vec![Vec::new(); self.shards];
+        for (pos, &c) in cohort.iter().enumerate() {
+            let s = self.shard_of(c);
+            clients[s].push(c);
+            positions[s].push(pos);
+        }
+        CohortPartition { clients, positions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_count_clamped_to_pool() {
+        assert_eq!(Registry::new(3, 8).shards(), 3);
+        assert_eq!(Registry::new(10, 0).shards(), 1);
+        assert_eq!(Registry::new(10, 4).shards(), 4);
+    }
+
+    #[test]
+    fn shards_partition_the_pool() {
+        let r = Registry::new(10, 4);
+        let mut seen = vec![0usize; 10];
+        for s in 0..r.shards() {
+            assert_eq!(r.clients_of(s).len(), r.shard_size(s));
+            for c in r.clients_of(s) {
+                assert_eq!(r.shard_of(c), s);
+                seen[c] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&k| k == 1), "{seen:?}");
+        // balanced to within one client
+        let sizes: Vec<usize> = (0..4).map(|s| r.shard_size(s)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn assignment_is_stable_under_pool_growth() {
+        let small = Registry::new(10, 4);
+        let big = Registry::new(1000, 4);
+        for c in 0..10 {
+            assert_eq!(small.shard_of(c), big.shard_of(c));
+        }
+    }
+
+    #[test]
+    fn split_cohort_reassembles_exactly() {
+        let r = Registry::new(20, 3);
+        let cohort = [7usize, 2, 19, 4, 11, 0];
+        let part = r.split_cohort(&cohort);
+        assert_eq!(part.clients.len(), 3);
+        let mut rebuilt = vec![usize::MAX; cohort.len()];
+        for (cs, ps) in part.clients.iter().zip(&part.positions) {
+            assert_eq!(cs.len(), ps.len());
+            for (&c, &p) in cs.iter().zip(ps) {
+                assert_eq!(r.shard_of(c), r.shard_of(cs[0]));
+                rebuilt[p] = c;
+            }
+        }
+        assert_eq!(rebuilt, cohort);
+    }
+
+    #[test]
+    fn split_preserves_cohort_order_within_shards() {
+        let r = Registry::new(12, 2);
+        let cohort = [1usize, 3, 5, 7, 9, 11, 0, 2];
+        let part = r.split_cohort(&cohort);
+        for ps in &part.positions {
+            assert!(ps.windows(2).all(|w| w[0] < w[1]), "{ps:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside pool")]
+    fn out_of_pool_client_rejected() {
+        Registry::new(4, 2).shard_of(4);
+    }
+}

@@ -1,0 +1,594 @@
+//! The explicit round state machine:
+//!
+//! ```text
+//! Announce → LocalCompute → NormReport → Negotiate → SecureAggregate → Commit
+//! ```
+//!
+//! Each phase is a method on [`RoundMachine`] that asserts it runs in
+//! order, consumes exactly the inputs the seed `fl::train` loop consumed
+//! (same RNG draw order, same float-op order on the master), and stores
+//! its outputs for the next phase. With one shard the trajectory is
+//! bit-identical to the historical sequential loop; with many shards the
+//! masked (fixed-point) aggregation path remains bit-identical because
+//! ring sums commute — see [`super::aggregate`].
+//!
+//! Deadline handling rides on `Announce`: a shard that misses the round
+//! deadline contributes nothing that round (its cohort members are
+//! dropped before norm collection). AOCS tolerates this by design — the
+//! negotiation only ever consumes aggregates of the surviving cohort.
+
+use crate::config::ExperimentConfig;
+use crate::fl::availability::{sample_cohort, Availability};
+use crate::fl::comm::BitMeter;
+use crate::fl::{EvalOutcome, LocalOutcome, TrainOptions};
+use crate::metrics::RoundRecord;
+use crate::sampling::{probability, variance, Decision, Sampler};
+use crate::secure_agg::SecureAggregator;
+use crate::tensor;
+use crate::util::rng::Rng;
+
+use super::aggregate::{self, ShardPartial};
+use super::registry::Registry;
+use super::shard::LocalRunner;
+use super::DeadlinePolicy;
+
+/// Seed-stream label for the straggler draws: independent of the round
+/// RNG so enabling a deadline never perturbs cohort/selection streams.
+const STRAGGLER_STREAM: u64 = 0x57A6_61E5;
+
+/// The protocol phases, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Announce,
+    LocalCompute,
+    NormReport,
+    Negotiate,
+    SecureAggregate,
+    Commit,
+    Done,
+}
+
+/// One round's worth of protocol state, advanced phase by phase.
+pub struct RoundMachine {
+    round: usize,
+    phase: Phase,
+    /// surviving cohort, global client ids in selection order
+    cohort: Vec<usize>,
+    /// per-shard cohort slices (cohort order within each shard)
+    shard_clients: Vec<Vec<usize>>,
+    /// global cohort position of each shard-slice member
+    shard_positions: Vec<Vec<usize>>,
+    dropped_shards: usize,
+    /// local outcomes, reassembled into cohort order
+    outcomes: Vec<LocalOutcome>,
+    weights: Vec<f64>,
+    norms: Vec<f64>,
+    decision: Option<Decision>,
+    selected: Vec<bool>,
+    alpha: f64,
+    gamma: f64,
+    aggregate: Vec<f32>,
+    transmitted: usize,
+}
+
+impl RoundMachine {
+    pub fn new(round: usize) -> RoundMachine {
+        RoundMachine {
+            round,
+            phase: Phase::Announce,
+            cohort: Vec::new(),
+            shard_clients: Vec::new(),
+            shard_positions: Vec::new(),
+            dropped_shards: 0,
+            outcomes: Vec::new(),
+            weights: Vec::new(),
+            norms: Vec::new(),
+            decision: None,
+            selected: Vec::new(),
+            alpha: f64::NAN,
+            gamma: f64::NAN,
+            aggregate: Vec::new(),
+            transmitted: 0,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn cohort(&self) -> &[usize] {
+        &self.cohort
+    }
+
+    pub fn dropped_shards(&self) -> usize {
+        self.dropped_shards
+    }
+
+    fn expect(&self, phase: Phase) {
+        assert_eq!(
+            self.phase, phase,
+            "round {}: phase {phase:?} invoked out of order",
+            self.round
+        );
+    }
+
+    /// (1) Cohort selection from the available pool, partitioned over the
+    /// shard registry; shards that miss the round deadline are dropped
+    /// wholesale. Returns the number of dropped shards.
+    pub fn announce(
+        &mut self,
+        cfg: &ExperimentConfig,
+        avail: &Availability,
+        registry: &Registry,
+        deadline: Option<&DeadlinePolicy>,
+        round_rng: &mut Rng,
+    ) -> usize {
+        self.expect(Phase::Announce);
+        let mut cohort =
+            sample_cohort(avail, registry.pool(), cfg.cohort, round_rng);
+        if let Some(policy) = deadline {
+            if policy.miss_prob > 0.0 {
+                let stream = Rng::new(cfg.seed ^ STRAGGLER_STREAM)
+                    .fork(self.round as u64);
+                let missed: Vec<bool> = (0..registry.shards())
+                    .map(|shard| {
+                        stream
+                            .fork(shard as u64)
+                            .bernoulli(policy.miss_prob)
+                    })
+                    .collect();
+                self.dropped_shards =
+                    missed.iter().filter(|&&m| m).count();
+                cohort.retain(|&c| !missed[registry.shard_of(c)]);
+            }
+        }
+        let part = registry.split_cohort(&cohort);
+        self.cohort = cohort;
+        self.shard_clients = part.clients;
+        self.shard_positions = part.positions;
+        self.phase = if self.cohort.is_empty() {
+            Phase::Done // no reachable clients: the round is a no-op
+        } else {
+            Phase::LocalCompute
+        };
+        self.dropped_shards
+    }
+
+    /// (2) Every surviving shard runs its cohort slice's local work; the
+    /// outcomes are reassembled into global cohort order.
+    pub fn local_compute(
+        &mut self,
+        runner: &mut dyn LocalRunner,
+        global: &[f32],
+    ) {
+        self.expect(Phase::LocalCompute);
+        let by_shard =
+            runner.run_shards(self.round, global, &self.shard_clients);
+        assert_eq!(
+            by_shard.len(),
+            self.shard_clients.len(),
+            "runner shard arity mismatch"
+        );
+        let mut slots: Vec<Option<LocalOutcome>> =
+            vec![None; self.cohort.len()];
+        for ((outs, clients), positions) in by_shard
+            .into_iter()
+            .zip(&self.shard_clients)
+            .zip(&self.shard_positions)
+        {
+            assert_eq!(outs.len(), clients.len(), "engine cohort mismatch");
+            for (o, &pos) in outs.into_iter().zip(positions) {
+                slots[pos] = Some(o);
+            }
+        }
+        self.outcomes = slots
+            .into_iter()
+            .map(|s| s.expect("shard left a cohort position unfilled"))
+            .collect();
+        self.phase = Phase::NormReport;
+    }
+
+    /// (3) Cohort weights `w_i ∝ n_i` and weighted norms `ũ_i = w_i‖U_i‖`.
+    /// Example counts combine per shard first (integer partial sums are
+    /// order-independent, so this matches the flat sum exactly); the
+    /// master then touches only O(cohort) scalars, never update vectors.
+    pub fn norm_report(&mut self) {
+        self.expect(Phase::NormReport);
+        let shard_examples: Vec<usize> = self
+            .shard_positions
+            .iter()
+            .map(|ps| ps.iter().map(|&p| self.outcomes[p].examples).sum())
+            .collect();
+        let total_examples: usize = shard_examples.iter().sum();
+        self.weights = self
+            .outcomes
+            .iter()
+            .map(|o| o.examples as f64 / total_examples.max(1) as f64)
+            .collect();
+        self.norms = self
+            .outcomes
+            .iter()
+            .zip(&self.weights)
+            .map(|(o, &w)| w * tensor::norm(&o.delta))
+            .collect();
+        self.phase = Phase::Negotiate;
+    }
+
+    /// (4)+(5) Sampling negotiation (Eq. 7 / Alg. 2) and the independent
+    /// transmission draw, with the α/γ diagnostics of the round.
+    pub fn negotiate(
+        &mut self,
+        sampler: &Sampler,
+        cfg: &ExperimentConfig,
+        meter: &mut BitMeter,
+        round_rng: &mut Rng,
+    ) {
+        self.expect(Phase::Negotiate);
+        let m = cfg.budget.min(self.cohort.len());
+        let decision = sampler.decide(&self.norms, m);
+        meter.add_negotiation(
+            self.cohort.len(),
+            decision.extra_uplink_floats_per_client,
+        );
+
+        // diagnostics: α^k / γ^k for this round's norm profile. For the
+        // OCS/AOCS arms the decision probabilities already *are* (≈) the
+        // optimal ones, so reuse them instead of solving Eq. (7) a second
+        // time (§Perf L3-2); full/uniform arms still pay one solve.
+        self.alpha = if self.cohort.len() > m {
+            match sampler {
+                Sampler::Ocs | Sampler::Aocs { .. } => {
+                    let vu = variance::uniform_variance(&self.norms, m);
+                    if vu <= 0.0 {
+                        0.0
+                    } else {
+                        (variance::sampling_variance(
+                            &self.norms,
+                            &decision.probs,
+                        ) / vu)
+                            .clamp(0.0, 1.0)
+                    }
+                }
+                _ => variance::improvement_factor(&self.norms, m),
+            }
+        } else {
+            0.0
+        };
+        self.gamma = variance::gamma(self.alpha, self.cohort.len(), m);
+        self.selected =
+            probability::draw_independent(&decision.probs, round_rng);
+        self.decision = Some(decision);
+        self.phase = Phase::SecureAggregate;
+    }
+
+    /// (6) Participants upload `(w_i/p_i)·U_i`; shards fold their members
+    /// into partial aggregates which the master tree-combines — the
+    /// combine stage reduces O(shards) partials rather than folding
+    /// O(participants) vectors directly.
+    pub fn secure_aggregate(
+        &mut self,
+        cfg: &ExperimentConfig,
+        opts: &TrainOptions,
+        registry: &Registry,
+        dim: usize,
+        meter: &mut BitMeter,
+        round_rng: &mut Rng,
+    ) {
+        self.expect(Phase::SecureAggregate);
+        let decision = self.decision.as_ref().expect("negotiate ran");
+        let cohort = &self.cohort;
+
+        // scaled uploads in cohort order: the compressor consumes the
+        // round RNG sequentially exactly as the seed protocol did
+        let scaled: Vec<(usize, Vec<f32>)> = self
+            .outcomes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.selected[*i])
+            .map(|(i, o)| {
+                let factor = (self.weights[i] / decision.probs[i]) as f32;
+                let mut v: Vec<f32> = match &opts.compressor {
+                    Some(c) => c.apply(&o.delta, round_rng),
+                    None => o.delta.clone(),
+                };
+                tensor::scale(&mut v, factor);
+                (i, v)
+            })
+            .collect();
+        let transmitted = scaled.len();
+        for (_, v) in &scaled {
+            match &opts.compressor {
+                Some(c) => meter.add_compressed_update(v.len(), c),
+                None => meter.add_update(v.len()),
+            }
+        }
+
+        // group participants by owning shard in one pass (cohort order
+        // preserved within each group); shards with no participants are
+        // skipped — their partials would merge as no-ops
+        let mut by_shard: Vec<Vec<usize>> =
+            vec![Vec::new(); registry.shards()];
+        for (k, (i, _)) in scaled.iter().enumerate() {
+            by_shard[registry.shard_of(cohort[*i])].push(k);
+        }
+
+        let aggregate: Vec<f32> = if scaled.is_empty() {
+            vec![0.0; dim]
+        } else if cfg.secure_updates {
+            let agg = SecureAggregator::new(cfg.seed ^ self.round as u64);
+            let roster: Vec<u64> = scaled
+                .iter()
+                .map(|(i, _)| cohort[*i] as u64)
+                .collect();
+            // per-shard masked partials: ring sums commute, so the tree
+            // combine is bit-identical to the seed's flat sum
+            let partials: Vec<ShardPartial> = by_shard
+                .iter()
+                .filter(|group| !group.is_empty())
+                .map(|group| {
+                    aggregate::masked_partial(
+                        dim,
+                        group.iter().map(|&k| {
+                            let (i, v) = &scaled[k];
+                            agg.mask(cohort[*i] as u64, &roster, v)
+                        }),
+                    )
+                })
+                .collect();
+            aggregate::finish(
+                aggregate::tree_reduce(partials)
+                    .expect("some shard has a participant"),
+            )
+        } else {
+            let partials: Vec<ShardPartial> = by_shard
+                .iter()
+                .filter(|group| !group.is_empty())
+                .map(|group| {
+                    aggregate::plain_partial(
+                        dim,
+                        group.iter().map(|&k| scaled[k].1.as_slice()),
+                    )
+                })
+                .collect();
+            aggregate::finish(
+                aggregate::tree_reduce(partials)
+                    .expect("some shard has a participant"),
+            )
+        };
+
+        self.transmitted = transmitted;
+        self.aggregate = aggregate;
+        self.phase = Phase::Commit;
+    }
+
+    /// (7)+(8) Master update, divergence guard, metrics and (periodic)
+    /// evaluation. Consumes the phase; the machine ends in `Done`.
+    pub fn commit(
+        &mut self,
+        cfg: &ExperimentConfig,
+        opts: &TrainOptions,
+        eta_g: f64,
+        x: &mut [f32],
+        runner: &mut dyn LocalRunner,
+        meter: &BitMeter,
+    ) -> Result<RoundRecord, String> {
+        self.expect(Phase::Commit);
+        let round = self.round;
+        tensor::axpy(x, -(eta_g as f32), &self.aggregate);
+        if !tensor::all_finite(x) {
+            return Err(format!(
+                "{}: divergence at round {round} (non-finite parameters); \
+                 reduce the step size",
+                cfg.name
+            ));
+        }
+
+        let train_loss: f64 = self
+            .outcomes
+            .iter()
+            .zip(&self.weights)
+            .map(|(o, &w)| w * o.train_loss)
+            .sum();
+        let val = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            runner.evaluate(x)
+        } else {
+            EvalOutcome { loss: f64::NAN, accuracy: f64::NAN }
+        };
+        let transmitted = self.transmitted;
+        let alpha = self.alpha;
+        if opts.verbose_every > 0 && round % opts.verbose_every == 0 {
+            println!(
+                "[{}] round {round:>4}  loss {train_loss:.4}  acc {}  \
+                 bits {:.3e}  sent {transmitted}/{} α {alpha:.3}",
+                cfg.name,
+                if val.accuracy.is_nan() {
+                    "  -  ".to_string()
+                } else {
+                    format!("{:.3}", val.accuracy)
+                },
+                meter.total_bits() as f64,
+                self.cohort.len(),
+            );
+        }
+        let decision = self.decision.as_ref().expect("negotiate ran");
+        self.phase = Phase::Done;
+        Ok(RoundRecord {
+            round,
+            train_loss,
+            val_accuracy: val.accuracy,
+            uplink_bits: meter.total_bits(),
+            transmitted,
+            expected_budget: probability::expected_size(&decision.probs),
+            alpha,
+            gamma: self.gamma,
+        })
+    }
+}
+
+/// The record a round with no reachable clients leaves behind (identical
+/// to the seed protocol's no-op round).
+pub fn noop_record(round: usize, meter: &BitMeter) -> RoundRecord {
+    RoundRecord {
+        round,
+        train_loss: f64::NAN,
+        val_accuracy: f64::NAN,
+        uplink_bits: meter.total_bits(),
+        transmitted: 0,
+        expected_budget: 0.0,
+        alpha: f64::NAN,
+        gamma: f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, DataSpec, Strategy};
+
+    struct FixedRunner {
+        dim: usize,
+        n: usize,
+    }
+
+    impl LocalRunner for FixedRunner {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn num_clients(&self) -> usize {
+            self.n
+        }
+        fn init_params(&mut self, _seed: u64) -> Vec<f32> {
+            vec![0.0; self.dim]
+        }
+        fn run_shards(
+            &mut self,
+            _round: usize,
+            _global: &[f32],
+            shard_cohorts: &[Vec<usize>],
+        ) -> Vec<Vec<LocalOutcome>> {
+            shard_cohorts
+                .iter()
+                .map(|cs| {
+                    cs.iter()
+                        .map(|&c| LocalOutcome {
+                            delta: vec![(c + 1) as f32; self.dim],
+                            train_loss: 1.0 + c as f64,
+                            examples: 10 + c,
+                        })
+                        .collect()
+                })
+                .collect()
+        }
+        fn evaluate(&mut self, _global: &[f32]) -> EvalOutcome {
+            EvalOutcome { loss: 0.25, accuracy: 0.75 }
+        }
+    }
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "round_test".into(),
+            seed: 5,
+            rounds: 4,
+            cohort: 6,
+            budget: 3,
+            strategy: Strategy::Ocs,
+            algorithm: Algorithm::Dsgd { eta: 0.1 },
+            data: DataSpec::FemnistLike { pool: 0, variant: 0 },
+            model: "native:test".into(),
+            batch_size: 1,
+            eval_every: 1,
+            eval_examples: 1,
+            workers: 1,
+            secure_updates: true,
+            availability: 1.0,
+        }
+    }
+
+    fn run_one_round(shards: usize) -> (RoundRecord, Vec<f32>) {
+        let c = cfg();
+        let mut runner = FixedRunner { dim: 4, n: 12 };
+        let registry = Registry::new(12, shards);
+        let avail = Availability::AlwaysOn;
+        let sampler = Sampler::from_strategy(&c.strategy);
+        let mut meter = BitMeter::new();
+        let rng = Rng::new(c.seed).fork(0xF1);
+        let mut round_rng = rng.fork(0);
+        let mut x = runner.init_params(c.seed);
+        let opts = TrainOptions::default();
+
+        let mut m = RoundMachine::new(0);
+        assert_eq!(m.phase(), Phase::Announce);
+        m.announce(&c, &avail, &registry, None, &mut round_rng);
+        assert_eq!(m.phase(), Phase::LocalCompute);
+        m.local_compute(&mut runner, &x);
+        assert_eq!(m.phase(), Phase::NormReport);
+        m.norm_report();
+        assert_eq!(m.phase(), Phase::Negotiate);
+        m.negotiate(&sampler, &c, &mut meter, &mut round_rng);
+        assert_eq!(m.phase(), Phase::SecureAggregate);
+        m.secure_aggregate(&c, &opts, &registry, 4, &mut meter, &mut round_rng);
+        assert_eq!(m.phase(), Phase::Commit);
+        let rec = m
+            .commit(&c, &opts, 0.1, &mut x, &mut runner, &meter)
+            .unwrap();
+        assert_eq!(m.phase(), Phase::Done);
+        (rec, x)
+    }
+
+    #[test]
+    fn phases_run_in_declared_order() {
+        let (rec, x) = run_one_round(1);
+        assert_eq!(rec.round, 0);
+        assert!(rec.train_loss.is_finite());
+        assert_eq!(rec.val_accuracy, 0.75);
+        assert!(rec.expected_budget <= 3.0 + 1e-9);
+        assert!(rec.transmitted <= 6);
+        assert_eq!(x.len(), 4);
+    }
+
+    #[test]
+    fn sharding_preserves_the_masked_round_exactly() {
+        let (r1, x1) = run_one_round(1);
+        let (r4, x4) = run_one_round(4);
+        assert_eq!(r1.train_loss, r4.train_loss);
+        assert_eq!(r1.uplink_bits, r4.uplink_bits);
+        assert_eq!(r1.transmitted, r4.transmitted);
+        assert_eq!(x1, x4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn out_of_order_phase_panics() {
+        let c = cfg();
+        let sampler = Sampler::Ocs;
+        let mut meter = BitMeter::new();
+        let mut rng = Rng::new(1);
+        let mut m = RoundMachine::new(0);
+        // negotiate before announce/local_compute must refuse
+        m.negotiate(&sampler, &c, &mut meter, &mut rng);
+    }
+
+    #[test]
+    fn full_shard_dropout_yields_noop_round() {
+        let c = cfg();
+        let registry = Registry::new(12, 3);
+        let avail = Availability::AlwaysOn;
+        let rng = Rng::new(c.seed).fork(0xF1);
+        let mut round_rng = rng.fork(0);
+        let mut m = RoundMachine::new(0);
+        let policy = DeadlinePolicy { miss_prob: 1.0 };
+        let dropped = m.announce(
+            &c,
+            &avail,
+            &registry,
+            Some(&policy),
+            &mut round_rng,
+        );
+        assert_eq!(dropped, 3);
+        assert!(m.cohort().is_empty());
+        assert_eq!(m.phase(), Phase::Done);
+        let rec = noop_record(0, &BitMeter::new());
+        assert!(rec.train_loss.is_nan());
+        assert_eq!(rec.transmitted, 0);
+    }
+}

@@ -1,0 +1,379 @@
+//! Shard execution: how a shard's slice of the cohort actually runs its
+//! local work.
+//!
+//! Two runners implement [`LocalRunner`]:
+//!
+//! * [`EngineRunner`] — adapts any legacy [`ClientEngine`] (the XLA
+//!   engine, test toys). Shards run sequentially through the engine's
+//!   own `run_local`; the XLA engine parallelizes internally with its
+//!   PJRT worker pool, so nothing is lost.
+//! * [`ParallelRunner`] — owns a persistent worker-thread pool (the
+//!   channel pattern of [`crate::runtime::engine`]: shared job queue
+//!   behind a mutex, plain-data replies) over a [`ClientCompute`]
+//!   backend. Results are placed by (shard, position), so trajectories
+//!   are independent of thread scheduling.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
+
+/// What the round state machine needs from an execution backend.
+pub trait LocalRunner {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+    /// Total pool size.
+    fn num_clients(&self) -> usize;
+    /// Initial global parameters.
+    fn init_params(&mut self, seed: u64) -> Vec<f32>;
+    /// Run local work for every shard's cohort slice; the result must be
+    /// aligned with `shard_cohorts` (outer: shard, inner: member order).
+    fn run_shards(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        shard_cohorts: &[Vec<usize>],
+    ) -> Vec<Vec<LocalOutcome>>;
+    /// Evaluate global parameters on the validation split.
+    fn evaluate(&mut self, global: &[f32]) -> EvalOutcome;
+}
+
+/// A thread-shareable per-client compute backend (the sim engines). One
+/// client's local pass must depend only on `(round, client, global)` so
+/// any worker can run any job.
+pub trait ClientCompute: Send + Sync + 'static {
+    fn dim(&self) -> usize;
+    fn num_clients(&self) -> usize;
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+    fn local_one(
+        &self,
+        round: usize,
+        global: &[f32],
+        client: usize,
+    ) -> LocalOutcome;
+    fn evaluate(&self, global: &[f32]) -> EvalOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// legacy-engine adapter
+// ---------------------------------------------------------------------------
+
+/// [`LocalRunner`] over a `&mut dyn ClientEngine` (single-threaded per
+/// shard; the engine may parallelize internally).
+pub struct EngineRunner<'a> {
+    engine: &'a mut dyn ClientEngine,
+}
+
+impl<'a> EngineRunner<'a> {
+    pub fn new(engine: &'a mut dyn ClientEngine) -> EngineRunner<'a> {
+        EngineRunner { engine }
+    }
+}
+
+impl LocalRunner for EngineRunner<'_> {
+    fn dim(&self) -> usize {
+        self.engine.dim()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.engine.num_clients()
+    }
+
+    fn init_params(&mut self, seed: u64) -> Vec<f32> {
+        self.engine.init_params(seed)
+    }
+
+    fn run_shards(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        shard_cohorts: &[Vec<usize>],
+    ) -> Vec<Vec<LocalOutcome>> {
+        shard_cohorts
+            .iter()
+            .map(|clients| {
+                if clients.is_empty() {
+                    return Vec::new();
+                }
+                let outs = self.engine.run_local(round, global, clients);
+                assert_eq!(
+                    outs.len(),
+                    clients.len(),
+                    "engine cohort mismatch"
+                );
+                outs
+            })
+            .collect()
+    }
+
+    fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
+        self.engine.evaluate(global)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker pool (channel pattern from runtime::engine)
+// ---------------------------------------------------------------------------
+
+struct ShardJob {
+    shard: usize,
+    pos: usize,
+    client: usize,
+    round: usize,
+    global: Arc<Vec<f32>>,
+}
+
+struct ShardReply {
+    shard: usize,
+    pos: usize,
+    outcome: LocalOutcome,
+}
+
+struct ShardPool {
+    jobs: mpsc::Sender<ShardJob>,
+    replies: mpsc::Receiver<ShardReply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn recv_job(
+    rx: &Arc<Mutex<mpsc::Receiver<ShardJob>>>,
+) -> Result<ShardJob, mpsc::RecvError> {
+    rx.lock().expect("shard job queue poisoned").recv()
+}
+
+impl ShardPool {
+    fn spawn<C: ClientCompute>(workers: usize, compute: Arc<C>) -> ShardPool {
+        let (job_tx, job_rx) = mpsc::channel::<ShardJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (rep_tx, rep_rx) = mpsc::channel::<ShardReply>();
+        let handles = (0..workers)
+            .map(|_| {
+                let job_rx = Arc::clone(&job_rx);
+                let rep_tx = rep_tx.clone();
+                let compute = Arc::clone(&compute);
+                std::thread::spawn(move || {
+                    while let Ok(job) = recv_job(&job_rx) {
+                        let outcome = compute.local_one(
+                            job.round,
+                            &job.global,
+                            job.client,
+                        );
+                        let reply = ShardReply {
+                            shard: job.shard,
+                            pos: job.pos,
+                            outcome,
+                        };
+                        if rep_tx.send(reply).is_err() {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        ShardPool { jobs: job_tx, replies: rep_rx, handles }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // closing the channel stops the workers
+        let (dead_tx, _) = mpsc::channel();
+        self.jobs = dead_tx;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel runner
+// ---------------------------------------------------------------------------
+
+/// [`LocalRunner`] that fans shard cohorts out over a persistent worker
+/// pool. `workers <= 1` runs inline on the calling thread (identical
+/// results — placement is by index, never by completion order).
+pub struct ParallelRunner<C: ClientCompute> {
+    compute: Arc<C>,
+    pool: Option<ShardPool>,
+}
+
+impl<C: ClientCompute> ParallelRunner<C> {
+    pub fn new(compute: C, workers: usize) -> ParallelRunner<C> {
+        let compute = Arc::new(compute);
+        let pool = if workers > 1 {
+            Some(ShardPool::spawn(workers, Arc::clone(&compute)))
+        } else {
+            None
+        };
+        ParallelRunner { compute, pool }
+    }
+
+    /// Shared access to the underlying compute backend.
+    pub fn compute(&self) -> &C {
+        &self.compute
+    }
+}
+
+impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
+    fn dim(&self) -> usize {
+        self.compute.dim()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.compute.num_clients()
+    }
+
+    fn init_params(&mut self, seed: u64) -> Vec<f32> {
+        self.compute.init_params(seed)
+    }
+
+    fn run_shards(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        shard_cohorts: &[Vec<usize>],
+    ) -> Vec<Vec<LocalOutcome>> {
+        match &self.pool {
+            None => shard_cohorts
+                .iter()
+                .map(|clients| {
+                    clients
+                        .iter()
+                        .map(|&c| self.compute.local_one(round, global, c))
+                        .collect()
+                })
+                .collect(),
+            Some(pool) => {
+                let global = Arc::new(global.to_vec());
+                let mut total = 0usize;
+                for (shard, clients) in shard_cohorts.iter().enumerate() {
+                    for (pos, &client) in clients.iter().enumerate() {
+                        pool.jobs
+                            .send(ShardJob {
+                                shard,
+                                pos,
+                                client,
+                                round,
+                                global: Arc::clone(&global),
+                            })
+                            .expect("shard pool dead");
+                        total += 1;
+                    }
+                }
+                let mut out: Vec<Vec<Option<LocalOutcome>>> = shard_cohorts
+                    .iter()
+                    .map(|c| vec![None; c.len()])
+                    .collect();
+                for _ in 0..total {
+                    let rep =
+                        pool.replies.recv().expect("shard pool dead");
+                    debug_assert!(out[rep.shard][rep.pos].is_none());
+                    out[rep.shard][rep.pos] = Some(rep.outcome);
+                }
+                out.into_iter()
+                    .map(|v| v.into_iter().map(Option::unwrap).collect())
+                    .collect()
+            }
+        }
+    }
+
+    fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
+        self.compute.evaluate(global)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Compute whose outcome encodes (round, client) so placement errors
+    /// are visible.
+    struct TagCompute {
+        n: usize,
+        dim: usize,
+    }
+
+    impl ClientCompute for TagCompute {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn num_clients(&self) -> usize {
+            self.n
+        }
+        fn init_params(&self, _seed: u64) -> Vec<f32> {
+            vec![0.0; self.dim]
+        }
+        fn local_one(
+            &self,
+            round: usize,
+            global: &[f32],
+            client: usize,
+        ) -> LocalOutcome {
+            LocalOutcome {
+                delta: vec![
+                    (round * 1000 + client) as f32 + global[0];
+                    self.dim
+                ],
+                train_loss: client as f64,
+                examples: client + 1,
+            }
+        }
+        fn evaluate(&self, _global: &[f32]) -> EvalOutcome {
+            EvalOutcome { loss: 0.0, accuracy: 1.0 }
+        }
+    }
+
+    fn shard_cohorts() -> Vec<Vec<usize>> {
+        vec![vec![0, 4, 8], vec![1, 5], vec![], vec![3, 7, 11, 15]]
+    }
+
+    #[test]
+    fn inline_and_pooled_runners_agree() {
+        let global = vec![0.5f32; 3];
+        let mut inline =
+            ParallelRunner::new(TagCompute { n: 16, dim: 3 }, 1);
+        let mut pooled =
+            ParallelRunner::new(TagCompute { n: 16, dim: 3 }, 4);
+        let a = inline.run_shards(2, &global, &shard_cohorts());
+        let b = pooled.run_shards(2, &global, &shard_cohorts());
+        assert_eq!(a.len(), b.len());
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.len(), sb.len());
+            for (oa, ob) in sa.iter().zip(sb) {
+                assert_eq!(oa.delta, ob.delta);
+                assert_eq!(oa.train_loss, ob.train_loss);
+                assert_eq!(oa.examples, ob.examples);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_results_land_at_their_positions() {
+        let mut pooled =
+            ParallelRunner::new(TagCompute { n: 16, dim: 2 }, 3);
+        let cohorts = shard_cohorts();
+        let out = pooled.run_shards(1, &[0.0, 0.0], &cohorts);
+        for (shard, clients) in cohorts.iter().enumerate() {
+            assert_eq!(out[shard].len(), clients.len());
+            for (pos, &client) in clients.iter().enumerate() {
+                assert_eq!(
+                    out[shard][pos].delta[0],
+                    (1000 + client) as f32,
+                    "shard {shard} pos {pos}"
+                );
+                assert_eq!(out[shard][pos].examples, client + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let mut pooled =
+            ParallelRunner::new(TagCompute { n: 16, dim: 1 }, 2);
+        for round in 0..50 {
+            let out = pooled.run_shards(round, &[0.0], &shard_cohorts());
+            assert_eq!(out.iter().map(Vec::len).sum::<usize>(), 9);
+        }
+    }
+}

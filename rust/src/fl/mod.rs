@@ -8,20 +8,19 @@
 //! (cohort selection, norm collection, sampling negotiation, secure
 //! aggregation, master update, bit accounting, metrics) is shared — and
 //! is precisely the paper's system contribution.
+//!
+//! The protocol itself lives in [`crate::coordinator`] as an explicit
+//! round state machine over a sharded client registry; [`train`] is the
+//! thin single-shard adapter that preserves the historical entry point
+//! (and its exact trajectories) for any [`ClientEngine`].
 
 pub mod availability;
 pub mod comm;
 
 use crate::compress::Compressor;
-use crate::config::{Algorithm, ExperimentConfig};
-use crate::metrics::{RoundRecord, RunResult};
-use crate::sampling::{probability, variance, Sampler};
-use crate::secure_agg::SecureAggregator;
-use crate::tensor;
-use crate::util::rng::Rng;
-
-use self::availability::{sample_cohort, Availability};
-use self::comm::BitMeter;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Coordinator, CoordinatorOptions, EngineRunner};
+use crate::metrics::RunResult;
 
 /// Result of one client's local work in a round.
 #[derive(Clone, Debug)]
@@ -72,198 +71,28 @@ pub struct TrainOptions {
 }
 
 /// Run a full federated training experiment.
+///
+/// Thin adapter over the [`crate::coordinator`] subsystem: a single-shard
+/// [`Coordinator`] over an [`EngineRunner`], which reproduces the seed
+/// sequential protocol bit-for-bit (same RNG streams, same float-op
+/// order) for any [`ClientEngine`].
 pub fn train(
     cfg: &ExperimentConfig,
     engine: &mut dyn ClientEngine,
     opts: &TrainOptions,
 ) -> Result<RunResult, String> {
-    cfg.validate()?;
-    let sampler = Sampler::from_strategy(&cfg.strategy);
-    let pool = engine.num_clients();
-    if pool == 0 {
-        return Err("empty client pool".into());
-    }
-    let dim = engine.dim();
-    let avail = Availability::from_probability(cfg.availability);
-    let eta_g = match cfg.algorithm {
-        Algorithm::FedAvg { eta_g, .. } => eta_g,
-        // DSGD folds its step size into the master update (Eq. 2)
-        Algorithm::Dsgd { eta } => eta,
-    };
-
-    let rng = Rng::new(cfg.seed).fork(0xF1);
-    let mut x = engine.init_params(cfg.seed);
-    let mut meter = BitMeter::new();
-    let mut result = RunResult::new(&cfg.name, sampler.name());
-
-    for round in 0..cfg.rounds {
-        let mut round_rng = rng.fork(round as u64);
-
-        // (1) cohort selection from the (available) pool
-        let cohort =
-            sample_cohort(&avail, pool, cfg.cohort, &mut round_rng);
-        if cohort.is_empty() {
-            // no reachable clients this round: record a no-op round
-            result.push(RoundRecord {
-                round,
-                train_loss: f64::NAN,
-                val_accuracy: f64::NAN,
-                uplink_bits: meter.total_bits(),
-                transmitted: 0,
-                expected_budget: 0.0,
-                alpha: f64::NAN,
-                gamma: f64::NAN,
-            });
-            continue;
-        }
-
-        // (2) every cohort client computes its local update
-        let outcomes = engine.run_local(round, &x, &cohort);
-        assert_eq!(outcomes.len(), cohort.len(), "engine cohort mismatch");
-
-        // (3) cohort weights w_i ∝ n_i and weighted norms ũ_i = w_i‖U_i‖
-        let total_examples: usize =
-            outcomes.iter().map(|o| o.examples).sum();
-        let weights: Vec<f64> = outcomes
-            .iter()
-            .map(|o| o.examples as f64 / total_examples.max(1) as f64)
-            .collect();
-        let norms: Vec<f64> = outcomes
-            .iter()
-            .zip(&weights)
-            .map(|(o, &w)| w * tensor::norm(&o.delta))
-            .collect();
-
-        // (4) sampling negotiation
-        let m = cfg.budget.min(cohort.len());
-        let decision = sampler.decide(&norms, m);
-        meter.add_negotiation(
-            cohort.len(),
-            decision.extra_uplink_floats_per_client,
-        );
-
-        // diagnostics: α^k / γ^k for this round's norm profile. For the
-        // OCS/AOCS arms the decision probabilities already *are* (≈) the
-        // optimal ones, so reuse them instead of solving Eq. (7) a second
-        // time (§Perf L3-2); full/uniform arms still pay one solve.
-        let alpha = if cohort.len() > m {
-            match &sampler {
-                Sampler::Ocs | Sampler::Aocs { .. } => {
-                    let vu = variance::uniform_variance(&norms, m);
-                    if vu <= 0.0 {
-                        0.0
-                    } else {
-                        (variance::sampling_variance(&norms, &decision.probs)
-                            / vu)
-                            .clamp(0.0, 1.0)
-                    }
-                }
-                _ => variance::improvement_factor(&norms, m),
-            }
-        } else {
-            0.0
-        };
-        let gamma = variance::gamma(alpha, cohort.len(), m);
-
-        // (5) independent draws decide who transmits
-        let selected =
-            probability::draw_independent(&decision.probs, &mut round_rng);
-
-        // (6) participants upload (w_i/p_i)·U_i — securely aggregated
-        let scaled: Vec<(usize, Vec<f32>)> = outcomes
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| selected[*i])
-            .map(|(i, o)| {
-                let factor = (weights[i] / decision.probs[i]) as f32;
-                let mut v: Vec<f32> = match &opts.compressor {
-                    Some(c) => c.apply(&o.delta, &mut round_rng),
-                    None => o.delta.clone(),
-                };
-                tensor::scale(&mut v, factor);
-                (i, v)
-            })
-            .collect();
-        let transmitted = scaled.len();
-        for (_, v) in &scaled {
-            match &opts.compressor {
-                Some(c) => meter.add_compressed_update(v.len(), c),
-                None => meter.add_update(v.len()),
-            }
-        }
-
-        let aggregate: Vec<f32> = if scaled.is_empty() {
-            vec![0.0; dim]
-        } else if cfg.secure_updates {
-            let agg = SecureAggregator::new(cfg.seed ^ round as u64);
-            let roster: Vec<u64> =
-                scaled.iter().map(|(i, _)| cohort[*i] as u64).collect();
-            let masked: Vec<Vec<u64>> = scaled
-                .iter()
-                .map(|(i, v)| agg.mask(cohort[*i] as u64, &roster, v))
-                .collect();
-            SecureAggregator::decode_sum(&SecureAggregator::sum(&masked))
-        } else {
-            let mut acc = vec![0.0f32; dim];
-            for (_, v) in &scaled {
-                tensor::axpy(&mut acc, 1.0, v);
-            }
-            acc
-        };
-
-        // (7) master update x^{k+1} = x^k − η_g Δx^k
-        tensor::axpy(&mut x, -(eta_g as f32), &aggregate);
-        if !tensor::all_finite(&x) {
-            return Err(format!(
-                "{}: divergence at round {round} (non-finite parameters); \
-                 reduce the step size",
-                cfg.name
-            ));
-        }
-
-        // (8) metrics
-        let train_loss: f64 = outcomes
-            .iter()
-            .zip(&weights)
-            .map(|(o, &w)| w * o.train_loss)
-            .sum();
-        let val = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            engine.evaluate(&x)
-        } else {
-            EvalOutcome { loss: f64::NAN, accuracy: f64::NAN }
-        };
-        if opts.verbose_every > 0 && round % opts.verbose_every == 0 {
-            println!(
-                "[{}] round {round:>4}  loss {train_loss:.4}  acc {}  \
-                 bits {:.3e}  sent {transmitted}/{} α {alpha:.3}",
-                cfg.name,
-                if val.accuracy.is_nan() {
-                    "  -  ".to_string()
-                } else {
-                    format!("{:.3}", val.accuracy)
-                },
-                meter.total_bits() as f64,
-                cohort.len(),
-            );
-        }
-        result.push(RoundRecord {
-            round,
-            train_loss,
-            val_accuracy: val.accuracy,
-            uplink_bits: meter.total_bits(),
-            transmitted,
-            expected_budget: probability::expected_size(&decision.probs),
-            alpha,
-            gamma,
-        });
-    }
-    Ok(result)
+    let mut runner = EngineRunner::new(engine);
+    let mut coordinator =
+        Coordinator::new(CoordinatorOptions::single_shard());
+    coordinator.run(cfg, &mut runner, opts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DataSpec, Strategy};
+    use crate::config::{Algorithm, DataSpec, Strategy};
+    use crate::tensor;
+    use crate::util::rng::Rng;
 
     /// Deterministic toy engine: "clients" pull the parameter toward
     /// client-specific targets; loss is the distance.

@@ -15,8 +15,14 @@
 //!
 //! * [`sampling`] — OCS (Eq. 7), AOCS (Alg. 2), uniform/full baselines,
 //!   variance & improvement-factor machinery (Defs. 11–12).
+//! * [`coordinator`] — the sharded round coordinator: an explicit round
+//!   state machine (Announce → LocalCompute → NormReport → Negotiate →
+//!   SecureAggregate → Commit) over a sharded client registry with
+//!   worker-pool shard execution, per-shard partial tree-aggregation and
+//!   deadline/straggler handling.
 //! * [`fl`] — FedAvg (Alg. 3) / DSGD (Eq. 2) master-client protocol with
-//!   secure aggregation and per-round communication accounting.
+//!   secure aggregation and per-round communication accounting; `train`
+//!   is a single-shard adapter over [`coordinator`].
 //! * [`secure_agg`] — pairwise-mask additive secure aggregation.
 //! * [`data`] — synthetic federated datasets (FEMNIST-like, Shakespeare-
 //!   like, CIFAR-like) incl. the paper's (s,a,b) unbalancing procedure.
@@ -38,6 +44,7 @@
 pub mod bench;
 pub mod compress;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod fl;

@@ -1,19 +1,25 @@
 //! `fedsamp` — launcher CLI for the Optimal Client Sampling reproduction.
 //!
 //! Subcommands:
-//!   train    run one experiment (preset or JSON config, with overrides)
-//!   figures  regenerate a paper figure's data (2–7, 13)
-//!   sweep    budget/step-size sweeps on the theory testbed
-//!   inspect  list AOT artifacts and dataset statistics
+//!   train       run one experiment (preset or JSON config, with overrides)
+//!   coordinate  run the sharded round coordinator (sim engine)
+//!   figures     regenerate a paper figure's data (2–7, 13)
+//!   sweep       budget/step-size sweeps on the theory testbed
+//!   inspect     list AOT artifacts and dataset statistics
 
 use fedsamp::bench::{f, Table};
 use fedsamp::config::{presets, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{
+    Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
+};
 use fedsamp::exp::figures::{run_figure, Scale};
 use fedsamp::exp::{default_artifacts_dir, run_experiment};
 use fedsamp::fl::TrainOptions;
+use fedsamp::metrics::RunResult;
 use fedsamp::model::quadratic::QuadraticProblem;
 use fedsamp::runtime::manifest::load_manifests;
 use fedsamp::sampling::Sampler;
+use fedsamp::sim::build_native_engine;
 use fedsamp::sim::theory::{max_stable_eta, run_dsgd_quadratic};
 use fedsamp::util::args::Cli;
 
@@ -21,6 +27,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("coordinate") => cmd_coordinate(&args[1..]),
         Some("figures") => cmd_figures(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
@@ -42,11 +49,40 @@ fn print_usage() {
         "fedsamp — Optimal Client Sampling for Federated Learning\n\n\
          USAGE: fedsamp <subcommand> [options]\n\n\
          SUBCOMMANDS:\n\
-           train    run one experiment\n\
-           figures  regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
-           sweep    theory sweeps (budget m, step size)\n\
-           inspect  show artifacts + dataset statistics\n\n\
+           train       run one experiment\n\
+           coordinate  sharded round coordinator (--shards/--workers)\n\
+           figures     regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
+           sweep       theory sweeps (budget m, step size)\n\
+           inspect     show artifacts + dataset statistics\n\n\
          Run `fedsamp <subcommand> --help` for options."
+    );
+}
+
+fn preset_by_name(preset: &str) -> Option<ExperimentConfig> {
+    match preset {
+        "femnist1" => Some(presets::femnist(1, 3)),
+        "femnist2" => Some(presets::femnist(2, 3)),
+        "femnist3" => Some(presets::femnist(3, 3)),
+        "shakespeare32" => Some(presets::shakespeare(32, 2)),
+        "shakespeare128" => Some(presets::shakespeare(128, 4)),
+        "cifar" => Some(presets::cifar(3)),
+        other => {
+            eprintln!("unknown preset '{other}'");
+            None
+        }
+    }
+}
+
+fn print_run_summary(run: &RunResult) {
+    println!(
+        "\n{}: final_acc={:.4} best_acc={:.4} final_loss={:.4} \
+         total_uplink={:.2} Mbit mean_alpha={:.3}",
+        run.name,
+        run.final_accuracy(),
+        run.best_accuracy(),
+        run.final_train_loss(),
+        run.total_uplink_bits() as f64 / 1e6,
+        run.mean_alpha()
     );
 }
 
@@ -89,18 +125,9 @@ fn cmd_train(args: &[String]) -> i32 {
             }
         }
     } else {
-        let preset = p.get("preset").unwrap_or("femnist1");
-        match preset {
-            "femnist1" => presets::femnist(1, 3),
-            "femnist2" => presets::femnist(2, 3),
-            "femnist3" => presets::femnist(3, 3),
-            "shakespeare32" => presets::shakespeare(32, 2),
-            "shakespeare128" => presets::shakespeare(128, 4),
-            "cifar" => presets::cifar(3),
-            other => {
-                eprintln!("unknown preset '{other}'");
-                return 2;
-            }
+        match preset_by_name(p.get("preset").unwrap_or("femnist1")) {
+            Some(c) => c,
+            None => return 2,
         }
     };
 
@@ -148,16 +175,7 @@ fn cmd_train(args: &[String]) -> i32 {
         }
     }
     let avg = fedsamp::metrics::average_runs(&runs);
-    println!(
-        "\n{}: final_acc={:.4} best_acc={:.4} final_loss={:.4} \
-         total_uplink={:.2} Mbit mean_alpha={:.3}",
-        avg.name,
-        avg.final_accuracy(),
-        avg.best_accuracy(),
-        avg.final_train_loss(),
-        avg.total_uplink_bits() as f64 / 1e6,
-        avg.mean_alpha()
-    );
+    print_run_summary(&avg);
     if let Some(out) = p.get("out") {
         match avg.save(out) {
             Ok(path) => println!("saved {path}"),
@@ -165,6 +183,104 @@ fn cmd_train(args: &[String]) -> i32 {
         }
     }
     0
+}
+
+fn cmd_coordinate(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "fedsamp coordinate",
+        "run the sharded round coordinator over the sim engine",
+    )
+    .opt("preset", Some("femnist1"), "preset: femnist<V>, shakespeare<N>, cifar")
+    .opt("strategy", Some("aocs"), "full|uniform|ocs|aocs")
+    .opt("rounds", None, "override communication rounds")
+    .opt("m", None, "override expected budget m")
+    .opt("seed", Some("1"), "RNG seed")
+    .opt("shards", Some("4"), "client-registry shards")
+    .opt("workers", Some("0"), "shard-pool worker threads (0 = config value)")
+    .opt(
+        "deadline-miss",
+        Some("0"),
+        "per-round probability that a shard misses the deadline",
+    )
+    .opt("out", None, "directory for JSON/CSV results")
+    .flag("verbose", "print per-round progress");
+    let p = parse_or_exit(&cli, args);
+
+    let mut cfg = match preset_by_name(&p.str("preset")) {
+        Some(c) => c,
+        None => return 2,
+    };
+    let strategy = match Strategy::parse(&p.str("strategy"), 4) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    cfg = cfg.with_strategy(strategy);
+    cfg.name = format!("coord_{}", cfg.name);
+    cfg.model = "native:logistic".into(); // coordinator CLI drives the sim path
+    if let Some(r) = p.get("rounds") {
+        cfg.rounds = r.parse().expect("--rounds");
+    }
+    if let Some(m) = p.get("m") {
+        cfg.budget = m.parse().expect("--m");
+    }
+    cfg.seed = p.u64("seed");
+    // --workers overrides the config's worker-thread field; both feed the
+    // coordinator's shard pool
+    let workers = match p.usize("workers") {
+        0 => cfg.workers,
+        w => {
+            cfg.workers = w;
+            w
+        }
+    };
+    let shards = p.usize("shards");
+    let miss = p.f64("deadline-miss");
+    if !(0.0..=1.0).contains(&miss) {
+        eprintln!("--deadline-miss must be in [0, 1]");
+        return 2;
+    }
+
+    let engine = build_native_engine(&cfg);
+    let mut runner = ParallelRunner::new(engine, workers);
+    let deadline = if miss > 0.0 {
+        Some(DeadlinePolicy { miss_prob: miss })
+    } else {
+        None
+    };
+    let mut coordinator =
+        Coordinator::new(CoordinatorOptions { shards, deadline });
+    let opts = TrainOptions {
+        compressor: None,
+        verbose_every: if p.flag("verbose") { 1 } else { 10 },
+    };
+    println!(
+        "coordinator: {} shards, {} workers, deadline-miss {miss}",
+        shards, workers
+    );
+    match coordinator.run(&cfg, &mut runner, &opts) {
+        Ok(run) => {
+            print_run_summary(&run);
+            println!(
+                "coordinator stats: {} shard-rounds dropped, {} no-op rounds",
+                coordinator.stats.shards_dropped,
+                coordinator.stats.noop_rounds
+            );
+            if let Some(out) = p.get("out") {
+                match run.save(out) {
+                    Ok(path) => println!("saved {path}"),
+                    Err(e) => eprintln!("save failed: {e}"),
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("coordinate failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_figures(args: &[String]) -> i32 {

@@ -10,15 +10,13 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
-
 use crate::config::Algorithm;
 use crate::data::{ClientData, FederatedData};
 use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
 use crate::tensor;
 use crate::util::rng::Rng;
 
-use super::Runtime;
+use super::{RtResult, Runtime};
 
 /// Gather batch rows into contiguous buffers.
 fn gather_batch(
@@ -54,7 +52,7 @@ pub fn local_train(
     global: &[f32],
     algorithm: &Algorithm,
     seed: u64,
-) -> Result<LocalOutcome> {
+) -> RtResult<LocalOutcome> {
     let batch_size = rt.manifest.batch_size;
     let mut rng =
         Rng::new(seed ^ 0x10CA1).fork(round as u64).fork(client_id as u64);
@@ -111,7 +109,7 @@ pub fn evaluate(
     rt: &Runtime,
     val: &ClientData,
     global: &[f32],
-) -> Result<EvalOutcome> {
+) -> RtResult<EvalOutcome> {
     let eb = rt.manifest.eval_batch;
     let params = rt.params_to_literals(global)?;
     let per = rt.manifest.input_elems();
@@ -269,7 +267,7 @@ impl XlaEngine {
         algorithm: Algorithm,
         workers: usize,
         seed: u64,
-    ) -> Result<XlaEngine> {
+    ) -> RtResult<XlaEngine> {
         let runtime = Runtime::load(artifacts_dir, model)?;
         let data = Arc::new(data);
         let pool = if workers > 1 {

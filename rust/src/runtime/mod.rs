@@ -1,181 +1,29 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! coordinator hot path (adapted from /opt/xla-example/load_hlo).
+//! Artifact execution layer: manifest parsing plus the PJRT-backed
+//! [`Runtime`] (XLA path) and its worker-pool [`ClientEngine`]
+//! (engine::XlaEngine).
 //!
-//! One [`Runtime`] owns a PJRT CPU client plus the compiled train/eval
-//! executables for one model. Parameters cross the boundary as a flat
-//! `Vec<f32>` (layout = manifest order); inside a local epoch they stay
-//! as per-tensor [`xla::Literal`]s so repeated train steps avoid the
-//! flat↔literal conversions (the hot-path optimization measured in
-//! EXPERIMENTS.md §Perf).
+//! The PJRT bindings are an external crate that the offline build cannot
+//! fetch, so the execution half is feature-gated: `--features xla`
+//! compiles `pjrt` against the vendored `xla` crate; the default build
+//! substitutes the API-compatible `stub`, which parses manifests fine
+//! but refuses to execute. Everything downstream (engine, exp drivers,
+//! CLI) compiles identically either way.
 //!
-//! `PjRtClient` is `Rc`-based (not `Send`): a [`Runtime`] must live and
-//! die on one thread. [`crate::runtime::engine`] builds one per worker.
+//! [`ClientEngine`]: crate::fl::ClientEngine
 
 pub mod engine;
 pub mod manifest;
 
-use anyhow::{anyhow, Context, Result};
+/// Error type of the runtime layer (kept as plain strings so the stub and
+/// the PJRT build share one signature without an error-crate dependency).
+pub type RtResult<T> = Result<T, String>;
 
-use self::manifest::{load_init_params, load_manifest, ModelManifest};
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{Literal, ParamLiterals, Runtime};
 
-/// Loaded executables + manifest for one model.
-pub struct Runtime {
-    pub manifest: ModelManifest,
-    client: xla::PjRtClient,
-    train_exe: xla::PjRtLoadedExecutable,
-    eval_exe: xla::PjRtLoadedExecutable,
-}
-
-/// Owned parameter state in literal form (one entry per tensor).
-pub struct ParamLiterals(Vec<xla::Literal>);
-
-impl Runtime {
-    /// Load and compile one model's artifacts.
-    pub fn load(artifacts_dir: &str, model: &str) -> Result<Runtime> {
-        let manifest = load_manifest(artifacts_dir, model)
-            .map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |path: &std::path::Path| -> Result<_> {
-            let proto = xla::HloModuleProto::from_text_file(path)
-                .with_context(|| format!("parse {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compile {path:?}"))
-        };
-        let train_exe = compile(&manifest.train_hlo)?;
-        let eval_exe = compile(&manifest.eval_hlo)?;
-        Ok(Runtime { manifest, client, train_exe, eval_exe })
-    }
-
-    /// The model's deterministic initial parameters (from aot.py).
-    pub fn init_params(&self) -> Result<Vec<f32>> {
-        load_init_params(&self.manifest).map_err(|e| anyhow!(e))
-    }
-
-    /// Flat parameter vector → per-tensor literals.
-    pub fn params_to_literals(&self, flat: &[f32]) -> Result<ParamLiterals> {
-        if flat.len() != self.manifest.num_params {
-            return Err(anyhow!(
-                "param length {} != manifest {}",
-                flat.len(),
-                self.manifest.num_params
-            ));
-        }
-        let mut lits = Vec::with_capacity(self.manifest.params.len());
-        let mut off = 0usize;
-        for spec in &self.manifest.params {
-            let chunk = &flat[off..off + spec.size];
-            off += spec.size;
-            let dims: Vec<i64> =
-                spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(chunk).reshape(&dims)?;
-            lits.push(lit);
-        }
-        Ok(ParamLiterals(lits))
-    }
-
-    /// Per-tensor literals → flat parameter vector.
-    pub fn literals_to_params(&self, lits: &ParamLiterals) -> Result<Vec<f32>> {
-        let mut flat = Vec::with_capacity(self.manifest.num_params);
-        for lit in &lits.0 {
-            flat.extend(lit.to_vec::<f32>()?);
-        }
-        Ok(flat)
-    }
-
-    /// Build the dense/token input literal for a batch.
-    pub fn input_literal(
-        &self,
-        rows_f32: Option<&[f32]>,
-        rows_i32: Option<&[i32]>,
-        batch: usize,
-    ) -> Result<xla::Literal> {
-        let per = self.manifest.input_elems();
-        let mut dims: Vec<i64> = vec![batch as i64];
-        dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
-        match self.manifest.input_dtype.as_str() {
-            "f32" => {
-                let rows = rows_f32.ok_or_else(|| anyhow!("need f32 rows"))?;
-                debug_assert_eq!(rows.len(), batch * per);
-                Ok(xla::Literal::vec1(rows).reshape(&dims)?)
-            }
-            "i32" => {
-                let rows = rows_i32.ok_or_else(|| anyhow!("need i32 rows"))?;
-                debug_assert_eq!(rows.len(), batch * per);
-                Ok(xla::Literal::vec1(rows).reshape(&dims)?)
-            }
-            other => Err(anyhow!("unsupported input dtype {other}")),
-        }
-    }
-
-    /// One-hot label literal `(batch, classes)`; entries with
-    /// `label == u32::MAX` become all-zero rows (padding mask).
-    pub fn onehot_literal(&self, labels: &[u32], batch: usize) -> Result<xla::Literal> {
-        let c = self.manifest.num_classes;
-        debug_assert_eq!(labels.len(), batch);
-        let mut oh = vec![0.0f32; batch * c];
-        for (i, &l) in labels.iter().enumerate() {
-            if l != u32::MAX {
-                oh[i * c + l as usize] = 1.0;
-            }
-        }
-        Ok(xla::Literal::vec1(&oh).reshape(&[batch as i64, c as i64])?)
-    }
-
-    /// Execute one train step: `(params, xb, onehot, lr) → (params', loss)`.
-    /// The literal params are replaced in place.
-    pub fn train_step(
-        &self,
-        params: &mut ParamLiterals,
-        xb: &xla::Literal,
-        onehot: &xla::Literal,
-        lr: f32,
-    ) -> Result<f64> {
-        let n = self.manifest.params.len();
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(n + 3);
-        args.extend(params.0.iter());
-        args.push(xb);
-        args.push(onehot);
-        let lr_lit = xla::Literal::scalar(lr);
-        args.push(&lr_lit);
-        let bufs = self.train_exe.execute::<&xla::Literal>(&args)?;
-        let result = bufs[0][0].to_literal_sync()?;
-        let mut parts = result.to_tuple()?;
-        if parts.len() != n + 1 {
-            return Err(anyhow!(
-                "train output arity {} != {}",
-                parts.len(),
-                n + 1
-            ));
-        }
-        let loss = parts.pop().unwrap().get_first_element::<f32>()? as f64;
-        params.0 = parts;
-        Ok(loss)
-    }
-
-    /// Execute the eval step: `(params, xb, onehot) → (loss_sum, correct)`.
-    pub fn eval_step(
-        &self,
-        params: &ParamLiterals,
-        xb: &xla::Literal,
-        onehot: &xla::Literal,
-    ) -> Result<(f64, f64)> {
-        let mut args: Vec<&xla::Literal> =
-            Vec::with_capacity(self.manifest.params.len() + 2);
-        args.extend(params.0.iter());
-        args.push(xb);
-        args.push(onehot);
-        let bufs = self.eval_exe.execute::<&xla::Literal>(&args)?;
-        let result = bufs[0][0].to_literal_sync()?;
-        let (loss, correct) = result.to_tuple2()?;
-        Ok((
-            loss.get_first_element::<f32>()? as f64,
-            correct.get_first_element::<f32>()? as f64,
-        ))
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Literal, ParamLiterals, Runtime};

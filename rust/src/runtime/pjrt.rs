@@ -1,0 +1,216 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! coordinator hot path (adapted from /opt/xla-example/load_hlo).
+//!
+//! One [`Runtime`] owns a PJRT CPU client plus the compiled train/eval
+//! executables for one model. Parameters cross the boundary as a flat
+//! `Vec<f32>` (layout = manifest order); inside a local epoch they stay
+//! as per-tensor [`xla::Literal`]s so repeated train steps avoid the
+//! flat↔literal conversions (the hot-path optimization measured in
+//! EXPERIMENTS.md §Perf).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): a [`Runtime`] must live and
+//! die on one thread. [`crate::runtime::engine`] builds one per worker.
+//!
+//! Compiled only with `--features xla` (needs the vendored `xla` bindings
+//! crate); the default build substitutes [`super::stub`].
+
+use super::manifest::{load_init_params, load_manifest, ModelManifest};
+use super::RtResult;
+
+pub use xla::Literal;
+
+/// Loaded executables + manifest for one model.
+pub struct Runtime {
+    pub manifest: ModelManifest,
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+/// Owned parameter state in literal form (one entry per tensor).
+pub struct ParamLiterals(Vec<xla::Literal>);
+
+impl Runtime {
+    /// Load and compile one model's artifacts.
+    pub fn load(artifacts_dir: &str, model: &str) -> RtResult<Runtime> {
+        let manifest = load_manifest(artifacts_dir, model)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu: {e}"))?;
+        let compile =
+            |path: &std::path::Path| -> RtResult<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .map_err(|e| format!("parse {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| format!("compile {path:?}: {e}"))
+            };
+        let train_exe = compile(&manifest.train_hlo)?;
+        let eval_exe = compile(&manifest.eval_hlo)?;
+        Ok(Runtime { manifest, client, train_exe, eval_exe })
+    }
+
+    /// The model's deterministic initial parameters (from aot.py).
+    pub fn init_params(&self) -> RtResult<Vec<f32>> {
+        load_init_params(&self.manifest)
+    }
+
+    /// Flat parameter vector → per-tensor literals.
+    pub fn params_to_literals(&self, flat: &[f32]) -> RtResult<ParamLiterals> {
+        if flat.len() != self.manifest.num_params {
+            return Err(format!(
+                "param length {} != manifest {}",
+                flat.len(),
+                self.manifest.num_params
+            ));
+        }
+        let mut lits = Vec::with_capacity(self.manifest.params.len());
+        let mut off = 0usize;
+        for spec in &self.manifest.params {
+            let chunk = &flat[off..off + spec.size];
+            off += spec.size;
+            let dims: Vec<i64> =
+                spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(chunk)
+                .reshape(&dims)
+                .map_err(|e| format!("reshape {}: {e}", spec.name))?;
+            lits.push(lit);
+        }
+        Ok(ParamLiterals(lits))
+    }
+
+    /// Per-tensor literals → flat parameter vector.
+    pub fn literals_to_params(&self, lits: &ParamLiterals) -> RtResult<Vec<f32>> {
+        let mut flat = Vec::with_capacity(self.manifest.num_params);
+        for lit in &lits.0 {
+            flat.extend(
+                lit.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))?,
+            );
+        }
+        Ok(flat)
+    }
+
+    /// Build the dense/token input literal for a batch.
+    pub fn input_literal(
+        &self,
+        rows_f32: Option<&[f32]>,
+        rows_i32: Option<&[i32]>,
+        batch: usize,
+    ) -> RtResult<xla::Literal> {
+        let per = self.manifest.input_elems();
+        let mut dims: Vec<i64> = vec![batch as i64];
+        dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+        match self.manifest.input_dtype.as_str() {
+            "f32" => {
+                let rows = rows_f32.ok_or("need f32 rows")?;
+                debug_assert_eq!(rows.len(), batch * per);
+                xla::Literal::vec1(rows)
+                    .reshape(&dims)
+                    .map_err(|e| format!("reshape input: {e}"))
+            }
+            "i32" => {
+                let rows = rows_i32.ok_or("need i32 rows")?;
+                debug_assert_eq!(rows.len(), batch * per);
+                xla::Literal::vec1(rows)
+                    .reshape(&dims)
+                    .map_err(|e| format!("reshape input: {e}"))
+            }
+            other => Err(format!("unsupported input dtype {other}")),
+        }
+    }
+
+    /// One-hot label literal `(batch, classes)`; entries with
+    /// `label == u32::MAX` become all-zero rows (padding mask).
+    pub fn onehot_literal(
+        &self,
+        labels: &[u32],
+        batch: usize,
+    ) -> RtResult<xla::Literal> {
+        let c = self.manifest.num_classes;
+        debug_assert_eq!(labels.len(), batch);
+        let mut oh = vec![0.0f32; batch * c];
+        for (i, &l) in labels.iter().enumerate() {
+            if l != u32::MAX {
+                oh[i * c + l as usize] = 1.0;
+            }
+        }
+        xla::Literal::vec1(&oh)
+            .reshape(&[batch as i64, c as i64])
+            .map_err(|e| format!("reshape onehot: {e}"))
+    }
+
+    /// Execute one train step: `(params, xb, onehot, lr) → (params', loss)`.
+    /// The literal params are replaced in place.
+    pub fn train_step(
+        &self,
+        params: &mut ParamLiterals,
+        xb: &xla::Literal,
+        onehot: &xla::Literal,
+        lr: f32,
+    ) -> RtResult<f64> {
+        let n = self.manifest.params.len();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(n + 3);
+        args.extend(params.0.iter());
+        args.push(xb);
+        args.push(onehot);
+        let lr_lit = xla::Literal::scalar(lr);
+        args.push(&lr_lit);
+        let bufs = self
+            .train_exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| format!("train execute: {e}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("train readback: {e}"))?;
+        let mut parts =
+            result.to_tuple().map_err(|e| format!("train tuple: {e}"))?;
+        if parts.len() != n + 1 {
+            return Err(format!(
+                "train output arity {} != {}",
+                parts.len(),
+                n + 1
+            ));
+        }
+        let loss = parts
+            .pop()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| format!("train loss: {e}"))? as f64;
+        params.0 = parts;
+        Ok(loss)
+    }
+
+    /// Execute the eval step: `(params, xb, onehot) → (loss_sum, correct)`.
+    pub fn eval_step(
+        &self,
+        params: &ParamLiterals,
+        xb: &xla::Literal,
+        onehot: &xla::Literal,
+    ) -> RtResult<(f64, f64)> {
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(self.manifest.params.len() + 2);
+        args.extend(params.0.iter());
+        args.push(xb);
+        args.push(onehot);
+        let bufs = self
+            .eval_exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| format!("eval execute: {e}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("eval readback: {e}"))?;
+        let (loss, correct) =
+            result.to_tuple2().map_err(|e| format!("eval tuple: {e}"))?;
+        Ok((
+            loss.get_first_element::<f32>()
+                .map_err(|e| format!("eval loss: {e}"))? as f64,
+            correct
+                .get_first_element::<f32>()
+                .map_err(|e| format!("eval correct: {e}"))? as f64,
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,100 @@
+//! Std-only stand-in for the PJRT runtime (built when the `xla` feature
+//! is off — the default in environments without the vendored `xla`
+//! bindings crate).
+//!
+//! The stub keeps the exact API surface of `super::pjrt` so the engine,
+//! worker pool and experiment drivers compile unchanged; every execution
+//! entry point fails loudly at [`Runtime::load`] with a actionable
+//! message. Manifest parsing ([`super::manifest`]) stays fully functional
+//! either way — it is plain JSON over std.
+
+use super::manifest::ModelManifest;
+use super::RtResult;
+
+const UNAVAILABLE: &str =
+    "XLA runtime unavailable in this build: vendor the `xla` bindings \
+     crate, add it to Cargo.toml [dependencies], and rebuild with \
+     `--features xla` — or use a `native:*` model for the sim path";
+
+/// Placeholder for `xla::Literal` (never constructed).
+pub struct Literal;
+
+/// Placeholder for the per-tensor parameter literals (never constructed).
+pub struct ParamLiterals(());
+
+/// API-compatible stub of the PJRT runtime.
+pub struct Runtime {
+    pub manifest: ModelManifest,
+}
+
+impl Runtime {
+    pub fn load(_artifacts_dir: &str, _model: &str) -> RtResult<Runtime> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn init_params(&self) -> RtResult<Vec<f32>> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn params_to_literals(&self, _flat: &[f32]) -> RtResult<ParamLiterals> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn literals_to_params(
+        &self,
+        _lits: &ParamLiterals,
+    ) -> RtResult<Vec<f32>> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn input_literal(
+        &self,
+        _rows_f32: Option<&[f32]>,
+        _rows_i32: Option<&[i32]>,
+        _batch: usize,
+    ) -> RtResult<Literal> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn onehot_literal(
+        &self,
+        _labels: &[u32],
+        _batch: usize,
+    ) -> RtResult<Literal> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn train_step(
+        &self,
+        _params: &mut ParamLiterals,
+        _xb: &Literal,
+        _onehot: &Literal,
+        _lr: f32,
+    ) -> RtResult<f64> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn eval_step(
+        &self,
+        _params: &ParamLiterals,
+        _xb: &Literal,
+        _onehot: &Literal,
+    ) -> RtResult<(f64, f64)> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = Runtime::load("/nonexistent", "femnist_mlp").unwrap_err();
+        assert!(err.contains("--features xla"), "{err}");
+    }
+}

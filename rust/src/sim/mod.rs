@@ -5,6 +5,9 @@
 pub mod theory;
 
 use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::{
+    ClientCompute, Coordinator, CoordinatorOptions, ParallelRunner,
+};
 use crate::data::{self, ClientData, FederatedData};
 use crate::fl::{train, ClientEngine, EvalOutcome, LocalOutcome, TrainOptions};
 use crate::metrics::RunResult;
@@ -76,6 +79,39 @@ impl<M: NativeModel> NativeEngine<M> {
                     examples: data.len(),
                 }
             }
+        }
+    }
+}
+
+/// The sim engines are plain shared data + closed-form math, so one
+/// instance can serve every worker thread of a coordinator shard pool:
+/// `local_pass` depends only on `(round, client, global)`.
+impl<M: NativeModel + 'static> ClientCompute for NativeEngine<M> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.dataset.clients.len()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        self.model.init_params(seed)
+    }
+
+    fn local_one(
+        &self,
+        round: usize,
+        global: &[f32],
+        client: usize,
+    ) -> LocalOutcome {
+        self.local_pass(round, global, client)
+    }
+
+    fn evaluate(&self, global: &[f32]) -> EvalOutcome {
+        EvalOutcome {
+            loss: self.model.loss(global, &self.dataset.validation),
+            accuracy: self.model.accuracy(global, &self.dataset.validation),
         }
     }
 }
@@ -157,20 +193,12 @@ pub fn project_dataset(fd: &FederatedData, out_dim: usize, seed: u64) -> Federat
 /// Sim-path projected feature dimension.
 pub const SIM_FEATURE_DIM: usize = 64;
 
-/// Run a config end-to-end on the sim path (native logistic model).
+/// Build the sim-path engine for a config: dataset (featurized for the
+/// native logistic model) + [`NativeEngine`].
 ///
-/// Token datasets are represented by bag-of-context features (mean of
-/// one-hot context characters) — crude, but enough for relative
-/// strategy comparisons at sim speed.
-pub fn run_sim(cfg: &ExperimentConfig) -> Result<RunResult, String> {
-    run_sim_with(cfg, &TrainOptions::default())
-}
-
-/// [`run_sim`] with explicit [`TrainOptions`].
-pub fn run_sim_with(
-    cfg: &ExperimentConfig,
-    opts: &TrainOptions,
-) -> Result<RunResult, String> {
+/// Token datasets are represented by positional one-hot features; dense
+/// image datasets are reduced through a fixed random projection.
+pub fn build_native_engine(cfg: &ExperimentConfig) -> NativeEngine<Logistic> {
     let fd = data::build(&cfg.data, cfg.eval_examples, cfg.seed);
     let fd = if fd.is_tokens {
         tokens_to_positional_onehot(&fd)
@@ -178,14 +206,34 @@ pub fn run_sim_with(
         project_dataset(&fd, SIM_FEATURE_DIM, cfg.seed)
     };
     let model = Logistic::new(fd.input_dim, fd.num_classes, 1e-4);
-    let mut engine = NativeEngine::new(
-        model,
-        fd,
-        cfg.algorithm.clone(),
-        cfg.batch_size,
-        cfg.seed,
-    );
-    train(cfg, &mut engine, opts)
+    NativeEngine::new(model, fd, cfg.algorithm.clone(), cfg.batch_size, cfg.seed)
+}
+
+/// Run a config end-to-end on the sim path (native logistic model).
+pub fn run_sim(cfg: &ExperimentConfig) -> Result<RunResult, String> {
+    run_sim_with(cfg, &TrainOptions::default())
+}
+
+/// [`run_sim`] with explicit [`TrainOptions`].
+///
+/// `cfg.workers > 1` routes through the coordinator's shard worker pool
+/// (single shard — trajectories are identical to the sequential path by
+/// construction; results are placed by cohort position, never by
+/// completion order). `workers <= 1` keeps the inline engine path.
+pub fn run_sim_with(
+    cfg: &ExperimentConfig,
+    opts: &TrainOptions,
+) -> Result<RunResult, String> {
+    let engine = build_native_engine(cfg);
+    if cfg.workers > 1 {
+        let mut runner = ParallelRunner::new(engine, cfg.workers);
+        let mut coordinator =
+            Coordinator::new(CoordinatorOptions::single_shard());
+        coordinator.run(cfg, &mut runner, opts)
+    } else {
+        let mut engine = engine;
+        train(cfg, &mut engine, opts)
+    }
 }
 
 /// Positional one-hot featurization for token data (sim path only):

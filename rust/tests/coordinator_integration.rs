@@ -1,0 +1,214 @@
+//! Integration: the sharded coordinator reproduces the seed `fl::train`
+//! trajectory and degrades gracefully when shards miss round deadlines.
+//!
+//! Exactness relies on `secure_updates`: the fixed-point ring sums of the
+//! secure-aggregation path commute, so per-shard partial aggregation is
+//! bit-identical to the flat sum for *any* shard/worker count.
+
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{
+    Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
+};
+use fedsamp::fl::{train, TrainOptions};
+use fedsamp::metrics::RunResult;
+use fedsamp::sim::build_native_engine;
+
+fn cfg(strategy: Strategy) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("coord_{}", strategy.name()),
+        seed: 9,
+        rounds: 12,
+        cohort: 16,
+        budget: 4,
+        strategy,
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: 3,
+        eval_examples: 128,
+        workers: 1,
+        secure_updates: true,
+        availability: 1.0,
+    }
+}
+
+/// The seed protocol: `fl::train` over the plain engine path.
+fn reference(c: &ExperimentConfig) -> RunResult {
+    let mut engine = build_native_engine(c);
+    train(c, &mut engine, &TrainOptions::default()).unwrap()
+}
+
+fn coordinated(
+    c: &ExperimentConfig,
+    shards: usize,
+    workers: usize,
+    deadline: Option<DeadlinePolicy>,
+) -> (RunResult, fedsamp::coordinator::CoordStats) {
+    let engine = build_native_engine(c);
+    let mut runner = ParallelRunner::new(engine, workers);
+    let mut coordinator =
+        Coordinator::new(CoordinatorOptions { shards, deadline });
+    let run = coordinator.run(c, &mut runner, &TrainOptions::default()).unwrap();
+    (run, coordinator.stats)
+}
+
+fn assert_trajectories_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            ra.train_loss, rb.train_loss,
+            "{tag}: train_loss round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.uplink_bits, rb.uplink_bits,
+            "{tag}: uplink_bits round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.transmitted, rb.transmitted,
+            "{tag}: transmitted round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.expected_budget, rb.expected_budget,
+            "{tag}: expected_budget round {}",
+            ra.round
+        );
+        // NaN on non-eval rounds: compare bit patterns
+        assert_eq!(
+            ra.val_accuracy.to_bits(),
+            rb.val_accuracy.to_bits(),
+            "{tag}: val_accuracy round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.alpha.to_bits(),
+            rb.alpha.to_bits(),
+            "{tag}: alpha round {}",
+            ra.round
+        );
+    }
+}
+
+#[test]
+fn sharded_runs_reproduce_the_seed_trajectory() {
+    // the acceptance matrix: shards ∈ {1, 4} × workers ∈ {1, 3} must all
+    // be trajectory-identical to the seed fl::train path
+    let c = cfg(Strategy::Aocs { j_max: 4 });
+    let seed_run = reference(&c);
+    for shards in [1usize, 4] {
+        for workers in [1usize, 3] {
+            let (run, stats) = coordinated(&c, shards, workers, None);
+            assert_trajectories_identical(
+                &seed_run,
+                &run,
+                &format!("shards={shards} workers={workers}"),
+            );
+            assert_eq!(stats.shards_dropped, 0);
+            assert_eq!(stats.noop_rounds, 0);
+        }
+    }
+}
+
+#[test]
+fn exactness_holds_across_strategies() {
+    for strategy in [Strategy::Full, Strategy::Uniform, Strategy::Ocs] {
+        let c = cfg(strategy.clone());
+        let seed_run = reference(&c);
+        let (run, _) = coordinated(&c, 4, 3, None);
+        assert_trajectories_identical(&seed_run, &run, strategy.name());
+    }
+}
+
+#[test]
+fn plain_aggregation_single_shard_is_still_exact() {
+    // without secure aggregation the single-shard fold happens in cohort
+    // order — bit-identical to the seed loop even with pooled workers
+    let mut c = cfg(Strategy::Ocs);
+    c.secure_updates = false;
+    let seed_run = reference(&c);
+    let (run, _) = coordinated(&c, 1, 3, None);
+    assert_trajectories_identical(&seed_run, &run, "plain shards=1");
+}
+
+#[test]
+fn plain_aggregation_multi_shard_stays_close() {
+    // f32 reorder noise only: the multi-shard plain path may drift in the
+    // last ulp but must track the seed trajectory closely
+    let mut c = cfg(Strategy::Full); // full: no selection sensitivity
+    c.secure_updates = false;
+    let seed_run = reference(&c);
+    let (run, _) = coordinated(&c, 4, 2, None);
+    assert_eq!(seed_run.rounds.len(), run.rounds.len());
+    for (ra, rb) in seed_run.rounds.iter().zip(&run.rounds) {
+        let tol = 1e-3 * (1.0 + ra.train_loss.abs());
+        assert!(
+            (ra.train_loss - rb.train_loss).abs() < tol,
+            "round {}: {} vs {}",
+            ra.round,
+            ra.train_loss,
+            rb.train_loss
+        );
+        assert_eq!(ra.uplink_bits, rb.uplink_bits);
+        assert_eq!(ra.transmitted, rb.transmitted);
+    }
+}
+
+#[test]
+fn all_shards_missing_every_deadline_yields_noop_rounds() {
+    let c = cfg(Strategy::Aocs { j_max: 4 });
+    let (run, stats) =
+        coordinated(&c, 4, 1, Some(DeadlinePolicy { miss_prob: 1.0 }));
+    assert_eq!(run.rounds.len(), c.rounds);
+    assert_eq!(stats.noop_rounds, c.rounds);
+    assert_eq!(stats.shards_dropped, 4 * c.rounds);
+    for r in &run.rounds {
+        assert!(r.train_loss.is_nan());
+        assert_eq!(r.transmitted, 0);
+    }
+}
+
+#[test]
+fn partial_deadline_misses_still_train() {
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    c.rounds = 25;
+    let (run, stats) =
+        coordinated(&c, 4, 2, Some(DeadlinePolicy { miss_prob: 0.3 }));
+    assert_eq!(run.rounds.len(), c.rounds);
+    assert!(stats.shards_dropped > 0, "straggler model never fired");
+    let first = run
+        .rounds
+        .iter()
+        .find(|r| !r.train_loss.is_nan())
+        .expect("every round lost its whole cohort")
+        .train_loss;
+    let last = run
+        .rounds
+        .iter()
+        .rev()
+        .find(|r| !r.train_loss.is_nan())
+        .unwrap()
+        .train_loss;
+    assert!(
+        last < first,
+        "no training progress under stragglers: {first} -> {last}"
+    );
+}
+
+#[test]
+fn zero_miss_probability_deadline_is_a_noop() {
+    // the straggler stream is independent of the protocol RNG: a deadline
+    // policy that never fires must leave the trajectory bit-identical
+    let c = cfg(Strategy::Ocs);
+    let baseline = coordinated(&c, 4, 1, None).0;
+    let (gated, stats) =
+        coordinated(&c, 4, 1, Some(DeadlinePolicy { miss_prob: 0.0 }));
+    assert_eq!(stats.shards_dropped, 0);
+    assert_trajectories_identical(&baseline, &gated, "deadline miss=0");
+}

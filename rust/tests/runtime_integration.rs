@@ -2,7 +2,10 @@
 //!
 //! Requires `make artifacts` to have run (the Makefile `test` target
 //! guarantees it); tests skip gracefully when artifacts are absent so
-//! bare `cargo test` still works in a fresh checkout.
+//! bare `cargo test` still works in a fresh checkout. The whole file is
+//! additionally gated on the `xla` feature: it drives the PJRT runtime
+//! directly, which the default std-only build stubs out.
+#![cfg(feature = "xla")]
 
 use fedsamp::config::Algorithm;
 use fedsamp::data::{synth_image, synth_text};
