@@ -11,6 +11,7 @@ use fedsamp::coordinator::{
 };
 use fedsamp::fl::{EvalOutcome, LocalOutcome, TrainOptions};
 use fedsamp::model::quadratic::QuadraticProblem;
+use fedsamp::tensor::kernels::Scratch;
 use std::hint::black_box;
 use std::time::Duration;
 
@@ -38,13 +39,14 @@ impl ClientCompute for QuadraticCompute {
         _round: usize,
         global: &[f32],
         client: usize,
+        scratch: &mut Scratch,
     ) -> LocalOutcome {
         let c = &self.problem.clients[client];
-        let mut grad = vec![0.0f32; self.problem.dim];
-        c.grad(global, &mut grad);
+        Scratch::ensure(&mut scratch.grad, self.problem.dim);
+        c.grad(global, &mut scratch.grad);
         LocalOutcome {
             train_loss: c.loss(global),
-            delta: grad,
+            delta: scratch.grad.clone(),
             examples: 1,
         }
     }

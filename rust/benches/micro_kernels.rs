@@ -1,0 +1,16 @@
+//! Micro-bench: scalar-reference vs kernelized hot loops (`norm_sq`,
+//! `dot`, `axpy`, `weighted_accumulate`, the logistic `loss_grad` batch
+//! path) plus end-to-end sim rounds/sec.
+//!
+//! Thin wrapper over `exp::kernelbench` — the same suite the
+//! `fedsamp bench kernels` CLI mode runs (which additionally emits
+//! `BENCH_kernels.json`). Pass `--quick` for the 1-ish-iteration CI
+//! smoke mode: `cargo bench --bench micro_kernels -- --quick`.
+
+use fedsamp::exp::kernelbench::run_kernel_suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let doc = run_kernel_suite(quick);
+    println!("\n{}", doc.to_pretty());
+}

@@ -20,6 +20,7 @@
 
 use crate::secure_agg::SecureAggregator;
 use crate::tensor;
+use crate::tensor::kernels;
 
 /// One shard's partial aggregate.
 #[derive(Clone, Debug, PartialEq)]
@@ -50,9 +51,7 @@ impl ShardPartial {
             }
             (ShardPartial::Masked(mut a), ShardPartial::Masked(b)) => {
                 assert_eq!(a.len(), b.len(), "partial length mismatch");
-                for (x, y) in a.iter_mut().zip(&b) {
-                    *x = x.wrapping_add(*y);
-                }
+                kernels::wrapping_accumulate(&mut a, &[b.as_slice()]);
                 ShardPartial::Masked(a)
             }
             _ => panic!("cannot merge plain and masked shard partials"),
@@ -61,20 +60,39 @@ impl ShardPartial {
 }
 
 /// Fold one shard's member update vectors (in shard-member order) into a
-/// plain f32 partial.
+/// plain f32 partial. Runs the fused chunked accumulate — members are
+/// added per element in member order, bit-identical to the seed's
+/// sequential `axpy` fold (see `tensor::kernels::accumulate`).
 pub fn plain_partial<'a, I>(dim: usize, members: I) -> ShardPartial
 where
     I: IntoIterator<Item = &'a [f32]>,
 {
     let mut acc = vec![0.0f32; dim];
-    for v in members {
-        tensor::axpy(&mut acc, 1.0, v);
-    }
+    let vecs: Vec<&[f32]> = members.into_iter().collect();
+    kernels::accumulate(&mut acc, &vecs);
     ShardPartial::Plain(acc)
 }
 
-/// Fold one shard's masked ring vectors into a masked partial
-/// (wrapping sums — exact).
+/// Fold one shard's member update vectors with per-member weights:
+/// `acc += w_k · v_k` in member order — the fused form of the seed's
+/// scale-then-axpy upload (bit-identical: the f32 product rounds the
+/// same whether it is stored and then added or fused into the
+/// accumulate), via the chunked `tensor::kernels::weighted_accumulate`.
+pub fn weighted_partial(
+    dim: usize,
+    members: &[&[f32]],
+    weights: &[f32],
+) -> ShardPartial {
+    let mut acc = vec![0.0f32; dim];
+    kernels::weighted_accumulate(&mut acc, members, weights);
+    ShardPartial::Plain(acc)
+}
+
+/// Fold one shard's masked ring vectors into a masked partial (wrapping
+/// sums — exact). Members are consumed one at a time, so only the
+/// accumulator and the member being folded are alive (the vectors are
+/// produced lazily by the masking stage; materializing a whole shard
+/// would cost O(members·dim)).
 pub fn masked_partial<I>(dim: usize, members: I) -> ShardPartial
 where
     I: IntoIterator<Item = Vec<u64>>,
@@ -82,9 +100,7 @@ where
     let mut acc = vec![0u64; dim];
     for v in members {
         assert_eq!(v.len(), dim, "masked vector length mismatch");
-        for (a, b) in acc.iter_mut().zip(&v) {
-            *a = a.wrapping_add(*b);
-        }
+        kernels::wrapping_accumulate(&mut acc, &[v.as_slice()]);
     }
     ShardPartial::Masked(acc)
 }
@@ -177,6 +193,28 @@ mod tests {
         let p = plain_partial(dim, data.iter().map(|v| v.as_slice()));
         let got = finish(tree_reduce(vec![p]).unwrap());
         assert_eq!(got, seq);
+    }
+
+    #[test]
+    fn weighted_partial_is_bit_exact_to_scale_then_fold() {
+        // the seed upload semantics: scale each vector by w_i/p_i, then
+        // fold in member order — the fused weighted partial must agree
+        // bitwise
+        let dim = 33;
+        let data = vectors(5, dim, 13);
+        let weights: Vec<f32> = (0..5).map(|i| 0.3 + i as f32 * 0.17).collect();
+        let mut want = vec![0.0f32; dim];
+        for (v, &w) in data.iter().zip(&weights) {
+            let mut s = v.clone();
+            tensor::scale(&mut s, w);
+            tensor::axpy(&mut want, 1.0, &s);
+        }
+        let members: Vec<&[f32]> = data.iter().map(|v| v.as_slice()).collect();
+        let got = finish(
+            tree_reduce(vec![weighted_partial(dim, &members, &weights)])
+                .unwrap(),
+        );
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! dropped before norm collection). AOCS tolerates this by design — the
 //! negotiation only ever consumes aggregates of the surviving cohort.
 
+use std::borrow::Cow;
+
 use crate::config::ExperimentConfig;
 use crate::fl::availability::{sample_cohort, Availability};
 use crate::fl::comm::BitMeter;
@@ -25,6 +27,7 @@ use crate::metrics::RoundRecord;
 use crate::sampling::{probability, variance, Decision, Sampler};
 use crate::secure_agg::SecureAggregator;
 use crate::tensor;
+use crate::tensor::kernels;
 use crate::util::rng::Rng;
 
 use super::aggregate::{self, ShardPartial};
@@ -278,25 +281,28 @@ impl RoundMachine {
         let decision = self.decision.as_ref().expect("negotiate ran");
         let cohort = &self.cohort;
 
-        // scaled uploads in cohort order: the compressor consumes the
-        // round RNG sequentially exactly as the seed protocol did
-        let scaled: Vec<(usize, Vec<f32>)> = self
+        // uploads in cohort order: (cohort position, update vector,
+        // upload factor w_i/p_i). The compressor consumes the round RNG
+        // sequentially exactly as the seed protocol did; uncompressed
+        // updates are borrowed, not cloned — the plain path folds them
+        // through the fused weighted accumulate and never materializes a
+        // scaled copy.
+        let uploads: Vec<(usize, Cow<'_, [f32]>, f32)> = self
             .outcomes
             .iter()
             .enumerate()
             .filter(|(i, _)| self.selected[*i])
             .map(|(i, o)| {
                 let factor = (self.weights[i] / decision.probs[i]) as f32;
-                let mut v: Vec<f32> = match &opts.compressor {
-                    Some(c) => c.apply(&o.delta, round_rng),
-                    None => o.delta.clone(),
+                let v: Cow<'_, [f32]> = match &opts.compressor {
+                    Some(c) => Cow::Owned(c.apply(&o.delta, round_rng)),
+                    None => Cow::Borrowed(o.delta.as_slice()),
                 };
-                tensor::scale(&mut v, factor);
-                (i, v)
+                (i, v, factor)
             })
             .collect();
-        let transmitted = scaled.len();
-        for (_, v) in &scaled {
+        let transmitted = uploads.len();
+        for (_, v, _) in &uploads {
             match &opts.compressor {
                 Some(c) => meter.add_compressed_update(v.len(), c),
                 None => meter.add_update(v.len()),
@@ -308,20 +314,24 @@ impl RoundMachine {
         // skipped — their partials would merge as no-ops
         let mut by_shard: Vec<Vec<usize>> =
             vec![Vec::new(); registry.shards()];
-        for (k, (i, _)) in scaled.iter().enumerate() {
+        for (k, (i, _, _)) in uploads.iter().enumerate() {
             by_shard[registry.shard_of(cohort[*i])].push(k);
         }
 
-        let aggregate: Vec<f32> = if scaled.is_empty() {
+        let aggregate: Vec<f32> = if uploads.is_empty() {
             vec![0.0; dim]
         } else if cfg.secure_updates {
             let agg = SecureAggregator::new(cfg.seed ^ self.round as u64);
-            let roster: Vec<u64> = scaled
+            let roster: Vec<u64> = uploads
                 .iter()
-                .map(|(i, _)| cohort[*i] as u64)
+                .map(|(i, _, _)| cohort[*i] as u64)
                 .collect();
             // per-shard masked partials: ring sums commute, so the tree
-            // combine is bit-identical to the seed's flat sum
+            // combine is bit-identical to the seed's flat sum. The ring
+            // encoding masks the *scaled* values, so the secure path
+            // materializes each member's scaled upload — into one
+            // reused buffer, consumed member-by-member by the fold.
+            let mut scaled: Vec<f32> = Vec::new();
             let partials: Vec<ShardPartial> = by_shard
                 .iter()
                 .filter(|group| !group.is_empty())
@@ -329,8 +339,11 @@ impl RoundMachine {
                     aggregate::masked_partial(
                         dim,
                         group.iter().map(|&k| {
-                            let (i, v) = &scaled[k];
-                            agg.mask(cohort[*i] as u64, &roster, v)
+                            let (i, v, factor) = &uploads[k];
+                            scaled.clear();
+                            scaled.extend_from_slice(v);
+                            tensor::scale(&mut scaled, *factor);
+                            agg.mask(cohort[*i] as u64, &roster, &scaled)
                         }),
                     )
                 })
@@ -340,14 +353,18 @@ impl RoundMachine {
                     .expect("some shard has a participant"),
             )
         } else {
+            // fused weighted fold: w·v multiply-adds round identically
+            // to the seed's scale-then-sum, so this is bit-exact while
+            // skipping the per-participant scaled copy entirely
             let partials: Vec<ShardPartial> = by_shard
                 .iter()
                 .filter(|group| !group.is_empty())
                 .map(|group| {
-                    aggregate::plain_partial(
-                        dim,
-                        group.iter().map(|&k| scaled[k].1.as_slice()),
-                    )
+                    let members: Vec<&[f32]> =
+                        group.iter().map(|&k| uploads[k].1.as_ref()).collect();
+                    let weights: Vec<f32> =
+                        group.iter().map(|&k| uploads[k].2).collect();
+                    aggregate::weighted_partial(dim, &members, &weights)
                 })
                 .collect();
             aggregate::finish(
@@ -374,8 +391,12 @@ impl RoundMachine {
     ) -> Result<RoundRecord, String> {
         self.expect(Phase::Commit);
         let round = self.round;
-        tensor::axpy(x, -(eta_g as f32), &self.aggregate);
-        if !tensor::all_finite(x) {
+        // fused master update + finiteness probe: Σx'² is finite iff
+        // every updated parameter is (finite f32 squares cannot overflow
+        // the f64 accumulator; NaN/Inf poison it)
+        let updated_norm_sq =
+            kernels::axpy_norm_sq(x, -(eta_g as f32), &self.aggregate);
+        if !updated_norm_sq.is_finite() {
             return Err(format!(
                 "{}: divergence at round {round} (non-finite parameters); \
                  reduce the step size",

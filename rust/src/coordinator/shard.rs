@@ -18,6 +18,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
+use crate::tensor::kernels::Scratch;
 
 /// What the round state machine needs from an execution backend.
 pub trait LocalRunner {
@@ -41,7 +42,10 @@ pub trait LocalRunner {
 
 /// A thread-shareable per-client compute backend (the sim engines). One
 /// client's local pass must depend only on `(round, client, global)` so
-/// any worker can run any job.
+/// any worker can run any job. `scratch` is the caller-owned buffer
+/// arena — each pool worker owns exactly one, allocated at spawn and
+/// reused for every job it runs (results must not depend on prior
+/// scratch contents).
 pub trait ClientCompute: Send + Sync + 'static {
     fn dim(&self) -> usize;
     fn num_clients(&self) -> usize;
@@ -51,6 +55,7 @@ pub trait ClientCompute: Send + Sync + 'static {
         round: usize,
         global: &[f32],
         client: usize,
+        scratch: &mut Scratch,
     ) -> LocalOutcome;
     fn evaluate(&self, global: &[f32]) -> EvalOutcome;
 }
@@ -153,11 +158,14 @@ impl ShardPool {
                 let rep_tx = rep_tx.clone();
                 let compute = Arc::clone(&compute);
                 std::thread::spawn(move || {
+                    // one arena per worker, alive for the pool's lifetime
+                    let mut scratch = Scratch::new();
                     while let Ok(job) = recv_job(&job_rx) {
                         let outcome = compute.local_one(
                             job.round,
                             &job.global,
                             job.client,
+                            &mut scratch,
                         );
                         let reply = ShardReply {
                             shard: job.shard,
@@ -196,6 +204,8 @@ impl Drop for ShardPool {
 pub struct ParallelRunner<C: ClientCompute> {
     compute: Arc<C>,
     pool: Option<ShardPool>,
+    /// arena for the inline (workers <= 1) path
+    scratch: Scratch,
 }
 
 impl<C: ClientCompute> ParallelRunner<C> {
@@ -206,7 +216,7 @@ impl<C: ClientCompute> ParallelRunner<C> {
         } else {
             None
         };
-        ParallelRunner { compute, pool }
+        ParallelRunner { compute, pool, scratch: Scratch::new() }
     }
 
     /// Shared access to the underlying compute backend.
@@ -234,48 +244,49 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
         global: &[f32],
         shard_cohorts: &[Vec<usize>],
     ) -> Vec<Vec<LocalOutcome>> {
-        match &self.pool {
-            None => shard_cohorts
-                .iter()
-                .map(|clients| {
-                    clients
-                        .iter()
-                        .map(|&c| self.compute.local_one(round, global, c))
-                        .collect()
-                })
-                .collect(),
-            Some(pool) => {
-                let global = Arc::new(global.to_vec());
-                let mut total = 0usize;
-                for (shard, clients) in shard_cohorts.iter().enumerate() {
-                    for (pos, &client) in clients.iter().enumerate() {
-                        pool.jobs
-                            .send(ShardJob {
-                                shard,
-                                pos,
-                                client,
-                                round,
-                                global: Arc::clone(&global),
-                            })
-                            .expect("shard pool dead");
-                        total += 1;
-                    }
+        let Some(pool) = &self.pool else {
+            // inline path: one scratch arena, owned by the runner
+            let mut out = Vec::with_capacity(shard_cohorts.len());
+            for clients in shard_cohorts {
+                let mut shard_out = Vec::with_capacity(clients.len());
+                for &c in clients {
+                    shard_out.push(self.compute.local_one(
+                        round,
+                        global,
+                        c,
+                        &mut self.scratch,
+                    ));
                 }
-                let mut out: Vec<Vec<Option<LocalOutcome>>> = shard_cohorts
-                    .iter()
-                    .map(|c| vec![None; c.len()])
-                    .collect();
-                for _ in 0..total {
-                    let rep =
-                        pool.replies.recv().expect("shard pool dead");
-                    debug_assert!(out[rep.shard][rep.pos].is_none());
-                    out[rep.shard][rep.pos] = Some(rep.outcome);
-                }
-                out.into_iter()
-                    .map(|v| v.into_iter().map(Option::unwrap).collect())
-                    .collect()
+                out.push(shard_out);
+            }
+            return out;
+        };
+        let global = Arc::new(global.to_vec());
+        let mut total = 0usize;
+        for (shard, clients) in shard_cohorts.iter().enumerate() {
+            for (pos, &client) in clients.iter().enumerate() {
+                pool.jobs
+                    .send(ShardJob {
+                        shard,
+                        pos,
+                        client,
+                        round,
+                        global: Arc::clone(&global),
+                    })
+                    .expect("shard pool dead");
+                total += 1;
             }
         }
+        let mut out: Vec<Vec<Option<LocalOutcome>>> =
+            shard_cohorts.iter().map(|c| vec![None; c.len()]).collect();
+        for _ in 0..total {
+            let rep = pool.replies.recv().expect("shard pool dead");
+            debug_assert!(out[rep.shard][rep.pos].is_none());
+            out[rep.shard][rep.pos] = Some(rep.outcome);
+        }
+        out.into_iter()
+            .map(|v| v.into_iter().map(Option::unwrap).collect())
+            .collect()
     }
 
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
@@ -309,6 +320,7 @@ mod tests {
             round: usize,
             global: &[f32],
             client: usize,
+            _scratch: &mut Scratch,
         ) -> LocalOutcome {
             LocalOutcome {
                 delta: vec![

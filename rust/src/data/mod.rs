@@ -61,6 +61,17 @@ impl ClientData {
         }
     }
 
+    /// Write a freshly shuffled epoch order into `idx`, reusing its
+    /// allocation across epochs. Exactly the RNG draws the historical
+    /// `epoch_batches` shuffle performed — the FedAvg inner loop walks
+    /// this buffer in `batch`-sized windows (see `sim::NativeEngine`)
+    /// without materializing per-batch vectors.
+    pub fn epoch_order_into(&self, idx: &mut Vec<usize>, rng: &mut Rng) {
+        idx.clear();
+        idx.extend(0..self.len());
+        rng.shuffle(idx);
+    }
+
     /// Shuffled epoch batches of `batch` indices; a final partial batch
     /// wraps around (sampling with replacement for the tail), matching
     /// the fixed-batch AOT entry points.
@@ -69,8 +80,8 @@ impl ClientData {
         if self.is_empty() {
             return Vec::new();
         }
-        let mut idx: Vec<usize> = (0..self.len()).collect();
-        rng.shuffle(&mut idx);
+        let mut idx: Vec<usize> = Vec::new();
+        self.epoch_order_into(&mut idx, rng);
         let mut out = Vec::new();
         let mut i = 0;
         while i < idx.len() {
@@ -166,6 +177,26 @@ mod tests {
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epoch_order_walk_replays_epoch_batches_stream() {
+        // the streaming FedAvg walk (epoch_order_into + window + pad
+        // draws) must consume the identical RNG sequence epoch_batches
+        // did — this is what keeps the kernelized sim on the seed
+        // trajectory
+        let c = dense_client(7, 1);
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let batches = c.epoch_batches(3, &mut r1);
+        let mut idx = Vec::new();
+        c.epoch_order_into(&mut idx, &mut r2);
+        let flat: Vec<usize> = batches.concat();
+        assert_eq!(&flat[..7], &idx[..]);
+        // the tail pads continue from the same stream state
+        let pads: Vec<usize> =
+            (0..2).map(|_| idx[r2.range(0, idx.len())]).collect();
+        assert_eq!(&flat[7..], &pads[..]);
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! The `bench kernels` suite: scalar-reference vs kernelized ns/op for
+//! every hot-loop kernel, plus end-to-end sim rounds/sec — the perf
+//! trajectory every future PR regresses against (EXPERIMENTS.md §Perf).
+//!
+//! Shared by the `fedsamp bench kernels` CLI mode (which also emits
+//! `BENCH_kernels.json`) and `benches/micro_kernels.rs`. Both arms of
+//! every comparison are measured in the same process in the same run,
+//! so machine variance cancels out of the speedup ratios.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use crate::bench::Bench;
+use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use crate::data::ClientData;
+use crate::fl::{train, TrainOptions};
+use crate::model::logistic::Logistic;
+use crate::model::NativeModel;
+use crate::sim::build_native_engine;
+use crate::tensor::kernels::{self, reference};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Vector lengths the micro-kernels are swept over.
+pub const DIMS: [usize; 3] = [64, 1_000, 100_000];
+
+/// Members folded per accumulate measurement (a plausible shard size).
+const MEMBERS: usize = 8;
+
+/// Batch size / class count for the logistic `loss_grad` meso-bench.
+const BATCH: usize = 32;
+const CLASSES: usize = 16;
+
+/// One scalar-vs-kernel comparison.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub op: String,
+    pub dim: usize,
+    pub scalar_ns: f64,
+    pub kernel_ns: f64,
+}
+
+impl Measurement {
+    pub fn speedup(&self) -> f64 {
+        self.scalar_ns / self.kernel_ns
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(self.op.clone())),
+            ("dim", Json::num(self.dim as f64)),
+            ("scalar_ns_per_op", Json::num(self.scalar_ns)),
+            ("kernel_ns_per_op", Json::num(self.kernel_ns)),
+            ("ops_per_sec_kernel", Json::num(1e9 / self.kernel_ns)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+fn bench(group: &str, quick: bool) -> Bench {
+    let min_time = if quick {
+        Duration::from_millis(1)
+    } else {
+        Duration::from_millis(200)
+    };
+    Bench::new(group).with_min_time(min_time)
+}
+
+fn random_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn dense_data(n: usize, dim: usize, classes: usize, seed: u64) -> ClientData {
+    let mut rng = Rng::new(seed);
+    ClientData {
+        x_dense: (0..n * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        x_tokens: vec![],
+        labels: (0..n).map(|_| rng.range(0, classes) as u32).collect(),
+        dim,
+    }
+}
+
+/// Reduction + elementwise micro-kernels across [`DIMS`].
+fn vector_measurements(quick: bool) -> Vec<Measurement> {
+    let mut rng = Rng::new(0xBE_AC);
+    let mut out = Vec::new();
+    for &dim in &DIMS {
+        let b = bench(&format!("kernels/dim={dim}"), quick);
+        let x = random_vec(&mut rng, dim);
+        let y = random_vec(&mut rng, dim);
+
+        let scalar_ns = b.run("norm_sq/scalar", || {
+            black_box(reference::norm_sq(black_box(&x)));
+        });
+        let kernel_ns = b.run("norm_sq/kernel", || {
+            black_box(kernels::norm_sq(black_box(&x)));
+        });
+        out.push(Measurement {
+            op: "norm_sq".into(),
+            dim,
+            scalar_ns,
+            kernel_ns,
+        });
+
+        let scalar_ns = b.run("dot/scalar", || {
+            black_box(reference::dot(black_box(&x), black_box(&y)));
+        });
+        let kernel_ns = b.run("dot/kernel", || {
+            black_box(kernels::dot(black_box(&x), black_box(&y)));
+        });
+        out.push(Measurement { op: "dot".into(), dim, scalar_ns, kernel_ns });
+
+        let mut acc = vec![0.0f32; dim];
+        let scalar_ns = b.run("axpy/scalar", || {
+            reference::axpy(black_box(&mut acc), 0.5, black_box(&x));
+        });
+        let kernel_ns = b.run("axpy/kernel", || {
+            kernels::axpy(black_box(&mut acc), 0.5, black_box(&x));
+        });
+        out.push(Measurement { op: "axpy".into(), dim, scalar_ns, kernel_ns });
+
+        let vecs: Vec<Vec<f32>> =
+            (0..MEMBERS).map(|_| random_vec(&mut rng, dim)).collect();
+        let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let weights = vec![0.25f32; MEMBERS];
+        let mut acc = vec![0.0f32; dim];
+        let scalar_ns = b.run("weighted_accumulate/scalar", || {
+            // the seed aggregation: one full axpy pass per member
+            for (v, &w) in refs.iter().zip(&weights) {
+                reference::axpy(black_box(&mut acc), w, v);
+            }
+        });
+        let kernel_ns = b.run("weighted_accumulate/kernel", || {
+            kernels::weighted_accumulate(
+                black_box(&mut acc),
+                &refs,
+                &weights,
+            );
+        });
+        out.push(Measurement {
+            op: "weighted_accumulate".into(),
+            dim,
+            scalar_ns,
+            kernel_ns,
+        });
+    }
+    out
+}
+
+/// The acceptance meso-bench: logistic `loss_grad` over a BATCH-row
+/// mini-batch, scalar per-sample row walks vs the batch GEMM + rank-1
+/// kernel path, across [`DIMS`] input dimensions.
+fn loss_grad_measurements(quick: bool) -> Vec<Measurement> {
+    let mut out = Vec::new();
+    for &dim in &DIMS {
+        let b = bench(&format!("loss_grad/dim={dim}"), quick);
+        let model = Logistic::new(dim, CLASSES, 1e-4);
+        let data = dense_data(BATCH * 4, dim, CLASSES, dim as u64);
+        let params = model.init_params(7);
+        let batch: Vec<usize> = (0..BATCH).collect();
+        let mut grad = vec![0.0f32; model.dim()];
+        let mut work: Vec<f32> = Vec::new();
+        let scalar_ns = b.run("scalar", || {
+            black_box(model.loss_grad_scalar(
+                black_box(&params),
+                &data,
+                &batch,
+                black_box(&mut grad),
+            ));
+        });
+        let kernel_ns = b.run("kernel", || {
+            black_box(model.loss_grad_scratch(
+                black_box(&params),
+                &data,
+                &batch,
+                black_box(&mut grad),
+                &mut work,
+            ));
+        });
+        out.push(Measurement {
+            op: "logistic_loss_grad".into(),
+            dim,
+            scalar_ns,
+            kernel_ns,
+        });
+    }
+    out
+}
+
+/// End-to-end sim rounds/sec (kernelized path): the number every future
+/// perf PR regresses against.
+fn rounds_per_sec(quick: bool) -> (f64, usize) {
+    let rounds = if quick { 2 } else { 10 };
+    let cfg = ExperimentConfig {
+        name: "bench_kernels_sim".into(),
+        seed: 9,
+        rounds,
+        cohort: 16,
+        budget: 4,
+        strategy: Strategy::Aocs { j_max: 4 },
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: rounds,
+        eval_examples: 128,
+        workers: 1,
+        secure_updates: true,
+        availability: 1.0,
+    };
+    let mut engine = build_native_engine(&cfg);
+    let b = bench("sim", quick);
+    let ns = b.run(&format!("fedavg_{rounds}_rounds"), || {
+        let run =
+            train(&cfg, &mut engine, &TrainOptions::default()).unwrap();
+        black_box(run);
+    });
+    (rounds as f64 / (ns * 1e-9), rounds)
+}
+
+/// Run the full suite; returns the `BENCH_kernels.json` document.
+pub fn run_kernel_suite(quick: bool) -> Json {
+    let mut measurements = vector_measurements(quick);
+    measurements.extend(loss_grad_measurements(quick));
+    let (rps, rounds) = rounds_per_sec(quick);
+    println!("\nsim throughput: {rps:.2} rounds/sec ({rounds}-round FedAvg, secure, pool=40)");
+    for m in &measurements {
+        if m.op == "logistic_loss_grad" {
+            println!(
+                "loss_grad dim={}: {:.2}x kernel speedup",
+                m.dim,
+                m.speedup()
+            );
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("quick", Json::Bool(quick)),
+        (
+            "ops",
+            Json::Arr(measurements.iter().map(Measurement::to_json).collect()),
+        ),
+        (
+            "sim_rounds_per_sec",
+            Json::obj(vec![
+                ("config", Json::str("fedavg_secure_femnist40")),
+                ("rounds_per_run", Json::num(rounds as f64)),
+                ("value", Json::num(rps)),
+            ]),
+        ),
+    ])
+}

@@ -2,6 +2,7 @@
 //! paper's evaluation (used by the CLI, the examples and the benches).
 
 pub mod figures;
+pub mod kernelbench;
 
 use crate::config::{presets, ExperimentConfig, Strategy};
 use crate::data;

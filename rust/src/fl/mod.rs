@@ -138,7 +138,8 @@ mod tests {
                 .iter()
                 .map(|&id| {
                     // gradient of ½‖x − t‖²: delta = x − t (DSGD-like)
-                    let delta = tensor::sub(global, &self.targets[id]);
+                    let mut delta = vec![0.0f32; global.len()];
+                    tensor::sub_into(&mut delta, global, &self.targets[id]);
                     LocalOutcome {
                         train_loss: tensor::norm(&delta),
                         delta,

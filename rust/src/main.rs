@@ -30,6 +30,7 @@ fn main() {
         Some("coordinate") => cmd_coordinate(&args[1..]),
         Some("figures") => cmd_figures(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -53,6 +54,7 @@ fn print_usage() {
            coordinate  sharded round coordinator (--shards/--workers)\n\
            figures     regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
            sweep       theory sweeps (budget m, step size)\n\
+           bench       perf suites (kernels → BENCH_kernels.json)\n\
            inspect     show artifacts + dataset statistics\n\n\
          Run `fedsamp <subcommand> --help` for options."
     );
@@ -392,6 +394,50 @@ fn cmd_sweep(args: &[String]) -> i32 {
         }
     }
     0
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "fedsamp bench",
+        "perf suites; `bench kernels` measures scalar vs kernelized hot \
+         loops and emits BENCH_kernels.json",
+    )
+    .opt("suite", None, "suite name (or positional): kernels")
+    .opt("out", Some("."), "directory for BENCH_<suite>.json")
+    .flag("quick", "1-ish iteration per bench (CI smoke mode)");
+    let p = parse_or_exit(&cli, args);
+    let suite = p
+        .get("suite")
+        .map(String::from)
+        .or_else(|| p.positionals.first().cloned())
+        .unwrap_or_else(|| "kernels".into());
+    match suite.as_str() {
+        "kernels" => {
+            let doc = fedsamp::exp::kernelbench::run_kernel_suite(
+                p.flag("quick"),
+            );
+            let dir = p.str("out");
+            if let Err(e) = std::fs::create_dir_all(&dir) {
+                eprintln!("cannot create {dir}: {e}");
+                return 1;
+            }
+            let path = format!("{dir}/BENCH_kernels.json");
+            match std::fs::write(&path, doc.to_pretty()) {
+                Ok(()) => {
+                    println!("saved {path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("save failed: {e}");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown bench suite '{other}' (available: kernels)");
+            2
+        }
+    }
 }
 
 fn cmd_inspect(args: &[String]) -> i32 {

@@ -3,10 +3,23 @@
 //! Parameters are `[W (dim × classes) row-major | b (classes)]` flattened.
 //! Convex and L-smooth, matching the assumptions of Theorems 13/17; used
 //! by the sim path for fast end-to-end federated runs.
+//!
+//! The gradient is computed batch-level on the `tensor::kernels` layer:
+//! one gathered logits GEMM per batch plus a rank-1 outer-product
+//! accumulation per sample, instead of the seed's per-sample row walks
+//! (which wrote the weight gradient with stride `classes` — the worst
+//! access pattern in the crate; EXPERIMENTS.md §Perf). The kernel path
+//! is bit-identical to [`Logistic::loss_grad_scalar`], the retained
+//! scalar reference: every gradient element accumulates its per-sample
+//! contributions in the same order with the same fused ops.
 
 use super::NativeModel;
 use crate::data::ClientData;
+use crate::tensor::kernels;
 use crate::util::rng::Rng;
+
+/// Rows per gathered-GEMM block on the (full-dataset) eval path.
+const EVAL_BLOCK: usize = 128;
 
 #[derive(Clone, Debug)]
 pub struct Logistic {
@@ -22,7 +35,8 @@ impl Logistic {
         Logistic { input_dim, classes, l2 }
     }
 
-    fn logits(&self, params: &[f32], x: &[f32], out: &mut [f32]) {
+    /// Per-sample scalar logits walk (reference path only).
+    fn logits_scalar(&self, params: &[f32], x: &[f32], out: &mut [f32]) {
         let c = self.classes;
         let bias = &params[self.input_dim * c..];
         out.copy_from_slice(bias);
@@ -37,8 +51,8 @@ impl Logistic {
         }
     }
 
-    /// log-softmax in place; returns logsumexp.
-    fn log_softmax(logits: &mut [f32]) -> f32 {
+    /// log-softmax in place.
+    fn log_softmax(logits: &mut [f32]) {
         let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let lse = max
             + logits
@@ -49,16 +63,20 @@ impl Logistic {
         for z in logits.iter_mut() {
             *z -= lse;
         }
-        lse
-    }
-}
-
-impl NativeModel for Logistic {
-    fn dim(&self) -> usize {
-        (self.input_dim + 1) * self.classes
     }
 
-    fn loss_grad(
+    /// λ/2‖θ‖² — the one L2-penalty summation shared by `loss`,
+    /// `loss_grad_scratch` and `loss_grad_scalar` (sequential fold: part
+    /// of the seed trajectory contract).
+    fn l2_penalty(&self, params: &[f32]) -> f64 {
+        0.5 * self.l2
+            * params.iter().map(|&p| (p as f64) * p as f64).sum::<f64>()
+    }
+
+    /// The seed per-sample scalar gradient — retained as the correctness
+    /// oracle for the kernel property tests and the baseline arm of
+    /// `fedsamp bench kernels` / `benches/micro_kernels.rs`.
+    pub fn loss_grad_scalar(
         &self,
         params: &[f32],
         data: &ClientData,
@@ -75,7 +93,7 @@ impl NativeModel for Logistic {
         for &i in batch {
             let x = data.dense_row(i);
             let y = data.labels[i] as usize;
-            self.logits(params, x, &mut logits);
+            self.logits_scalar(params, x, &mut logits);
             Self::log_softmax(&mut logits);
             total += -logits[y] as f64;
             // dlogits = softmax - onehot
@@ -95,38 +113,143 @@ impl NativeModel for Logistic {
         for (g, p) in grad.iter_mut().zip(params) {
             *g = *g * inv + self.l2 as f32 * p;
         }
-        total / batch.len() as f64
-            + 0.5 * self.l2 * params.iter().map(|&p| (p as f64) * p as f64).sum::<f64>()
+        total / batch.len() as f64 + self.l2_penalty(params)
+    }
+}
+
+impl NativeModel for Logistic {
+    fn dim(&self) -> usize {
+        (self.input_dim + 1) * self.classes
+    }
+
+    fn loss_grad(
+        &self,
+        params: &[f32],
+        data: &ClientData,
+        batch: &[usize],
+        grad: &mut [f32],
+    ) -> f64 {
+        let mut work = Vec::new();
+        self.loss_grad_scratch(params, data, batch, grad, &mut work)
+    }
+
+    /// Batch-level kernel formulation: one gathered logits GEMM for the
+    /// whole batch, then per-sample softmax + rank-1 gradient
+    /// accumulation with contiguous inner loops. `work` holds the
+    /// batch × classes logits block (no allocation once warm).
+    fn loss_grad_scratch(
+        &self,
+        params: &[f32],
+        data: &ClientData,
+        batch: &[usize],
+        grad: &mut [f32],
+        work: &mut Vec<f32>,
+    ) -> f64 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        assert!(!batch.is_empty());
+        assert_eq!(data.dim, self.input_dim, "data/model dim mismatch");
+        let c = self.classes;
+        let d = self.input_dim;
+        grad.fill(0.0);
+        let (wm, bias) = params.split_at(d * c);
+        kernels::Scratch::ensure(work, batch.len() * c);
+        kernels::gemm_gather_block(
+            &data.x_dense,
+            batch,
+            d,
+            wm,
+            c,
+            Some(bias),
+            work,
+        );
+        let (gw, gb) = grad.split_at_mut(d * c);
+        let mut total = 0.0f64;
+        for (bi, &i) in batch.iter().enumerate() {
+            let y = data.labels[i] as usize;
+            let row = &mut work[bi * c..(bi + 1) * c];
+            Self::log_softmax(row);
+            total += -row[y] as f64;
+            // dlogits = softmax - onehot, in place
+            for (j, z) in row.iter_mut().enumerate() {
+                *z = z.exp() - (j == y) as u8 as f32;
+            }
+            kernels::add_assign(gb, row);
+            kernels::rank1_accumulate(gw, data.dense_row(i), row);
+        }
+        let inv = 1.0 / batch.len() as f32;
+        for (g, p) in grad.iter_mut().zip(params) {
+            *g = *g * inv + self.l2 as f32 * p;
+        }
+        total / batch.len() as f64 + self.l2_penalty(params)
     }
 
     fn loss(&self, params: &[f32], data: &ClientData) -> f64 {
         let c = self.classes;
-        let mut logits = vec![0.0f32; c];
+        let (wm, bias) = params.split_at(self.input_dim * c);
+        let n = data.len();
         let mut total = 0.0f64;
-        for i in 0..data.len() {
-            self.logits(params, data.dense_row(i), &mut logits);
-            Self::log_softmax(&mut logits);
-            total += -logits[data.labels[i] as usize] as f64;
+        let mut logits: Vec<f32> = Vec::new();
+        let mut rows: Vec<usize> = Vec::new();
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + EVAL_BLOCK).min(n);
+            rows.clear();
+            rows.extend(i0..i1);
+            kernels::Scratch::ensure(&mut logits, (i1 - i0) * c);
+            kernels::gemm_gather_block(
+                &data.x_dense,
+                &rows,
+                self.input_dim,
+                wm,
+                c,
+                Some(bias),
+                &mut logits,
+            );
+            for (r, &y) in logits.chunks_exact_mut(c).zip(&data.labels[i0..i1])
+            {
+                Self::log_softmax(r);
+                total += -r[y as usize] as f64;
+            }
+            i0 = i1;
         }
-        total / data.len().max(1) as f64
-            + 0.5 * self.l2 * params.iter().map(|&p| (p as f64) * p as f64).sum::<f64>()
+        total / n.max(1) as f64 + self.l2_penalty(params)
     }
 
     fn accuracy(&self, params: &[f32], data: &ClientData) -> f64 {
         let c = self.classes;
-        let mut logits = vec![0.0f32; c];
+        let (wm, bias) = params.split_at(self.input_dim * c);
+        let n = data.len();
         let mut correct = 0usize;
-        for i in 0..data.len() {
-            self.logits(params, data.dense_row(i), &mut logits);
-            let pred = logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            correct += (pred == data.labels[i] as usize) as usize;
+        let mut logits: Vec<f32> = Vec::new();
+        let mut rows: Vec<usize> = Vec::new();
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + EVAL_BLOCK).min(n);
+            rows.clear();
+            rows.extend(i0..i1);
+            kernels::Scratch::ensure(&mut logits, (i1 - i0) * c);
+            kernels::gemm_gather_block(
+                &data.x_dense,
+                &rows,
+                self.input_dim,
+                wm,
+                c,
+                Some(bias),
+                &mut logits,
+            );
+            for (r, &y) in logits.chunks_exact(c).zip(&data.labels[i0..i1]) {
+                let pred = r
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += (pred == y as usize) as usize;
+            }
+            i0 = i1;
         }
-        correct as f64 / data.len().max(1) as f64
+        correct as f64 / n.max(1) as f64
     }
 
     fn init_params(&self, seed: u64) -> Vec<f32> {
@@ -144,6 +267,7 @@ impl NativeModel for Logistic {
 mod tests {
     use super::*;
     use crate::model::finite_diff_check;
+    use crate::util::prop::quick;
 
     fn toy_data(n: usize, dim: usize, classes: usize, seed: u64) -> ClientData {
         let mut rng = Rng::new(seed);
@@ -161,6 +285,24 @@ mod tests {
         ClientData { x_dense: x, x_tokens: vec![], labels, dim }
     }
 
+    /// toy_data with a fraction of exact-zero features, to exercise the
+    /// sparse-skip path of the kernels.
+    fn sparse_toy_data(
+        n: usize,
+        dim: usize,
+        classes: usize,
+        seed: u64,
+    ) -> ClientData {
+        let mut d = toy_data(n, dim, classes, seed);
+        let mut rng = Rng::new(seed ^ 0xD0);
+        for v in d.x_dense.iter_mut() {
+            if rng.bernoulli(0.4) {
+                *v = 0.0;
+            }
+        }
+        d
+    }
+
     #[test]
     fn gradient_matches_finite_differences() {
         let model = Logistic::new(6, 3, 0.01);
@@ -168,6 +310,72 @@ mod tests {
         let params = model.init_params(2);
         let batch: Vec<usize> = (0..12).collect();
         finite_diff_check(&model, &params, &data, &batch, 2e-2);
+    }
+
+    #[test]
+    fn prop_kernel_grad_matches_scalar_reference() {
+        quick("logistic-kernel-vs-scalar", |rng, case| {
+            let classes = rng.range(2, 8);
+            let dim = rng.range(1, 90);
+            let n = rng.range(2, 20);
+            let model = Logistic::new(dim, classes, 0.01);
+            let data = if case % 2 == 0 {
+                toy_data(n, dim, classes, case as u64)
+            } else {
+                sparse_toy_data(n, dim, classes, case as u64)
+            };
+            let params = model.init_params(case as u64 ^ 0xA1);
+            let batch: Vec<usize> =
+                (0..rng.range(1, n + 1)).map(|_| rng.range(0, n)).collect();
+            let mut gk = vec![0.0f32; model.dim()];
+            let mut gs = vec![0.0f32; model.dim()];
+            let lk = model.loss_grad(&params, &data, &batch, &mut gk);
+            let ls = model.loss_grad_scalar(&params, &data, &batch, &mut gs);
+            if (lk - ls).abs() > 1e-6 * (1.0 + ls.abs()) {
+                return Err(format!("loss {lk} vs {ls}"));
+            }
+            for (i, (a, b)) in gk.iter().zip(&gs).enumerate() {
+                let (a, b) = (*a as f64, *b as f64);
+                if (a - b).abs() > 1e-6 * (1.0 + b.abs()) {
+                    return Err(format!("grad[{i}]: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_grad_is_bit_identical_to_scalar_on_sparse_rows() {
+        // the stronger contract the trajectory-exactness tests rely on
+        let model = Logistic::new(40, 5, 1e-3);
+        let data = sparse_toy_data(30, 40, 5, 77);
+        let params = model.init_params(8);
+        let batch: Vec<usize> = (0..30).collect();
+        let mut gk = vec![0.0f32; model.dim()];
+        let mut gs = vec![0.0f32; model.dim()];
+        let lk = model.loss_grad(&params, &data, &batch, &mut gk);
+        let ls = model.loss_grad_scalar(&params, &data, &batch, &mut gs);
+        assert_eq!(lk, ls);
+        assert_eq!(gk, gs);
+    }
+
+    #[test]
+    fn scratch_reuse_changes_nothing() {
+        let model = Logistic::new(12, 4, 0.01);
+        let data = toy_data(20, 12, 4, 3);
+        let params = model.init_params(4);
+        let mut work = Vec::new();
+        let mut g1 = vec![0.0f32; model.dim()];
+        let mut g2 = vec![0.0f32; model.dim()];
+        // a big batch first warms the scratch past the small batch's need
+        let big: Vec<usize> = (0..20).collect();
+        model.loss_grad_scratch(&params, &data, &big, &mut g1, &mut work);
+        let small: Vec<usize> = vec![3, 7];
+        let with_warm =
+            model.loss_grad_scratch(&params, &data, &small, &mut g1, &mut work);
+        let fresh = model.loss_grad(&params, &data, &small, &mut g2);
+        assert_eq!(with_warm, fresh);
+        assert_eq!(g1, g2);
     }
 
     #[test]
@@ -206,6 +414,28 @@ mod tests {
         for (a, b) in g0.iter().zip(&g1) {
             assert!((b - a - 0.5).abs() < 1e-5, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn eval_blocks_cover_ragged_tails() {
+        // dataset bigger than one EVAL_BLOCK with a partial final block
+        let model = Logistic::new(4, 3, 0.0);
+        let data = toy_data(EVAL_BLOCK + 37, 4, 3, 9);
+        let params = model.init_params(1);
+        let loss = model.loss(&params, &data);
+        assert!(loss.is_finite());
+        // blocked eval must agree with a per-sample scalar walk
+        let mut logits = vec![0.0f32; 3];
+        let mut total = 0.0f64;
+        for i in 0..data.len() {
+            model.logits_scalar(&params, data.dense_row(i), &mut logits);
+            Logistic::log_softmax(&mut logits);
+            total += -logits[data.labels[i] as usize] as f64;
+        }
+        let want = total / data.len() as f64 + model.l2_penalty(&params);
+        assert_eq!(loss, want);
+        let acc = model.accuracy(&params, &data);
+        assert!((0.0..=1.0).contains(&acc));
     }
 
     #[test]

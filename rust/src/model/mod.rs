@@ -31,6 +31,23 @@ pub trait NativeModel: Send + Sync {
         grad: &mut [f32],
     ) -> f64;
 
+    /// [`NativeModel::loss_grad`] with a caller-owned workspace (the
+    /// per-worker scratch arena — see `tensor::kernels::Scratch`).
+    /// Models whose gradient needs intermediate buffers (batch logits)
+    /// override this to run allocation-free; the default ignores the
+    /// workspace.
+    fn loss_grad_scratch(
+        &self,
+        params: &[f32],
+        data: &ClientData,
+        batch: &[usize],
+        grad: &mut [f32],
+        work: &mut Vec<f32>,
+    ) -> f64 {
+        let _ = work;
+        self.loss_grad(params, data, batch, grad)
+    }
+
     /// Mean loss over a full dataset (no gradient).
     fn loss(&self, params: &[f32], data: &ClientData) -> f64;
 

@@ -10,6 +10,7 @@
 //! curvatures are) controls the update-norm spread and therefore α^k.
 
 use crate::tensor;
+use crate::tensor::kernels;
 use crate::util::rng::Rng;
 
 /// One client's quadratic.
@@ -33,14 +34,10 @@ impl ClientQuadratic {
         acc
     }
 
-    /// ∇f_i(x) = A_i (x − c_i), written into `grad`.
+    /// ∇f_i(x) = A_i (x − c_i), written into `grad` (fused diagonal
+    /// kernel; elementwise-identical to the seed loop).
     pub fn grad(&self, x: &[f32], grad: &mut [f32]) {
-        for (g, ((&a, &c), &xi)) in grad
-            .iter_mut()
-            .zip(self.curvature.iter().zip(&self.center).zip(x))
-        {
-            *g = a * (xi - c);
-        }
+        kernels::scaled_diff(grad, &self.curvature, x, &self.center);
     }
 }
 

@@ -19,6 +19,7 @@
 //! masks were committed, the surviving mask residue is reconstructed from
 //! the pairwise seeds and removed — see [`SecureAggregator::recover`].
 
+use crate::tensor::kernels;
 use crate::util::rng::Rng;
 
 /// Fixed-point scale: 2^24 keeps |value| < ~1.1e12/2^24 ≈ 65k exactly
@@ -86,18 +87,19 @@ impl SecureAggregator {
         out
     }
 
-    /// Sum masked contributions (wrapping); masks telescope away when all
-    /// roster members are present.
+    /// Sum masked contributions (fused chunked wrapping sums — ring
+    /// addition commutes, so any fold order is exact); masks telescope
+    /// away when all roster members are present.
     pub fn sum(contributions: &[Vec<u64>]) -> Vec<u64> {
         assert!(!contributions.is_empty());
         let d = contributions[0].len();
-        let mut acc = vec![0u64; d];
         for c in contributions {
             assert_eq!(c.len(), d, "ragged contributions");
-            for (a, v) in acc.iter_mut().zip(c) {
-                *a = a.wrapping_add(*v);
-            }
         }
+        let mut acc = vec![0u64; d];
+        let vecs: Vec<&[u64]> =
+            contributions.iter().map(|c| c.as_slice()).collect();
+        kernels::wrapping_accumulate(&mut acc, &vecs);
         acc
     }
 

@@ -14,6 +14,7 @@ use crate::metrics::RunResult;
 use crate::model::logistic::Logistic;
 use crate::model::NativeModel;
 use crate::tensor;
+use crate::tensor::kernels::{self, Scratch};
 use crate::util::rng::Rng;
 
 /// Native engine: clients run SGD on a [`NativeModel`] over
@@ -37,44 +38,96 @@ impl<M: NativeModel> NativeEngine<M> {
         NativeEngine { model, dataset, algorithm, batch_size, seed }
     }
 
+    /// One client's local work, allocation-free on the hot path: the
+    /// gradient/params/logits/index buffers all live in the per-worker
+    /// `scratch` arena; the only allocation left is the `delta` the
+    /// [`LocalOutcome`] must own.
     fn local_pass(
         &self,
         round: usize,
         global: &[f32],
         client_id: usize,
+        scratch: &mut Scratch,
     ) -> LocalOutcome {
         let data = &self.dataset.clients[client_id];
         let mut rng =
             Rng::new(self.seed ^ 0x10CA1).fork(round as u64).fork(client_id as u64);
         let dim = self.model.dim();
-        let mut grad = vec![0.0f32; dim];
+        Scratch::ensure(&mut scratch.grad, dim);
         match self.algorithm {
             Algorithm::Dsgd { .. } => {
                 // one stochastic gradient g_i^k (Eq. 2); U_i = g_i
-                let batch: Vec<usize> = (0..self.batch_size.min(data.len()))
-                    .map(|_| rng.range(0, data.len()))
-                    .collect();
-                let loss =
-                    self.model.loss_grad(global, data, &batch, &mut grad);
-                LocalOutcome { delta: grad, train_loss: loss, examples: data.len() }
+                scratch.idx.clear();
+                for _ in 0..self.batch_size.min(data.len()) {
+                    scratch.idx.push(rng.range(0, data.len()));
+                }
+                let loss = self.model.loss_grad_scratch(
+                    global,
+                    data,
+                    &scratch.idx,
+                    &mut scratch.grad,
+                    &mut scratch.work,
+                );
+                LocalOutcome {
+                    delta: scratch.grad.clone(),
+                    train_loss: loss,
+                    examples: data.len(),
+                }
             }
             Algorithm::FedAvg { local_epochs, eta_l, .. } => {
-                // R local SGD steps; U_i = x^k − y_{i,R} (Algorithm 3)
-                let mut y = global.to_vec();
+                // R local SGD steps; U_i = x^k − y_{i,R} (Algorithm 3).
+                // The epoch walk consumes the exact RNG stream the
+                // historical `epoch_batches` materialization did:
+                // shuffle, then wrap-around pads for the final window.
+                scratch.y.clear();
+                scratch.y.extend_from_slice(global);
                 let mut loss_sum = 0.0f64;
                 let mut steps = 0usize;
+                let n = data.len();
+                let bsz = self.batch_size;
+                assert!(bsz > 0); // the invariant epoch_batches enforced
                 for _ in 0..local_epochs {
-                    for batch in data.epoch_batches(self.batch_size, &mut rng)
-                    {
-                        let loss =
-                            self.model.loss_grad(&y, data, &batch, &mut grad);
-                        tensor::axpy(&mut y, -(eta_l as f32), &grad);
+                    data.epoch_order_into(&mut scratch.idx, &mut rng);
+                    let mut i = 0;
+                    while i < n {
+                        let end = (i + bsz).min(n);
+                        let loss = if end - i == bsz {
+                            self.model.loss_grad_scratch(
+                                &scratch.y,
+                                data,
+                                &scratch.idx[i..end],
+                                &mut scratch.grad,
+                                &mut scratch.work,
+                            )
+                        } else {
+                            scratch.tail.clear();
+                            scratch.tail.extend_from_slice(&scratch.idx[i..end]);
+                            while scratch.tail.len() < bsz {
+                                let j = rng.range(0, n);
+                                scratch.tail.push(scratch.idx[j]);
+                            }
+                            self.model.loss_grad_scratch(
+                                &scratch.y,
+                                data,
+                                &scratch.tail,
+                                &mut scratch.grad,
+                                &mut scratch.work,
+                            )
+                        };
+                        tensor::axpy(
+                            &mut scratch.y,
+                            -(eta_l as f32),
+                            &scratch.grad,
+                        );
                         loss_sum += loss;
                         steps += 1;
+                        i += bsz;
                     }
                 }
+                let mut delta = vec![0.0f32; dim];
+                tensor::sub_into(&mut delta, global, &scratch.y);
                 LocalOutcome {
-                    delta: tensor::sub(global, &y),
+                    delta,
                     train_loss: loss_sum / steps.max(1) as f64,
                     examples: data.len(),
                 }
@@ -104,8 +157,9 @@ impl<M: NativeModel + 'static> ClientCompute for NativeEngine<M> {
         round: usize,
         global: &[f32],
         client: usize,
+        scratch: &mut Scratch,
     ) -> LocalOutcome {
-        self.local_pass(round, global, client)
+        self.local_pass(round, global, client, scratch)
     }
 
     fn evaluate(&self, global: &[f32]) -> EvalOutcome {
@@ -139,9 +193,11 @@ impl<M: NativeModel> ClientEngine for NativeEngine<M> {
         global: &[f32],
         cohort: &[usize],
     ) -> Vec<LocalOutcome> {
+        // one scratch arena for the whole cohort sweep
+        let mut scratch = Scratch::new();
         cohort
             .iter()
-            .map(|&id| self.local_pass(round, global, id))
+            .map(|&id| self.local_pass(round, global, id, &mut scratch))
             .collect()
     }
 
@@ -164,21 +220,12 @@ pub fn project_dataset(fd: &FederatedData, out_dim: usize, seed: u64) -> Federat
     let proj: Vec<f32> =
         (0..in_dim * out_dim).map(|_| rng.normal_f32(0.0, scale)).collect();
     let project_client = |c: &ClientData| -> ClientData {
+        // one blocked GEMM per client: X (n × in_dim) · P (in_dim ×
+        // out_dim); bit-identical to the seed per-row walk (ascending-j
+        // accumulation, zero-skip preserved)
         let n = c.len();
         let mut x = vec![0.0f32; n * out_dim];
-        for i in 0..n {
-            let row = c.dense_row(i);
-            let out = &mut x[i * out_dim..(i + 1) * out_dim];
-            for (j, &v) in row.iter().enumerate() {
-                if v == 0.0 {
-                    continue;
-                }
-                let prow = &proj[j * out_dim..(j + 1) * out_dim];
-                for (o, &p) in out.iter_mut().zip(prow) {
-                    *o += v * p;
-                }
-            }
-        }
+        kernels::gemm_block(n, in_dim, out_dim, &c.x_dense, &proj, None, &mut x);
         ClientData { x_dense: x, x_tokens: vec![], labels: c.labels.clone(), dim: out_dim }
     };
     FederatedData {
@@ -247,11 +294,7 @@ fn tokens_to_positional_onehot(fd: &FederatedData) -> FederatedData {
         let seq = c.dim;
         let dim = seq * vocab;
         let mut x = vec![0.0f32; n * dim];
-        for i in 0..n {
-            for (pos, &t) in c.token_row(i).iter().enumerate() {
-                x[i * dim + pos * vocab + t as usize] = 1.0;
-            }
-        }
+        kernels::one_hot_expand(&c.x_tokens, seq, vocab, &mut x);
         ClientData { x_dense: x, x_tokens: vec![], labels: c.labels.clone(), dim }
     };
     FederatedData {

@@ -1,0 +1,679 @@
+//! Blocked, unrolled f32 compute kernels for every arithmetic hot loop
+//! in the crate (see EXPERIMENTS.md §Perf for the measured speedups and
+//! DESIGN.md §5 for the exactness contracts).
+//!
+//! Two contracts coexist here:
+//!
+//! * **Bit-exactness** where the secure-aggregation ring or the seed
+//!   trajectory demands it: every kernel accumulates each output element
+//!   in exactly the order the scalar reference does (ascending index,
+//!   member order), so [`axpy`], [`accumulate`], [`weighted_accumulate`],
+//!   [`wrapping_accumulate`], [`gemm_block`] and [`rank1_accumulate`]
+//!   are drop-in bit-identical replacements — blocking reorders *loops*,
+//!   never the per-element addition sequence.
+//! * **Tolerance (≤ 1e-6 relative)** where reductions may re-associate
+//!   for speed: [`norm_sq`], [`dot`] and [`axpy_norm_sq`] run 8 partial
+//!   f64 accumulators, which changes the summation tree (and improves
+//!   accuracy) relative to the sequential fold.
+//!
+//! The scalar references live in [`reference`] and stay the baseline arm
+//! of `benches/micro_kernels.rs` / `fedsamp bench kernels`.
+
+/// Elements per unrolled lane group. Eight f32 lanes fill a 256-bit
+/// vector register; LLVM maps the fixed-size chunk bodies to packed ops.
+const LANES: usize = 8;
+
+/// Chunk length (elements) for member-inner accumulation: small enough
+/// that one chunk of the accumulator plus one chunk per member stays in
+/// L1 while every member is folded in, large enough to amortize the
+/// outer loop.
+const CHUNK: usize = 1024;
+
+/// k-block length for the GEMM kernels: a block of `b` rows
+/// (`KC × n` floats) is reused across every output row before moving on.
+const KC: usize = 64;
+
+// ---------------------------------------------------------------------------
+// reductions (tolerance contract: 8 partial f64 accumulators)
+// ---------------------------------------------------------------------------
+
+/// Squared L2 norm, 8-lane unrolled with f64 partial accumulators.
+pub fn norm_sq(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = x.chunks_exact(LANES);
+    for c in &mut chunks {
+        for (a, &v) in acc.iter_mut().zip(c) {
+            *a += (v as f64) * v as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for &v in chunks.remainder() {
+        tail += (v as f64) * v as f64;
+    }
+    fold(&acc) + tail
+}
+
+/// Dot product, 8-lane unrolled with f64 partial accumulators.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    let mut acc = [0.0f64; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (xs, ys) in (&mut ac).zip(&mut bc) {
+        for ((s, &x), &y) in acc.iter_mut().zip(xs).zip(ys) {
+            *s += (x as f64) * y as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += (x as f64) * y as f64;
+    }
+    fold(&acc) + tail
+}
+
+/// Pairwise fold of the lane accumulators (fixed tree, deterministic).
+#[inline]
+fn fold(acc: &[f64; LANES]) -> f64 {
+    ((acc[0] + acc[4]) + (acc[2] + acc[6]))
+        + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+}
+
+// ---------------------------------------------------------------------------
+// elementwise updates (bit-exact contract)
+// ---------------------------------------------------------------------------
+
+/// y += a * x, 8-lane unrolled. Per-element ops identical to the scalar
+/// loop (ascending index, one fused expression per element).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for (yi, &xi) in yb.iter_mut().zip(xb) {
+            *yi += a * xi;
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += a * xi;
+    }
+}
+
+/// y += x (the unit-weight accumulation step), 8-lane unrolled.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "add_assign length mismatch");
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for (yi, &xi) in yb.iter_mut().zip(xb) {
+            *yi += xi;
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += xi;
+    }
+}
+
+/// out = a − b, 8-lane unrolled (the `Δ_i = x^k − y_i` kernel).
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len(), "sub_into length mismatch");
+    assert_eq!(a.len(), b.len(), "sub_into length mismatch");
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((ob, ab), bb) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for ((o, &x), &y) in ob.iter_mut().zip(ab).zip(bb) {
+            *o = x - y;
+        }
+    }
+    for ((o, &x), &y) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = x - y;
+    }
+}
+
+/// Fused `y += a·x` + squared norm of the *updated* y, one pass.
+///
+/// The master-update kernel: commit applies the aggregate and needs a
+/// finiteness verdict on the result; the returned Σ y'² is finite iff
+/// every updated entry is (any NaN/Inf poisons the f64 sum, and finite
+/// f32 squares cannot overflow f64).
+pub fn axpy_norm_sq(y: &mut [f32], a: f32, x: &[f32]) -> f64 {
+    assert_eq!(y.len(), x.len(), "axpy_norm_sq length mismatch");
+    let mut acc = [0.0f64; LANES];
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for ((yi, &xi), s) in yb.iter_mut().zip(xb).zip(acc.iter_mut()) {
+            *yi += a * xi;
+            *s += (*yi as f64) * *yi as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += a * xi;
+        tail += (*yi as f64) * *yi as f64;
+    }
+    fold(&acc) + tail
+}
+
+/// out = a ⊙ (x − c) (diagonal-curvature gradient), fused elementwise.
+pub fn scaled_diff(out: &mut [f32], a: &[f32], x: &[f32], c: &[f32]) {
+    assert_eq!(out.len(), a.len(), "scaled_diff length mismatch");
+    assert_eq!(a.len(), x.len(), "scaled_diff length mismatch");
+    assert_eq!(x.len(), c.len(), "scaled_diff length mismatch");
+    for (((o, &ai), &xi), &ci) in
+        out.iter_mut().zip(a).zip(x).zip(c)
+    {
+        *o = ai * (xi - ci);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chunked accumulation (bit-exact contract)
+// ---------------------------------------------------------------------------
+
+/// acc += Σ_v vecs[v], chunked member-inner: one `CHUNK`-long window of
+/// the accumulator is folded over *every* member before moving on, so
+/// the window stays cache-hot across members. Per element, members are
+/// added in slice order — bit-identical to folding each member with
+/// [`add_assign`] sequentially.
+pub fn accumulate(acc: &mut [f32], vecs: &[&[f32]]) {
+    for v in vecs {
+        assert_eq!(v.len(), acc.len(), "accumulate length mismatch");
+    }
+    let n = acc.len();
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + CHUNK).min(n);
+        for v in vecs {
+            add_assign(&mut acc[j0..j1], &v[j0..j1]);
+        }
+        j0 = j1;
+    }
+}
+
+/// acc += Σ_v w[v] · vecs[v], chunked member-inner (same windowing and
+/// the same bit-exactness argument as [`accumulate`], with one fused
+/// multiply per element).
+pub fn weighted_accumulate(acc: &mut [f32], vecs: &[&[f32]], weights: &[f32]) {
+    assert_eq!(vecs.len(), weights.len(), "weighted_accumulate arity");
+    for v in vecs {
+        assert_eq!(v.len(), acc.len(), "weighted_accumulate length mismatch");
+    }
+    let n = acc.len();
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + CHUNK).min(n);
+        for (v, &w) in vecs.iter().zip(weights) {
+            axpy(&mut acc[j0..j1], w, &v[j0..j1]);
+        }
+        j0 = j1;
+    }
+}
+
+/// acc = acc ⊞ Σ_v vecs[v] over the Z_2^64 secure-aggregation ring,
+/// chunked member-inner. Wrapping addition commutes, so this is exact
+/// for any chunking; the windowing only buys cache locality.
+pub fn wrapping_accumulate(acc: &mut [u64], vecs: &[&[u64]]) {
+    for v in vecs {
+        assert_eq!(v.len(), acc.len(), "wrapping_accumulate length mismatch");
+    }
+    let n = acc.len();
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + CHUNK).min(n);
+        for v in vecs {
+            for (a, &b) in acc[j0..j1].iter_mut().zip(&v[j0..j1]) {
+                *a = a.wrapping_add(b);
+            }
+        }
+        j0 = j1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM kernels (bit-exact contract)
+// ---------------------------------------------------------------------------
+
+/// out (m×n) = a (m×k, row-major) · b (k×n, row-major), rows initialized
+/// to `bias` (broadcast) or zero. Blocked over k in [`KC`]-row windows of
+/// `b`; within a window every output row accumulates in ascending-k
+/// order, so each out element sees the exact per-element op sequence of
+/// the naive row walk. Zero `a` entries are skipped (sparse one-hot rows
+/// are common), matching the scalar reference bit-for-bit.
+pub fn gemm_block(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "gemm_block a shape");
+    let rows: Vec<usize> = (0..m).collect();
+    gemm_gather_block(a, &rows, k, b, n, bias, out);
+}
+
+/// [`gemm_block`] over a gathered row set: row `i` of the output reads
+/// row `rows[i]` of `a` (the batch-indexing form the models need —
+/// mini-batches are index sets, not contiguous slices).
+pub fn gemm_gather_block(
+    a: &[f32],
+    rows: &[usize],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(b.len(), k * n, "gemm_gather_block b shape");
+    assert_eq!(out.len(), rows.len() * n, "gemm_gather_block out shape");
+    match bias {
+        Some(bias) => {
+            assert_eq!(bias.len(), n, "gemm_gather_block bias shape");
+            for r in out.chunks_exact_mut(n) {
+                r.copy_from_slice(bias);
+            }
+        }
+        None => out.fill(0.0),
+    }
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + KC).min(k);
+        let bblock = &b[l0 * n..l1 * n];
+        for (i, &row) in rows.iter().enumerate() {
+            let arow = &a[row * k + l0..row * k + l1];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (l, &al) in arow.iter().enumerate() {
+                if al == 0.0 {
+                    continue;
+                }
+                axpy(orow, al, &bblock[l * n..(l + 1) * n]);
+            }
+        }
+        l0 = l1;
+    }
+}
+
+/// grad (k×n, row-major) += x ⊗ d (rank-1 outer-product accumulation):
+/// `grad[l·n + j] += x[l] · d[j]`. The inner j-loop is contiguous and
+/// unrolled — the scalar reference walks j-outer/l-inner, which writes
+/// with stride n and is the single worst access pattern in the seed
+/// `loss_grad`. Per element the contribution is the same single fused
+/// multiply-add, so swapping the nesting is bit-exact. Zero `x` entries
+/// skipped, as in the scalar reference.
+pub fn rank1_accumulate(grad: &mut [f32], x: &[f32], d: &[f32]) {
+    let n = d.len();
+    assert_eq!(grad.len(), x.len() * n, "rank1_accumulate shape");
+    for (l, &xl) in x.iter().enumerate() {
+        if xl == 0.0 {
+            continue;
+        }
+        axpy(&mut grad[l * n..(l + 1) * n], xl, d);
+    }
+}
+
+/// Positional one-hot expansion: token rows (rows × seq, row-major) →
+/// dense rows × (seq·vocab) with a single 1.0 per position. The blocked
+/// row-major fill keeps the (sparse) writes sequential per row.
+pub fn one_hot_expand(tokens: &[i32], seq: usize, vocab: usize, out: &mut [f32]) {
+    assert!(seq > 0, "one_hot_expand empty rows");
+    assert_eq!(tokens.len() % seq, 0, "one_hot_expand ragged tokens");
+    let dim = seq * vocab;
+    assert_eq!(out.len(), (tokens.len() / seq) * dim, "one_hot_expand out");
+    out.fill(0.0);
+    for (row, orow) in tokens.chunks_exact(seq).zip(out.chunks_exact_mut(dim)) {
+        for (pos, &t) in row.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < vocab, "token {t} out of vocab {vocab}");
+            orow[pos * vocab + t] = 1.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scratch arena
+// ---------------------------------------------------------------------------
+
+/// Per-worker scratch arena: every buffer the sim hot path needs,
+/// allocated once per shard worker (or per legacy-engine round) instead
+/// of per `local_pass` call. Fields are public so callers can borrow
+/// them disjointly; [`Scratch::ensure`] grows a buffer without
+/// reallocating once the high-water mark is reached.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// gradient accumulator (model dim)
+    pub grad: Vec<f32>,
+    /// local parameter vector for FedAvg inner loops (model dim)
+    pub y: Vec<f32>,
+    /// model workspace (batch × classes logits, etc.)
+    pub work: Vec<f32>,
+    /// epoch index order (shuffled once per epoch, reused across epochs)
+    pub idx: Vec<usize>,
+    /// wrap-around tail batch
+    pub tail: Vec<usize>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Resize `buf` to `n` elements. Contents are unspecified — stale
+    /// values are retained when the length already matches, so callers
+    /// must fully overwrite before reading. A no-op (not even a fill)
+    /// on the steady-state hot path where the size is stable.
+    pub fn ensure(buf: &mut Vec<f32>, n: usize) {
+        if buf.len() != n {
+            buf.clear();
+            buf.resize(n, 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar references
+// ---------------------------------------------------------------------------
+
+/// The pre-kernel scalar loops: the correctness oracle for the property
+/// tests and the baseline arm of the `bench kernels` suite.
+pub mod reference {
+    /// Sequential-fold squared norm (the seed `tensor::norm_sq`).
+    pub fn norm_sq(x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for &v in x {
+            acc += (v as f64) * (v as f64);
+        }
+        acc
+    }
+
+    /// Sequential-fold dot product (the seed `tensor::dot`).
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len(), "dot length mismatch");
+        let mut acc = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            acc += (*x as f64) * (*y as f64);
+        }
+        acc
+    }
+
+    /// Simple-loop axpy (the seed `tensor::axpy`).
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        assert_eq!(y.len(), x.len(), "axpy length mismatch");
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// Naive gathered mat-mul, row walk with zero-skip (the seed
+    /// `Logistic::logits` shape, generalized).
+    pub fn gemm_gather(
+        a: &[f32],
+        rows: &[usize],
+        k: usize,
+        b: &[f32],
+        n: usize,
+        bias: Option<&[f32]>,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), rows.len() * n, "gemm_gather out shape");
+        for (i, &row) in rows.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            match bias {
+                Some(bias) => orow.copy_from_slice(bias),
+                None => orow.fill(0.0),
+            }
+            for (l, &al) in a[row * k..(row + 1) * k].iter().enumerate() {
+                if al == 0.0 {
+                    continue;
+                }
+                for (o, &w) in orow.iter_mut().zip(&b[l * n..(l + 1) * n]) {
+                    *o += al * w;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+    use crate::util::rng::Rng;
+
+    fn vecf(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn prop_norm_sq_matches_reference() {
+        quick("kernel-norm-sq", |rng, _| {
+            let n = rng.range(0, 300);
+            let x = vecf(rng, n);
+            let k = norm_sq(&x);
+            let r = reference::norm_sq(&x);
+            if rel_close(k, r, 1e-6) {
+                Ok(())
+            } else {
+                Err(format!("{k} vs {r}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_dot_matches_reference() {
+        quick("kernel-dot", |rng, _| {
+            let n = rng.range(0, 300);
+            let a = vecf(rng, n);
+            let b = vecf(rng, n);
+            let k = dot(&a, &b);
+            let r = reference::dot(&a, &b);
+            if rel_close(k, r, 1e-6) {
+                Ok(())
+            } else {
+                Err(format!("{k} vs {r}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_axpy_bit_identical_to_reference() {
+        quick("kernel-axpy", |rng, _| {
+            let n = rng.range(0, 100);
+            let a = rng.normal_f32(0.0, 1.0);
+            let x = vecf(rng, n);
+            let mut y1 = vecf(rng, n);
+            let mut y2 = y1.clone();
+            axpy(&mut y1, a, &x);
+            reference::axpy(&mut y2, a, &x);
+            if y1 == y2 {
+                Ok(())
+            } else {
+                Err("axpy diverged from reference".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gemm_block_matches_reference() {
+        quick("kernel-gemm", |rng, case| {
+            let m = rng.range(1, 9);
+            let k = rng.range(1, 200);
+            let n = rng.range(1, 24);
+            let a: Vec<f32> = (0..m * k)
+                .map(|_| {
+                    // mix in exact zeros: the skip path must agree too
+                    if rng.bernoulli(0.3) {
+                        0.0
+                    } else {
+                        rng.normal_f32(0.0, 1.0)
+                    }
+                })
+                .collect();
+            let b = vecf(rng, k * n);
+            let bias = vecf(rng, n);
+            let with_bias = case % 2 == 0;
+            let bias_opt = if with_bias { Some(&bias[..]) } else { None };
+            let mut out_k = vec![0.0f32; m * n];
+            let mut out_r = vec![0.0f32; m * n];
+            gemm_block(m, k, n, &a, &b, bias_opt, &mut out_k);
+            let rows: Vec<usize> = (0..m).collect();
+            reference::gemm_gather(&a, &rows, k, &b, n, bias_opt, &mut out_r);
+            for (x, y) in out_k.iter().zip(&out_r) {
+                if !rel_close(*x as f64, *y as f64, 1e-6) {
+                    return Err(format!("{x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_gather_reads_the_right_rows() {
+        // a has 3 rows; gather rows [2, 0] with identity-ish b
+        let k = 2;
+        let n = 2;
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0]; // identity
+        let mut out = vec![0.0f32; 4];
+        gemm_gather_block(&a, &[2, 0], k, &b, n, None, &mut out);
+        assert_eq!(out, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_weighted_accumulate_bit_exact_to_sequential_axpy() {
+        quick("kernel-weighted-accumulate", |rng, _| {
+            let d = rng.range(1, 2500); // spans multiple CHUNK windows
+            let members = rng.range(1, 6);
+            let vecs: Vec<Vec<f32>> =
+                (0..members).map(|_| vecf(rng, d)).collect();
+            let weights: Vec<f32> =
+                (0..members).map(|_| rng.normal_f32(1.0, 0.5)).collect();
+            let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+            let mut acc_k = vec![0.0f32; d];
+            weighted_accumulate(&mut acc_k, &refs, &weights);
+            // the secure-aggregation ordering: fold members sequentially
+            let mut acc_r = vec![0.0f32; d];
+            for (v, &w) in vecs.iter().zip(&weights) {
+                reference::axpy(&mut acc_r, w, v);
+            }
+            if acc_k == acc_r {
+                Ok(())
+            } else {
+                Err("weighted_accumulate reordered the fold".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_accumulate_bit_exact_to_sequential_fold() {
+        quick("kernel-accumulate", |rng, _| {
+            let d = rng.range(1, 2500);
+            let members = rng.range(1, 6);
+            let vecs: Vec<Vec<f32>> =
+                (0..members).map(|_| vecf(rng, d)).collect();
+            let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+            let mut acc_k = vec![0.0f32; d];
+            accumulate(&mut acc_k, &refs);
+            let mut acc_r = vec![0.0f32; d];
+            for v in &vecs {
+                reference::axpy(&mut acc_r, 1.0, v);
+            }
+            if acc_k == acc_r {
+                Ok(())
+            } else {
+                Err("accumulate reordered the fold".into())
+            }
+        });
+    }
+
+    #[test]
+    fn wrapping_accumulate_matches_flat_wrapping_sum() {
+        let mut rng = Rng::new(11);
+        let d = 3000;
+        let vecs: Vec<Vec<u64>> = (0..5)
+            .map(|_| (0..d).map(|_| rng.next_u64()).collect())
+            .collect();
+        let refs: Vec<&[u64]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let mut acc = vec![0u64; d];
+        wrapping_accumulate(&mut acc, &refs);
+        for j in 0..d {
+            let want = vecs
+                .iter()
+                .fold(0u64, |s, v| s.wrapping_add(v[j]));
+            assert_eq!(acc[j], want, "lane {j}");
+        }
+    }
+
+    #[test]
+    fn rank1_accumulate_is_the_outer_product() {
+        let x = [2.0f32, 0.0, -1.0];
+        let d = [1.0f32, 3.0];
+        let mut grad = vec![0.5f32; 6];
+        rank1_accumulate(&mut grad, &x, &d);
+        assert_eq!(grad, vec![2.5, 6.5, 0.5, 0.5, -0.5, -2.5]);
+    }
+
+    #[test]
+    fn axpy_norm_sq_fuses_update_and_norm() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        let x = [1.0f32, 1.0, 1.0];
+        let ns = axpy_norm_sq(&mut y, 2.0, &x);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        assert!((ns - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_norm_sq_flags_non_finite() {
+        let mut y = vec![0.0f32; 9];
+        let mut x = vec![0.0f32; 9];
+        x[8] = f32::INFINITY; // in the unrolled tail
+        assert!(!axpy_norm_sq(&mut y, 1.0, &x).is_finite());
+        let mut y = vec![f32::NAN; 3];
+        assert!(!axpy_norm_sq(&mut y, 1.0, &[0.0; 3]).is_finite());
+    }
+
+    #[test]
+    fn one_hot_expand_places_ones() {
+        let tokens = [1i32, 0, 2, 2];
+        let mut out = vec![0.0f32; 2 * 2 * 3];
+        one_hot_expand(&tokens, 2, 3, &mut out);
+        assert_eq!(
+            out,
+            vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0]
+        );
+    }
+
+    #[test]
+    fn scaled_diff_componentwise() {
+        let mut out = vec![0.0f32; 3];
+        scaled_diff(&mut out, &[2.0, 3.0, 4.0], &[1.0, 1.0, 1.0], &[0.0, 1.0, 2.0]);
+        assert_eq!(out, vec![2.0, 0.0, -4.0]);
+    }
+
+    #[test]
+    fn scratch_ensure_reuses_capacity() {
+        let mut s = Scratch::new();
+        Scratch::ensure(&mut s.grad, 100);
+        assert_eq!(s.grad.len(), 100);
+        let cap = s.grad.capacity();
+        Scratch::ensure(&mut s.grad, 50);
+        Scratch::ensure(&mut s.grad, 100);
+        assert_eq!(s.grad.capacity(), cap, "ensure must not reallocate");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn accumulate_length_checked() {
+        accumulate(&mut [0.0; 2], &[&[1.0, 2.0, 3.0]]);
+    }
+}

@@ -3,17 +3,17 @@
 //!
 //! Everything here operates on `&[f32]` so the same code path serves the
 //! rust-native sim models and the PJRT-backed parameter vectors. The hot
-//! functions are written as simple indexed loops that LLVM auto-vectorizes
-//! (verified in the perf pass; see EXPERIMENTS.md §Perf).
+//! functions delegate to the blocked/unrolled [`kernels`] layer (scalar
+//! references and measured speedups: EXPERIMENTS.md §Perf); this module
+//! keeps the small assorted helpers and the stable call-site names.
 
-/// Squared L2 norm. f64 accumulator: client updates can have ~1e6 entries
-/// and the norm drives sampling probabilities, so precision matters.
+pub mod kernels;
+
+/// Squared L2 norm. f64 accumulators: client updates can have ~1e6
+/// entries and the norm drives sampling probabilities, so precision
+/// matters. 8-lane unrolled ([`kernels::norm_sq`]).
 pub fn norm_sq(x: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for &v in x {
-        acc += (v as f64) * (v as f64);
-    }
-    acc
+    kernels::norm_sq(x)
 }
 
 /// L2 norm.
@@ -22,11 +22,9 @@ pub fn norm(x: &[f32]) -> f64 {
 }
 
 /// y += a * x (the aggregation primitive: `Δx += (w_i/p_i)·Δ_i`).
+/// Unrolled; bit-identical to the scalar loop ([`kernels::axpy`]).
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    assert_eq!(y.len(), x.len(), "axpy length mismatch");
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    kernels::axpy(y, a, x);
 }
 
 /// y = a * y.
@@ -42,6 +40,12 @@ pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
     a.iter().zip(b).map(|(x, y)| x - y).collect()
 }
 
+/// Allocation-free [`sub`]: out = a - b into a caller-owned buffer (the
+/// FedAvg delta computation writes into its outcome buffer directly).
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    kernels::sub_into(out, a, b);
+}
+
 /// In-place a -= b.
 pub fn sub_assign(a: &mut [f32], b: &[f32]) {
     assert_eq!(a.len(), b.len(), "sub_assign length mismatch");
@@ -50,14 +54,10 @@ pub fn sub_assign(a: &mut [f32], b: &[f32]) {
     }
 }
 
-/// Dot product with f64 accumulator.
+/// Dot product with f64 accumulators, 8-lane unrolled
+/// ([`kernels::dot`]).
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    assert_eq!(a.len(), b.len(), "dot length mismatch");
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        acc += (*x as f64) * (*y as f64);
-    }
-    acc
+    kernels::dot(a, b)
 }
 
 /// Squared distance ‖a − b‖².
@@ -103,6 +103,9 @@ mod tests {
         let a = [5.0f32, 7.0];
         let b = [1.0f32, 2.0];
         assert_eq!(sub(&a, &b), vec![4.0, 5.0]);
+        let mut out = [0.0f32; 2];
+        sub_into(&mut out, &a, &b);
+        assert_eq!(out.to_vec(), sub(&a, &b));
         let mut c = a;
         sub_assign(&mut c, &b);
         assert_eq!(c.to_vec(), vec![4.0, 5.0]);

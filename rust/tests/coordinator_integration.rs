@@ -9,9 +9,12 @@ use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use fedsamp::coordinator::{
     Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
 };
+use fedsamp::data::ClientData;
 use fedsamp::fl::{train, TrainOptions};
 use fedsamp::metrics::RunResult;
-use fedsamp::sim::build_native_engine;
+use fedsamp::model::logistic::Logistic;
+use fedsamp::model::NativeModel;
+use fedsamp::sim::{build_native_engine, NativeEngine};
 
 fn cfg(strategy: Strategy) -> ExperimentConfig {
     ExperimentConfig {
@@ -94,6 +97,55 @@ fn assert_trajectories_identical(a: &RunResult, b: &RunResult, tag: &str) {
             ra.round
         );
     }
+}
+
+/// [`Logistic`] routed through the retained per-sample scalar reference
+/// gradient — the seed semantics, with the kernel layer bypassed.
+struct ScalarLogistic(Logistic);
+
+impl NativeModel for ScalarLogistic {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn loss_grad(
+        &self,
+        params: &[f32],
+        data: &ClientData,
+        batch: &[usize],
+        grad: &mut [f32],
+    ) -> f64 {
+        self.0.loss_grad_scalar(params, data, batch, grad)
+    }
+    fn loss(&self, params: &[f32], data: &ClientData) -> f64 {
+        self.0.loss(params, data)
+    }
+    fn accuracy(&self, params: &[f32], data: &ClientData) -> f64 {
+        self.0.accuracy(params, data)
+    }
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        self.0.init_params(seed)
+    }
+}
+
+#[test]
+fn kernelized_sim_reproduces_the_scalar_reference_trajectory() {
+    // the kernel layer's bit-exactness contract, end to end: a secure
+    // sim run on the batch GEMM + rank-1 gradient path must be
+    // bit-identical to the same run on the seed per-sample scalar path
+    let c = cfg(Strategy::Aocs { j_max: 4 });
+    assert!(c.secure_updates);
+    let kernel_run = reference(&c);
+    let proto = build_native_engine(&c);
+    let mut scalar_engine = NativeEngine::new(
+        ScalarLogistic(proto.model.clone()),
+        proto.dataset.clone(),
+        proto.algorithm.clone(),
+        proto.batch_size,
+        c.seed,
+    );
+    let scalar_run =
+        train(&c, &mut scalar_engine, &TrainOptions::default()).unwrap();
+    assert_trajectories_identical(&scalar_run, &kernel_run, "kernel vs scalar");
 }
 
 #[test]
