@@ -1,0 +1,16 @@
+//! Micro-bench: secure-aggregation masking cost, scalar-reference vs
+//! fused-kernel arms (roster size × dimension) plus secure-vs-plain sim
+//! rounds/sec.
+//!
+//! Thin wrapper over `exp::securebench` — the same suite the
+//! `fedsamp bench secure` CLI mode runs (which additionally emits
+//! `BENCH_secure.json`). Pass `--quick` for the 1-ish-iteration CI
+//! smoke mode: `cargo bench --bench micro_secure -- --quick`.
+
+use fedsamp::exp::securebench::run_secure_suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let doc = run_secure_suite(quick);
+    println!("\n{}", doc.to_pretty());
+}

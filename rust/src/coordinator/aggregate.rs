@@ -20,7 +20,7 @@
 
 use crate::secure_agg::SecureAggregator;
 use crate::tensor;
-use crate::tensor::kernels;
+use crate::tensor::kernels::{self, Scratch};
 
 /// One shard's partial aggregate.
 #[derive(Clone, Debug, PartialEq)]
@@ -105,6 +105,58 @@ where
     ShardPartial::Masked(acc)
 }
 
+/// One participant's upload staged for the masked fold: the owned update
+/// values (moved out of the round outcomes — the protocol no longer
+/// needs them once staged, so staging costs a pointer move, not a copy),
+/// the upload factor w_i/p_i, and the client id the pair mask streams
+/// derive from.
+#[derive(Clone, Debug)]
+pub struct MaskUpload {
+    pub client: u64,
+    pub factor: f32,
+    pub values: Vec<f32>,
+}
+
+/// One round's secure-aggregation work order: the agreed roster and
+/// round seed the pair streams derive from, and the participant uploads
+/// grouped by owning shard (cohort order within each group; shards with
+/// no participants already dropped). Shared read-only by every pool
+/// worker during the masked fan-out.
+#[derive(Clone, Debug)]
+pub struct MaskBatch {
+    pub dim: usize,
+    pub round_seed: u64,
+    pub roster: Vec<u64>,
+    pub groups: Vec<Vec<MaskUpload>>,
+}
+
+/// Mask + fold one shard group into a ring partial with the fused
+/// scale → encode → net-mask → accumulate kernel: one chunked pass per
+/// member, block PRG streams, no scaled copy and no per-member mask
+/// vector. Ring addition commutes and each pair stream is consumed in
+/// element order, so the partial is bit-identical to the scalar
+/// mask-then-[`masked_partial`] pipeline for any block size — which is
+/// what keeps the sharded secure trajectory exact.
+pub fn fused_masked_partial(
+    batch: &MaskBatch,
+    group: &[MaskUpload],
+    scratch: &mut Scratch,
+) -> Vec<u64> {
+    let agg = SecureAggregator::new(batch.round_seed);
+    let mut acc = vec![0u64; batch.dim];
+    for m in group {
+        agg.pair_streams_into(m.client, &batch.roster, &mut scratch.streams);
+        kernels::scale_encode_mask_accumulate(
+            &mut acc,
+            &m.values,
+            m.factor,
+            &mut scratch.streams,
+            &mut scratch.ring,
+        );
+    }
+    acc
+}
+
 /// Pairwise tree reduction over shard partials. The combine order is
 /// fixed by shard index — (0,1), (2,3), … then recursively — so results
 /// are deterministic for any shard count. Returns `None` on no shards.
@@ -180,6 +232,52 @@ mod tests {
                 "shards={shards}"
             );
         }
+    }
+
+    #[test]
+    fn fused_masked_partial_matches_scale_mask_fold_bitwise() {
+        // the fused kernel path vs the scalar pipeline it replaced:
+        // materialize the scaled copy, encode+mask per pair stream, fold
+        // member by member — must agree bitwise (dim spans ring blocks)
+        use crate::tensor::kernels::reference;
+        let dim = 700;
+        let data = vectors(5, dim, 21);
+        let roster: Vec<u64> = (0..5).collect();
+        let factors: Vec<f32> =
+            (0..5).map(|i| 0.4 + i as f32 * 0.21).collect();
+        let batch = MaskBatch {
+            dim,
+            round_seed: 77,
+            roster: roster.clone(),
+            groups: vec![roster
+                .iter()
+                .zip(&data)
+                .zip(&factors)
+                .map(|((&client, v), &factor)| MaskUpload {
+                    client,
+                    factor,
+                    values: v.clone(),
+                })
+                .collect()],
+        };
+        let got = fused_masked_partial(
+            &batch,
+            &batch.groups[0],
+            &mut Scratch::new(),
+        );
+
+        let agg = SecureAggregator::new(77);
+        let mut want = vec![0u64; dim];
+        for ((&client, v), &factor) in roster.iter().zip(&data).zip(&factors)
+        {
+            let mut streams = Vec::new();
+            agg.pair_streams_into(client, &roster, &mut streams);
+            let masked = reference::scale_encode_mask(v, factor, &mut streams);
+            for (a, &m) in want.iter_mut().zip(&masked) {
+                *a = a.wrapping_add(m);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

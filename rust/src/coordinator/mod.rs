@@ -10,8 +10,9 @@
 //!   `Announce → LocalCompute → NormReport → Negotiate → SecureAggregate
 //!   → Commit`, one phase per method, seed-trajectory-faithful;
 //! * [`shard`] — execution backends: [`EngineRunner`] adapts any legacy
-//!   [`ClientEngine`], [`ParallelRunner`] fans shard cohorts over a
-//!   persistent worker-thread pool;
+//!   [`ClientEngine`], [`ParallelRunner`] fans shard cohorts — and the
+//!   secure-aggregation masked folds — over a persistent
+//!   worker-thread pool;
 //! * [`aggregate`] — per-shard partial aggregation with a deterministic
 //!   tree combine (the combine stage reduces O(shards) partials instead
 //!   of folding O(clients) vectors — the seam a streaming master
@@ -110,7 +111,6 @@ impl Coordinator {
         if pool == 0 {
             return Err("empty client pool".into());
         }
-        let dim = runner.dim();
         let avail = Availability::from_probability(cfg.availability);
         let eta_g = match cfg.algorithm {
             Algorithm::FedAvg { eta_g, .. } => eta_g,
@@ -146,7 +146,7 @@ impl Coordinator {
                 cfg,
                 opts,
                 &registry,
-                dim,
+                runner,
                 &mut meter,
                 &mut round_rng,
             );

@@ -25,12 +25,11 @@ use crate::fl::comm::BitMeter;
 use crate::fl::{EvalOutcome, LocalOutcome, TrainOptions};
 use crate::metrics::RoundRecord;
 use crate::sampling::{probability, variance, Decision, Sampler};
-use crate::secure_agg::SecureAggregator;
 use crate::tensor;
 use crate::tensor::kernels;
 use crate::util::rng::Rng;
 
-use super::aggregate::{self, ShardPartial};
+use super::aggregate::{self, MaskBatch, MaskUpload, ShardPartial};
 use super::registry::Registry;
 use super::shard::LocalRunner;
 use super::DeadlinePolicy;
@@ -267,26 +266,104 @@ impl RoundMachine {
     /// (6) Participants upload `(w_i/p_i)·U_i`; shards fold their members
     /// into partial aggregates which the master tree-combines — the
     /// combine stage reduces O(shards) partials rather than folding
-    /// O(participants) vectors directly.
+    /// O(participants) vectors directly. Under `secure_updates` the
+    /// per-shard masked folds fan out over the runner's worker pool.
     pub fn secure_aggregate(
         &mut self,
         cfg: &ExperimentConfig,
         opts: &TrainOptions,
         registry: &Registry,
-        dim: usize,
+        runner: &mut dyn LocalRunner,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
     ) {
         self.expect(Phase::SecureAggregate);
+        let dim = runner.dim();
+        self.aggregate = if cfg.secure_updates {
+            self.masked_aggregate(cfg, opts, registry, runner, meter, round_rng)
+        } else {
+            self.plain_aggregate(opts, registry, dim, meter, round_rng)
+        };
+        self.phase = Phase::Commit;
+    }
+
+    /// The secure path: stage each participant's upload — moving the
+    /// update vector out of its outcome (dead after this phase) so no
+    /// copy is made — into a [`MaskBatch`] grouped by owning shard, then
+    /// let the runner mask + fold every group through the fused
+    /// scale → encode → mask → accumulate kernel (on its worker pool if
+    /// it has one). Ring sums commute, so the tree combine over the
+    /// returned partials is bit-identical to the seed's flat sum for any
+    /// shard/worker count. The compressor consumes the round RNG
+    /// sequentially in cohort order, exactly as the seed protocol did.
+    fn masked_aggregate(
+        &mut self,
+        cfg: &ExperimentConfig,
+        opts: &TrainOptions,
+        registry: &Registry,
+        runner: &mut dyn LocalRunner,
+        meter: &mut BitMeter,
+        round_rng: &mut Rng,
+    ) -> Vec<f32> {
+        let dim = runner.dim();
+        let decision = self.decision.as_ref().expect("negotiate ran");
+        let mut batch = MaskBatch {
+            dim,
+            round_seed: cfg.seed ^ self.round as u64,
+            roster: Vec::new(),
+            groups: vec![Vec::new(); registry.shards()],
+        };
+        for (i, o) in self.outcomes.iter_mut().enumerate() {
+            if !self.selected[i] {
+                continue;
+            }
+            let factor = (self.weights[i] / decision.probs[i]) as f32;
+            let values = match &opts.compressor {
+                Some(c) => c.apply(&o.delta, round_rng),
+                None => std::mem::take(&mut o.delta),
+            };
+            match &opts.compressor {
+                Some(c) => meter.add_compressed_update(values.len(), c),
+                None => meter.add_update(values.len()),
+            }
+            let client = self.cohort[i] as u64;
+            batch.roster.push(client);
+            batch.groups[registry.shard_of(self.cohort[i])]
+                .push(MaskUpload { client, factor, values });
+        }
+        self.transmitted = batch.roster.len();
+        if batch.roster.is_empty() {
+            return vec![0.0; dim];
+        }
+        // shards with no participants are dropped — their partials would
+        // merge as no-ops
+        batch.groups.retain(|g| !g.is_empty());
+        let partials: Vec<ShardPartial> = runner
+            .secure_partials(batch)
+            .into_iter()
+            .map(ShardPartial::Masked)
+            .collect();
+        aggregate::finish(
+            aggregate::tree_reduce(partials)
+                .expect("some shard has a participant"),
+        )
+    }
+
+    /// The plain-f32 path: uploads in cohort order (cohort position,
+    /// update vector, upload factor w_i/p_i). Uncompressed updates are
+    /// borrowed, not cloned — the fused weighted fold (`w·v`
+    /// multiply-adds round identically to the seed's scale-then-sum)
+    /// never materializes a scaled copy.
+    fn plain_aggregate(
+        &mut self,
+        opts: &TrainOptions,
+        registry: &Registry,
+        dim: usize,
+        meter: &mut BitMeter,
+        round_rng: &mut Rng,
+    ) -> Vec<f32> {
         let decision = self.decision.as_ref().expect("negotiate ran");
         let cohort = &self.cohort;
-
-        // uploads in cohort order: (cohort position, update vector,
-        // upload factor w_i/p_i). The compressor consumes the round RNG
-        // sequentially exactly as the seed protocol did; uncompressed
-        // updates are borrowed, not cloned — the plain path folds them
-        // through the fused weighted accumulate and never materializes a
-        // scaled copy.
         let uploads: Vec<(usize, Cow<'_, [f32]>, f32)> = self
             .outcomes
             .iter()
@@ -309,53 +386,16 @@ impl RoundMachine {
             }
         }
 
-        // group participants by owning shard in one pass (cohort order
-        // preserved within each group); shards with no participants are
-        // skipped — their partials would merge as no-ops
-        let mut by_shard: Vec<Vec<usize>> =
-            vec![Vec::new(); registry.shards()];
-        for (k, (i, _, _)) in uploads.iter().enumerate() {
-            by_shard[registry.shard_of(cohort[*i])].push(k);
-        }
-
-        let aggregate: Vec<f32> = if uploads.is_empty() {
+        let out = if uploads.is_empty() {
             vec![0.0; dim]
-        } else if cfg.secure_updates {
-            let agg = SecureAggregator::new(cfg.seed ^ self.round as u64);
-            let roster: Vec<u64> = uploads
-                .iter()
-                .map(|(i, _, _)| cohort[*i] as u64)
-                .collect();
-            // per-shard masked partials: ring sums commute, so the tree
-            // combine is bit-identical to the seed's flat sum. The ring
-            // encoding masks the *scaled* values, so the secure path
-            // materializes each member's scaled upload — into one
-            // reused buffer, consumed member-by-member by the fold.
-            let mut scaled: Vec<f32> = Vec::new();
-            let partials: Vec<ShardPartial> = by_shard
-                .iter()
-                .filter(|group| !group.is_empty())
-                .map(|group| {
-                    aggregate::masked_partial(
-                        dim,
-                        group.iter().map(|&k| {
-                            let (i, v, factor) = &uploads[k];
-                            scaled.clear();
-                            scaled.extend_from_slice(v);
-                            tensor::scale(&mut scaled, *factor);
-                            agg.mask(cohort[*i] as u64, &roster, &scaled)
-                        }),
-                    )
-                })
-                .collect();
-            aggregate::finish(
-                aggregate::tree_reduce(partials)
-                    .expect("some shard has a participant"),
-            )
         } else {
-            // fused weighted fold: w·v multiply-adds round identically
-            // to the seed's scale-then-sum, so this is bit-exact while
-            // skipping the per-participant scaled copy entirely
+            // group participants by owning shard in one pass (cohort
+            // order preserved within each group); empty shards skipped
+            let mut by_shard: Vec<Vec<usize>> =
+                vec![Vec::new(); registry.shards()];
+            for (k, (i, _, _)) in uploads.iter().enumerate() {
+                by_shard[registry.shard_of(cohort[*i])].push(k);
+            }
             let partials: Vec<ShardPartial> = by_shard
                 .iter()
                 .filter(|group| !group.is_empty())
@@ -372,10 +412,8 @@ impl RoundMachine {
                     .expect("some shard has a participant"),
             )
         };
-
         self.transmitted = transmitted;
-        self.aggregate = aggregate;
-        self.phase = Phase::Commit;
+        out
     }
 
     /// (7)+(8) Master update, divergence guard, metrics and (periodic)
@@ -547,7 +585,14 @@ mod tests {
         assert_eq!(m.phase(), Phase::Negotiate);
         m.negotiate(&sampler, &c, &mut meter, &mut round_rng);
         assert_eq!(m.phase(), Phase::SecureAggregate);
-        m.secure_aggregate(&c, &opts, &registry, 4, &mut meter, &mut round_rng);
+        m.secure_aggregate(
+            &c,
+            &opts,
+            &registry,
+            &mut runner,
+            &mut meter,
+            &mut round_rng,
+        );
         assert_eq!(m.phase(), Phase::Commit);
         let rec = m
             .commit(&c, &opts, 0.1, &mut x, &mut runner, &meter)

@@ -12,6 +12,11 @@
 //!   behind a mutex, plain-data replies) over a [`ClientCompute`]
 //!   backend. Results are placed by (shard, position), so trajectories
 //!   are independent of thread scheduling.
+//!
+//! The pool runs two job kinds: a client's local pass, and a shard
+//! group's secure-aggregation masked fold (`LocalRunner::secure_partials`
+//! — ring sums commute, so fanning the folds across workers is
+//! bit-exact; see DESIGN.md §6).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -19,6 +24,8 @@ use std::thread::JoinHandle;
 
 use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
 use crate::tensor::kernels::Scratch;
+
+use super::aggregate::{fused_masked_partial, MaskBatch};
 
 /// What the round state machine needs from an execution backend.
 pub trait LocalRunner {
@@ -36,6 +43,20 @@ pub trait LocalRunner {
         global: &[f32],
         shard_cohorts: &[Vec<usize>],
     ) -> Vec<Vec<LocalOutcome>>;
+    /// Secure-aggregation fan-out: mask + fold every shard group of
+    /// `batch` into a ring partial (one per group, aligned with
+    /// `batch.groups`). Ring sums commute, so *where* each group is
+    /// folded never changes the combined bits. The default runs the
+    /// fused kernel sequentially on the calling thread; pooled runners
+    /// distribute groups over their workers.
+    fn secure_partials(&mut self, batch: MaskBatch) -> Vec<Vec<u64>> {
+        let mut scratch = Scratch::new();
+        batch
+            .groups
+            .iter()
+            .map(|g| fused_masked_partial(&batch, g, &mut scratch))
+            .collect()
+    }
     /// Evaluate global parameters on the validation split.
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome;
 }
@@ -65,14 +86,16 @@ pub trait ClientCompute: Send + Sync + 'static {
 // ---------------------------------------------------------------------------
 
 /// [`LocalRunner`] over a `&mut dyn ClientEngine` (single-threaded per
-/// shard; the engine may parallelize internally).
+/// shard; the engine may parallelize internally). Owns one scratch arena
+/// for the masked fold, allocated once for the runner's lifetime.
 pub struct EngineRunner<'a> {
     engine: &'a mut dyn ClientEngine,
+    scratch: Scratch,
 }
 
 impl<'a> EngineRunner<'a> {
     pub fn new(engine: &'a mut dyn ClientEngine) -> EngineRunner<'a> {
-        EngineRunner { engine }
+        EngineRunner { engine, scratch: Scratch::new() }
     }
 }
 
@@ -112,6 +135,14 @@ impl LocalRunner for EngineRunner<'_> {
             .collect()
     }
 
+    fn secure_partials(&mut self, batch: MaskBatch) -> Vec<Vec<u64>> {
+        batch
+            .groups
+            .iter()
+            .map(|g| fused_masked_partial(&batch, g, &mut self.scratch))
+            .collect()
+    }
+
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
         self.engine.evaluate(global)
     }
@@ -121,18 +152,33 @@ impl LocalRunner for EngineRunner<'_> {
 // worker pool (channel pattern from runtime::engine)
 // ---------------------------------------------------------------------------
 
-struct ShardJob {
-    shard: usize,
-    pos: usize,
-    client: usize,
-    round: usize,
-    global: Arc<Vec<f32>>,
+/// The two job kinds a pool worker runs: one client's local pass, or one
+/// shard group's masked fold (secure aggregation). Both use the worker's
+/// own scratch arena.
+enum ShardJob {
+    Local {
+        shard: usize,
+        pos: usize,
+        client: usize,
+        round: usize,
+        global: Arc<Vec<f32>>,
+    },
+    MaskFold {
+        group: usize,
+        batch: Arc<MaskBatch>,
+    },
 }
 
-struct ShardReply {
-    shard: usize,
-    pos: usize,
-    outcome: LocalOutcome,
+enum ShardReply {
+    Local {
+        shard: usize,
+        pos: usize,
+        outcome: LocalOutcome,
+    },
+    MaskFold {
+        group: usize,
+        partial: Vec<u64>,
+    },
 }
 
 struct ShardPool {
@@ -161,16 +207,30 @@ impl ShardPool {
                     // one arena per worker, alive for the pool's lifetime
                     let mut scratch = Scratch::new();
                     while let Ok(job) = recv_job(&job_rx) {
-                        let outcome = compute.local_one(
-                            job.round,
-                            &job.global,
-                            job.client,
-                            &mut scratch,
-                        );
-                        let reply = ShardReply {
-                            shard: job.shard,
-                            pos: job.pos,
-                            outcome,
+                        let reply = match job {
+                            ShardJob::Local {
+                                shard,
+                                pos,
+                                client,
+                                round,
+                                global,
+                            } => {
+                                let outcome = compute.local_one(
+                                    round,
+                                    &global,
+                                    client,
+                                    &mut scratch,
+                                );
+                                ShardReply::Local { shard, pos, outcome }
+                            }
+                            ShardJob::MaskFold { group, batch } => {
+                                let partial = fused_masked_partial(
+                                    &batch,
+                                    &batch.groups[group],
+                                    &mut scratch,
+                                );
+                                ShardReply::MaskFold { group, partial }
+                            }
                         };
                         if rep_tx.send(reply).is_err() {
                             break;
@@ -266,7 +326,7 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
         for (shard, clients) in shard_cohorts.iter().enumerate() {
             for (pos, &client) in clients.iter().enumerate() {
                 pool.jobs
-                    .send(ShardJob {
+                    .send(ShardJob::Local {
                         shard,
                         pos,
                         client,
@@ -280,13 +340,59 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
         let mut out: Vec<Vec<Option<LocalOutcome>>> =
             shard_cohorts.iter().map(|c| vec![None; c.len()]).collect();
         for _ in 0..total {
-            let rep = pool.replies.recv().expect("shard pool dead");
-            debug_assert!(out[rep.shard][rep.pos].is_none());
-            out[rep.shard][rep.pos] = Some(rep.outcome);
+            match pool.replies.recv().expect("shard pool dead") {
+                ShardReply::Local { shard, pos, outcome } => {
+                    debug_assert!(out[shard][pos].is_none());
+                    out[shard][pos] = Some(outcome);
+                }
+                ShardReply::MaskFold { .. } => {
+                    panic!("mask-fold reply during local compute")
+                }
+            }
         }
         out.into_iter()
             .map(|v| v.into_iter().map(Option::unwrap).collect())
             .collect()
+    }
+
+    /// Fan the per-shard masked folds out over the worker pool: one
+    /// `MaskFold` job per group, each worker folding its group
+    /// into one ring accumulator with its own scratch arena. Partials
+    /// land by group index, and ring sums commute, so the combined
+    /// result is bit-identical to the sequential fold for any worker
+    /// count or completion order.
+    fn secure_partials(&mut self, batch: MaskBatch) -> Vec<Vec<u64>> {
+        let Some(pool) = &self.pool else {
+            // inline path: the runner-owned arena, as in run_shards
+            let mut out = Vec::with_capacity(batch.groups.len());
+            for g in &batch.groups {
+                out.push(fused_masked_partial(&batch, g, &mut self.scratch));
+            }
+            return out;
+        };
+        let total = batch.groups.len();
+        let batch = Arc::new(batch);
+        for group in 0..total {
+            pool.jobs
+                .send(ShardJob::MaskFold {
+                    group,
+                    batch: Arc::clone(&batch),
+                })
+                .expect("shard pool dead");
+        }
+        let mut out: Vec<Option<Vec<u64>>> = vec![None; total];
+        for _ in 0..total {
+            match pool.replies.recv().expect("shard pool dead") {
+                ShardReply::MaskFold { group, partial } => {
+                    debug_assert!(out[group].is_none());
+                    out[group] = Some(partial);
+                }
+                ShardReply::Local { .. } => {
+                    panic!("local reply during mask fold")
+                }
+            }
+        }
+        out.into_iter().map(Option::unwrap).collect()
     }
 
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
@@ -377,6 +483,37 @@ mod tests {
                 assert_eq!(out[shard][pos].examples, client + 1);
             }
         }
+    }
+
+    #[test]
+    fn pooled_and_inline_secure_partials_agree_bitwise() {
+        use super::super::aggregate::MaskUpload;
+        use crate::util::rng::Rng;
+        let dim = 300; // spans ring blocks
+        let mut rng = Rng::new(41);
+        let roster: Vec<u64> = (0..7).collect();
+        let mut groups = vec![Vec::new(), Vec::new(), Vec::new()];
+        for (k, &client) in roster.iter().enumerate() {
+            groups[k % 3].push(MaskUpload {
+                client,
+                factor: 0.5 + k as f32 * 0.1,
+                values: (0..dim)
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect(),
+            });
+        }
+        let batch = MaskBatch {
+            dim,
+            round_seed: 99,
+            roster,
+            groups,
+        };
+        let mut inline = ParallelRunner::new(TagCompute { n: 8, dim }, 1);
+        let mut pooled = ParallelRunner::new(TagCompute { n: 8, dim }, 3);
+        let a = inline.secure_partials(batch.clone());
+        let b = pooled.secure_partials(batch);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 pub mod figures;
 pub mod kernelbench;
+pub mod securebench;
 
 use crate::config::{presets, ExperimentConfig, Strategy};
 use crate::data;

@@ -1,0 +1,238 @@
+//! The `bench secure` suite: scalar-reference vs fused-kernel secure
+//! aggregation masking (ns/element across roster size × dimension) plus
+//! secure-vs-plain end-to-end sim rounds/sec — the regression harness
+//! for the privacy-preserving path (EXPERIMENTS.md §Perf).
+//!
+//! Shared by the `fedsamp bench secure` CLI mode (which also emits
+//! `BENCH_secure.json`) and `benches/micro_secure.rs`. Both arms of
+//! every comparison are measured in the same process in the same run,
+//! so machine variance cancels out of the speedup ratios.
+//!
+//! The scalar arm is the pre-kernel pipeline retained in
+//! `kernels::reference`: materialize the scaled copy, fixed-point
+//! encode, one full-vector pass with one PRG call per element per pair,
+//! then fold the masked vector into the shard accumulator. The kernel
+//! arm is the fused `scale_encode_mask_accumulate` (block PRG draws, no
+//! scaled copy, no mask vector) — bit-identical by the property tests,
+//! so the comparison is pure speed.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use crate::bench::Bench;
+use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use crate::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
+use crate::fl::{train, TrainOptions};
+use crate::secure_agg::SecureAggregator;
+use crate::sim::build_native_engine;
+use crate::tensor::kernels::{self, reference, Scratch};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Roster sizes the masking comparison is swept over.
+pub const PARTICIPANTS: [usize; 3] = [8, 32, 128];
+
+/// Update dimensions the masking comparison is swept over.
+pub const DIMS: [usize; 2] = [1_000, 100_000];
+
+/// One scalar-vs-kernel masking comparison: the cost of masking one
+/// participant's update against a roster of `participants` members.
+#[derive(Clone, Debug)]
+pub struct MaskMeasurement {
+    pub participants: usize,
+    pub dim: usize,
+    pub scalar_ns_per_element: f64,
+    pub kernel_ns_per_element: f64,
+}
+
+impl MaskMeasurement {
+    pub fn speedup(&self) -> f64 {
+        self.scalar_ns_per_element / self.kernel_ns_per_element
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("participants", Json::num(self.participants as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("scalar_ns_per_element", Json::num(self.scalar_ns_per_element)),
+            ("kernel_ns_per_element", Json::num(self.kernel_ns_per_element)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+fn bench(group: &str, quick: bool) -> Bench {
+    let min_time = if quick {
+        Duration::from_millis(1)
+    } else {
+        Duration::from_millis(200)
+    };
+    Bench::new(group).with_min_time(min_time)
+}
+
+/// Mask-one-participant cost, scalar pipeline vs fused kernel, across
+/// [`PARTICIPANTS`] × [`DIMS`]. Stream derivation is measured inside
+/// both arms — the round pays it per member either way.
+fn mask_measurements(quick: bool) -> Vec<MaskMeasurement> {
+    let mut rng = Rng::new(0x5EC0);
+    let mut out = Vec::new();
+    for &m in &PARTICIPANTS {
+        for &dim in &DIMS {
+            let b = bench(&format!("secure/mask m={m},d={dim}"), quick);
+            let agg = SecureAggregator::new(0xA6);
+            let roster: Vec<u64> = (0..m as u64).collect();
+            let values: Vec<f32> =
+                (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let factor = 0.7f32;
+            let mut acc = vec![0u64; dim];
+
+            // scalar arm: scaled copy + encode + per-element PRG passes
+            // + separate masked fold (the pre-kernel pipeline)
+            let mut streams = Vec::new();
+            let scalar_ns = b.run("scalar", || {
+                agg.pair_streams_into(0, &roster, &mut streams);
+                let masked = reference::scale_encode_mask(
+                    black_box(&values),
+                    factor,
+                    &mut streams,
+                );
+                kernels::wrapping_accumulate(&mut acc, &[masked.as_slice()]);
+            });
+
+            // kernel arm: one fused chunked pass over a reused arena
+            let mut scratch = Scratch::new();
+            let kernel_ns = b.run("kernel", || {
+                agg.pair_streams_into(0, &roster, &mut scratch.streams);
+                kernels::scale_encode_mask_accumulate(
+                    &mut acc,
+                    black_box(&values),
+                    factor,
+                    &mut scratch.streams,
+                    &mut scratch.ring,
+                );
+            });
+
+            out.push(MaskMeasurement {
+                participants: m,
+                dim,
+                scalar_ns_per_element: scalar_ns / dim as f64,
+                kernel_ns_per_element: kernel_ns / dim as f64,
+            });
+        }
+    }
+    out
+}
+
+/// Shard/worker provisioning for the pooled sim arm: enough shards to
+/// give every worker a masked fold per round.
+const POOLED_SHARDS: usize = 4;
+const POOLED_WORKERS: usize = 3;
+
+/// End-to-end sim rounds/sec with secure aggregation on vs off — the
+/// number that shows what the privacy-preserving configuration costs
+/// over the plain path. `workers > 1` routes the run through the
+/// sharded coordinator's worker pool, exercising the `MaskFold`
+/// fan-out (trajectory-identical to the inline path — ring sums
+/// commute — so the arms differ only in execution).
+fn sim_rounds_per_sec(
+    secure: bool,
+    workers: usize,
+    quick: bool,
+) -> (f64, usize) {
+    let rounds = if quick { 2 } else { 10 };
+    let tag = match (secure, workers > 1) {
+        (true, true) => "secure_pooled",
+        (true, false) => "secure",
+        (false, _) => "plain",
+    };
+    let cfg = ExperimentConfig {
+        name: format!("bench_secure_sim_{tag}"),
+        seed: 9,
+        rounds,
+        cohort: 16,
+        budget: 4,
+        strategy: Strategy::Aocs { j_max: 4 },
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: rounds,
+        eval_examples: 128,
+        workers,
+        secure_updates: secure,
+        availability: 1.0,
+    };
+    let b = bench("secure/sim", quick);
+    let name = format!("{tag}_rounds");
+    let ns = if workers > 1 {
+        let engine = build_native_engine(&cfg);
+        let mut runner = ParallelRunner::new(engine, workers);
+        let mut coordinator = Coordinator::new(CoordinatorOptions {
+            shards: POOLED_SHARDS,
+            deadline: None,
+        });
+        b.run(&name, || {
+            let run = coordinator
+                .run(&cfg, &mut runner, &TrainOptions::default())
+                .unwrap();
+            black_box(run);
+        })
+    } else {
+        let mut engine = build_native_engine(&cfg);
+        b.run(&name, || {
+            let run =
+                train(&cfg, &mut engine, &TrainOptions::default()).unwrap();
+            black_box(run);
+        })
+    };
+    (rounds as f64 / (ns * 1e-9), rounds)
+}
+
+/// Run the full suite; returns the `BENCH_secure.json` document.
+pub fn run_secure_suite(quick: bool) -> Json {
+    let masks = mask_measurements(quick);
+    let (secure_rps, rounds) = sim_rounds_per_sec(true, 1, quick);
+    let (pooled_rps, _) = sim_rounds_per_sec(true, POOLED_WORKERS, quick);
+    let (plain_rps, _) = sim_rounds_per_sec(false, 1, quick);
+    println!(
+        "\nsim throughput: secure {secure_rps:.2} (pooled {pooled_rps:.2}, \
+         {POOLED_WORKERS} workers/{POOLED_SHARDS} shards) vs plain \
+         {plain_rps:.2} rounds/sec ({rounds}-round FedAvg, pool=40)"
+    );
+    for m in &masks {
+        println!(
+            "mask m={:>3} d={:>6}: {:.2}x kernel speedup \
+             ({:.2} -> {:.2} ns/element)",
+            m.participants,
+            m.dim,
+            m.speedup(),
+            m.scalar_ns_per_element,
+            m.kernel_ns_per_element
+        );
+    }
+    Json::obj(vec![
+        ("bench", Json::str("secure")),
+        ("quick", Json::Bool(quick)),
+        (
+            "mask",
+            Json::Arr(masks.iter().map(MaskMeasurement::to_json).collect()),
+        ),
+        (
+            "sim_rounds_per_sec",
+            Json::obj(vec![
+                ("config", Json::str("fedavg_femnist40")),
+                ("rounds_per_run", Json::num(rounds as f64)),
+                ("secure", Json::num(secure_rps)),
+                ("secure_pooled", Json::num(pooled_rps)),
+                ("pooled_workers", Json::num(POOLED_WORKERS as f64)),
+                ("pooled_shards", Json::num(POOLED_SHARDS as f64)),
+                ("plain", Json::num(plain_rps)),
+                ("secure_over_plain", Json::num(secure_rps / plain_rps)),
+            ]),
+        ),
+    ])
+}

@@ -54,7 +54,7 @@ fn print_usage() {
            coordinate  sharded round coordinator (--shards/--workers)\n\
            figures     regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
            sweep       theory sweeps (budget m, step size)\n\
-           bench       perf suites (kernels → BENCH_kernels.json)\n\
+           bench       perf suites (kernels|secure → BENCH_<suite>.json)\n\
            inspect     show artifacts + dataset statistics\n\n\
          Run `fedsamp <subcommand> --help` for options."
     );
@@ -400,9 +400,10 @@ fn cmd_bench(args: &[String]) -> i32 {
     let cli = Cli::new(
         "fedsamp bench",
         "perf suites; `bench kernels` measures scalar vs kernelized hot \
-         loops and emits BENCH_kernels.json",
+         loops, `bench secure` the secure-aggregation masking pipeline; \
+         each emits BENCH_<suite>.json",
     )
-    .opt("suite", None, "suite name (or positional): kernels")
+    .opt("suite", None, "suite name (or positional): kernels, secure")
     .opt("out", Some("."), "directory for BENCH_<suite>.json")
     .flag("quick", "1-ish iteration per bench (CI smoke mode)");
     let p = parse_or_exit(&cli, args);
@@ -411,31 +412,34 @@ fn cmd_bench(args: &[String]) -> i32 {
         .map(String::from)
         .or_else(|| p.positionals.first().cloned())
         .unwrap_or_else(|| "kernels".into());
-    match suite.as_str() {
+    let doc = match suite.as_str() {
         "kernels" => {
-            let doc = fedsamp::exp::kernelbench::run_kernel_suite(
-                p.flag("quick"),
-            );
-            let dir = p.str("out");
-            if let Err(e) = std::fs::create_dir_all(&dir) {
-                eprintln!("cannot create {dir}: {e}");
-                return 1;
-            }
-            let path = format!("{dir}/BENCH_kernels.json");
-            match std::fs::write(&path, doc.to_pretty()) {
-                Ok(()) => {
-                    println!("saved {path}");
-                    0
-                }
-                Err(e) => {
-                    eprintln!("save failed: {e}");
-                    1
-                }
-            }
+            fedsamp::exp::kernelbench::run_kernel_suite(p.flag("quick"))
+        }
+        "secure" => {
+            fedsamp::exp::securebench::run_secure_suite(p.flag("quick"))
         }
         other => {
-            eprintln!("unknown bench suite '{other}' (available: kernels)");
-            2
+            eprintln!(
+                "unknown bench suite '{other}' (available: kernels, secure)"
+            );
+            return 2;
+        }
+    };
+    let dir = p.str("out");
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("cannot create {dir}: {e}");
+        return 1;
+    }
+    let path = format!("{dir}/BENCH_{suite}.json");
+    match std::fs::write(&path, doc.to_pretty()) {
+        Ok(()) => {
+            println!("saved {path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("save failed: {e}");
+            1
         }
     }
 }

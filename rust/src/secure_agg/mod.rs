@@ -18,25 +18,21 @@
 //! Dropout recovery (Bonawitz §4.2, simplified): if a client drops after
 //! masks were committed, the surviving mask residue is reconstructed from
 //! the pairwise seeds and removed — see [`SecureAggregator::recover`].
+//!
+//! All masking rides the blocked ring kernels of `tensor::kernels`
+//! (`fill_u64` block PRG draws + the fused
+//! `scale_encode_mask_accumulate`); each pair stream is consumed in
+//! element order, so the block walk is bit-identical to the per-element
+//! scalar pipeline retained in `kernels::reference` (DESIGN.md §6).
 
-use crate::tensor::kernels;
+use crate::tensor::kernels::{self, MaskStream};
 use crate::util::rng::Rng;
 
-/// Fixed-point scale: 2^24 keeps |value| < ~1.1e12/2^24 ≈ 65k exactly
-/// representable with 24 fractional bits — far beyond gradient ranges.
-const SCALE: f64 = (1u64 << 24) as f64;
-
-/// Encode an f32 into the ring.
-#[inline]
-pub fn encode(x: f32) -> u64 {
-    ((x as f64 * SCALE).round() as i64) as u64
-}
-
-/// Decode a ring element (interpreting as signed) back to f32.
-#[inline]
-pub fn decode(v: u64) -> f32 {
-    ((v as i64) as f64 / SCALE) as f32
-}
+// The fixed-point ring codec lives with the ring kernels that consume
+// it (`tensor::kernels::{SCALE, encode, decode}` — 24 fractional bits,
+// representable for |x| < 2^39, debug-guarded); re-exported here as the
+// protocol-facing names.
+pub use crate::tensor::kernels::{decode, encode};
 
 /// Round-scoped aggregator context.
 ///
@@ -63,27 +59,46 @@ impl SecureAggregator {
         )
     }
 
-    /// Mask a client's contribution. `participants` must be the agreed
-    /// round roster (sorted or not); `id` must appear in it.
-    pub fn mask(&self, id: u64, participants: &[u64], values: &[f32]) -> Vec<u64> {
+    /// Derive `id`'s pairwise mask streams against the round roster into
+    /// a reused buffer (one stream per other member, roster order; i<j
+    /// adds, i>j subtracts). The streams feed the blocked ring kernels —
+    /// each is consumed strictly in element order, so block draws
+    /// reproduce the per-element scalar walk exactly.
+    pub fn pair_streams_into(
+        &self,
+        id: u64,
+        participants: &[u64],
+        out: &mut Vec<MaskStream>,
+    ) {
         assert!(participants.contains(&id), "client {id} not in roster");
-        let mut out: Vec<u64> = values.iter().map(|&x| encode(x)).collect();
+        out.clear();
         for &other in participants {
             if other == id {
                 continue;
             }
-            let mut prg = self.pair_rng(id, other);
-            // deterministic per-pair stream; i<j adds, i>j subtracts
-            if id < other {
-                for v in out.iter_mut() {
-                    *v = v.wrapping_add(prg.next_u64());
-                }
-            } else {
-                for v in out.iter_mut() {
-                    *v = v.wrapping_sub(prg.next_u64());
-                }
-            }
+            out.push(MaskStream {
+                rng: self.pair_rng(id, other),
+                add: id < other,
+            });
         }
+    }
+
+    /// Mask a client's contribution. `participants` must be the agreed
+    /// round roster (sorted or not); `id` must appear in it. Rides the
+    /// fused block kernel; bit-identical to the scalar pipeline retained
+    /// in `kernels::reference::scale_encode_mask`.
+    pub fn mask(&self, id: u64, participants: &[u64], values: &[f32]) -> Vec<u64> {
+        let mut streams = Vec::new();
+        self.pair_streams_into(id, participants, &mut streams);
+        let mut out = vec![0u64; values.len()];
+        let mut block = Vec::new();
+        kernels::scale_encode_mask_accumulate(
+            &mut out,
+            values,
+            1.0,
+            &mut streams,
+            &mut block,
+        );
         out
     }
 
@@ -105,7 +120,8 @@ impl SecureAggregator {
 
     /// Remove the residue left by dropped clients: for each dropped d and
     /// surviving s, the mask PRG(s,d) did not cancel; reconstruct and
-    /// subtract it.
+    /// subtract it (blocked stream fold — the survivor added the stream
+    /// when s < d, so removal inverts the pair sign).
     pub fn recover(
         &self,
         sum: &mut [u64],
@@ -115,15 +131,7 @@ impl SecureAggregator {
         for &s in survivors {
             for &d in dropped {
                 let mut prg = self.pair_rng(s, d);
-                if s < d {
-                    for v in sum.iter_mut() {
-                        *v = v.wrapping_sub(prg.next_u64());
-                    }
-                } else {
-                    for v in sum.iter_mut() {
-                        *v = v.wrapping_add(prg.next_u64());
-                    }
-                }
+                kernels::mask_stream_accumulate(sum, &mut prg, s > d);
             }
         }
     }
@@ -133,17 +141,29 @@ impl SecureAggregator {
         sum.iter().map(|&v| decode(v)).collect()
     }
 
-    /// Convenience: securely aggregate scalars (the AOCS negotiation path).
+    /// Convenience: securely aggregate scalars (the AOCS negotiation
+    /// path). One reused ring accumulator + stream buffer — no per-client
+    /// masked vector materializes; the masks telescope inside the fold
+    /// (ring addition commutes, so the fold order is immaterial).
     pub fn aggregate_scalars(
         &self,
         inputs: &[(u64, f32)],
     ) -> f32 {
         let roster: Vec<u64> = inputs.iter().map(|(id, _)| *id).collect();
-        let masked: Vec<Vec<u64>> = inputs
-            .iter()
-            .map(|(id, x)| self.mask(*id, &roster, &[*x]))
-            .collect();
-        decode(Self::sum(&masked)[0])
+        let mut acc = [0u64; 1];
+        let mut streams = Vec::new();
+        let mut block = Vec::new();
+        for &(id, x) in inputs {
+            self.pair_streams_into(id, &roster, &mut streams);
+            kernels::scale_encode_mask_accumulate(
+                &mut acc,
+                &[x],
+                1.0,
+                &mut streams,
+                &mut block,
+            );
+        }
+        decode(acc[0])
     }
 }
 
@@ -157,6 +177,46 @@ mod tests {
         for x in [0.0f32, 1.0, -1.0, 3.14159, -1234.5678, 1e-6] {
             let y = decode(encode(x));
             assert!((x - y).abs() < 1e-6, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "fixed-point overflow")]
+    fn encode_overflow_is_detected() {
+        // 1e12 > 2^39 ≈ 5.5e11: outside the representable range, the i64
+        // cast would silently saturate — the debug guard must fire
+        let _ = encode(1.0e12);
+    }
+
+    #[test]
+    fn encode_round_trips_near_the_range_boundary() {
+        // just inside |x| < 2^39: the encoding stays exact in the ring
+        for x in [5.0e11f32, -5.0e11] {
+            let y = decode(encode(x));
+            assert!(
+                ((x - y) / x).abs() < 1e-6,
+                "boundary round trip {x} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernelized_mask_matches_scalar_reference() {
+        // mask rides the fused block kernel; the retained scalar pipeline
+        // (scale copy → encode → per-pair full passes) must agree bitwise
+        use crate::tensor::kernels::reference;
+        let agg = SecureAggregator::new(31);
+        let roster = [3u64, 9, 27, 81];
+        let mut rng = Rng::new(5);
+        let vals: Vec<f32> =
+            (0..700).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        for &id in &roster {
+            let kernel = agg.mask(id, &roster, &vals);
+            let mut streams = Vec::new();
+            agg.pair_streams_into(id, &roster, &mut streams);
+            let scalar = reference::scale_encode_mask(&vals, 1.0, &mut streams);
+            assert_eq!(kernel, scalar, "client {id}");
         }
     }
 

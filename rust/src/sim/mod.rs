@@ -25,6 +25,10 @@ pub struct NativeEngine<M: NativeModel> {
     pub algorithm: Algorithm,
     pub batch_size: usize,
     seed: u64,
+    /// engine-owned arena for the legacy [`ClientEngine::run_local`]
+    /// path — allocated once for the engine's lifetime, matching the
+    /// pool workers' allocate-once contract (DESIGN.md §5)
+    scratch: Scratch,
 }
 
 impl<M: NativeModel> NativeEngine<M> {
@@ -35,7 +39,14 @@ impl<M: NativeModel> NativeEngine<M> {
         batch_size: usize,
         seed: u64,
     ) -> Self {
-        NativeEngine { model, dataset, algorithm, batch_size, seed }
+        NativeEngine {
+            model,
+            dataset,
+            algorithm,
+            batch_size,
+            seed,
+            scratch: Scratch::new(),
+        }
     }
 
     /// One client's local work, allocation-free on the hot path: the
@@ -193,12 +204,15 @@ impl<M: NativeModel> ClientEngine for NativeEngine<M> {
         global: &[f32],
         cohort: &[usize],
     ) -> Vec<LocalOutcome> {
-        // one scratch arena for the whole cohort sweep
-        let mut scratch = Scratch::new();
-        cohort
+        // the engine-owned arena serves the whole cohort sweep (taken
+        // and restored around the borrow of `self`; a move, not a copy)
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let outs = cohort
             .iter()
             .map(|&id| self.local_pass(round, global, id, &mut scratch))
-            .collect()
+            .collect();
+        self.scratch = scratch;
+        outs
     }
 
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {

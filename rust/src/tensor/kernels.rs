@@ -19,6 +19,8 @@
 //! The scalar references live in [`reference`] and stay the baseline arm
 //! of `benches/micro_kernels.rs` / `fedsamp bench kernels`.
 
+use crate::util::rng::Rng;
+
 /// Elements per unrolled lane group. Eight f32 lanes fill a 256-bit
 /// vector register; LLVM maps the fixed-size chunk bodies to packed ops.
 const LANES: usize = 8;
@@ -236,6 +238,132 @@ pub fn wrapping_accumulate(acc: &mut [u64], vecs: &[&[u64]]) {
 }
 
 // ---------------------------------------------------------------------------
+// secure-aggregation ring kernels (bit-exact contract)
+// ---------------------------------------------------------------------------
+
+/// Window length (ring elements) for the blocked mask kernels: the
+/// encode block + PRG block (2 KB each) plus the accumulator and value
+/// windows stay in L1 while every pair stream is folded in.
+const RING_BLOCK: usize = 256;
+
+/// Fixed-point scale of the Z_2^64 ring encoding: 24 fractional bits.
+/// The representable range is |x| < 2^63 / SCALE = 2^39 ≈ 5.5e11 — far
+/// beyond gradient ranges. Outside it the `f64 → i64` cast in
+/// [`encode`] saturates silently and the ring sum is wrong without any
+/// error, so `encode` guards the range with a debug assertion.
+const SCALE: f64 = (1u64 << 24) as f64;
+
+/// Encode an f32 into the ring (re-exported as `secure_agg::encode`,
+/// the protocol-facing name). Debug builds reject values outside the
+/// representable range (|x| ≥ 2^39, where the i64 cast would silently
+/// saturate — see [`SCALE`]).
+#[inline]
+pub fn encode(x: f32) -> u64 {
+    let scaled = x as f64 * SCALE;
+    debug_assert!(
+        scaled.abs() < i64::MAX as f64,
+        "fixed-point overflow: |{x}| ≥ 2^39 is outside the ring's \
+         representable range"
+    );
+    (scaled.round() as i64) as u64
+}
+
+/// Decode a ring element (interpreting as signed) back to f32
+/// (re-exported as `secure_agg::decode`).
+#[inline]
+pub fn decode(v: u64) -> f32 {
+    ((v as i64) as f64 / SCALE) as f32
+}
+
+/// One pairwise mask stream: the pair PRG and its sign in the telescoping
+/// sum (`add` for the lower-id side of the pair, subtract for the higher).
+/// Streams are consumed strictly in element order, so block fills of any
+/// size reproduce the per-element scalar walk exactly.
+#[derive(Clone, Debug)]
+pub struct MaskStream {
+    pub rng: Rng,
+    pub add: bool,
+}
+
+/// acc = acc ⊞/⊟ PRG-stream over the Z_2^64 ring, blocked: `prg` is drawn
+/// in [`RING_BLOCK`]-element blocks via [`Rng::fill_u64`] (stream-identical
+/// to per-element `next_u64` calls) and folded into the accumulator
+/// window while it is cache-hot. The dropout-recovery kernel.
+pub fn mask_stream_accumulate(acc: &mut [u64], prg: &mut Rng, add: bool) {
+    let mut block = [0u64; RING_BLOCK];
+    for w in acc.chunks_mut(RING_BLOCK) {
+        let n = w.len();
+        prg.fill_u64(&mut block[..n]);
+        if add {
+            for (a, &m) in w.iter_mut().zip(&block[..n]) {
+                *a = a.wrapping_add(m);
+            }
+        } else {
+            for (a, &m) in w.iter_mut().zip(&block[..n]) {
+                *a = a.wrapping_sub(m);
+            }
+        }
+    }
+}
+
+/// The fused masking kernel: acc ⊞= mask(encode(factor · values)), one
+/// chunked pass. Per [`RING_BLOCK`] window it (1) scales and fixed-point
+/// encodes the values (the same per-element `f32` multiply + encode the
+/// scalar pipeline performs), (2) folds every pair stream's block into
+/// the window (block PRG draws, element order preserved per stream), and
+/// (3) wrapping-adds the masked window into the ring accumulator — so no
+/// scaled `Vec<f32>`, no per-member mask `Vec<u64>`, and no separate
+/// partial fold ever materialize. Ring addition commutes, so the result
+/// is bit-identical to the scalar scale → encode → mask → fold pipeline
+/// retained in [`reference::scale_encode_mask`].
+///
+/// `block` is caller-owned scratch (the arena's ring buffer), grown to
+/// 2·[`RING_BLOCK`] on first use and reused across members and rounds.
+pub fn scale_encode_mask_accumulate(
+    acc: &mut [u64],
+    values: &[f32],
+    factor: f32,
+    streams: &mut [MaskStream],
+    block: &mut Vec<u64>,
+) {
+    assert_eq!(
+        acc.len(),
+        values.len(),
+        "scale_encode_mask_accumulate length mismatch"
+    );
+    Scratch::ensure_u64(block, 2 * RING_BLOCK);
+    let (enc, prg) = block.split_at_mut(RING_BLOCK);
+    let d = acc.len();
+    let mut j0 = 0;
+    while j0 < d {
+        let j1 = (j0 + RING_BLOCK).min(d);
+        let n = j1 - j0;
+        // fused scale → fixed-point encode of this window
+        for (e, &v) in enc[..n].iter_mut().zip(&values[j0..j1]) {
+            *e = encode(v * factor);
+        }
+        // net pairwise mask: each stream contributes draws j0..j1
+        for s in streams.iter_mut() {
+            s.rng.fill_u64(&mut prg[..n]);
+            if s.add {
+                for (e, &m) in enc[..n].iter_mut().zip(&prg[..n]) {
+                    *e = e.wrapping_add(m);
+                }
+            } else {
+                for (e, &m) in enc[..n].iter_mut().zip(&prg[..n]) {
+                    *e = e.wrapping_sub(m);
+                }
+            }
+        }
+        // fold the masked window into the shard partial
+        for (a, &e) in acc[j0..j1].iter_mut().zip(&enc[..n]) {
+            *a = a.wrapping_add(e);
+        }
+        j0 = j1;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // GEMM kernels (bit-exact contract)
 // ---------------------------------------------------------------------------
 
@@ -357,6 +485,11 @@ pub struct Scratch {
     pub idx: Vec<usize>,
     /// wrap-around tail batch
     pub tail: Vec<usize>,
+    /// ring-block staging for the fused mask kernels (encode + PRG
+    /// windows of [`scale_encode_mask_accumulate`])
+    pub ring: Vec<u64>,
+    /// per-member pairwise mask streams (secure aggregation fan-out)
+    pub streams: Vec<MaskStream>,
 }
 
 impl Scratch {
@@ -374,6 +507,16 @@ impl Scratch {
             buf.resize(n, 0.0);
         }
     }
+
+    /// [`Scratch::ensure`] for ring (u64) buffers — same contract:
+    /// contents unspecified, no reallocation once the high-water mark is
+    /// reached.
+    pub fn ensure_u64(buf: &mut Vec<u64>, n: usize) {
+        if buf.len() != n {
+            buf.clear();
+            buf.resize(n, 0);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -381,8 +524,46 @@ impl Scratch {
 // ---------------------------------------------------------------------------
 
 /// The pre-kernel scalar loops: the correctness oracle for the property
-/// tests and the baseline arm of the `bench kernels` suite.
+/// tests and the baseline arm of the `bench kernels` / `bench secure`
+/// suites.
 pub mod reference {
+    use super::{encode, MaskStream};
+    use crate::util::rng::Rng;
+
+    /// Per-element PRG mask walk (the pre-kernel `SecureAggregator::mask`
+    /// / `recover` inner loop): one `next_u64` call per ring element.
+    pub fn mask_stream(out: &mut [u64], prg: &mut Rng, add: bool) {
+        if add {
+            for v in out.iter_mut() {
+                *v = v.wrapping_add(prg.next_u64());
+            }
+        } else {
+            for v in out.iter_mut() {
+                *v = v.wrapping_sub(prg.next_u64());
+            }
+        }
+    }
+
+    /// The scalar masking pipeline the fused kernel replaces: materialize
+    /// the scaled copy, fixed-point encode it, then one full-vector pass
+    /// per pair stream. Returns the masked ring vector (the caller folds
+    /// it, as `masked_partial` did member by member).
+    pub fn scale_encode_mask(
+        values: &[f32],
+        factor: f32,
+        streams: &mut [MaskStream],
+    ) -> Vec<u64> {
+        let mut scaled = values.to_vec();
+        for v in &mut scaled {
+            *v *= factor;
+        }
+        let mut out: Vec<u64> = scaled.iter().map(|&x| encode(x)).collect();
+        for s in streams.iter_mut() {
+            mask_stream(&mut out, &mut s.rng, s.add);
+        }
+        out
+    }
+
     /// Sequential-fold squared norm (the seed `tensor::norm_sq`).
     pub fn norm_sq(x: &[f32]) -> f64 {
         let mut acc = 0.0f64;
@@ -612,6 +793,89 @@ mod tests {
                 .fold(0u64, |s, v| s.wrapping_add(v[j]));
             assert_eq!(acc[j], want, "lane {j}");
         }
+    }
+
+    fn streams_from(specs: &[(u64, bool)]) -> Vec<MaskStream> {
+        specs
+            .iter()
+            .map(|&(seed, add)| MaskStream { rng: Rng::new(seed), add })
+            .collect()
+    }
+
+    #[test]
+    fn prop_mask_stream_accumulate_matches_per_element_walk() {
+        quick("kernel-mask-stream", |rng, _| {
+            let n = rng.range(0, 700); // spans several RING_BLOCK windows
+            let seed = rng.next_u64();
+            let add = rng.bernoulli(0.5);
+            let mut acc_k: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut acc_r = acc_k.clone();
+            mask_stream_accumulate(&mut acc_k, &mut Rng::new(seed), add);
+            reference::mask_stream(&mut acc_r, &mut Rng::new(seed), add);
+            if acc_k == acc_r {
+                Ok(())
+            } else {
+                Err("blocked mask stream diverged from scalar walk".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_fused_mask_fold_bit_exact_to_scalar_pipeline() {
+        // the secure-path contract: fused scale → encode → mask → fold
+        // equals the retained scalar mask + member-by-member ring fold,
+        // bitwise, for any dim / member count / stream signs
+        quick("kernel-scale-encode-mask", |rng, _| {
+            let d = rng.range(1, 700);
+            let members = rng.range(1, 5);
+            let specs: Vec<Vec<(u64, bool)>> = (0..members)
+                .map(|_| {
+                    let pairs = rng.range(0, 6);
+                    (0..pairs)
+                        .map(|_| (rng.next_u64(), rng.bernoulli(0.5)))
+                        .collect()
+                })
+                .collect();
+            let vals: Vec<Vec<f32>> =
+                (0..members).map(|_| vecf(rng, d)).collect();
+            let factors: Vec<f32> =
+                (0..members).map(|_| rng.normal_f32(1.0, 0.5)).collect();
+
+            let mut acc_k = vec![0u64; d];
+            let mut block = Vec::new();
+            for ((spec, v), &f) in specs.iter().zip(&vals).zip(&factors) {
+                let mut streams = streams_from(spec);
+                scale_encode_mask_accumulate(
+                    &mut acc_k, v, f, &mut streams, &mut block,
+                );
+            }
+
+            let mut acc_r = vec![0u64; d];
+            for ((spec, v), &f) in specs.iter().zip(&vals).zip(&factors) {
+                let mut streams = streams_from(spec);
+                let masked = reference::scale_encode_mask(v, f, &mut streams);
+                for (a, &m) in acc_r.iter_mut().zip(&masked) {
+                    *a = a.wrapping_add(m);
+                }
+            }
+
+            if acc_k == acc_r {
+                Ok(())
+            } else {
+                Err("fused mask fold diverged from scalar pipeline".into())
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_ensure_u64_reuses_capacity() {
+        let mut s = Scratch::new();
+        Scratch::ensure_u64(&mut s.ring, 512);
+        assert_eq!(s.ring.len(), 512);
+        let cap = s.ring.capacity();
+        Scratch::ensure_u64(&mut s.ring, 256);
+        Scratch::ensure_u64(&mut s.ring, 512);
+        assert_eq!(s.ring.capacity(), cap, "ensure_u64 must not reallocate");
     }
 
     #[test]
