@@ -23,9 +23,11 @@ fn main() {
     base.eval_examples = 320;
     base.secure_updates = false;
 
-    // sim-path model dim: 64 features ×62 classes + bias ≈ 4030 params
+    // sim-path model dim: 64 features ×62 classes + bias ≈ 4030 params.
+    // Some(Compressor::None) (not None) keeps the baseline arm honest:
+    // a None option would inherit any config-level compressor.
     let compressors: [(&str, Option<Compressor>); 3] = [
-        ("none", None),
+        ("none", Some(Compressor::None)),
         ("randk256", Some(Compressor::RandK { k: 256 })),
         ("qsgd4", Some(Compressor::QsgdQuant { levels: 4 })),
     ];
@@ -43,10 +45,12 @@ fn main() {
             let cfg = base.with_strategy(strategy.clone());
             let opts = TrainOptions {
                 compressor: comp.clone(),
-                verbose_every: 0,
+                ..TrainOptions::default()
             };
             let run = run_sim_with(&cfg, &opts).expect("run failed");
-            let mbits = run.total_uplink_bits() as f64 / 1e6;
+            // measured wire bytes — native sparse/quantized payloads,
+            // counted from their actual encoded length
+            let mbits = run.total_uplink_bytes() as f64 * 8.0 / 1e6;
             t.row(vec![
                 strategy.name().into(),
                 cname.to_string(),

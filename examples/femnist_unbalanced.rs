@@ -55,7 +55,8 @@ fn main() {
         cfg.workers
     );
 
-    let opts = TrainOptions { compressor: None, verbose_every: 5 };
+    let opts =
+        TrainOptions { verbose_every: 5, ..TrainOptions::default() };
     let t0 = std::time::Instant::now();
     let arms = run_comparison(&cfg, p.u64("seeds"), &artifacts, &opts)
         .expect("e2e run failed");

@@ -41,7 +41,8 @@ fn main() {
             cfg.rounds,
             p.usize("pool")
         );
-        let opts = TrainOptions { compressor: None, verbose_every: 10 };
+        let opts =
+            TrainOptions { verbose_every: 10, ..TrainOptions::default() };
         let arms = run_comparison(&cfg, 1, &artifacts, &opts)
             .expect("shakespeare run failed");
         print_summary(&format!("Figure 6 (m={m}, XLA path)"), &arms);

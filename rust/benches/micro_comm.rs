@@ -1,0 +1,16 @@
+//! Micro-bench: the typed wire layer — payload-native sparse folds vs
+//! the retained densify-then-accumulate reference, encode/decode codec
+//! cost, and compressor × strategy sim arms with measured bytes/round.
+//!
+//! Thin wrapper over `exp::commbench` — the same suite the
+//! `fedsamp bench comm` CLI mode runs (which additionally emits
+//! `BENCH_comm.json`). Pass `--quick` for the 1-ish-iteration CI smoke
+//! mode: `cargo bench --bench micro_comm -- --quick`.
+
+use fedsamp::exp::commbench::run_comm_suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let doc = run_comm_suite(quick);
+    println!("\n{}", doc.to_pretty());
+}

@@ -73,6 +73,7 @@ fn bench_cfg(rounds: usize, cohort: usize, secure: bool) -> ExperimentConfig {
         workers: 1,
         secure_updates: secure,
         availability: 1.0,
+        compressor: None,
     }
 }
 

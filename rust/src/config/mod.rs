@@ -3,6 +3,7 @@
 
 pub mod presets;
 
+use crate::compress::Compressor;
 use crate::util::json::Json;
 
 /// Client sampling strategy (the paper's comparison axis).
@@ -190,6 +191,9 @@ pub struct ExperimentConfig {
     /// per-round client availability probability q (Appendix E); 1.0 = the
     /// main-paper setting where every pool client is always available
     pub availability: f64,
+    /// update compression applied to participant uploads (§6 composition;
+    /// wire-payload kind). `TrainOptions::compressor` overrides when set.
+    pub compressor: Option<Compressor>,
 }
 
 impl ExperimentConfig {
@@ -234,10 +238,21 @@ impl ExperimentConfig {
             ("workers", Json::num(self.workers as f64)),
             ("secure_updates", Json::Bool(self.secure_updates)),
             ("availability", Json::num(self.availability)),
+            (
+                "compressor",
+                match &self.compressor {
+                    Some(c) => c.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
     pub fn from_json(v: &Json) -> Result<ExperimentConfig, String> {
+        let compressor = match v.get("compressor") {
+            Json::Null => None,
+            j => Some(Compressor::from_json(j)?),
+        };
         let cfg = ExperimentConfig {
             name: v.get("name").as_str().unwrap_or("experiment").to_string(),
             seed: v.get("seed").as_f64().unwrap_or(0.0) as u64,
@@ -254,6 +269,7 @@ impl ExperimentConfig {
             workers: v.get("workers").as_usize().unwrap_or(4),
             secure_updates: v.get("secure_updates").as_bool().unwrap_or(true),
             availability: v.get("availability").as_f64().unwrap_or(1.0),
+            compressor,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -300,6 +316,7 @@ mod tests {
             workers: 4,
             secure_updates: true,
             availability: 1.0,
+            compressor: None,
         }
     }
 
@@ -314,6 +331,20 @@ mod tests {
             ExperimentConfig::from_json(&Json::parse(&v.to_pretty()).unwrap())
                 .unwrap();
         assert_eq!(c, c3);
+    }
+
+    #[test]
+    fn compressor_round_trips_and_defaults_off() {
+        let mut c = sample();
+        c.compressor = Some(Compressor::RandK { k: 128 });
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        // absent field → no compression
+        let v = sample().to_json();
+        assert_eq!(
+            ExperimentConfig::from_json(&v).unwrap().compressor,
+            None
+        );
     }
 
     #[test]

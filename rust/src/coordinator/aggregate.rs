@@ -21,6 +21,7 @@
 use crate::secure_agg::SecureAggregator;
 use crate::tensor;
 use crate::tensor::kernels::{self, Scratch};
+use crate::wire::Payload;
 
 /// One shard's partial aggregate.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,6 +89,70 @@ pub fn weighted_partial(
     ShardPartial::Plain(acc)
 }
 
+/// Fold one shard's member *payloads* with per-member upload factors:
+/// `acc += w_k · densify(p_k)` in member order, without densifying —
+/// dense members ride the fused [`kernels::axpy`], sparse members
+/// scatter-add only their retained coordinates
+/// ([`kernels::sparse_weighted_accumulate`]), quantized members fuse
+/// unpack + fold ([`kernels::quantized_accumulate`]). Per output
+/// element the member-order add sequence is identical to the
+/// densify-then-accumulate reference (skipped sparse lanes would add
+/// `w·(±0.0)`, the f32 identity here — see the kernel docs), so this is
+/// bit-exact to [`densified_weighted_partial`] — pinned by the property
+/// test below and end-to-end by
+/// `payload_native_folds_match_the_densified_reference_end_to_end`.
+pub fn payload_weighted_partial(
+    dim: usize,
+    members: &[&Payload],
+    weights: &[f32],
+) -> ShardPartial {
+    assert_eq!(
+        members.len(),
+        weights.len(),
+        "payload_weighted_partial arity"
+    );
+    let mut acc = vec![0.0f32; dim];
+    for (p, &w) in members.iter().zip(weights) {
+        match p {
+            Payload::Dense(v) => {
+                assert_eq!(v.len(), dim, "dense payload dim mismatch");
+                kernels::axpy(&mut acc, w, v);
+            }
+            Payload::SparseK { indices, values } => {
+                kernels::sparse_weighted_accumulate(
+                    &mut acc, indices, values, w,
+                );
+            }
+            Payload::Quantized { dim: d, norm, levels, packed } => {
+                assert_eq!(
+                    *d as usize, dim,
+                    "quantized payload dim mismatch"
+                );
+                kernels::quantized_accumulate(
+                    &mut acc, packed, *norm, *levels, w,
+                );
+            }
+        }
+    }
+    ShardPartial::Plain(acc)
+}
+
+/// The retained reference fold: densify every member payload, then run
+/// the pre-wire chunked weighted fold ([`weighted_partial`]). The
+/// baseline arm of `fedsamp bench comm` and the oracle the native
+/// payload fold is pinned against (also reachable end-to-end through
+/// `TrainOptions::densify_folds`).
+pub fn densified_weighted_partial(
+    dim: usize,
+    members: &[&Payload],
+    weights: &[f32],
+) -> ShardPartial {
+    let dense: Vec<Vec<f32>> =
+        members.iter().map(|p| p.densify(dim)).collect();
+    let refs: Vec<&[f32]> = dense.iter().map(|v| v.as_slice()).collect();
+    weighted_partial(dim, &refs, weights)
+}
+
 /// Fold one shard's masked ring vectors into a masked partial (wrapping
 /// sums — exact). Members are consumed one at a time, so only the
 /// accumulator and the member being folded are alive (the vectors are
@@ -105,16 +170,16 @@ where
     ShardPartial::Masked(acc)
 }
 
-/// One participant's upload staged for the masked fold: the owned update
-/// values (moved out of the round outcomes — the protocol no longer
-/// needs them once staged, so staging costs a pointer move, not a copy),
-/// the upload factor w_i/p_i, and the client id the pair mask streams
-/// derive from.
+/// One participant's upload staged for the masked fold: the owned wire
+/// payload (uncompressed deltas are moved out of the round outcomes —
+/// the protocol no longer needs them once staged, so staging costs a
+/// pointer move, not a copy), the upload factor w_i/p_i, and the client
+/// id the pair mask streams derive from.
 #[derive(Clone, Debug)]
 pub struct MaskUpload {
     pub client: u64,
     pub factor: f32,
-    pub values: Vec<f32>,
+    pub payload: Payload,
 }
 
 /// One round's secure-aggregation work order: the agreed roster and
@@ -137,6 +202,14 @@ pub struct MaskBatch {
 /// element order, so the partial is bit-identical to the scalar
 /// mask-then-[`masked_partial`] pipeline for any block size — which is
 /// what keeps the sharded secure trajectory exact.
+///
+/// **Dense-only constraint (the densify boundary).** The pairwise masks
+/// cover every coordinate, so the ring fold consumes dense values only:
+/// a sparse or quantized payload densifies *here*, at the shard
+/// boundary, into the worker's reused `scratch.dense` buffer
+/// (`Payload::densify_into` — bit-exact to the payload's reference
+/// semantics, so the masked trajectory matches the dense pipeline
+/// exactly). Dense payloads are borrowed in place, no copy.
 pub fn fused_masked_partial(
     batch: &MaskBatch,
     group: &[MaskUpload],
@@ -146,9 +219,20 @@ pub fn fused_masked_partial(
     let mut acc = vec![0u64; batch.dim];
     for m in group {
         agg.pair_streams_into(m.client, &batch.roster, &mut scratch.streams);
+        let values: &[f32] = match &m.payload {
+            Payload::Dense(v) => {
+                assert_eq!(v.len(), batch.dim, "dense upload dim mismatch");
+                v
+            }
+            p => {
+                Scratch::ensure(&mut scratch.dense, batch.dim);
+                p.densify_into(&mut scratch.dense);
+                &scratch.dense
+            }
+        };
         kernels::scale_encode_mask_accumulate(
             &mut acc,
-            &m.values,
+            values,
             m.factor,
             &mut scratch.streams,
             &mut scratch.ring,
@@ -256,7 +340,7 @@ mod tests {
                 .map(|((&client, v), &factor)| MaskUpload {
                     client,
                     factor,
-                    values: v.clone(),
+                    payload: Payload::Dense(v.clone()),
                 })
                 .collect()],
         };
@@ -336,6 +420,88 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-3, "{x} vs {y}");
         }
+    }
+
+    /// A random payload of a random kind over dimension `d`.
+    fn random_payload(rng: &mut crate::util::rng::Rng, d: usize) -> Payload {
+        use crate::compress::Compressor;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let c = match rng.below(3) {
+            0 => Compressor::None,
+            1 => Compressor::RandK { k: rng.range(1, d + 1) },
+            _ => Compressor::QsgdQuant { levels: rng.range(1, 16) as u32 },
+        };
+        c.compress(&x, rng)
+    }
+
+    #[test]
+    fn prop_payload_fold_bit_exact_to_densified_reference() {
+        // the wire-layer fold contract: the payload-native scatter fold
+        // equals the retained densify-then-accumulate reference bitwise
+        // for any mix of payload kinds, dims and factors
+        use crate::util::prop::quick;
+        quick("payload-weighted-partial", |rng, _| {
+            let d = rng.range(1, 1500); // spans CHUNK windows
+            let members = rng.range(1, 6);
+            let payloads: Vec<Payload> =
+                (0..members).map(|_| random_payload(rng, d)).collect();
+            let weights: Vec<f32> =
+                (0..members).map(|_| rng.normal_f32(1.0, 0.5)).collect();
+            let refs: Vec<&Payload> = payloads.iter().collect();
+            let native = payload_weighted_partial(d, &refs, &weights);
+            let densified = densified_weighted_partial(d, &refs, &weights);
+            let (ShardPartial::Plain(a), ShardPartial::Plain(b)) =
+                (&native, &densified)
+            else {
+                return Err("plain partials expected".into());
+            };
+            let same = a
+                .iter()
+                .zip(b)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            if same {
+                Ok(())
+            } else {
+                Err("payload fold diverged from densified reference".into())
+            }
+        });
+    }
+
+    #[test]
+    fn fused_masked_partial_densifies_compressed_payloads_exactly() {
+        // the shard-boundary densify: masking a compressed payload must
+        // equal masking its dense equivalent, bit for bit
+        let dim = 700; // spans ring blocks
+        let mut rng = Rng::new(77);
+        let roster: Vec<u64> = (0..6).collect();
+        let uploads: Vec<MaskUpload> = roster
+            .iter()
+            .map(|&client| MaskUpload {
+                client,
+                factor: 0.3 + client as f32 * 0.17,
+                payload: random_payload(&mut rng, dim),
+            })
+            .collect();
+        let dense_twin: Vec<MaskUpload> = uploads
+            .iter()
+            .map(|m| MaskUpload {
+                client: m.client,
+                factor: m.factor,
+                payload: Payload::Dense(m.payload.densify(dim)),
+            })
+            .collect();
+        let mk_batch = |groups: Vec<Vec<MaskUpload>>| MaskBatch {
+            dim,
+            round_seed: 31,
+            roster: roster.clone(),
+            groups,
+        };
+        let a = mk_batch(vec![uploads]);
+        let b = mk_batch(vec![dense_twin]);
+        assert_eq!(
+            fused_masked_partial(&a, &a.groups[0], &mut Scratch::new()),
+            fused_masked_partial(&b, &b.groups[0], &mut Scratch::new()),
+        );
     }
 
     #[test]

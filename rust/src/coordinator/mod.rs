@@ -106,6 +106,22 @@ impl Coordinator {
         opts: &TrainOptions,
     ) -> Result<RunResult, String> {
         cfg.validate()?;
+        // the config-level compressor is the default; an explicit
+        // TrainOptions compressor (the ablation hook) wins —
+        // Some(Compressor::None) is the "explicitly uncompressed" state,
+        // only a None option inherits. After precedence, the resolved
+        // Compressor::None normalizes to no compressor: identical
+        // semantics (no RNG draws, same dense payload and metered
+        // bytes), but the upload path then *moves* each delta instead
+        // of cloning it through `compress`
+        let mut opts = opts.clone();
+        if opts.compressor.is_none() {
+            opts.compressor = cfg.compressor.clone();
+        }
+        if opts.compressor == Some(crate::compress::Compressor::None) {
+            opts.compressor = None;
+        }
+        let opts = &opts;
         let sampler = Sampler::from_strategy(&cfg.strategy);
         let pool = runner.num_clients();
         if pool == 0 {

@@ -17,8 +17,6 @@
 //! dropped before norm collection). AOCS tolerates this by design — the
 //! negotiation only ever consumes aggregates of the surviving cohort.
 
-use std::borrow::Cow;
-
 use crate::config::ExperimentConfig;
 use crate::fl::availability::{sample_cohort, Availability};
 use crate::fl::comm::BitMeter;
@@ -28,6 +26,7 @@ use crate::sampling::{probability, variance, Decision, Sampler};
 use crate::tensor;
 use crate::tensor::kernels;
 use crate::util::rng::Rng;
+use crate::wire::Payload;
 
 use super::aggregate::{self, MaskBatch, MaskUpload, ShardPartial};
 use super::registry::Registry;
@@ -287,15 +286,23 @@ impl RoundMachine {
         self.phase = Phase::Commit;
     }
 
-    /// The secure path: stage each participant's upload — moving the
-    /// update vector out of its outcome (dead after this phase) so no
-    /// copy is made — into a [`MaskBatch`] grouped by owning shard, then
-    /// let the runner mask + fold every group through the fused
-    /// scale → encode → mask → accumulate kernel (on its worker pool if
-    /// it has one). Ring sums commute, so the tree combine over the
-    /// returned partials is bit-identical to the seed's flat sum for any
-    /// shard/worker count. The compressor consumes the round RNG
-    /// sequentially in cohort order, exactly as the seed protocol did.
+    /// The secure path: stage each participant's upload — the typed wire
+    /// [`Payload`]; uncompressed deltas are moved out of their outcomes
+    /// (dead after this phase) so no copy is made — into a [`MaskBatch`]
+    /// grouped by owning shard, then let the runner mask + fold every
+    /// group through the fused scale → encode → mask → accumulate kernel
+    /// (on its worker pool if it has one). The mask fold is dense-only
+    /// (pairwise masks cover every coordinate), so compressed payloads
+    /// densify at the shard boundary, into each worker's scratch arena —
+    /// see `aggregate::fused_masked_partial`. Ring sums commute, so the
+    /// tree combine over the returned partials is bit-identical to the
+    /// seed's flat sum for any shard/worker count. The compressor
+    /// consumes the round RNG sequentially in cohort order, exactly as
+    /// the seed protocol did; the meter records each payload's measured
+    /// frame length (charging the *compressed* frame even though the
+    /// simulated mask fold is dense — the accounting models a
+    /// compression-compatible secure scheme, the seed's semantics; see
+    /// DESIGN.md §7).
     fn masked_aggregate(
         &mut self,
         cfg: &ExperimentConfig,
@@ -318,18 +325,15 @@ impl RoundMachine {
                 continue;
             }
             let factor = (self.weights[i] / decision.probs[i]) as f32;
-            let values = match &opts.compressor {
-                Some(c) => c.apply(&o.delta, round_rng),
-                None => std::mem::take(&mut o.delta),
+            let payload = match &opts.compressor {
+                Some(c) => c.compress(&o.delta, round_rng),
+                None => Payload::Dense(std::mem::take(&mut o.delta)),
             };
-            match &opts.compressor {
-                Some(c) => meter.add_compressed_update(values.len(), c),
-                None => meter.add_update(values.len()),
-            }
+            meter.add_payload(&payload);
             let client = self.cohort[i] as u64;
             batch.roster.push(client);
             batch.groups[registry.shard_of(self.cohort[i])]
-                .push(MaskUpload { client, factor, values });
+                .push(MaskUpload { client, factor, payload });
         }
         self.transmitted = batch.roster.len();
         if batch.roster.is_empty() {
@@ -350,10 +354,14 @@ impl RoundMachine {
     }
 
     /// The plain-f32 path: uploads in cohort order (cohort position,
-    /// update vector, upload factor w_i/p_i). Uncompressed updates are
-    /// borrowed, not cloned — the fused weighted fold (`w·v`
-    /// multiply-adds round identically to the seed's scale-then-sum)
-    /// never materializes a scaled copy.
+    /// wire payload, upload factor w_i/p_i). Uncompressed deltas are
+    /// moved into dense payloads, not cloned; compressed uploads stay
+    /// native end to end — sparse/quantized payloads fold into the shard
+    /// partials through the scatter-add kernels without ever densifying
+    /// (`aggregate::payload_weighted_partial`; bit-exact to the retained
+    /// densify-then-accumulate reference, selectable via
+    /// `TrainOptions::densify_folds` as the baseline arm). The meter
+    /// records each payload's measured frame length.
     fn plain_aggregate(
         &mut self,
         opts: &TrainOptions,
@@ -363,34 +371,27 @@ impl RoundMachine {
         round_rng: &mut Rng,
     ) -> Vec<f32> {
         let decision = self.decision.as_ref().expect("negotiate ran");
-        let cohort = &self.cohort;
-        let uploads: Vec<(usize, Cow<'_, [f32]>, f32)> = self
-            .outcomes
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| self.selected[*i])
-            .map(|(i, o)| {
-                let factor = (self.weights[i] / decision.probs[i]) as f32;
-                let v: Cow<'_, [f32]> = match &opts.compressor {
-                    Some(c) => Cow::Owned(c.apply(&o.delta, round_rng)),
-                    None => Cow::Borrowed(o.delta.as_slice()),
-                };
-                (i, v, factor)
-            })
-            .collect();
-        let transmitted = uploads.len();
-        for (_, v, _) in &uploads {
-            match &opts.compressor {
-                Some(c) => meter.add_compressed_update(v.len(), c),
-                None => meter.add_update(v.len()),
+        let mut uploads: Vec<(usize, Payload, f32)> = Vec::new();
+        for (i, o) in self.outcomes.iter_mut().enumerate() {
+            if !self.selected[i] {
+                continue;
             }
+            let factor = (self.weights[i] / decision.probs[i]) as f32;
+            let payload = match &opts.compressor {
+                Some(c) => c.compress(&o.delta, round_rng),
+                None => Payload::Dense(std::mem::take(&mut o.delta)),
+            };
+            meter.add_payload(&payload);
+            uploads.push((i, payload, factor));
         }
+        let transmitted = uploads.len();
 
         let out = if uploads.is_empty() {
             vec![0.0; dim]
         } else {
             // group participants by owning shard in one pass (cohort
             // order preserved within each group); empty shards skipped
+            let cohort = &self.cohort;
             let mut by_shard: Vec<Vec<usize>> =
                 vec![Vec::new(); registry.shards()];
             for (k, (i, _, _)) in uploads.iter().enumerate() {
@@ -400,11 +401,19 @@ impl RoundMachine {
                 .iter()
                 .filter(|group| !group.is_empty())
                 .map(|group| {
-                    let members: Vec<&[f32]> =
-                        group.iter().map(|&k| uploads[k].1.as_ref()).collect();
+                    let members: Vec<&Payload> =
+                        group.iter().map(|&k| &uploads[k].1).collect();
                     let weights: Vec<f32> =
                         group.iter().map(|&k| uploads[k].2).collect();
-                    aggregate::weighted_partial(dim, &members, &weights)
+                    if opts.densify_folds {
+                        aggregate::densified_weighted_partial(
+                            dim, &members, &weights,
+                        )
+                    } else {
+                        aggregate::payload_weighted_partial(
+                            dim, &members, &weights,
+                        )
+                    }
                 })
                 .collect();
             aggregate::finish(
@@ -476,6 +485,7 @@ impl RoundMachine {
             train_loss,
             val_accuracy: val.accuracy,
             uplink_bits: meter.total_bits(),
+            uplink_bytes: meter.total_bytes(),
             transmitted,
             expected_budget: probability::expected_size(&decision.probs),
             alpha,
@@ -492,6 +502,7 @@ pub fn noop_record(round: usize, meter: &BitMeter) -> RoundRecord {
         train_loss: f64::NAN,
         val_accuracy: f64::NAN,
         uplink_bits: meter.total_bits(),
+        uplink_bytes: meter.total_bytes(),
         transmitted: 0,
         expected_budget: 0.0,
         alpha: f64::NAN,
@@ -560,6 +571,7 @@ mod tests {
             workers: 1,
             secure_updates: true,
             availability: 1.0,
+            compressor: None,
         }
     }
 

@@ -489,6 +489,7 @@ mod tests {
     fn pooled_and_inline_secure_partials_agree_bitwise() {
         use super::super::aggregate::MaskUpload;
         use crate::util::rng::Rng;
+        use crate::wire::Payload;
         let dim = 300; // spans ring blocks
         let mut rng = Rng::new(41);
         let roster: Vec<u64> = (0..7).collect();
@@ -497,9 +498,9 @@ mod tests {
             groups[k % 3].push(MaskUpload {
                 client,
                 factor: 0.5 + k as f32 * 0.1,
-                values: (0..dim)
-                    .map(|_| rng.normal_f32(0.0, 1.0))
-                    .collect(),
+                payload: Payload::Dense(
+                    (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                ),
             });
         }
         let batch = MaskBatch {

@@ -1,0 +1,287 @@
+//! The `bench comm` suite: the typed wire layer's regression harness
+//! (EXPERIMENTS.md §Comm).
+//!
+//! Three measurements:
+//!
+//! * **Fold micro** — the payload-native sparse scatter fold
+//!   (`aggregate::payload_weighted_partial`) vs the retained
+//!   densify-then-accumulate reference
+//!   (`aggregate::densified_weighted_partial`) on rand-k payloads with
+//!   k ≪ d. The two are bit-identical (property-tested), so the ratio
+//!   is pure speed: the reference pays an O(d) densify + O(d) fold per
+//!   member, the scatter fold pays O(k).
+//! * **Wire codec** — encode+decode ns/element per payload kind, the
+//!   cost of the byte-exact framing the meter measures with.
+//! * **End-to-end sim arms** — rounds/sec and *measured* bytes/round
+//!   across compressor × strategy, plus the sparse-fold vs
+//!   densified-fold comparison on the rand-k arm.
+//!
+//! Shared by the `fedsamp bench comm` CLI mode (which also emits
+//! `BENCH_comm.json`) and `benches/micro_comm.rs`. Both arms of every
+//! comparison run in the same process in the same run, so machine
+//! variance cancels out of the ratios.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use crate::bench::Bench;
+use crate::compress::Compressor;
+use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use crate::coordinator::aggregate::{
+    densified_weighted_partial, payload_weighted_partial,
+};
+use crate::fl::{train, TrainOptions};
+use crate::sim::build_native_engine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::wire::Payload;
+
+/// Dimensions the fold comparison is swept over.
+pub const FOLD_DIMS: [usize; 2] = [10_000, 100_000];
+
+/// Members per shard group in the fold comparison.
+const FOLD_MEMBERS: usize = 8;
+
+fn bench(group: &str, quick: bool) -> Bench {
+    let min_time = if quick {
+        Duration::from_millis(1)
+    } else {
+        Duration::from_millis(200)
+    };
+    Bench::new(group).with_min_time(min_time)
+}
+
+/// One sparse-fold vs densified-fold comparison at dimension `d`
+/// (k = d/100 retained coordinates per member).
+#[derive(Clone, Debug)]
+pub struct FoldMeasurement {
+    pub dim: usize,
+    pub k: usize,
+    pub sparse_ns: f64,
+    pub densified_ns: f64,
+}
+
+impl FoldMeasurement {
+    pub fn speedup(&self) -> f64 {
+        self.densified_ns / self.sparse_ns
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::num(self.dim as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("sparse_ns_per_fold", Json::num(self.sparse_ns)),
+            ("densified_ns_per_fold", Json::num(self.densified_ns)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+fn fold_measurements(quick: bool) -> Vec<FoldMeasurement> {
+    let mut rng = Rng::new(0xC0_33);
+    let mut out = Vec::new();
+    for &d in &FOLD_DIMS {
+        let k = (d / 100).max(1);
+        let b = bench(&format!("comm/fold d={d},k={k}"), quick);
+        let c = Compressor::RandK { k };
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let payloads: Vec<Payload> =
+            (0..FOLD_MEMBERS).map(|_| c.compress(&x, &mut rng)).collect();
+        let members: Vec<&Payload> = payloads.iter().collect();
+        let weights: Vec<f32> =
+            (0..FOLD_MEMBERS).map(|i| 0.4 + i as f32 * 0.1).collect();
+        let sparse_ns = b.run("sparse", || {
+            black_box(payload_weighted_partial(d, &members, &weights));
+        });
+        let densified_ns = b.run("densified", || {
+            black_box(densified_weighted_partial(d, &members, &weights));
+        });
+        out.push(FoldMeasurement { dim: d, k, sparse_ns, densified_ns });
+    }
+    out
+}
+
+/// Encode+decode round-trip cost per payload kind at a fixed dimension.
+fn wire_measurements(quick: bool) -> Vec<Json> {
+    let d = 10_000;
+    let mut rng = Rng::new(0xE2C0);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let b = bench(&format!("comm/wire d={d}"), quick);
+    let mut out = Vec::new();
+    for c in [
+        Compressor::None,
+        Compressor::RandK { k: d / 100 },
+        Compressor::QsgdQuant { levels: 4 },
+    ] {
+        let p = c.compress(&x, &mut rng);
+        let bytes = p.wire_bytes();
+        let mut frame = Vec::new();
+        let ns = b.run(&c.name(), || {
+            frame.clear();
+            p.encode_into(&mut frame);
+            black_box(Payload::decode(&frame).expect("round trip"));
+        });
+        out.push(Json::obj(vec![
+            ("compressor", Json::str(c.name())),
+            ("wire_bytes", Json::num(bytes as f64)),
+            ("estimated_bytes", Json::num(c.bits(d) as f64 / 8.0)),
+            ("roundtrip_ns", Json::num(ns)),
+        ]));
+    }
+    out
+}
+
+/// One end-to-end sim arm: rounds/sec plus measured bytes/round.
+struct SimArm {
+    strategy: &'static str,
+    compressor: String,
+    fold: &'static str,
+    rounds_per_sec: f64,
+    bytes_per_round: f64,
+}
+
+impl SimArm {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy)),
+            ("compressor", Json::str(self.compressor.clone())),
+            ("fold", Json::str(self.fold)),
+            ("rounds_per_sec", Json::num(self.rounds_per_sec)),
+            ("bytes_per_round", Json::num(self.bytes_per_round)),
+        ])
+    }
+}
+
+/// The sim config every arm shares: plain (non-secure) aggregation so
+/// the payload-native plain folds are on the measured path; the secure
+/// configuration's densify boundary is covered by `bench secure`.
+fn arm_cfg(tag: &str, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("bench_comm_{tag}"),
+        seed: 9,
+        rounds,
+        cohort: 16,
+        budget: 4,
+        strategy: Strategy::Aocs { j_max: 4 },
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: rounds,
+        eval_examples: 128,
+        workers: 1,
+        secure_updates: false,
+        availability: 1.0,
+        compressor: None,
+    }
+}
+
+fn sim_arm(
+    strategy: Strategy,
+    compressor: Option<Compressor>,
+    densify_folds: bool,
+    quick: bool,
+) -> SimArm {
+    let rounds = if quick { 2 } else { 10 };
+    let cname =
+        compressor.as_ref().map_or_else(|| "none".into(), Compressor::name);
+    let fold = if densify_folds { "densified" } else { "sparse" };
+    let sname = strategy.name();
+    let tag = format!("{sname}_{cname}_{fold}");
+    let cfg = arm_cfg(&tag, rounds).with_strategy(strategy);
+    let opts =
+        TrainOptions { compressor, verbose_every: 0, densify_folds };
+    let mut engine = build_native_engine(&cfg);
+    let b = bench("comm/sim", quick);
+    let mut bytes_per_round = 0.0;
+    let ns = b.run(&tag, || {
+        let run = train(&cfg, &mut engine, &opts).unwrap();
+        bytes_per_round =
+            run.total_uplink_bytes() as f64 / run.rounds.len() as f64;
+        black_box(run);
+    });
+    SimArm {
+        strategy: sname,
+        compressor: cname,
+        fold,
+        rounds_per_sec: rounds as f64 / (ns * 1e-9),
+        bytes_per_round,
+    }
+}
+
+/// Run the full suite; returns the `BENCH_comm.json` document.
+pub fn run_comm_suite(quick: bool) -> Json {
+    let folds = fold_measurements(quick);
+    let wire = wire_measurements(quick);
+
+    // compressor × strategy grid, payload-native folds
+    let mut arms = Vec::new();
+    for strategy in [Strategy::Full, Strategy::Aocs { j_max: 4 }] {
+        for compressor in [
+            None,
+            Some(Compressor::RandK { k: 64 }),
+            Some(Compressor::QsgdQuant { levels: 4 }),
+        ] {
+            arms.push(sim_arm(strategy.clone(), compressor, false, quick));
+        }
+    }
+    // the sparse-vs-densified end-to-end comparison on the rand-k arm
+    let densified_arm = sim_arm(
+        Strategy::Aocs { j_max: 4 },
+        Some(Compressor::RandK { k: 64 }),
+        true,
+        quick,
+    );
+    let sparse_rps = arms
+        .iter()
+        .find(|a| a.strategy == "aocs" && a.compressor == "randk64")
+        .map(|a| a.rounds_per_sec)
+        .unwrap_or(f64::NAN);
+
+    for f in &folds {
+        println!(
+            "fold d={:>6} k={:>4}: sparse {:.2}x over densified \
+             ({:.0} vs {:.0} ns/fold)",
+            f.dim,
+            f.k,
+            f.speedup(),
+            f.sparse_ns,
+            f.densified_ns
+        );
+    }
+    for a in &arms {
+        println!(
+            "sim {}×{}: {:.2} rounds/sec, {:.0} measured bytes/round",
+            a.strategy, a.compressor, a.rounds_per_sec, a.bytes_per_round
+        );
+    }
+    println!(
+        "sim aocs×randk64 fold comparison: sparse {sparse_rps:.2} vs \
+         densified {:.2} rounds/sec",
+        densified_arm.rounds_per_sec
+    );
+
+    let mut arm_docs: Vec<Json> = arms.iter().map(SimArm::to_json).collect();
+    arm_docs.push(densified_arm.to_json());
+    Json::obj(vec![
+        ("bench", Json::str("comm")),
+        ("quick", Json::Bool(quick)),
+        (
+            "fold",
+            Json::Arr(folds.iter().map(FoldMeasurement::to_json).collect()),
+        ),
+        ("wire", Json::Arr(wire)),
+        ("sim_arms", Json::Arr(arm_docs)),
+        (
+            "sparse_vs_densified_rounds_per_sec",
+            Json::obj(vec![
+                ("sparse", Json::num(sparse_rps)),
+                ("densified", Json::num(densified_arm.rounds_per_sec)),
+            ]),
+        ),
+    ])
+}

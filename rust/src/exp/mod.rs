@@ -1,6 +1,7 @@
 //! Experiment drivers: the code that regenerates every figure of the
 //! paper's evaluation (used by the CLI, the examples and the benches).
 
+pub mod commbench;
 pub mod figures;
 pub mod kernelbench;
 pub mod securebench;

@@ -165,6 +165,7 @@ fn sim_rounds_per_sec(
         workers,
         secure_updates: secure,
         availability: 1.0,
+        compressor: None,
     };
     let b = bench("secure/sim", quick);
     let name = format!("{tag}_rounds");

@@ -2,62 +2,107 @@
 //!
 //! Only client→master (uplink) traffic is counted, per footnote 5: the
 //! master→client broadcast is orders of magnitude cheaper in FL systems.
+//!
+//! Accounting is **measured, not estimated**: every participant upload
+//! is a typed [`Payload`] and the meter counts its exact encoded frame
+//! length. `Payload::wire_bytes` is property-pinned equal to
+//! `encode_into`'s output for every payload (wire module), so the
+//! accessor *is* the measurement; debug builds additionally re-encode
+//! each metered payload and assert the two agree, keeping the contract
+//! enforced on every test run without an O(d) serialization on the
+//! release hot path. The legacy bit view ([`BitMeter::total_bits`]) is
+//! kept for CSV/JSON compatibility and is exactly `total_bytes() × 8`,
+//! so every bits-axis query is an affine view of the measured bytes.
+//! Negotiation scalars (Remark 3) are not payloads; they are metered at
+//! four bytes per f32, the same rate the historical estimate charged.
 
-use crate::compress::Compressor;
+use crate::wire::Payload;
 
-pub const BITS_PER_FLOAT: u64 = 32;
+pub const BYTES_PER_FLOAT: u64 = 4;
 
-/// Running uplink-bit meter for one experiment arm.
+/// Running uplink meter for one experiment arm (cumulative bytes).
 #[derive(Clone, Debug, Default)]
 pub struct BitMeter {
-    total: u64,
+    bytes: u64,
 }
 
 impl BitMeter {
     pub fn new() -> Self {
-        BitMeter { total: 0 }
+        BitMeter::default()
     }
 
-    /// One full-precision update vector of dimension `d`.
-    pub fn add_update(&mut self, d: usize) {
-        self.total += BITS_PER_FLOAT * d as u64;
-    }
-
-    /// One compressed update vector.
-    pub fn add_compressed_update(&mut self, d: usize, c: &Compressor) {
-        self.total += c.bits(d);
+    /// One participant upload: count the bytes its wire frame occupies
+    /// (debug builds encode the frame and verify the count against it).
+    pub fn add_payload(&mut self, p: &Payload) {
+        let bytes = p.wire_bytes();
+        #[cfg(debug_assertions)]
+        {
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            assert_eq!(
+                frame.len(),
+                bytes,
+                "wire_bytes out of sync with encode_into"
+            );
+        }
+        self.bytes += bytes as u64;
     }
 
     /// Sampling-negotiation extras (Remark 3): `floats` per client across
     /// `clients` cohort members.
     pub fn add_negotiation(&mut self, clients: usize, floats_per_client: usize) {
-        self.total += BITS_PER_FLOAT * (clients * floats_per_client) as u64;
+        self.bytes += BYTES_PER_FLOAT * (clients * floats_per_client) as u64;
     }
 
+    /// Measured cumulative uplink bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Legacy bit view: measured bytes × 8 (CSV/JSON compatibility).
     pub fn total_bits(&self) -> u64 {
-        self.total
+        self.bytes * 8
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Compressor;
+    use crate::util::rng::Rng;
 
     #[test]
-    fn counts_updates_and_negotiation() {
+    fn counts_payloads_and_negotiation() {
         let mut m = BitMeter::new();
-        m.add_update(100); // 3200
-        m.add_negotiation(32, 9); // 32*9*32 = 9216
-        assert_eq!(m.total_bits(), 3200 + 9216);
+        m.add_payload(&Payload::Dense(vec![0.0; 100])); // 5 + 400 bytes
+        m.add_negotiation(32, 9); // 32·9·4 = 1152 bytes
+        assert_eq!(m.total_bytes(), 405 + 1152);
+        assert_eq!(m.total_bits(), m.total_bytes() * 8);
     }
 
     #[test]
-    fn compressed_updates_cost_less() {
+    fn measured_bytes_equal_the_encoded_frame() {
+        let x: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let mut rng = Rng::new(3);
+        let p = Compressor::RandK { k: 5 }.compress(&x, &mut rng);
+        let mut frame = Vec::new();
+        p.encode_into(&mut frame);
+        let mut m = BitMeter::new();
+        m.add_payload(&p);
+        assert_eq!(m.total_bytes(), frame.len() as u64);
+    }
+
+    #[test]
+    fn compressed_payloads_cost_less() {
+        let x = vec![1.0f32; 10_000];
+        let mut rng = Rng::new(1);
         let mut dense = BitMeter::new();
-        dense.add_update(10_000);
+        dense.add_payload(&Compressor::None.compress(&x, &mut rng));
         let mut sparse = BitMeter::new();
-        sparse.add_compressed_update(10_000, &Compressor::RandK { k: 100 });
-        assert!(sparse.total_bits() < dense.total_bits());
+        sparse.add_payload(
+            &Compressor::RandK { k: 100 }.compress(&x, &mut rng),
+        );
+        assert!(sparse.total_bytes() < dense.total_bytes());
     }
 
     #[test]
@@ -65,6 +110,7 @@ mod tests {
         let mut m = BitMeter::new();
         m.add_negotiation(0, 5);
         m.add_negotiation(5, 0);
+        assert_eq!(m.total_bytes(), 0);
         assert_eq!(m.total_bits(), 0);
     }
 }

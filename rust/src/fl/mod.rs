@@ -65,9 +65,19 @@ pub trait ClientEngine {
 /// Options beyond [`ExperimentConfig`] (compression ablation hook, §6).
 #[derive(Clone, Debug, Default)]
 pub struct TrainOptions {
+    /// Update compressor for participant uploads; `None` falls back to
+    /// the config's `compressor` field (this is the ablation override).
+    /// To force an *uncompressed* arm even when the config sets a
+    /// compressor, pass `Some(Compressor::None)` — only a `None` option
+    /// inherits.
     pub compressor: Option<Compressor>,
     /// Print a progress line every `verbose_every` rounds (0 = silent).
     pub verbose_every: usize,
+    /// Route plain-path shard folds through the retained
+    /// densify-then-accumulate reference instead of the payload-native
+    /// scatter kernels. Bit-identical by contract (the end-to-end
+    /// exactness tests pin it); the baseline arm of `fedsamp bench comm`.
+    pub densify_folds: bool,
 }
 
 /// Run a full federated training experiment.
@@ -177,6 +187,7 @@ mod tests {
             workers: 1,
             secure_updates: true,
             availability: 1.0,
+            compressor: None,
         }
     }
 
@@ -272,7 +283,7 @@ mod tests {
             &mut e2,
             &TrainOptions {
                 compressor: Some(Compressor::RandK { k: 4 }),
-                verbose_every: 0,
+                ..TrainOptions::default()
             },
         )
         .unwrap();

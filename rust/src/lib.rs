@@ -30,7 +30,11 @@
 //!   for theory experiments and fast sweeps.
 //! * [`runtime`] — PJRT artifact loading + execution (XLA path).
 //! * [`config`] — experiment configs + per-figure presets.
-//! * [`compress`] — optional update compression composed with OCS (§6).
+//! * [`compress`] — optional update compression composed with OCS (§6),
+//!   producing native [`wire`] payloads.
+//! * [`wire`] — typed upload payloads (dense / sparse-k / quantized)
+//!   with byte-exact framing; communication metrics are measured from
+//!   the encoded wire bytes, not estimated.
 //!
 //! ```no_run
 //! use fedsamp::config::presets;
@@ -56,3 +60,4 @@ pub mod secure_agg;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+pub mod wire;

@@ -8,6 +8,7 @@
 //!   inspect     list AOT artifacts and dataset statistics
 
 use fedsamp::bench::{f, Table};
+use fedsamp::compress::Compressor;
 use fedsamp::config::{presets, ExperimentConfig, Strategy};
 use fedsamp::coordinator::{
     Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
@@ -54,7 +55,7 @@ fn print_usage() {
            coordinate  sharded round coordinator (--shards/--workers)\n\
            figures     regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
            sweep       theory sweeps (budget m, step size)\n\
-           bench       perf suites (kernels|secure → BENCH_<suite>.json)\n\
+           bench       perf suites (kernels|secure|comm → BENCH_<suite>.json)\n\
            inspect     show artifacts + dataset statistics\n\n\
          Run `fedsamp <subcommand> --help` for options."
     );
@@ -112,6 +113,12 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("seed", Some("1"), "RNG seed")
         .opt("seeds", Some("1"), "number of seeds to average")
         .opt("workers", None, "override worker threads")
+        .opt(
+            "compress",
+            None,
+            "update compressor: none|randk<K>|qsgd<S> (overrides the \
+             config file's compressor; none disables)",
+        )
         .opt("sim", Some("false"), "true = force native sim engine")
         .opt("out", None, "directory for JSON/CSV results")
         .opt("artifacts", None, "artifacts directory")
@@ -154,13 +161,25 @@ fn cmd_train(args: &[String]) -> i32 {
     if p.str("sim") == "true" {
         cfg.model = "native:logistic".into();
     }
+    // an explicitly passed --compress always wins over the config file
+    // ("none" clears a config-level compressor); absent = config as-is
+    if let Some(spec) = p.get("compress") {
+        match Compressor::parse(spec) {
+            Ok(Compressor::None) => cfg.compressor = None,
+            Ok(c) => cfg.compressor = Some(c),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
     let artifacts = p
         .get("artifacts")
         .map(String::from)
         .unwrap_or_else(default_artifacts_dir);
     let opts = TrainOptions {
-        compressor: None,
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
+        ..TrainOptions::default()
     };
 
     let seeds = p.u64("seeds");
@@ -255,8 +274,8 @@ fn cmd_coordinate(args: &[String]) -> i32 {
     let mut coordinator =
         Coordinator::new(CoordinatorOptions { shards, deadline });
     let opts = TrainOptions {
-        compressor: None,
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
+        ..TrainOptions::default()
     };
     println!(
         "coordinator: {} shards, {} workers, deadline-miss {miss}",
@@ -400,10 +419,11 @@ fn cmd_bench(args: &[String]) -> i32 {
     let cli = Cli::new(
         "fedsamp bench",
         "perf suites; `bench kernels` measures scalar vs kernelized hot \
-         loops, `bench secure` the secure-aggregation masking pipeline; \
-         each emits BENCH_<suite>.json",
+         loops, `bench secure` the secure-aggregation masking pipeline, \
+         `bench comm` the wire layer (payload folds, codec, measured \
+         bytes/round); each emits BENCH_<suite>.json",
     )
-    .opt("suite", None, "suite name (or positional): kernels, secure")
+    .opt("suite", None, "suite name (or positional): kernels, secure, comm")
     .opt("out", Some("."), "directory for BENCH_<suite>.json")
     .flag("quick", "1-ish iteration per bench (CI smoke mode)");
     let p = parse_or_exit(&cli, args);
@@ -419,9 +439,11 @@ fn cmd_bench(args: &[String]) -> i32 {
         "secure" => {
             fedsamp::exp::securebench::run_secure_suite(p.flag("quick"))
         }
+        "comm" => fedsamp::exp::commbench::run_comm_suite(p.flag("quick")),
         other => {
             eprintln!(
-                "unknown bench suite '{other}' (available: kernels, secure)"
+                "unknown bench suite '{other}' (available: kernels, \
+                 secure, comm)"
             );
             return 2;
         }

@@ -13,8 +13,14 @@ pub struct RoundRecord {
     pub train_loss: f64,
     /// validation accuracy (NaN on non-eval rounds)
     pub val_accuracy: f64,
-    /// cumulative client→master uplink bits after this round
+    /// cumulative client→master uplink bits after this round — kept for
+    /// CSV/JSON compatibility; since the estimated→measured switch this
+    /// is exactly `uplink_bytes × 8`
     pub uplink_bits: u64,
+    /// cumulative client→master uplink bytes after this round, measured
+    /// from the encoded length of every wire payload (plus negotiation
+    /// scalars at 4 bytes per float)
+    pub uplink_bytes: u64,
     /// clients that actually transmitted updates this round
     pub transmitted: usize,
     /// expected budget Σ p_i
@@ -67,6 +73,11 @@ impl RunResult {
         self.rounds.last().map(|r| r.uplink_bits).unwrap_or(0)
     }
 
+    /// Measured cumulative uplink bytes at the end of the run.
+    pub fn total_uplink_bytes(&self) -> u64 {
+        self.rounds.last().map(|r| r.uplink_bytes).unwrap_or(0)
+    }
+
     /// First round reaching `target` validation accuracy (None if never).
     pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
         self.rounds
@@ -81,6 +92,15 @@ impl RunResult {
             .iter()
             .find(|r| r.val_accuracy >= target)
             .map(|r| r.uplink_bits)
+    }
+
+    /// Measured uplink bytes spent when `target` accuracy was first
+    /// reached.
+    pub fn bytes_to_accuracy(&self, target: f64) -> Option<u64> {
+        self.rounds
+            .iter()
+            .find(|r| r.val_accuracy >= target)
+            .map(|r| r.uplink_bytes)
     }
 
     /// Mean α over rounds where it was defined.
@@ -117,17 +137,18 @@ impl RunResult {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,train_loss,val_accuracy,uplink_bits,transmitted,\
-             expected_budget,alpha,gamma\n",
+            "round,train_loss,val_accuracy,uplink_bits,uplink_bytes,\
+             transmitted,expected_budget,alpha,gamma\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.train_loss,
                 r.val_accuracy,
                 r.uplink_bits,
+                r.uplink_bytes,
                 r.transmitted,
                 r.expected_budget,
                 r.alpha,
@@ -152,6 +173,10 @@ impl RunResult {
                                 ("train_loss", Json::num(r.train_loss)),
                                 ("val_accuracy", Json::num(r.val_accuracy)),
                                 ("uplink_bits", Json::num(r.uplink_bits as f64)),
+                                (
+                                    "uplink_bytes",
+                                    Json::num(r.uplink_bytes as f64),
+                                ),
                                 ("transmitted", Json::num(r.transmitted as f64)),
                                 ("expected_budget", Json::num(r.expected_budget)),
                                 ("alpha", Json::num(r.alpha)),
@@ -197,8 +222,19 @@ pub fn average_runs(runs: &[RunResult]) -> RunResult {
             round: runs[0].rounds[i].round,
             train_loss: get(&|r| r.train_loss),
             val_accuracy: get(&|r| r.val_accuracy),
-            uplink_bits: (runs.iter().map(|r| r.rounds[i].uplink_bits).sum::<u64>()
-                as f64
+            // bits derive from the averaged bytes (×8) rather than being
+            // averaged independently: integer truncation would otherwise
+            // let an averaged record violate uplink_bits == uplink_bytes·8
+            uplink_bits: (runs
+                .iter()
+                .map(|r| r.rounds[i].uplink_bytes)
+                .sum::<u64>() as f64
+                / k) as u64
+                * 8,
+            uplink_bytes: (runs
+                .iter()
+                .map(|r| r.rounds[i].uplink_bytes)
+                .sum::<u64>() as f64
                 / k) as u64,
             transmitted: (runs.iter().map(|r| r.rounds[i].transmitted).sum::<usize>()
                 as f64
@@ -221,6 +257,7 @@ mod tests {
             train_loss: loss,
             val_accuracy: acc,
             uplink_bits: bits,
+            uplink_bytes: bits / 8,
             transmitted: 3,
             expected_budget: 3.0,
             alpha: 0.5,
@@ -279,12 +316,91 @@ mod tests {
     fn averaging_aligned_runs() {
         let mk = |acc: f64| {
             let mut r = RunResult::new("t", "ocs");
-            r.push(rec(0, 1.0, acc, 100));
+            r.push(rec(0, 1.0, acc, 96));
             r
         };
         let avg = average_runs(&[mk(0.4), mk(0.6)]);
         assert!((avg.rounds[0].val_accuracy - 0.5).abs() < 1e-12);
-        assert_eq!(avg.rounds[0].uplink_bits, 100);
+        assert_eq!(avg.rounds[0].uplink_bytes, 12);
+        assert_eq!(avg.rounds[0].uplink_bits, 96);
+    }
+
+    #[test]
+    fn averaging_keeps_bits_consistent_with_bytes() {
+        // odd byte counts across seeds: the averaged record must still
+        // satisfy uplink_bits == uplink_bytes × 8 (bits derive from the
+        // averaged bytes; independent averaging would truncate apart)
+        let mk = |bytes: u64| {
+            let mut r = RunResult::new("t", "ocs");
+            r.push(RoundRecord {
+                round: 0,
+                train_loss: 1.0,
+                val_accuracy: 0.5,
+                uplink_bits: bytes * 8,
+                uplink_bytes: bytes,
+                transmitted: 1,
+                expected_budget: 1.0,
+                alpha: 0.5,
+                gamma: 0.6,
+            });
+            r
+        };
+        let avg = average_runs(&[mk(9), mk(10)]);
+        assert_eq!(
+            avg.rounds[0].uplink_bits,
+            avg.rounds[0].uplink_bytes * 8
+        );
+        assert_eq!(avg.rounds[0].uplink_bytes, 9); // floor(19/2)
+    }
+
+    #[test]
+    fn measured_bytes_drive_identical_bit_trajectories() {
+        // the estimated→measured regression gate: the meter now writes
+        // uplink_bits as uplink_bytes × 8, so every bit-axis query must
+        // be exactly the byte-axis query × 8 — the switch cannot change
+        // any reported trajectory shape
+        let mut r = RunResult::new("t", "ocs");
+        for (i, (acc, bytes)) in
+            [(f64::NAN, 50u64), (0.3, 120), (0.6, 300), (0.5, 410)]
+                .into_iter()
+                .enumerate()
+        {
+            r.push(RoundRecord {
+                round: i,
+                train_loss: 1.0,
+                val_accuracy: acc,
+                uplink_bits: bytes * 8, // what BitMeter::total_bits emits
+                uplink_bytes: bytes,
+                transmitted: 2,
+                expected_budget: 2.0,
+                alpha: 0.5,
+                gamma: 0.6,
+            });
+        }
+        assert_eq!(r.total_uplink_bits(), r.total_uplink_bytes() * 8);
+        for target in [0.2, 0.55, 0.9] {
+            assert_eq!(
+                r.bits_to_accuracy(target),
+                r.bytes_to_accuracy(target).map(|b| b * 8),
+                "target {target}"
+            );
+        }
+        assert_eq!(r.bits_to_accuracy(0.55), Some(300 * 8));
+        assert_eq!(r.rounds_to_accuracy(0.55), Some(2));
+    }
+
+    #[test]
+    fn csv_and_json_carry_measured_bytes() {
+        let mut r = RunResult::new("t", "ocs");
+        r.push(rec(0, 2.0, 0.1, 80));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert!(csv.contains("uplink_bits"), "legacy column kept");
+        assert!(csv.contains("uplink_bytes"), "measured column added");
+        let j = r.to_json();
+        let row = &j.get("rounds").as_arr().unwrap()[0];
+        assert_eq!(row.get("uplink_bits").as_f64(), Some(80.0));
+        assert_eq!(row.get("uplink_bytes").as_f64(), Some(10.0));
     }
 
     #[test]

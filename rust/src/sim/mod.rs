@@ -345,6 +345,29 @@ mod tests {
     }
 
     #[test]
+    fn sim_config_compressor_reduces_measured_bytes() {
+        // the config-level compressor rides the whole sim path: native
+        // sparse payloads on the wire, measured bytes shrinking
+        use crate::compress::Compressor;
+        let dense_cfg = quick_cfg(Strategy::Aocs { j_max: 4 });
+        let dense = run_sim(&dense_cfg).unwrap();
+        let mut sparse_cfg = quick_cfg(Strategy::Aocs { j_max: 4 });
+        sparse_cfg.compressor = Some(Compressor::RandK { k: 64 });
+        let sparse = run_sim(&sparse_cfg).unwrap();
+        assert!(
+            sparse.total_uplink_bytes() < dense.total_uplink_bytes() / 2,
+            "{} vs {}",
+            sparse.total_uplink_bytes(),
+            dense.total_uplink_bytes()
+        );
+        assert_eq!(
+            sparse.total_uplink_bits(),
+            sparse.total_uplink_bytes() * 8
+        );
+        assert!(sparse.final_train_loss().is_finite());
+    }
+
+    #[test]
     fn sim_token_dataset_runs() {
         let mut cfg = quick_cfg(Strategy::Uniform);
         cfg.data = DataSpec::ShakespeareLike { pool: 30 };

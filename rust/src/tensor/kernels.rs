@@ -364,6 +364,120 @@ pub fn scale_encode_mask_accumulate(
 }
 
 // ---------------------------------------------------------------------------
+// wire-payload scatter kernels + QSGD bit codec (bit-exact contract)
+// ---------------------------------------------------------------------------
+
+/// Bits per coordinate of the packed QSGD code word:
+/// bit_length(levels+1) = ⌈log2(levels+2)⌉ level bits (the levels+1
+/// ordinary values 0..=levels, plus headroom for the norm-rounding
+/// s+1 edge level) plus one sign bit — the same width
+/// `Compressor::bits` estimates.
+#[inline]
+pub fn qsgd_bits_per_coord(levels: u32) -> u32 {
+    64 - (u64::from(levels) + 1).leading_zeros() + 1
+}
+
+/// u64 words needed to hold `d` packed QSGD coordinates.
+#[inline]
+pub fn qsgd_packed_words(d: usize, levels: u32) -> usize {
+    (d * qsgd_bits_per_coord(levels) as usize).div_ceil(64)
+}
+
+/// Write `word` (low `bits` bits) into coordinate slot `j` of the
+/// little-endian packed bit stream. Slots are `bits` wide and may
+/// straddle a word boundary; the target bits must be zero (fresh
+/// buffer), as in any append-only bit writer.
+#[inline]
+pub fn pack_bits(packed: &mut [u64], j: usize, bits: u32, word: u64) {
+    debug_assert!((1..64).contains(&bits), "pack_bits width {bits}");
+    debug_assert!(word >> bits == 0, "pack_bits word overflows {bits} bits");
+    let off = j * bits as usize;
+    let idx = off / 64;
+    let sh = (off % 64) as u32;
+    packed[idx] |= word << sh;
+    if sh + bits > 64 {
+        packed[idx + 1] |= word >> (64 - sh);
+    }
+}
+
+/// Read the `bits`-wide code word at coordinate slot `j`.
+#[inline]
+pub fn unpack_bits(packed: &[u64], j: usize, bits: u32) -> u64 {
+    debug_assert!((1..64).contains(&bits), "unpack_bits width {bits}");
+    let mask = (1u64 << bits) - 1;
+    let off = j * bits as usize;
+    let idx = off / 64;
+    let sh = (off % 64) as u32;
+    let mut w = packed[idx] >> sh;
+    if sh + bits > 64 {
+        w |= packed[idx + 1] << (64 - sh);
+    }
+    w & mask
+}
+
+/// Reconstruct one QSGD coordinate from its sign and integer level:
+/// `±1 · norm · level / s`, with exactly the scalar dequantizer's
+/// left-associated float-op order — the bit-exactness anchor for
+/// [`quantized_accumulate`] and `wire::Payload::densify_into`.
+#[inline]
+pub fn qsgd_value(negative: bool, level: u32, norm: f32, s: f32) -> f32 {
+    let sign = if negative { -1.0f32 } else { 1.0f32 };
+    sign * norm * level as f32 / s
+}
+
+/// acc[indices[t]] += w · values[t] — the sparse-upload fold. Each
+/// retained coordinate receives the identical fused multiply-add the
+/// densified fold would apply; the skipped coordinates would have
+/// received `acc += w·(±0.0)`, which is the f32 identity here (a
+/// nonzero sum cancels to +0.0 under round-to-nearest and ±0.0
+/// contributions keep +0.0, so the accumulator is never −0.0) — hence
+/// bit-exact to [`reference::sparse_densify`] + [`axpy`], pinned by
+/// property tests.
+pub fn sparse_weighted_accumulate(
+    acc: &mut [f32],
+    indices: &[u32],
+    values: &[f32],
+    w: f32,
+) {
+    assert_eq!(
+        indices.len(),
+        values.len(),
+        "sparse_weighted_accumulate arity"
+    );
+    let d = acc.len();
+    for (&i, &v) in indices.iter().zip(values) {
+        let i = i as usize;
+        assert!(i < d, "sparse index {i} out of dim {d}");
+        acc[i] += w * v;
+    }
+}
+
+/// acc[j] += w · q_j for every coordinate of a packed QSGD upload —
+/// fused unpack + fold, no dense intermediate. Per element this is the
+/// identical reconstruct-then-multiply-add of the densified fold
+/// ([`qsgd_value`] is shared), so the result is bit-exact to
+/// [`reference::quantized_densify`] + [`axpy`].
+pub fn quantized_accumulate(
+    acc: &mut [f32],
+    packed: &[u64],
+    norm: f32,
+    levels: u32,
+    w: f32,
+) {
+    assert_eq!(
+        packed.len(),
+        qsgd_packed_words(acc.len(), levels),
+        "quantized_accumulate packed length"
+    );
+    let bits = qsgd_bits_per_coord(levels);
+    let s = levels.max(1) as f32;
+    for (j, a) in acc.iter_mut().enumerate() {
+        let word = unpack_bits(packed, j, bits);
+        *a += w * qsgd_value(word & 1 == 1, (word >> 1) as u32, norm, s);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // GEMM kernels (bit-exact contract)
 // ---------------------------------------------------------------------------
 
@@ -488,6 +602,10 @@ pub struct Scratch {
     /// ring-block staging for the fused mask kernels (encode + PRG
     /// windows of [`scale_encode_mask_accumulate`])
     pub ring: Vec<u64>,
+    /// densify staging for compressed secure-path uploads: sparse and
+    /// quantized payloads reconstruct here at the shard boundary before
+    /// the dense-only mask fold (DESIGN.md §7)
+    pub dense: Vec<f32>,
     /// per-member pairwise mask streams (secure aggregation fan-out)
     pub streams: Vec<MaskStream>,
 }
@@ -562,6 +680,43 @@ pub mod reference {
             mask_stream(&mut out, &mut s.rng, s.add);
         }
         out
+    }
+
+    /// Densify a sparse-k upload: the dense decompressed-equivalent
+    /// vector the pre-wire path materialized (zeros everywhere, the
+    /// retained scaled values at their indices). With [`axpy`] this is
+    /// the densify-then-accumulate reference the scatter kernel
+    /// `sparse_weighted_accumulate` is bit-exact to.
+    pub fn sparse_densify(
+        dim: usize,
+        indices: &[u32],
+        values: &[f32],
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        for (&i, &v) in indices.iter().zip(values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Densify a packed QSGD upload: reconstruct every coordinate via
+    /// the shared [`super::qsgd_value`] codec. With [`axpy`] this is the
+    /// densify-then-accumulate reference `quantized_accumulate` is
+    /// bit-exact to.
+    pub fn quantized_densify(
+        dim: usize,
+        packed: &[u64],
+        norm: f32,
+        levels: u32,
+    ) -> Vec<f32> {
+        let bits = super::qsgd_bits_per_coord(levels);
+        let s = levels.max(1) as f32;
+        (0..dim)
+            .map(|j| {
+                let w = super::unpack_bits(packed, j, bits);
+                super::qsgd_value(w & 1 == 1, (w >> 1) as u32, norm, s)
+            })
+            .collect()
     }
 
     /// Sequential-fold squared norm (the seed `tensor::norm_sq`).
@@ -939,5 +1094,95 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn accumulate_length_checked() {
         accumulate(&mut [0.0; 2], &[&[1.0, 2.0, 3.0]]);
+    }
+
+    #[test]
+    fn prop_pack_unpack_round_trips() {
+        quick("kernel-pack-bits", |rng, _| {
+            let bits = rng.range(1, 35) as u32;
+            let n = rng.range(1, 120);
+            let words: Vec<u64> = (0..n)
+                .map(|_| rng.next_u64() & ((1u64 << bits) - 1))
+                .collect();
+            let mut packed =
+                vec![0u64; (n * bits as usize).div_ceil(64)];
+            for (j, &w) in words.iter().enumerate() {
+                pack_bits(&mut packed, j, bits, w);
+            }
+            for (j, &w) in words.iter().enumerate() {
+                if unpack_bits(&packed, j, bits) != w {
+                    return Err(format!("slot {j} (width {bits}) diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sparse_scatter_bit_exact_to_densified_fold() {
+        // the sparse fold contract: scatter-adding only the retained
+        // coordinates equals densifying and folding the whole vector,
+        // bitwise, for any accumulator state and member count
+        quick("kernel-sparse-scatter", |rng, _| {
+            let d = rng.range(1, 400);
+            let members = rng.range(1, 5);
+            let mut acc_k = vec![0.0f32; d];
+            let mut acc_r = vec![0.0f32; d];
+            for _ in 0..members {
+                let k = rng.range(1, d + 1);
+                let idx: Vec<u32> =
+                    rng.choose_k(d, k).iter().map(|&i| i as u32).collect();
+                let vals = vecf(rng, k);
+                let w = rng.normal_f32(1.0, 0.5);
+                sparse_weighted_accumulate(&mut acc_k, &idx, &vals, w);
+                let dense = reference::sparse_densify(d, &idx, &vals);
+                reference::axpy(&mut acc_r, w, &dense);
+            }
+            let same = acc_k
+                .iter()
+                .zip(&acc_r)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if same {
+                Ok(())
+            } else {
+                Err("sparse scatter diverged from densified fold".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_quantized_fold_bit_exact_to_densified_fold() {
+        quick("kernel-quantized-fold", |rng, _| {
+            let d = rng.range(1, 300);
+            let levels = rng.range(1, 40) as u32;
+            let bits = qsgd_bits_per_coord(levels);
+            let mut packed = vec![0u64; qsgd_packed_words(d, levels)];
+            for j in 0..d {
+                let level = rng.below(u64::from(levels) + 1);
+                pack_bits(&mut packed, j, bits, (level << 1) | rng.below(2));
+            }
+            let norm = rng.normal_f32(1.0, 0.5).abs();
+            let w = rng.normal_f32(1.0, 0.5);
+            let mut acc_k = vecf(rng, d);
+            let mut acc_r = acc_k.clone();
+            quantized_accumulate(&mut acc_k, &packed, norm, levels, w);
+            let dense = reference::quantized_densify(d, &packed, norm, levels);
+            reference::axpy(&mut acc_r, w, &dense);
+            let same = acc_k
+                .iter()
+                .zip(&acc_r)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if same {
+                Ok(())
+            } else {
+                Err("quantized fold diverged from densified fold".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "out of dim")]
+    fn sparse_scatter_bounds_checked() {
+        sparse_weighted_accumulate(&mut [0.0; 2], &[2], &[1.0], 1.0);
     }
 }

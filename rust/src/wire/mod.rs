@@ -1,0 +1,503 @@
+//! The typed wire layer: what a participating client actually puts on
+//! the uplink.
+//!
+//! The paper's headline claim is uplink reduction, and §6 positions OCS
+//! as orthogonal to communication compression — so the upload path must
+//! move *native* compressed payloads, not dense decompressed
+//! equivalents, and the communication accounting must be **measured**
+//! from the bytes a payload really encodes to, not estimated from a
+//! formula. [`Payload`] is that contract:
+//!
+//! * [`Payload::Dense`] — one f32 per coordinate (the uncompressed
+//!   upload; also what `Compressor::None` produces).
+//! * [`Payload::SparseK`] — rand-k sparsification (Stich et al., 2018):
+//!   `k` retained coordinates as parallel index/value arrays, values
+//!   already carrying the d/k unbiasing scale.
+//! * [`Payload::Quantized`] — QSGD-style dithering (Alistarh et al.,
+//!   2017): one shared norm plus a sign+level code word per coordinate,
+//!   bit-packed into u64 words (`tensor::kernels::{pack_bits,
+//!   unpack_bits}`). The variant carries its coordinate count `dim`
+//!   because it is not recoverable from `packed.len()` (the last word
+//!   has slack bits).
+//!
+//! **Byte-exact framing.** [`Payload::encode_into`] appends a
+//! self-describing little-endian frame (1-byte tag + per-kind header +
+//! body); [`Payload::decode`] inverts it exactly —
+//! `decode(encode(p)) == p` for every payload, pinned by property
+//! tests. [`Payload::wire_bytes`] returns the encoded length without
+//! encoding (property-tested equal to `encode_into`'s output length,
+//! and re-verified against a real encode on every debug-build metering
+//! call); the [`crate::fl::comm::BitMeter`] counts it per upload, so
+//! the metrics are measured frame lengths, not formula estimates.
+//!
+//! **Densify boundary.** The secure-aggregation path is dense-only: the
+//! pairwise masks cover every coordinate, so a sparse payload cannot
+//! stay sparse once masked. Compressed payloads densify at the shard
+//! boundary ([`Payload::densify_into`] into the per-worker scratch
+//! arena) — see `coordinator::aggregate::fused_masked_partial` and
+//! DESIGN.md §7. The plain path never densifies: the scatter-add
+//! kernels (`tensor::kernels::{sparse_weighted_accumulate,
+//! quantized_accumulate}`) fold payloads natively, bit-exact to the
+//! retained densify-then-accumulate reference.
+
+use crate::tensor::kernels;
+
+/// Frame tags (first byte of every encoded payload).
+const TAG_DENSE: u8 = 0;
+const TAG_SPARSE: u8 = 1;
+const TAG_QUANT: u8 = 2;
+
+/// One client upload, in its native (possibly compressed) representation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// One f32 per coordinate.
+    Dense(Vec<f32>),
+    /// Rand-k sparsification: `values[t]` belongs to coordinate
+    /// `indices[t]` (ascending, each at most once) and already carries
+    /// the d/k unbiasing scale.
+    SparseK { indices: Vec<u32>, values: Vec<f32> },
+    /// QSGD dithering: coordinate j reconstructs as
+    /// `±norm·level_j/max(levels,1)` from the sign+level code word at
+    /// slot j of `packed` (bit width `kernels::qsgd_bits_per_coord`).
+    Quantized { dim: u32, norm: f32, levels: u32, packed: Vec<u64> },
+}
+
+impl Payload {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Dense(_) => "dense",
+            Payload::SparseK { .. } => "sparsek",
+            Payload::Quantized { .. } => "quantized",
+        }
+    }
+
+    /// Coordinates carried explicitly: d (dense), k (sparse), d
+    /// (quantized — every coordinate has a code word).
+    pub fn carried(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::SparseK { indices, .. } => indices.len(),
+            Payload::Quantized { dim, .. } => *dim as usize,
+        }
+    }
+
+    /// Exact encoded length in bytes — equals `encode_into`'s output
+    /// length (property-tested), without producing the frame.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            // tag + u32 len + 4 bytes per value
+            Payload::Dense(v) => 5 + 4 * v.len(),
+            // tag + u32 k + (u32 index + f32 value) per coordinate
+            Payload::SparseK { indices, .. } => 5 + 8 * indices.len(),
+            // tag + u32 dim + f32 norm + u32 levels + u64 words
+            Payload::Quantized { packed, .. } => 13 + 8 * packed.len(),
+        }
+    }
+
+    /// Append the byte-exact little-endian frame to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.wire_bytes());
+        match self {
+            Payload::Dense(v) => {
+                out.push(TAG_DENSE);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::SparseK { indices, values } => {
+                assert_eq!(
+                    indices.len(),
+                    values.len(),
+                    "ragged sparse payload"
+                );
+                debug_assert!(
+                    indices.windows(2).all(|w| w[0] < w[1]),
+                    "sparse indices must be strictly ascending"
+                );
+                out.push(TAG_SPARSE);
+                out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+                for &i in indices {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for &x in values {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::Quantized { dim, norm, levels, packed } => {
+                assert_eq!(
+                    packed.len(),
+                    kernels::qsgd_packed_words(*dim as usize, *levels),
+                    "quantized payload word count"
+                );
+                out.push(TAG_QUANT);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&norm.to_le_bytes());
+                out.extend_from_slice(&levels.to_le_bytes());
+                for &w in packed {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode one frame; the input must be exactly one encoded payload
+    /// (trailing bytes are an error, as is truncation).
+    pub fn decode(bytes: &[u8]) -> Result<Payload, String> {
+        let mut r = Reader { b: bytes, i: 0 };
+        // pre-allocations are bounded by the bytes actually present so a
+        // corrupt length prefix yields the truncation error, not an
+        // attempted multi-GiB allocation
+        let payload = match r.u8()? {
+            TAG_DENSE => {
+                let n = r.u32()? as usize;
+                let mut v = Vec::with_capacity(n.min(r.remaining() / 4));
+                for _ in 0..n {
+                    v.push(r.f32()?);
+                }
+                Payload::Dense(v)
+            }
+            TAG_SPARSE => {
+                let k = r.u32()? as usize;
+                let mut indices =
+                    Vec::with_capacity(k.min(r.remaining() / 8));
+                for _ in 0..k {
+                    indices.push(r.u32()?);
+                }
+                // the SparseK invariant (ascending ⇒ distinct) is what
+                // makes the scatter fold bit-exact to the densified
+                // reference — reject frames that violate it rather than
+                // letting a duplicate index double-count downstream.
+                // (Index *range* is validated at fold/densify time,
+                // where the model dimension is known.)
+                if !indices.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(
+                        "sparse indices must be strictly ascending".into()
+                    );
+                }
+                let mut values = Vec::with_capacity(k);
+                for _ in 0..k {
+                    values.push(r.f32()?);
+                }
+                Payload::SparseK { indices, values }
+            }
+            TAG_QUANT => {
+                let dim = r.u32()?;
+                let norm = r.f32()?;
+                let levels = r.u32()?;
+                let words = kernels::qsgd_packed_words(dim as usize, levels);
+                let mut packed =
+                    Vec::with_capacity(words.min(r.remaining() / 8));
+                for _ in 0..words {
+                    packed.push(r.u64()?);
+                }
+                Payload::Quantized { dim, norm, levels, packed }
+            }
+            tag => return Err(format!("unknown payload tag {tag}")),
+        };
+        if r.i != bytes.len() {
+            return Err(format!(
+                "{} trailing bytes after payload frame",
+                bytes.len() - r.i
+            ));
+        }
+        Ok(payload)
+    }
+
+    /// Reconstruct the dense decompressed-equivalent vector into a
+    /// caller-owned buffer (every element is overwritten; stale scratch
+    /// contents are fine). This is the *reference semantics* of every
+    /// payload: the fold kernels are bit-exact to folding this vector.
+    pub fn densify_into(&self, out: &mut [f32]) {
+        match self {
+            Payload::Dense(v) => {
+                assert_eq!(out.len(), v.len(), "dense payload dim mismatch");
+                out.copy_from_slice(v);
+            }
+            Payload::SparseK { indices, values } => {
+                out.fill(0.0);
+                let d = out.len();
+                for (&i, &v) in indices.iter().zip(values) {
+                    let i = i as usize;
+                    assert!(i < d, "sparse index {i} out of dim {d}");
+                    out[i] = v;
+                }
+            }
+            Payload::Quantized { dim, norm, levels, packed } => {
+                assert_eq!(
+                    out.len(),
+                    *dim as usize,
+                    "quantized payload dim mismatch"
+                );
+                let bits = kernels::qsgd_bits_per_coord(*levels);
+                let s = (*levels).max(1) as f32;
+                for (j, o) in out.iter_mut().enumerate() {
+                    let w = kernels::unpack_bits(packed, j, bits);
+                    *o = kernels::qsgd_value(
+                        w & 1 == 1,
+                        (w >> 1) as u32,
+                        *norm,
+                        s,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Allocating [`Payload::densify_into`].
+    pub fn densify(&self, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        self.densify_into(&mut out);
+        out
+    }
+}
+
+/// Little-endian frame reader with truncation errors.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Reader<'_> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take<const N: usize>(&mut self) -> Result<[u8; N], String> {
+        let end = self.i + N;
+        if end > self.b.len() {
+            return Err(format!(
+                "truncated payload frame at byte {} (need {N} more)",
+                self.i
+            ));
+        }
+        let mut out = [0u8; N];
+        out.copy_from_slice(&self.b[self.i..end]);
+        self.i = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take::<1>()?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take::<4>()?))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take::<4>()?))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take::<8>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+    use crate::util::rng::Rng;
+
+    /// One random payload of a random kind (indices ascending, levels
+    /// bounded, packed words sized to the codec).
+    fn random_payload(rng: &mut Rng) -> (Payload, usize) {
+        let d = rng.range(1, 200);
+        match rng.below(3) {
+            0 => {
+                let v: Vec<f32> =
+                    (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                (Payload::Dense(v), d)
+            }
+            1 => {
+                let k = rng.range(1, d + 1);
+                let mut idx = rng.choose_k(d, k);
+                idx.sort_unstable();
+                (
+                    Payload::SparseK {
+                        indices: idx.iter().map(|&i| i as u32).collect(),
+                        values: (0..k)
+                            .map(|_| rng.normal_f32(0.0, 2.0))
+                            .collect(),
+                    },
+                    d,
+                )
+            }
+            _ => {
+                let levels = rng.range(1, 40) as u32;
+                let bits = kernels::qsgd_bits_per_coord(levels);
+                let words = kernels::qsgd_packed_words(d, levels);
+                let mut packed = vec![0u64; words];
+                for j in 0..d {
+                    let level = rng.below(u64::from(levels) + 1);
+                    let word = (level << 1) | rng.below(2);
+                    kernels::pack_bits(&mut packed, j, bits, word);
+                }
+                (
+                    Payload::Quantized {
+                        dim: d as u32,
+                        norm: rng.normal_f32(1.0, 0.5).abs(),
+                        levels,
+                        packed,
+                    },
+                    d,
+                )
+            }
+        }
+    }
+
+    #[test]
+    fn prop_round_trip_is_byte_exact() {
+        // decode(encode(p)) == p and wire_bytes() == encoded.len() for
+        // all three kinds across random dims/k/levels
+        quick("wire-round-trip", |rng, _| {
+            let (p, _) = random_payload(rng);
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            if frame.len() != p.wire_bytes() {
+                return Err(format!(
+                    "wire_bytes {} != encoded {}",
+                    p.wire_bytes(),
+                    frame.len()
+                ));
+            }
+            let q = Payload::decode(&frame)?;
+            if q != p {
+                return Err("decode(encode(p)) != p".into());
+            }
+            // re-encoding the decoded payload reproduces the same bytes
+            let mut frame2 = Vec::new();
+            q.encode_into(&mut frame2);
+            if frame2 != frame {
+                return Err("re-encode differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncation_and_trailing_bytes_are_errors() {
+        quick("wire-truncation", |rng, _| {
+            let (p, _) = random_payload(rng);
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            let cut = rng.range(0, frame.len());
+            if Payload::decode(&frame[..cut]).is_ok() {
+                return Err(format!("truncation at {cut} decoded"));
+            }
+            frame.push(0);
+            if Payload::decode(&frame).is_ok() {
+                return Err("trailing byte decoded".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_densify_matches_reference() {
+        use crate::tensor::kernels::reference;
+        quick("wire-densify", |rng, _| {
+            let (p, d) = random_payload(rng);
+            let got = p.densify(d);
+            let want = match &p {
+                Payload::Dense(v) => v.clone(),
+                Payload::SparseK { indices, values } => {
+                    reference::sparse_densify(d, indices, values)
+                }
+                Payload::Quantized { dim, norm, levels, packed } => {
+                    reference::quantized_densify(
+                        *dim as usize,
+                        packed,
+                        *norm,
+                        *levels,
+                    )
+                }
+            };
+            // bitwise: densify is the reference semantics
+            if got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits())
+            {
+                Ok(())
+            } else {
+                Err("densify diverged from reference".into())
+            }
+        });
+    }
+
+    #[test]
+    fn special_float_bits_survive_the_frame() {
+        // signed zero and NaN payloads must round-trip bit-for-bit —
+        // the frame carries raw f32 bit patterns, not values
+        let v = vec![0.0f32, -0.0, f32::NAN, f32::INFINITY, -1.5e-40];
+        let p = Payload::Dense(v.clone());
+        let mut frame = Vec::new();
+        p.encode_into(&mut frame);
+        match Payload::decode(&frame).unwrap() {
+            Payload::Dense(w) => {
+                for (a, b) in v.iter().zip(&w) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong kind {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_is_an_error() {
+        assert!(Payload::decode(&[9, 0, 0, 0, 0]).is_err());
+        assert!(Payload::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn unsorted_or_duplicate_sparse_indices_are_rejected() {
+        // a duplicate index would double-count in the scatter fold while
+        // the densified reference overwrites — decode must refuse it
+        let mk = |indices: Vec<u32>| {
+            let mut frame = vec![TAG_SPARSE];
+            frame.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+            for i in &indices {
+                frame.extend_from_slice(&i.to_le_bytes());
+            }
+            for _ in &indices {
+                frame.extend_from_slice(&1.0f32.to_le_bytes());
+            }
+            frame
+        };
+        assert!(Payload::decode(&mk(vec![0, 2, 2])).is_err());
+        assert!(Payload::decode(&mk(vec![3, 1])).is_err());
+        assert!(Payload::decode(&mk(vec![0, 2, 5])).is_ok());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_errors_without_huge_allocation() {
+        // frames claiming u32::MAX elements but carrying none must fail
+        // with the truncation error (allocation is bounded by the input)
+        assert!(Payload::decode(&[TAG_DENSE, 0xff, 0xff, 0xff, 0xff])
+            .is_err());
+        assert!(Payload::decode(&[TAG_SPARSE, 0xff, 0xff, 0xff, 0xff])
+            .is_err());
+        let mut quant = vec![TAG_QUANT];
+        quant.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+        quant.extend_from_slice(&1.0f32.to_le_bytes()); // norm
+        quant.extend_from_slice(&4u32.to_le_bytes()); // levels
+        assert!(Payload::decode(&quant).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_formulas() {
+        assert_eq!(Payload::Dense(vec![0.0; 7]).wire_bytes(), 5 + 28);
+        let p = Payload::SparseK {
+            indices: vec![1, 5, 6],
+            values: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(p.wire_bytes(), 5 + 24);
+        let q = Payload::Quantized {
+            dim: 10,
+            norm: 1.0,
+            levels: 4,
+            packed: vec![0; kernels::qsgd_packed_words(10, 4)],
+        };
+        // 10 coords × 4 bits = 40 bits → 1 word
+        assert_eq!(q.wire_bytes(), 13 + 8);
+    }
+}

@@ -5,6 +5,7 @@
 //! secure-aggregation path commute, so per-shard partial aggregation is
 //! bit-identical to the flat sum for *any* shard/worker count.
 
+use fedsamp::compress::Compressor;
 use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use fedsamp::coordinator::{
     Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
@@ -37,6 +38,7 @@ fn cfg(strategy: Strategy) -> ExperimentConfig {
         workers: 1,
         secure_updates: true,
         availability: 1.0,
+        compressor: None,
     }
 }
 
@@ -210,6 +212,82 @@ fn plain_aggregation_multi_shard_stays_close() {
         assert_eq!(ra.uplink_bits, rb.uplink_bits);
         assert_eq!(ra.transmitted, rb.transmitted);
     }
+}
+
+#[test]
+fn payload_native_folds_match_the_densified_reference_end_to_end() {
+    // the wire-layer acceptance gate: for every compressor kind, sim
+    // runs on the payload-native scatter folds must be bit-identical to
+    // the retained densify-then-accumulate reference (the pre-wire dense
+    // path, kernels::reference semantics) — trajectory, measured bytes,
+    // selection draws, everything
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    c.secure_updates = false; // plain folds are where the payload path forks
+    for compressor in [
+        None,
+        Some(Compressor::RandK { k: 64 }),
+        Some(Compressor::QsgdQuant { levels: 4 }),
+    ] {
+        let tag = compressor
+            .as_ref()
+            .map_or_else(|| "none".to_string(), Compressor::name);
+        let run = |densify_folds: bool| {
+            let mut engine = build_native_engine(&c);
+            let opts = TrainOptions {
+                compressor: compressor.clone(),
+                verbose_every: 0,
+                densify_folds,
+            };
+            train(&c, &mut engine, &opts).unwrap()
+        };
+        let native = run(false);
+        let reference = run(true);
+        assert_trajectories_identical(&reference, &native, &tag);
+        for (ra, rb) in reference.rounds.iter().zip(&native.rounds) {
+            assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "{tag} bytes");
+        }
+    }
+}
+
+#[test]
+fn compressed_secure_runs_stay_sharding_invariant() {
+    // compressed payloads densify at the shard boundary on the secure
+    // path; ring sums still commute, so shard/worker provisioning must
+    // not move a single bit of the trajectory
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    assert!(c.secure_updates);
+    c.compressor = Some(Compressor::RandK { k: 64 });
+    let seed_run = reference(&c);
+    for (shards, workers) in [(1, 1), (4, 3)] {
+        let (run, _) = coordinated(&c, shards, workers, None);
+        assert_trajectories_identical(
+            &seed_run,
+            &run,
+            &format!("randk secure shards={shards} workers={workers}"),
+        );
+    }
+}
+
+#[test]
+fn config_compressor_equals_train_options_compressor() {
+    // the config-level field and the TrainOptions override must drive
+    // identical runs (same RNG draws, same measured bytes)
+    let mut c = cfg(Strategy::Ocs);
+    c.secure_updates = false;
+    let mut e1 = build_native_engine(&c);
+    let via_opts = train(
+        &c,
+        &mut e1,
+        &TrainOptions {
+            compressor: Some(Compressor::RandK { k: 32 }),
+            ..TrainOptions::default()
+        },
+    )
+    .unwrap();
+    c.compressor = Some(Compressor::RandK { k: 32 });
+    let mut e2 = build_native_engine(&c);
+    let via_cfg = train(&c, &mut e2, &TrainOptions::default()).unwrap();
+    assert_trajectories_identical(&via_opts, &via_cfg, "cfg vs opts");
 }
 
 #[test]
