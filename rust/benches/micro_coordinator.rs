@@ -73,6 +73,7 @@ fn bench_cfg(rounds: usize, cohort: usize, secure: bool) -> ExperimentConfig {
         workers: 1,
         secure_updates: secure,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     }
 }
@@ -101,7 +102,7 @@ fn main() {
             b.run_throughput("rounds", rounds as u64, || {
                 let mut coordinator = Coordinator::new(CoordinatorOptions {
                     shards,
-                    deadline: None,
+                    ..CoordinatorOptions::default()
                 });
                 let run = coordinator
                     .run(&cfg, &mut runner, &TrainOptions::default())

@@ -21,6 +21,18 @@
 //! measurement differ only by the documented framing overhead — see the
 //! property test `prop_wire_bytes_track_the_bit_estimate`).
 //!
+//! ```
+//! use fedsamp::compress::Compressor;
+//! use fedsamp::util::rng::Rng;
+//! let x = vec![1.0f32; 100];
+//! let mut rng = Rng::new(7);
+//! let c = Compressor::parse("randk10").unwrap();
+//! let p = c.compress(&x, &mut rng); // native sparse payload
+//! assert_eq!(p.carried(), 10);
+//! assert!(p.wire_bytes() < 4 * x.len());
+//! assert_eq!(p.densify(x.len()).len(), 100); // dense reference view
+//! ```
+//!
 //! [`RandK`]: Compressor::RandK
 //! [`QsgdQuant`]: Compressor::QsgdQuant
 

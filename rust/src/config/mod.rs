@@ -4,6 +4,7 @@
 pub mod presets;
 
 use crate::compress::Compressor;
+use crate::fl::availability::Trace;
 use crate::util::json::Json;
 
 /// Client sampling strategy (the paper's comparison axis).
@@ -191,6 +192,11 @@ pub struct ExperimentConfig {
     /// per-round client availability probability q (Appendix E); 1.0 = the
     /// main-paper setting where every pool client is always available
     pub availability: f64,
+    /// time-varying availability trace (scenario engine): diurnal
+    /// Bernoulli schedule, per-client session churn, correlated shard
+    /// outages. Replaces the scalar `availability` when set (the scalar
+    /// must then stay at 1.0 — the trace's `base_q` is the baseline)
+    pub availability_trace: Option<Trace>,
     /// update compression applied to participant uploads (§6 composition;
     /// wire-payload kind). `TrainOptions::compressor` overrides when set.
     pub compressor: Option<Compressor>,
@@ -218,6 +224,16 @@ impl ExperimentConfig {
         if !(0.0 < self.availability && self.availability <= 1.0) {
             return Err("availability must be in (0, 1]".into());
         }
+        if let Some(t) = &self.availability_trace {
+            t.validate()?;
+            if self.availability < 1.0 {
+                return Err(
+                    "availability_trace replaces the scalar availability; \
+                     leave availability at 1.0 and set the trace's base_q"
+                        .into(),
+                );
+            }
+        }
         Ok(())
     }
 
@@ -239,6 +255,13 @@ impl ExperimentConfig {
             ("secure_updates", Json::Bool(self.secure_updates)),
             ("availability", Json::num(self.availability)),
             (
+                "availability_trace",
+                match &self.availability_trace {
+                    Some(t) => t.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
                 "compressor",
                 match &self.compressor {
                     Some(c) => c.to_json(),
@@ -252,6 +275,10 @@ impl ExperimentConfig {
         let compressor = match v.get("compressor") {
             Json::Null => None,
             j => Some(Compressor::from_json(j)?),
+        };
+        let availability_trace = match v.get("availability_trace") {
+            Json::Null => None,
+            j => Some(Trace::from_json(j)?),
         };
         let cfg = ExperimentConfig {
             name: v.get("name").as_str().unwrap_or("experiment").to_string(),
@@ -269,6 +296,7 @@ impl ExperimentConfig {
             workers: v.get("workers").as_usize().unwrap_or(4),
             secure_updates: v.get("secure_updates").as_bool().unwrap_or(true),
             availability: v.get("availability").as_f64().unwrap_or(1.0),
+            availability_trace,
             compressor,
         };
         cfg.validate()?;
@@ -316,8 +344,37 @@ mod tests {
             workers: 4,
             secure_updates: true,
             availability: 1.0,
+            availability_trace: None,
             compressor: None,
         }
+    }
+
+    #[test]
+    fn availability_trace_round_trips_and_validates() {
+        use crate::fl::availability::{Churn, Diurnal, Outage, Trace};
+        let mut c = sample();
+        c.availability_trace = Some(Trace {
+            seed: 3,
+            base_q: 0.8,
+            diurnal: Some(Diurnal { amplitude: 0.5, period: 24, zones: 4 }),
+            churn: Some(Churn { session_len: 8, drop_prob: 0.1 }),
+            outage: Some(Outage { prob: 0.02 }),
+        });
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        // a trace composes with availability = 1.0 only
+        c.availability = 0.5;
+        assert!(c.validate().is_err());
+        c.availability = 1.0;
+        c.availability_trace = Some(Trace::bernoulli(1, 0.0));
+        assert!(c.validate().is_err());
+        // absent field → no trace
+        assert_eq!(
+            ExperimentConfig::from_json(&sample().to_json())
+                .unwrap()
+                .availability_trace,
+            None
+        );
     }
 
     #[test]

@@ -71,6 +71,7 @@ fn base(name: &str, data: DataSpec, model: &str, cohort: usize, m: usize,
         workers: 4,
         secure_updates: true,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     }
 }
@@ -131,6 +132,7 @@ pub fn dsgd_theory(m: usize, eta: f64) -> ExperimentConfig {
         workers: 1,
         secure_updates: true,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     }
 }

@@ -30,6 +30,23 @@
 //! AOCS tolerates this because the negotiation only consumes aggregates
 //! of thresholded norms from whoever reported in time.
 //!
+//! The scenario engine (DESIGN.md §8) rides the same seams: cohort
+//! selection is the **streaming** O(cohort)-memory draw of
+//! `fl::availability` (bitwise identical to the seed dense draw), the
+//! availability model may be a time-varying trace — diurnal schedules,
+//! session churn and correlated shard outages compose with the deadline
+//! drops above — and [`CoordinatorOptions::sharded_negotiation`] moves
+//! the AOCS probability negotiation onto per-shard secure partial sums
+//! over the same worker pool.
+//!
+//! ```
+//! use fedsamp::coordinator::Registry;
+//! let r = Registry::new(1_000_000, 64); // O(1) state at any pool size
+//! assert_eq!(r.shard_of(7), 7 % 64);
+//! let part = r.split_cohort(&[7, 2, 999_999]);
+//! assert_eq!(part.clients.iter().map(Vec::len).sum::<usize>(), 3);
+//! ```
+//!
 //! [`ClientEngine`]: crate::fl::ClientEngine
 
 pub mod aggregate;
@@ -67,13 +84,31 @@ pub struct CoordinatorOptions {
     pub shards: usize,
     /// Optional per-round shard deadline model.
     pub deadline: Option<DeadlinePolicy>,
+    /// Run the AOCS probability negotiation per shard with secure
+    /// partial sums over the runner's worker pool (Algorithm 2's
+    /// aggregates arrive as O(shards) masked scalars instead of a
+    /// central scan — see [`RoundMachine::negotiate`]). Off by default:
+    /// the partial sums travel as f32 through the fixed-point ring, so
+    /// trajectories match the central negotiation's fixed point but not
+    /// its last ulps.
+    pub sharded_negotiation: bool,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> CoordinatorOptions {
+        CoordinatorOptions {
+            shards: 1,
+            deadline: None,
+            sharded_negotiation: false,
+        }
+    }
 }
 
 impl CoordinatorOptions {
     /// The configuration `fl::train` uses: one shard — trajectory-
     /// identical to the seed sequential loop.
     pub fn single_shard() -> CoordinatorOptions {
-        CoordinatorOptions { shards: 1, deadline: None }
+        CoordinatorOptions::default()
     }
 }
 
@@ -82,6 +117,9 @@ impl CoordinatorOptions {
 pub struct CoordStats {
     /// Shard-rounds lost to missed deadlines.
     pub shards_dropped: usize,
+    /// Shard-rounds lost to correlated availability-trace outages
+    /// (removed before cohort selection, unlike deadline drops).
+    pub shards_outaged: usize,
     /// Rounds that ended with an empty cohort (no-op rounds).
     pub noop_rounds: usize,
 }
@@ -127,7 +165,10 @@ impl Coordinator {
         if pool == 0 {
             return Err("empty client pool".into());
         }
-        let avail = Availability::from_probability(cfg.availability);
+        let avail = match &cfg.availability_trace {
+            Some(t) => Availability::Trace(t.clone()),
+            None => Availability::from_probability(cfg.availability),
+        };
         let eta_g = match cfg.algorithm {
             Algorithm::FedAvg { eta_g, .. } => eta_g,
             // DSGD folds its step size into the master update (Eq. 2)
@@ -150,6 +191,7 @@ impl Coordinator {
                 self.opts.deadline.as_ref(),
                 &mut round_rng,
             );
+            self.stats.shards_outaged += machine.outaged_shards();
             if machine.cohort().is_empty() {
                 self.stats.noop_rounds += 1;
                 result.push(round::noop_record(round, &meter));
@@ -157,7 +199,17 @@ impl Coordinator {
             }
             machine.local_compute(runner, &x);
             machine.norm_report();
-            machine.negotiate(&sampler, cfg, &mut meter, &mut round_rng);
+            machine.negotiate(
+                &sampler,
+                cfg,
+                if self.opts.sharded_negotiation {
+                    Some(&mut *runner)
+                } else {
+                    None
+                },
+                &mut meter,
+                &mut round_rng,
+            );
             machine.secure_aggregate(
                 cfg,
                 opts,

@@ -5,6 +5,22 @@
 //! to within one client, and stable under pool growth at the tail (new
 //! clients land on existing shards without reshuffling earlier ids —
 //! the property a production registry needs for incremental scale-out).
+//!
+//! The registry itself is O(1) state — two integers — so it describes a
+//! million-client pool as cheaply as a ten-client one; membership is
+//! arithmetic ([`Registry::shard_of`]), never a lookup table, and
+//! [`Registry::shard_members`] iterates a shard's clients without
+//! materializing them. That is what lets the streaming cohort draw
+//! (`fl::availability::sample_round_cohort`) stay O(cohort) per round.
+//!
+//! ```
+//! use fedsamp::coordinator::Registry;
+//! let r = Registry::new(10, 4);
+//! // client 7 lives on shard 7 % 4 == 3
+//! assert_eq!(r.shard_of(7), 3);
+//! let part = r.split_cohort(&[7, 2, 9, 4]);
+//! assert_eq!(part.clients.iter().map(Vec::len).sum::<usize>(), 4);
+//! ```
 
 /// Shard assignment over a fixed client pool.
 #[derive(Clone, Debug)]
@@ -50,10 +66,20 @@ impl Registry {
         client % self.shards
     }
 
+    /// Iterate `shard`'s pool clients in ascending order without
+    /// materializing them — the streaming counterpart of
+    /// [`Registry::clients_of`].
+    pub fn shard_members(
+        &self,
+        shard: usize,
+    ) -> impl Iterator<Item = usize> {
+        assert!(shard < self.shards, "shard {shard} out of range");
+        (shard..self.pool).step_by(self.shards)
+    }
+
     /// All pool clients owned by `shard`, ascending.
     pub fn clients_of(&self, shard: usize) -> Vec<usize> {
-        assert!(shard < self.shards, "shard {shard} out of range");
-        (shard..self.pool).step_by(self.shards).collect()
+        self.shard_members(shard).collect()
     }
 
     /// Number of pool clients owned by `shard`.

@@ -18,11 +18,11 @@
 //! negotiation only ever consumes aggregates of the surviving cohort.
 
 use crate::config::ExperimentConfig;
-use crate::fl::availability::{sample_cohort, Availability};
+use crate::fl::availability::{sample_round_cohort, Availability};
 use crate::fl::comm::BitMeter;
 use crate::fl::{EvalOutcome, LocalOutcome, TrainOptions};
 use crate::metrics::RoundRecord;
-use crate::sampling::{probability, variance, Decision, Sampler};
+use crate::sampling::{aocs, probability, variance, Decision, Sampler};
 use crate::tensor;
 use crate::tensor::kernels;
 use crate::util::rng::Rng;
@@ -36,6 +36,11 @@ use super::DeadlinePolicy;
 /// Seed-stream label for the straggler draws: independent of the round
 /// RNG so enabling a deadline never perturbs cohort/selection streams.
 const STRAGGLER_STREAM: u64 = 0x57A6_61E5;
+
+/// Seed-stream label for the sharded AOCS negotiation's pairwise masks:
+/// independent of the vector-masking round seed so the two secure
+/// exchanges of a round never share mask streams.
+const NEGOTIATION_STREAM: u64 = 0x4E60_71A7;
 
 /// The protocol phases, in execution order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +65,8 @@ pub struct RoundMachine {
     /// global cohort position of each shard-slice member
     shard_positions: Vec<Vec<usize>>,
     dropped_shards: usize,
+    /// shards removed wholesale by a correlated trace outage
+    outaged_shards: usize,
     /// local outcomes, reassembled into cohort order
     outcomes: Vec<LocalOutcome>,
     weights: Vec<f64>,
@@ -81,6 +88,7 @@ impl RoundMachine {
             shard_clients: Vec::new(),
             shard_positions: Vec::new(),
             dropped_shards: 0,
+            outaged_shards: 0,
             outcomes: Vec::new(),
             weights: Vec::new(),
             norms: Vec::new(),
@@ -105,6 +113,13 @@ impl RoundMachine {
         self.dropped_shards
     }
 
+    /// Shards a correlated availability-trace outage removed this round
+    /// (disjoint accounting from deadline [`RoundMachine::dropped_shards`]:
+    /// outages act *before* cohort selection, deadlines after).
+    pub fn outaged_shards(&self) -> usize {
+        self.outaged_shards
+    }
+
     fn expect(&self, phase: Phase) {
         assert_eq!(
             self.phase, phase,
@@ -116,6 +131,14 @@ impl RoundMachine {
     /// (1) Cohort selection from the available pool, partitioned over the
     /// shard registry; shards that miss the round deadline are dropped
     /// wholesale. Returns the number of dropped shards.
+    ///
+    /// Selection is the **streaming** draw of `fl::availability`:
+    /// O(cohort) memory at any pool size, bitwise identical to the seed
+    /// dense draw. Unavailability composes in protocol order — trace
+    /// shard outages and per-client unavailability remove clients
+    /// *before* the uniform draw; deadline misses drop whole shards
+    /// *after* it (a selected client on a straggling shard contributes
+    /// nothing that round).
     pub fn announce(
         &mut self,
         cfg: &ExperimentConfig,
@@ -125,8 +148,15 @@ impl RoundMachine {
         round_rng: &mut Rng,
     ) -> usize {
         self.expect(Phase::Announce);
-        let mut cohort =
-            sample_cohort(avail, registry.pool(), cfg.cohort, round_rng);
+        let draw = sample_round_cohort(
+            avail,
+            registry,
+            self.round,
+            cfg.cohort,
+            round_rng,
+        );
+        self.outaged_shards = draw.outaged_shards;
+        let mut cohort = draw.cohort;
         if let Some(policy) = deadline {
             if policy.miss_prob > 0.0 {
                 let stream = Rng::new(cfg.seed ^ STRAGGLER_STREAM)
@@ -217,16 +247,64 @@ impl RoundMachine {
 
     /// (4)+(5) Sampling negotiation (Eq. 7 / Alg. 2) and the independent
     /// transmission draw, with the α/γ diagnostics of the round.
+    ///
+    /// With `sharded = Some(runner)` and an AOCS sampler, Algorithm 2
+    /// runs **per shard**: every aggregate it consumes (u, then (I, P)
+    /// per rescaling iteration) is computed as per-shard secure partial
+    /// sums — masked scalar folds over the runner's worker pool
+    /// ([`LocalRunner::negotiation_partials`]) — which the master
+    /// combines as O(shards) scalars. Opt-in because the partial sums
+    /// travel as f32 through the fixed-point ring and reorder the
+    /// central f64 fold: the fixed point is the same, the last ulps are
+    /// not, so seed-exact trajectories need the central path.
     pub fn negotiate(
         &mut self,
         sampler: &Sampler,
         cfg: &ExperimentConfig,
+        sharded: Option<&mut dyn LocalRunner>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
     ) {
         self.expect(Phase::Negotiate);
         let m = cfg.budget.min(self.cohort.len());
-        let decision = sampler.decide(&self.norms, m);
+        let decision = match (sampler, sharded) {
+            (Sampler::Aocs { j_max }, Some(runner)) => {
+                let groups: Vec<Vec<(u64, usize)>> = self
+                    .shard_clients
+                    .iter()
+                    .zip(&self.shard_positions)
+                    .map(|(cs, ps)| {
+                        cs.iter()
+                            .zip(ps)
+                            .map(|(&c, &p)| (c as u64, p))
+                            .collect()
+                    })
+                    .collect();
+                let base =
+                    cfg.seed ^ (self.round as u64) ^ NEGOTIATION_STREAM;
+                // fresh mask streams per exchange: reusing one seed
+                // across the negotiation's 1 + 2j secure sums would make
+                // every client's pairwise masks identical one-time pads,
+                // and subtracting a client's masked I-upload from its
+                // masked P-upload would reveal its individual p_i — the
+                // value the sum-only protocol exists to hide
+                let mut exchange: u64 = 0;
+                let r = aocs::aocs_probabilities_sharded(
+                    &self.norms,
+                    &groups,
+                    m,
+                    *j_max,
+                    &mut |scalars: &[Vec<(u64, f32)>]| {
+                        let seed = base
+                            ^ exchange.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        exchange += 1;
+                        runner.negotiation_partials(seed, scalars)
+                    },
+                );
+                Decision::from_aocs(r)
+            }
+            _ => sampler.decide(&self.norms, m),
+        };
         meter.add_negotiation(
             self.cohort.len(),
             decision.extra_uplink_floats_per_client,
@@ -571,6 +649,7 @@ mod tests {
             workers: 1,
             secure_updates: true,
             availability: 1.0,
+            availability_trace: None,
             compressor: None,
         }
     }
@@ -595,7 +674,7 @@ mod tests {
         assert_eq!(m.phase(), Phase::NormReport);
         m.norm_report();
         assert_eq!(m.phase(), Phase::Negotiate);
-        m.negotiate(&sampler, &c, &mut meter, &mut round_rng);
+        m.negotiate(&sampler, &c, None, &mut meter, &mut round_rng);
         assert_eq!(m.phase(), Phase::SecureAggregate);
         m.secure_aggregate(
             &c,
@@ -643,7 +722,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut m = RoundMachine::new(0);
         // negotiate before announce/local_compute must refuse
-        m.negotiate(&sampler, &c, &mut meter, &mut rng);
+        m.negotiate(&sampler, &c, None, &mut meter, &mut rng);
     }
 
     #[test]

@@ -23,9 +23,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
+use crate::secure_agg::SecureAggregator;
 use crate::tensor::kernels::Scratch;
 
 use super::aggregate::{fused_masked_partial, MaskBatch};
+
+/// One shard's sharded-negotiation inputs: `(client id, scalar)` pairs
+/// to be securely summed (see [`LocalRunner::negotiation_partials`]).
+pub type ScalarGroup = Vec<(u64, f32)>;
 
 /// What the round state machine needs from an execution backend.
 pub trait LocalRunner {
@@ -56,6 +61,23 @@ pub trait LocalRunner {
             .iter()
             .map(|g| fused_masked_partial(&batch, g, &mut scratch))
             .collect()
+    }
+    /// Sharded-AOCS negotiation fan-out (Algorithm 2 run shard-locally):
+    /// securely sum each shard group's `(client id, scalar)` pairs —
+    /// masked through [`crate::secure_agg::SecureAggregator`] with the
+    /// group as the roster, so the master only ever sees per-shard sums
+    /// — returning one partial per group, aligned with `groups`.
+    /// Fixed-point ring sums are exact, so *where* a group is folded
+    /// never changes its bits. The default runs sequentially on the
+    /// calling thread; pooled runners distribute groups over their
+    /// workers.
+    fn negotiation_partials(
+        &mut self,
+        round_seed: u64,
+        groups: &[ScalarGroup],
+    ) -> Vec<f32> {
+        let agg = SecureAggregator::new(round_seed);
+        groups.iter().map(|g| agg.aggregate_scalars(g)).collect()
     }
     /// Evaluate global parameters on the validation split.
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome;
@@ -152,9 +174,10 @@ impl LocalRunner for EngineRunner<'_> {
 // worker pool (channel pattern from runtime::engine)
 // ---------------------------------------------------------------------------
 
-/// The two job kinds a pool worker runs: one client's local pass, or one
-/// shard group's masked fold (secure aggregation). Both use the worker's
-/// own scratch arena.
+/// The job kinds a pool worker runs: one client's local pass, one shard
+/// group's masked vector fold (secure aggregation), or one shard
+/// group's masked scalar fold (the sharded AOCS negotiation). The first
+/// two use the worker's own scratch arena.
 enum ShardJob {
     Local {
         shard: usize,
@@ -167,6 +190,11 @@ enum ShardJob {
         group: usize,
         batch: Arc<MaskBatch>,
     },
+    ScalarFold {
+        group: usize,
+        round_seed: u64,
+        groups: Arc<Vec<ScalarGroup>>,
+    },
 }
 
 enum ShardReply {
@@ -178,6 +206,10 @@ enum ShardReply {
     MaskFold {
         group: usize,
         partial: Vec<u64>,
+    },
+    ScalarFold {
+        group: usize,
+        sum: f32,
     },
 }
 
@@ -230,6 +262,15 @@ impl ShardPool {
                                     &mut scratch,
                                 );
                                 ShardReply::MaskFold { group, partial }
+                            }
+                            ShardJob::ScalarFold {
+                                group,
+                                round_seed,
+                                groups,
+                            } => {
+                                let sum = SecureAggregator::new(round_seed)
+                                    .aggregate_scalars(&groups[group]);
+                                ShardReply::ScalarFold { group, sum }
                             }
                         };
                         if rep_tx.send(reply).is_err() {
@@ -345,9 +386,7 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
                     debug_assert!(out[shard][pos].is_none());
                     out[shard][pos] = Some(outcome);
                 }
-                ShardReply::MaskFold { .. } => {
-                    panic!("mask-fold reply during local compute")
-                }
+                _ => panic!("fold reply during local compute"),
             }
         }
         out.into_iter()
@@ -387,9 +426,45 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
                     debug_assert!(out[group].is_none());
                     out[group] = Some(partial);
                 }
-                ShardReply::Local { .. } => {
-                    panic!("local reply during mask fold")
+                _ => panic!("unexpected reply during mask fold"),
+            }
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Fan the sharded-negotiation scalar folds out over the worker
+    /// pool: one `ScalarFold` job per shard group, partials landing by
+    /// group index. Fixed-point masking is exact in the ring, so the
+    /// pooled result is bit-identical to the sequential default for any
+    /// worker count or completion order.
+    fn negotiation_partials(
+        &mut self,
+        round_seed: u64,
+        groups: &[ScalarGroup],
+    ) -> Vec<f32> {
+        let Some(pool) = &self.pool else {
+            let agg = SecureAggregator::new(round_seed);
+            return groups.iter().map(|g| agg.aggregate_scalars(g)).collect();
+        };
+        let total = groups.len();
+        let groups: Arc<Vec<ScalarGroup>> = Arc::new(groups.to_vec());
+        for group in 0..total {
+            pool.jobs
+                .send(ShardJob::ScalarFold {
+                    group,
+                    round_seed,
+                    groups: Arc::clone(&groups),
+                })
+                .expect("shard pool dead");
+        }
+        let mut out: Vec<Option<f32>> = vec![None; total];
+        for _ in 0..total {
+            match pool.replies.recv().expect("shard pool dead") {
+                ShardReply::ScalarFold { group, sum } => {
+                    debug_assert!(out[group].is_none());
+                    out[group] = Some(sum);
                 }
+                _ => panic!("unexpected reply during negotiation fold"),
             }
         }
         out.into_iter().map(Option::unwrap).collect()
@@ -515,6 +590,35 @@ mod tests {
         let b = pooled.secure_partials(batch);
         assert_eq!(a, b);
         assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn pooled_and_inline_negotiation_partials_agree_bitwise() {
+        let groups: Vec<ScalarGroup> = vec![
+            (0..5u64).map(|i| (i, 0.25 + i as f32 * 0.5)).collect(),
+            vec![(7, -3.5)],
+            Vec::new(),
+            (10..14u64).map(|i| (i, (i as f32).sin())).collect(),
+        ];
+        let mut inline = ParallelRunner::new(TagCompute { n: 8, dim: 2 }, 1);
+        let mut pooled = ParallelRunner::new(TagCompute { n: 8, dim: 2 }, 3);
+        let a = inline.negotiation_partials(77, &groups);
+        let b = pooled.negotiation_partials(77, &groups);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // and matches the direct secure scalar aggregation
+        use crate::secure_agg::SecureAggregator;
+        let agg = SecureAggregator::new(77);
+        for (g, &got) in groups.iter().zip(&a) {
+            assert_eq!(got.to_bits(), agg.aggregate_scalars(g).to_bits());
+        }
+        // masked sums track the plain sums up to fixed-point precision
+        for (g, &got) in groups.iter().zip(&a) {
+            let plain: f32 = g.iter().map(|&(_, x)| x).sum();
+            assert!((got - plain).abs() < 1e-4, "{got} vs {plain}");
+        }
     }
 
     #[test]

@@ -176,6 +176,7 @@ fn arm_cfg(tag: &str, rounds: usize) -> ExperimentConfig {
         workers: 1,
         secure_updates: false,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     }
 }

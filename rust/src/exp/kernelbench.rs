@@ -211,6 +211,7 @@ fn rounds_per_sec(quick: bool) -> (f64, usize) {
         workers: 1,
         secure_updates: true,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     };
     let mut engine = build_native_engine(&cfg);

@@ -5,6 +5,7 @@ pub mod commbench;
 pub mod figures;
 pub mod kernelbench;
 pub mod securebench;
+pub mod sweep;
 
 use crate::config::{presets, ExperimentConfig, Strategy};
 use crate::data;

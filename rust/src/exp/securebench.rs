@@ -165,6 +165,7 @@ fn sim_rounds_per_sec(
         workers,
         secure_updates: secure,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     };
     let b = bench("secure/sim", quick);
@@ -174,7 +175,7 @@ fn sim_rounds_per_sec(
         let mut runner = ParallelRunner::new(engine, workers);
         let mut coordinator = Coordinator::new(CoordinatorOptions {
             shards: POOLED_SHARDS,
-            deadline: None,
+            ..CoordinatorOptions::default()
         });
         b.run(&name, || {
             let run = coordinator

@@ -1,0 +1,545 @@
+//! The scenario sweep driver: `fedsamp sweep` runs a
+//! {strategy × compressor × availability × pool-size} experiment grid
+//! with multi-seed averaging and emits `BENCH_sweep.json` plus a flat
+//! `BENCH_sweep.csv` — the harness behind EXPERIMENTS.md §Scenarios.
+//!
+//! Every arm is one sim-path experiment through the full coordinator
+//! stack — run over a **sharded** registry ([`SweepSpec::shards`]), so
+//! availability traces (including correlated whole-shard outages),
+//! streaming cohort selection, compression and the measured-bytes
+//! metrics all compose exactly as they do in a real deployment. Arms share the FedAvg/femnist
+//! configuration of the perf suites; `secure_updates` is off (the
+//! sweep measures sampling/availability behavior, and `bench secure`
+//! owns the masking-cost story).
+//!
+//! Availability arms are named specs (the CLI grammar):
+//! `alwayson`, `bern<q>` (Bernoulli trace at base q), `diurnal<q>`
+//! (base q with a 24-round day cycle over 4 timezone groups),
+//! `churn<q>` (8-round sessions, 30% dropped), `outage<p>` (per-round
+//! whole-shard outage probability p) — see [`parse_availability_arm`].
+
+use crate::compress::Compressor;
+use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use crate::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
+use crate::fl::availability::{Churn, Diurnal, Outage, Trace};
+use crate::fl::TrainOptions;
+use crate::metrics::{average_runs, RunResult};
+use crate::sim::build_native_engine;
+use crate::util::json::Json;
+
+/// Seed for the trace draw streams of CLI/preset availability arms —
+/// fixed so that scenario arms are comparable across sweeps.
+const ARM_TRACE_SEED: u64 = 0x5CE2_A210;
+
+/// One availability arm of the grid: a display name plus the trace it
+/// runs under (`None` = the main-paper always-on setting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AvailabilityArm {
+    pub name: String,
+    pub trace: Option<Trace>,
+}
+
+impl AvailabilityArm {
+    pub fn always_on() -> AvailabilityArm {
+        AvailabilityArm { name: "alwayson".into(), trace: None }
+    }
+}
+
+/// Parse an availability-arm spec (the `--availabilities` CLI grammar).
+pub fn parse_availability_arm(spec: &str) -> Result<AvailabilityArm, String> {
+    let arm = |trace: Trace| AvailabilityArm {
+        name: spec.to_string(),
+        trace: Some(trace),
+    };
+    if spec == "alwayson" || spec == "always" {
+        return Ok(AvailabilityArm::always_on());
+    }
+    let q_of = |rest: &str, what: &str| -> Result<f64, String> {
+        rest.parse::<f64>()
+            .map_err(|_| format!("bad {what} probability in '{spec}'"))
+    };
+    if let Some(rest) = spec.strip_prefix("bern") {
+        return Ok(arm(Trace::bernoulli(ARM_TRACE_SEED, q_of(rest, "bern")?)));
+    }
+    if let Some(rest) = spec.strip_prefix("diurnal") {
+        return Ok(arm(Trace {
+            seed: ARM_TRACE_SEED,
+            base_q: q_of(rest, "diurnal")?,
+            diurnal: Some(Diurnal { amplitude: 0.6, period: 24, zones: 4 }),
+            churn: None,
+            outage: None,
+        }));
+    }
+    if let Some(rest) = spec.strip_prefix("churn") {
+        return Ok(arm(Trace {
+            seed: ARM_TRACE_SEED,
+            base_q: q_of(rest, "churn")?,
+            diurnal: None,
+            churn: Some(Churn { session_len: 8, drop_prob: 0.3 }),
+            outage: None,
+        }));
+    }
+    if let Some(rest) = spec.strip_prefix("outage") {
+        return Ok(arm(Trace {
+            seed: ARM_TRACE_SEED,
+            base_q: 1.0,
+            diurnal: None,
+            churn: None,
+            outage: Some(Outage { prob: q_of(rest, "outage")? }),
+        }));
+    }
+    Err(format!(
+        "unknown availability arm '{spec}' (expected alwayson|bern<q>|\
+         diurnal<q>|churn<q>|outage<p>)"
+    ))
+}
+
+/// The grid axes plus the per-arm run shape.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub strategies: Vec<Strategy>,
+    /// `Compressor::None` is the uncompressed arm.
+    pub compressors: Vec<Compressor>,
+    pub availabilities: Vec<AvailabilityArm>,
+    pub pools: Vec<usize>,
+    /// Seeds averaged per arm (`base_seed..base_seed + seeds`).
+    pub seeds: u64,
+    pub base_seed: u64,
+    pub rounds: usize,
+    pub cohort: usize,
+    pub budget: usize,
+    /// Registry shards each arm's coordinator runs over (> 1 so
+    /// shard-scoped trace outages down a segment, not the whole pool).
+    pub shards: usize,
+    /// Echoed into the JSON so quick smoke outputs are identifiable.
+    pub quick: bool,
+}
+
+impl SweepSpec {
+    /// The CI smoke grid: {full, uniform, aocs} × {none} ×
+    /// {alwayson, bern0.7} × {40}, one seed, 6 rounds — seconds of work,
+    /// every layer exercised.
+    pub fn quick() -> SweepSpec {
+        SweepSpec {
+            strategies: vec![
+                Strategy::Full,
+                Strategy::Uniform,
+                Strategy::Aocs { j_max: 4 },
+            ],
+            compressors: vec![Compressor::None],
+            availabilities: vec![
+                AvailabilityArm::always_on(),
+                parse_availability_arm("bern0.7").unwrap(),
+            ],
+            pools: vec![40],
+            seeds: 1,
+            base_seed: 1,
+            rounds: 6,
+            cohort: 16,
+            budget: 4,
+            shards: 4,
+            quick: true,
+        }
+    }
+
+    /// The default full grid: 4 strategies × {none, randk64} ×
+    /// {alwayson, bern0.7, diurnal0.8} × {60, 240}, 3 seeds, 30 rounds.
+    pub fn default_grid() -> SweepSpec {
+        SweepSpec {
+            strategies: vec![
+                Strategy::Full,
+                Strategy::Uniform,
+                Strategy::Ocs,
+                Strategy::Aocs { j_max: 4 },
+            ],
+            compressors: vec![
+                Compressor::None,
+                Compressor::RandK { k: 64 },
+            ],
+            availabilities: vec![
+                AvailabilityArm::always_on(),
+                parse_availability_arm("bern0.7").unwrap(),
+                parse_availability_arm("diurnal0.8").unwrap(),
+            ],
+            pools: vec![60, 240],
+            seeds: 3,
+            base_seed: 1,
+            rounds: 30,
+            cohort: 16,
+            budget: 4,
+            shards: 4,
+            quick: false,
+        }
+    }
+
+    pub fn arm_count(&self) -> usize {
+        self.strategies.len()
+            * self.compressors.len()
+            * self.availabilities.len()
+            * self.pools.len()
+    }
+}
+
+/// One grid arm's seed-averaged summary (one CSV row).
+#[derive(Clone, Debug)]
+pub struct ArmSummary {
+    pub strategy: String,
+    pub compressor: String,
+    pub availability: String,
+    pub pool: usize,
+    pub seeds: u64,
+    pub rounds: usize,
+    pub final_train_loss: f64,
+    pub final_accuracy: f64,
+    pub mean_alpha: f64,
+    pub total_uplink_bytes: u64,
+    pub bytes_per_round: f64,
+    pub mean_transmitted: f64,
+    /// Rounds where no client was reachable (availability too hostile).
+    pub noop_rounds: usize,
+}
+
+impl ArmSummary {
+    fn from_run(
+        run: &RunResult,
+        strategy: &Strategy,
+        compressor: &Compressor,
+        availability: &AvailabilityArm,
+        pool: usize,
+        seeds: u64,
+    ) -> ArmSummary {
+        let n = run.rounds.len().max(1);
+        let noop_rounds =
+            run.rounds.iter().filter(|r| r.train_loss.is_nan()).count();
+        // last *finite* loss: a hostile arm whose final round drew an
+        // empty cohort must not poison the headline column with NaN
+        // (mirrors how final_accuracy skips non-eval rounds)
+        let final_train_loss = run
+            .rounds
+            .iter()
+            .rev()
+            .find(|r| !r.train_loss.is_nan())
+            .map(|r| r.train_loss)
+            .unwrap_or(f64::NAN);
+        let mean_transmitted = run
+            .rounds
+            .iter()
+            .map(|r| r.transmitted as f64)
+            .sum::<f64>()
+            / n as f64;
+        ArmSummary {
+            strategy: strategy.name().into(),
+            compressor: compressor.name(),
+            availability: availability.name.clone(),
+            pool,
+            seeds,
+            rounds: run.rounds.len(),
+            final_train_loss,
+            final_accuracy: run.final_accuracy(),
+            mean_alpha: run.mean_alpha(),
+            total_uplink_bytes: run.total_uplink_bytes(),
+            bytes_per_round: run.total_uplink_bytes() as f64 / n as f64,
+            mean_transmitted,
+            noop_rounds,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy.clone())),
+            ("compressor", Json::str(self.compressor.clone())),
+            ("availability", Json::str(self.availability.clone())),
+            ("pool", Json::num(self.pool as f64)),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("mean_alpha", Json::num(self.mean_alpha)),
+            (
+                "total_uplink_bytes",
+                Json::num(self.total_uplink_bytes as f64),
+            ),
+            ("bytes_per_round", Json::num(self.bytes_per_round)),
+            ("mean_transmitted", Json::num(self.mean_transmitted)),
+            ("noop_rounds", Json::num(self.noop_rounds as f64)),
+        ])
+    }
+
+    fn to_csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.strategy,
+            self.compressor,
+            self.availability,
+            self.pool,
+            self.seeds,
+            self.rounds,
+            self.final_train_loss,
+            self.final_accuracy,
+            self.mean_alpha,
+            self.total_uplink_bytes,
+            self.bytes_per_round,
+            self.mean_transmitted,
+            self.noop_rounds
+        )
+    }
+}
+
+/// The CSV header [`SweepReport::to_csv`] emits (column semantics:
+/// EXPERIMENTS.md §Scenarios).
+pub const CSV_HEADER: &str = "strategy,compressor,availability,pool,seeds,\
+rounds,final_train_loss,final_accuracy,mean_alpha,total_uplink_bytes,\
+bytes_per_round,mean_transmitted,noop_rounds";
+
+/// A completed grid.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub quick: bool,
+    pub arms: Vec<ArmSummary>,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("sweep")),
+            ("quick", Json::Bool(self.quick)),
+            (
+                "arms",
+                Json::Arr(self.arms.iter().map(ArmSummary::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(CSV_HEADER);
+        s.push('\n');
+        for arm in &self.arms {
+            s.push_str(&arm.to_csv_row());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write `BENCH_sweep.json` + `BENCH_sweep.csv` into `dir`; returns
+    /// the two paths.
+    pub fn save(&self, dir: &str) -> Result<(String, String), String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create {dir}: {e}"))?;
+        let json_path = format!("{dir}/BENCH_sweep.json");
+        let csv_path = format!("{dir}/BENCH_sweep.csv");
+        std::fs::write(&json_path, self.to_json().to_pretty())
+            .map_err(|e| format!("write {json_path}: {e}"))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .map_err(|e| format!("write {csv_path}: {e}"))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+/// The shared arm configuration (the perf suites' FedAvg/femnist shape,
+/// availability and pool size swapped per arm).
+fn arm_cfg(
+    spec: &SweepSpec,
+    strategy: &Strategy,
+    compressor: &Compressor,
+    availability: &AvailabilityArm,
+    pool: usize,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!(
+            "sweep_{}_{}_{}_p{pool}",
+            strategy.name(),
+            compressor.name(),
+            availability.name
+        ),
+        seed: spec.base_seed,
+        rounds: spec.rounds,
+        cohort: spec.cohort,
+        budget: spec.budget,
+        strategy: strategy.clone(),
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: spec.rounds,
+        eval_examples: 128,
+        workers: 1,
+        secure_updates: false,
+        availability: 1.0,
+        availability_trace: availability.trace.clone(),
+        compressor: match compressor {
+            Compressor::None => None,
+            c => Some(c.clone()),
+        },
+    }
+}
+
+/// Run the full grid: every {strategy × compressor × availability ×
+/// pool} arm, `spec.seeds` seeds each, seed runs averaged pointwise
+/// (`metrics::average_runs`, the paper's mean-over-seeds convention).
+pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String> {
+    let mut arms = Vec::with_capacity(spec.arm_count());
+    for pool in &spec.pools {
+        for availability in &spec.availabilities {
+            for strategy in &spec.strategies {
+                for compressor in &spec.compressors {
+                    let cfg = arm_cfg(
+                        spec,
+                        strategy,
+                        compressor,
+                        availability,
+                        *pool,
+                    );
+                    let mut runs = Vec::with_capacity(spec.seeds as usize);
+                    for s in 0..spec.seeds.max(1) {
+                        let mut c = cfg.clone();
+                        c.seed = spec.base_seed + s;
+                        let engine = build_native_engine(&c);
+                        let mut runner = ParallelRunner::new(engine, 1);
+                        let mut coordinator =
+                            Coordinator::new(CoordinatorOptions {
+                                shards: spec.shards.max(1),
+                                ..CoordinatorOptions::default()
+                            });
+                        runs.push(coordinator.run(
+                            &c,
+                            &mut runner,
+                            &TrainOptions::default(),
+                        )?);
+                    }
+                    let avg = average_runs(&runs);
+                    let summary = ArmSummary::from_run(
+                        &avg,
+                        strategy,
+                        compressor,
+                        availability,
+                        *pool,
+                        spec.seeds.max(1),
+                    );
+                    if verbose {
+                        println!(
+                            "sweep {}×{}×{}×p{}: loss {:.4} acc {:.3} \
+                             {:.0} B/round sent {:.1}/round",
+                            summary.strategy,
+                            summary.compressor,
+                            summary.availability,
+                            summary.pool,
+                            summary.final_train_loss,
+                            summary.final_accuracy,
+                            summary.bytes_per_round,
+                            summary.mean_transmitted,
+                        );
+                    }
+                    arms.push(summary);
+                }
+            }
+        }
+    }
+    Ok(SweepReport { quick: spec.quick, arms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn availability_arm_grammar() {
+        assert_eq!(
+            parse_availability_arm("alwayson").unwrap(),
+            AvailabilityArm::always_on()
+        );
+        let b = parse_availability_arm("bern0.5").unwrap();
+        assert_eq!(b.trace.as_ref().unwrap().base_q, 0.5);
+        assert!(b.trace.as_ref().unwrap().diurnal.is_none());
+        let d = parse_availability_arm("diurnal0.8").unwrap();
+        assert!(d.trace.as_ref().unwrap().diurnal.is_some());
+        let c = parse_availability_arm("churn0.9").unwrap();
+        assert!(c.trace.as_ref().unwrap().churn.is_some());
+        let o = parse_availability_arm("outage0.1").unwrap();
+        assert_eq!(o.trace.as_ref().unwrap().base_q, 1.0);
+        assert!(o.trace.as_ref().unwrap().outage.is_some());
+        assert!(parse_availability_arm("lunar").is_err());
+        assert!(parse_availability_arm("bernX").is_err());
+    }
+
+    #[test]
+    fn quick_spec_covers_the_acceptance_arms() {
+        let spec = SweepSpec::quick();
+        assert_eq!(spec.arm_count(), 6);
+        let names: Vec<&str> =
+            spec.strategies.iter().map(Strategy::name).collect();
+        assert_eq!(names, vec!["full", "uniform", "aocs"]);
+        assert!(spec
+            .availabilities
+            .iter()
+            .any(|a| a.trace.is_none()));
+        assert!(spec
+            .availabilities
+            .iter()
+            .any(|a| matches!(&a.trace, Some(t) if t.base_q < 1.0)));
+        // every arm config the quick grid builds must validate
+        for pool in &spec.pools {
+            for avail in &spec.availabilities {
+                for s in &spec.strategies {
+                    for c in &spec.compressors {
+                        arm_cfg(&spec, s, c, avail, *pool)
+                            .validate()
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_grid_validates() {
+        let spec = SweepSpec::default_grid();
+        assert_eq!(spec.arm_count(), 4 * 2 * 3 * 2);
+        for pool in &spec.pools {
+            for avail in &spec.availabilities {
+                for s in &spec.strategies {
+                    for c in &spec.compressors {
+                        arm_cfg(&spec, s, c, avail, *pool)
+                            .validate()
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_sweep_produces_aligned_csv_and_json() {
+        let spec = SweepSpec {
+            strategies: vec![Strategy::Uniform],
+            compressors: vec![Compressor::None],
+            availabilities: vec![
+                AvailabilityArm::always_on(),
+                parse_availability_arm("bern0.6").unwrap(),
+            ],
+            pools: vec![24],
+            seeds: 1,
+            base_seed: 5,
+            rounds: 3,
+            cohort: 8,
+            budget: 2,
+            shards: 3,
+            quick: true,
+        };
+        let report = run_sweep(&spec, false).unwrap();
+        assert_eq!(report.arms.len(), 2);
+        let csv = report.to_csv();
+        assert!(csv.starts_with(CSV_HEADER));
+        assert_eq!(csv.lines().count(), 3);
+        let j = report.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("sweep"));
+        assert_eq!(j.get("arms").as_arr().unwrap().len(), 2);
+        for arm in &report.arms {
+            assert!(arm.total_uplink_bytes > 0, "{arm:?}");
+            assert_eq!(arm.rounds, 3);
+        }
+    }
+}

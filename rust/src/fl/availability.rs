@@ -1,22 +1,319 @@
-//! Client availability (Appendix E): which pool clients can be reached in
-//! a given round, and cohort selection among them.
+//! Client availability (Appendix E) at million-client scale: which pool
+//! clients can be reached in a given round, and **streaming** cohort
+//! selection among them.
 //!
 //! The main-paper experiments sample the round cohort uniformly from an
 //! always-available pool; Appendix E extends the analysis to a known
-//! availability distribution Q with `q_i = Prob(i ∈ Q^k)` — modelled here
-//! as independent Bernoulli availability.
+//! availability distribution Q with `q_i = Prob(i ∈ Q^k)`. Two model
+//! families implement it here:
+//!
+//! * the **static** models ([`Availability::AlwaysOn`],
+//!   [`Availability::Bernoulli`], [`Availability::PerClient`]) — iid
+//!   across rounds, drawing from the round RNG exactly as the seed
+//!   protocol did;
+//! * the **time-varying traces** ([`Availability::Trace`]) — diurnal
+//!   Bernoulli schedules, per-client session churn and correlated
+//!   whole-shard outages. A trace is a *pure function* of
+//!   `(client, round)` over dedicated seed streams: any shard (or any
+//!   replay) can evaluate it independently, it costs no per-client
+//!   state, and enabling one never perturbs the cohort/selection RNG
+//!   (the same design as the coordinator's straggler stream).
+//!
+//! **Streaming selection.** [`sample_round_cohort`] draws a round cohort
+//! with memory proportional to the *cohort*, never the pool: the partial
+//! Fisher–Yates behind `Rng::choose_k` is simulated sparsely (a hash map
+//! of displaced slots instead of an O(pool) index vector), and the
+//! availability scan of the static models is counted and then replayed
+//! from a cloned RNG instead of materializing the available set. The
+//! draw is **bitwise identical** to the retained dense reference
+//! ([`reference::sample_cohort_dense`]) — same RNG consumption, same
+//! cohort, property-pinned — so every pre-existing seed trajectory is
+//! unchanged. With a million-client pool and a 512-client cohort the
+//! per-round allocation is a few tens of KiB instead of ~8 MiB
+//! (pinned by `tests/streaming_cohort.rs` with a counting allocator).
+//!
+//! ```
+//! use fedsamp::fl::availability::{Diurnal, Trace};
+//! let t = Trace {
+//!     seed: 7,
+//!     base_q: 0.8,
+//!     diurnal: Some(Diurnal { amplitude: 0.5, period: 24, zones: 4 }),
+//!     churn: None,
+//!     outage: None,
+//! };
+//! // a pure function of (client, round): replayable anywhere, no state
+//! assert_eq!(t.is_available(42, 3), t.is_available(42, 3));
+//! let q = t.q_at(42, 3);
+//! assert!(q >= 0.8 * 0.5 && q <= 0.8);
+//! ```
 
-use crate::util::rng::Rng;
+use crate::coordinator::registry::Registry;
+use crate::util::json::Json;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Seed-stream labels for the trace draws — dedicated streams, so traces
+/// never consume (or perturb) the round RNG that drives selection.
+const AVAIL_STREAM: u64 = 0x7C1E_A51B_0D1A_6E55;
+const CHURN_STREAM: u64 = 0x00C4_E55E_5E55_10A1;
+const CHURN_PHASE_STREAM: u64 = 0x0FA5_E0FF_5E7B_AC4E;
+const OUTAGE_STREAM: u64 = 0x0D07_A6E5_0077_A6E5;
+
+/// Diurnal Bernoulli schedule: availability oscillates over the round
+/// clock, staggered across timezone groups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diurnal {
+    /// Peak-to-trough modulation depth in `[0, 1]`: at the trough the
+    /// availability is `base_q · (1 − amplitude)`.
+    pub amplitude: f64,
+    /// Rounds per full day cycle (≥ 1).
+    pub period: usize,
+    /// Timezone groups (≥ 1): client `i` belongs to zone `i % zones`,
+    /// which offsets its phase by `zone/zones` of a period.
+    pub zones: usize,
+}
+
+/// Per-client session churn: a client is online or offline for whole
+/// sessions at a time (correlated across the rounds of a session),
+/// with session boundaries staggered per client.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Churn {
+    /// Rounds per connectivity session (≥ 1).
+    pub session_len: usize,
+    /// Probability a given session is spent entirely offline, in `[0, 1)`.
+    pub drop_prob: f64,
+}
+
+/// Correlated shard outage: a whole registry shard (network segment,
+/// region) drops out of a round together.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Outage {
+    /// Per-(round, shard) probability the shard is unreachable, in `[0, 1)`.
+    pub prob: f64,
+}
+
+/// A time-varying availability trace (the scenario-engine model).
+///
+/// Availability of client `i` at round `k` composes three independent
+/// gates, each a pure function of `(i, k)` over its own seed stream:
+/// the client's shard is not in a correlated [`Outage`] this round, the
+/// client is not in a churned-off [`Churn`] session, and a Bernoulli
+/// draw with the diurnal-modulated probability [`Trace::q_at`] succeeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Seed for the trace's dedicated draw streams (independent of the
+    /// experiment seed so scenario ablations can hold it fixed).
+    pub seed: u64,
+    /// Baseline availability probability q, in `(0, 1]`.
+    pub base_q: f64,
+    pub diurnal: Option<Diurnal>,
+    pub churn: Option<Churn>,
+    pub outage: Option<Outage>,
+}
+
+impl Trace {
+    /// A plain Bernoulli trace (no diurnal/churn/outage structure).
+    pub fn bernoulli(seed: u64, q: f64) -> Trace {
+        Trace { seed, base_q: q, diurnal: None, churn: None, outage: None }
+    }
+
+    /// True when every client is deterministically reachable every round
+    /// (q = 1, no modulation, no churn) — [`sample_round_cohort`] then
+    /// degrades to the exact [`Availability::AlwaysOn`] draw.
+    pub fn always_available(&self) -> bool {
+        let flat_diurnal = match &self.diurnal {
+            Some(d) => d.amplitude <= 0.0,
+            None => true,
+        };
+        let no_churn = match &self.churn {
+            Some(c) => c.drop_prob <= 0.0,
+            None => true,
+        };
+        self.base_q >= 1.0 && flat_diurnal && no_churn
+    }
+
+    /// The diurnal-modulated Bernoulli probability of client `i` at
+    /// round `k` (the schedule; churn and outages gate on top of it).
+    pub fn q_at(&self, client: usize, round: usize) -> f64 {
+        let mut q = self.base_q;
+        if let Some(d) = &self.diurnal {
+            let zones = d.zones.max(1);
+            let phase = (client % zones) as f64 / zones as f64;
+            let t = (round as f64 / d.period.max(1) as f64 + phase)
+                * std::f64::consts::TAU;
+            q *= 1.0 - d.amplitude * (0.5 + 0.5 * t.sin());
+        }
+        q.clamp(0.0, 1.0)
+    }
+
+    /// Whether `client` spends round `round` in a churned-off session.
+    fn churned_off(&self, client: usize, round: usize) -> bool {
+        let Some(c) = &self.churn else { return false };
+        if c.drop_prob <= 0.0 {
+            return false;
+        }
+        let len = c.session_len.max(1);
+        // stagger session boundaries per client so the pool does not
+        // flip connectivity in lockstep
+        let mut sm = self.seed
+            ^ CHURN_PHASE_STREAM
+            ^ (client as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+        let offset = (splitmix64(&mut sm) % len as u64) as usize;
+        let session = (round + offset) / len;
+        Rng::new(self.seed ^ CHURN_STREAM)
+            .fork(client as u64)
+            .fork(session as u64)
+            .bernoulli(c.drop_prob)
+    }
+
+    /// Client-level availability at `(client, round)` — churn gate plus
+    /// the Bernoulli schedule draw. Pure and stateless: two evaluations
+    /// always agree, and no call consumes shared RNG state. (The shard
+    /// [`Outage`] gate composes at the registry level — see
+    /// [`Trace::shard_down`].)
+    pub fn is_available(&self, client: usize, round: usize) -> bool {
+        if self.churned_off(client, round) {
+            return false;
+        }
+        let q = self.q_at(client, round);
+        if q >= 1.0 {
+            return true;
+        }
+        if q <= 0.0 {
+            return false;
+        }
+        Rng::new(self.seed ^ AVAIL_STREAM)
+            .fork(round as u64)
+            .fork(client as u64)
+            .bernoulli(q)
+    }
+
+    /// Whether `shard` suffers a correlated outage at `round`.
+    pub fn shard_down(&self, shard: usize, round: usize) -> bool {
+        let Some(o) = &self.outage else { return false };
+        if o.prob <= 0.0 {
+            return false;
+        }
+        Rng::new(self.seed ^ OUTAGE_STREAM)
+            .fork(round as u64)
+            .fork(shard as u64)
+            .bernoulli(o.prob)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0 < self.base_q && self.base_q <= 1.0) {
+            return Err("trace.base_q must be in (0, 1]".into());
+        }
+        if let Some(d) = &self.diurnal {
+            if !(0.0..=1.0).contains(&d.amplitude) {
+                return Err("trace.diurnal.amplitude must be in [0, 1]".into());
+            }
+            if d.period == 0 || d.zones == 0 {
+                return Err("trace.diurnal period/zones must be ≥ 1".into());
+            }
+        }
+        if let Some(c) = &self.churn {
+            if c.session_len == 0 {
+                return Err("trace.churn.session_len must be ≥ 1".into());
+            }
+            if !(0.0..1.0).contains(&c.drop_prob) {
+                return Err("trace.churn.drop_prob must be in [0, 1)".into());
+            }
+        }
+        if let Some(o) = &self.outage {
+            if !(0.0..1.0).contains(&o.prob) {
+                return Err("trace.outage.prob must be in [0, 1)".into());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("base_q", Json::num(self.base_q)),
+        ];
+        if let Some(d) = &self.diurnal {
+            fields.push((
+                "diurnal",
+                Json::obj(vec![
+                    ("amplitude", Json::num(d.amplitude)),
+                    ("period", Json::num(d.period as f64)),
+                    ("zones", Json::num(d.zones as f64)),
+                ]),
+            ));
+        }
+        if let Some(c) = &self.churn {
+            fields.push((
+                "churn",
+                Json::obj(vec![
+                    ("session_len", Json::num(c.session_len as f64)),
+                    ("drop_prob", Json::num(c.drop_prob)),
+                ]),
+            ));
+        }
+        if let Some(o) = &self.outage {
+            fields.push((
+                "outage",
+                Json::obj(vec![("prob", Json::num(o.prob))]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Trace, String> {
+        let base_q = v
+            .get("base_q")
+            .as_f64()
+            .ok_or("availability_trace.base_q missing")?;
+        let seed = v.get("seed").as_f64().unwrap_or(0.0) as u64;
+        let diurnal = match v.get("diurnal") {
+            Json::Null => None,
+            d => Some(Diurnal {
+                amplitude: d
+                    .get("amplitude")
+                    .as_f64()
+                    .ok_or("diurnal.amplitude missing")?,
+                period: d.get("period").as_usize().unwrap_or(24),
+                zones: d.get("zones").as_usize().unwrap_or(4),
+            }),
+        };
+        let churn = match v.get("churn") {
+            Json::Null => None,
+            c => Some(Churn {
+                session_len: c.get("session_len").as_usize().unwrap_or(8),
+                drop_prob: c
+                    .get("drop_prob")
+                    .as_f64()
+                    .ok_or("churn.drop_prob missing")?,
+            }),
+        };
+        let outage = match v.get("outage") {
+            Json::Null => None,
+            o => Some(Outage {
+                prob: o.get("prob").as_f64().ok_or("outage.prob missing")?,
+            }),
+        };
+        let t = Trace { seed, base_q, diurnal, churn, outage };
+        t.validate()?;
+        Ok(t)
+    }
+}
 
 /// Availability model for the client pool.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Availability {
     /// Every client reachable every round (main-paper setting).
     AlwaysOn,
-    /// Client i is reachable with probability q (iid across rounds).
+    /// Client i is reachable with probability q (iid across rounds),
+    /// drawn sequentially from the round RNG (the seed protocol's
+    /// stream discipline).
     Bernoulli { q: f64 },
-    /// Per-client probabilities q_i (heterogeneous devices).
+    /// Per-client probabilities q_i (heterogeneous devices), drawn
+    /// sequentially from the round RNG.
     PerClient { q: Vec<f64> },
+    /// Time-varying trace over dedicated seed streams (diurnal schedule,
+    /// session churn, correlated shard outages).
+    Trace(Trace),
 }
 
 impl Availability {
@@ -28,55 +325,294 @@ impl Availability {
         }
     }
 
-    /// The subset Q^k of reachable clients this round.
-    pub fn available(&self, pool: usize, rng: &mut Rng) -> Vec<usize> {
+    /// The subset Q^k of reachable clients at `round` — the **dense**
+    /// materialization, O(pool) output; the selection path uses the
+    /// streaming [`sample_round_cohort`] instead. Static models consume
+    /// `rng` (one draw per client, the seed stream discipline); traces
+    /// ignore it (pure per-(client, round) functions) and apply no
+    /// shard-outage gate (that composes at the registry level).
+    pub fn available(&self, pool: usize, round: usize, rng: &mut Rng) -> Vec<usize> {
         match self {
             Availability::AlwaysOn => (0..pool).collect(),
-            Availability::Bernoulli { q } => (0..pool)
-                .filter(|_| rng.bernoulli(*q))
-                .collect(),
+            Availability::Bernoulli { q } => {
+                (0..pool).filter(|_| rng.bernoulli(*q)).collect()
+            }
             Availability::PerClient { q } => {
                 assert_eq!(q.len(), pool, "q length must match pool");
                 (0..pool).filter(|&i| rng.bernoulli(q[i])).collect()
             }
+            Availability::Trace(t) => {
+                (0..pool).filter(|&i| t.is_available(i, round)).collect()
+            }
         }
     }
 
-    /// Probability q_i that client i is available.
+    /// Marginal probability that client i is available (the baseline q
+    /// for traces; diurnal modulation is exposed via [`Trace::q_at`]).
     pub fn probability(&self, i: usize) -> f64 {
         match self {
             Availability::AlwaysOn => 1.0,
             Availability::Bernoulli { q } => *q,
             Availability::PerClient { q } => q[i],
+            Availability::Trace(t) => t.base_q,
         }
     }
 }
 
-/// Sample a round cohort of (at most) `n` clients uniformly from the
-/// available set (paper §5.2: "n = 32 clients are sampled uniformly from
-/// the client pool").
+/// One round's cohort draw.
+#[derive(Clone, Debug)]
+pub struct CohortDraw {
+    /// Selected clients, in selection order (the protocol's cohort order).
+    pub cohort: Vec<usize>,
+    /// Shards removed wholesale by a correlated trace outage this round
+    /// (0 for non-trace models).
+    pub outaged_shards: usize,
+}
+
+/// Simulate `Rng::choose_k(n, k)` sparsely: the same partial
+/// Fisher–Yates, with the O(n) identity index vector replaced by a hash
+/// map of displaced slots — O(k) memory, and draw-for-draw identical to
+/// the dense walk (property-pinned).
+fn sparse_choose_k(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    use std::collections::HashMap;
+    debug_assert!(k <= n, "choose_k k>n");
+    let mut displaced: HashMap<usize, usize> = HashMap::new();
+    let mut picks = Vec::with_capacity(k);
+    for i in 0..k {
+        let j = rng.range(i, n);
+        let vi = *displaced.get(&i).unwrap_or(&i);
+        let vj = *displaced.get(&j).unwrap_or(&j);
+        displaced.insert(i, vj);
+        displaced.insert(j, vi);
+        picks.push(vj);
+    }
+    picks
+}
+
+/// Map pick positions (indices into the availability scan's ordered
+/// available sequence) back to client ids by re-walking `avail_at`,
+/// preserving pick order. O(picks) memory.
+fn resolve_positions(
+    pool: usize,
+    picks: &[usize],
+    mut avail_at: impl FnMut(usize) -> bool,
+) -> Vec<usize> {
+    let mut order: Vec<(usize, usize)> =
+        picks.iter().copied().enumerate().map(|(s, p)| (p, s)).collect();
+    order.sort_unstable();
+    let mut out = vec![usize::MAX; picks.len()];
+    let mut next = 0usize; // cursor into `order`
+    let mut seen = 0usize; // available clients passed so far
+    for i in 0..pool {
+        if next == order.len() {
+            break;
+        }
+        if avail_at(i) {
+            while next < order.len() && order[next].0 == seen {
+                out[order[next].1] = i;
+                next += 1;
+            }
+            seen += 1;
+        }
+    }
+    debug_assert!(out.iter().all(|&c| c != usize::MAX), "unresolved pick");
+    out
+}
+
+/// AlwaysOn draw: the available set is the identity, so the sparse
+/// Fisher–Yates picks *are* client ids. O(cohort) time and memory.
+fn draw_always_on(pool: usize, n: usize, rng: &mut Rng) -> Vec<usize> {
+    if pool <= n {
+        return (0..pool).collect();
+    }
+    sparse_choose_k(pool, n, rng)
+}
+
+/// Streaming draw for the sequential-stream models (Bernoulli /
+/// PerClient): count available clients with the live RNG (consuming the
+/// exact per-client draws the dense scan consumed), then collect or
+/// resolve from a pre-scan clone. O(cohort) memory, O(pool) time.
+fn draw_replayed(
+    pool: usize,
+    n: usize,
+    rng: &mut Rng,
+    mut avail_at: impl FnMut(usize, &mut Rng) -> bool,
+) -> Vec<usize> {
+    let prescan = rng.clone();
+    let mut count = 0usize;
+    for i in 0..pool {
+        if avail_at(i, rng) {
+            count += 1;
+        }
+    }
+    if count <= n {
+        let mut replay = prescan;
+        let mut out = Vec::with_capacity(count);
+        for i in 0..pool {
+            if avail_at(i, &mut replay) {
+                out.push(i);
+            }
+        }
+        return out;
+    }
+    let picks = sparse_choose_k(count, n, rng);
+    let mut replay = prescan;
+    resolve_positions(pool, &picks, |i| avail_at(i, &mut replay))
+}
+
+/// Streaming draw over a pure availability predicate (the trace models):
+/// no replay clone needed — the predicate is simply evaluated twice.
+fn draw_predicated(
+    pool: usize,
+    n: usize,
+    rng: &mut Rng,
+    mut pred: impl FnMut(usize) -> bool,
+) -> Vec<usize> {
+    let count = (0..pool).filter(|&i| pred(i)).count();
+    if count <= n {
+        return (0..pool).filter(|&i| pred(i)).collect();
+    }
+    let picks = sparse_choose_k(count, n, rng);
+    resolve_positions(pool, &picks, pred)
+}
+
+/// Sample round `round`'s cohort of (at most) `n` clients uniformly from
+/// the available pool (§5.2), with memory proportional to the cohort.
+///
+/// Bitwise identical to the dense reference draw
+/// ([`reference::sample_cohort_dense`]) for every model: same round-RNG
+/// consumption, same cohort, same order. Trace models additionally apply
+/// the correlated shard-outage gate over `registry` (an O(shards) mask)
+/// and report how many shards it removed.
+pub fn sample_round_cohort(
+    availability: &Availability,
+    registry: &Registry,
+    round: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> CohortDraw {
+    let pool = registry.pool();
+    match availability {
+        Availability::AlwaysOn => CohortDraw {
+            cohort: draw_always_on(pool, n, rng),
+            outaged_shards: 0,
+        },
+        Availability::Bernoulli { q } => CohortDraw {
+            cohort: draw_replayed(pool, n, rng, |_, r| r.bernoulli(*q)),
+            outaged_shards: 0,
+        },
+        Availability::PerClient { q } => {
+            assert_eq!(q.len(), pool, "q length must match pool");
+            CohortDraw {
+                cohort: draw_replayed(pool, n, rng, |i, r| r.bernoulli(q[i])),
+                outaged_shards: 0,
+            }
+        }
+        Availability::Trace(t) => {
+            let down: Vec<bool> = (0..registry.shards())
+                .map(|s| t.shard_down(s, round))
+                .collect();
+            let outaged_shards = down.iter().filter(|&&d| d).count();
+            let cohort = if t.always_available() && outaged_shards == 0 {
+                // q = 1 degradation: the exact AlwaysOn draw
+                draw_always_on(pool, n, rng)
+            } else {
+                draw_predicated(pool, n, rng, |i| {
+                    !down[registry.shard_of(i)] && t.is_available(i, round)
+                })
+            };
+            CohortDraw { cohort, outaged_shards }
+        }
+    }
+}
+
+/// The slice of round `round`'s cohort owned by `shard`, derived without
+/// the global cohort ever being materialized by the caller: the
+/// deterministic streaming draw is replayed from a clone of `round_rng`
+/// (which is not advanced) and filtered to the shard's members, cohort
+/// order preserved. Consistent with [`sample_round_cohort`] +
+/// [`Registry::split_cohort`] by construction (property-pinned), which
+/// is what lets cohort selection run shard-locally at pool sizes where
+/// shipping a central draw would dominate the round.
+pub fn shard_cohort_slice(
+    availability: &Availability,
+    registry: &Registry,
+    round: usize,
+    n: usize,
+    shard: usize,
+    round_rng: &Rng,
+) -> Vec<usize> {
+    let mut rng = round_rng.clone();
+    sample_round_cohort(availability, registry, round, n, &mut rng)
+        .cohort
+        .into_iter()
+        .filter(|&c| registry.shard_of(c) == shard)
+        .collect()
+}
+
+/// Legacy entry point: sample a cohort over a single-shard view of the
+/// pool (trace outages, which are shard-scoped, see one shard covering
+/// everything). Prefer [`sample_round_cohort`]; retained for callers
+/// without a registry, with `round = 0` semantics for static models
+/// (which ignore the round anyway).
 pub fn sample_cohort(
     availability: &Availability,
     pool: usize,
     n: usize,
     rng: &mut Rng,
 ) -> Vec<usize> {
-    let avail = availability.available(pool, rng);
-    if avail.len() <= n {
-        return avail;
+    if pool == 0 {
+        return Vec::new();
     }
-    let picks = rng.choose_k(avail.len(), n);
-    picks.into_iter().map(|i| avail[i]).collect()
+    let registry = Registry::new(pool, 1);
+    sample_round_cohort(availability, &registry, 0, n, rng).cohort
+}
+
+/// The retained dense draw — the seed semantics every streaming path is
+/// property-pinned against.
+pub mod reference {
+    use super::*;
+
+    /// Materialize the available set (O(pool)), then `Rng::choose_k`
+    /// over it (another O(pool) index vector) — exactly the historical
+    /// `sample_cohort`, with the trace shard-outage gate applied to the
+    /// materialized set.
+    pub fn sample_cohort_dense(
+        availability: &Availability,
+        registry: &Registry,
+        round: usize,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let pool = registry.pool();
+        let mut avail = availability.available(pool, round, rng);
+        if let Availability::Trace(t) = availability {
+            avail.retain(|&c| !t.shard_down(registry.shard_of(c), round));
+        }
+        if avail.len() <= n {
+            return avail;
+        }
+        let picks = rng.choose_k(avail.len(), n);
+        picks.into_iter().map(|i| avail[i]).collect()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::quick;
+
+    fn reg(pool: usize, shards: usize) -> Registry {
+        Registry::new(pool, shards)
+    }
 
     #[test]
     fn always_on_full_pool() {
         let mut rng = Rng::new(1);
-        assert_eq!(Availability::AlwaysOn.available(5, &mut rng).len(), 5);
+        assert_eq!(
+            Availability::AlwaysOn.available(5, 0, &mut rng).len(),
+            5
+        );
     }
 
     #[test]
@@ -84,7 +620,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let a = Availability::Bernoulli { q: 0.3 };
         let total: usize =
-            (0..2000).map(|_| a.available(50, &mut rng).len()).sum();
+            (0..2000).map(|_| a.available(50, 0, &mut rng).len()).sum();
         let rate = total as f64 / (2000.0 * 50.0);
         assert!((rate - 0.3).abs() < 0.02, "{rate}");
     }
@@ -95,7 +631,7 @@ mod tests {
         let a = Availability::PerClient { q: vec![0.0, 1.0, 0.5] };
         let mut counts = [0usize; 3];
         for _ in 0..4000 {
-            for i in a.available(3, &mut rng) {
+            for i in a.available(3, 0, &mut rng) {
                 counts[i] += 1;
             }
         }
@@ -138,5 +674,302 @@ mod tests {
             let f = c as f64 / 5000.0;
             assert!((f - 0.3).abs() < 0.03, "{counts:?}");
         }
+    }
+
+    #[test]
+    fn prop_sparse_choose_k_matches_dense() {
+        quick("sparse-choose-k", |rng, _| {
+            let n = rng.range(1, 400);
+            let k = rng.range(0, n + 1);
+            let seed = rng.next_u64();
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let sparse = sparse_choose_k(n, k, &mut a);
+            let dense = b.choose_k(n, k);
+            if sparse != dense {
+                return Err(format!("picks diverged (n={n} k={k})"));
+            }
+            // RNG state must stay aligned after the draw
+            if a.next_u64() != b.next_u64() {
+                return Err("post-draw RNG state diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    fn random_availability(rng: &mut Rng, pool: usize) -> Availability {
+        match rng.below(5) {
+            0 => Availability::AlwaysOn,
+            1 => Availability::Bernoulli { q: rng.f64() },
+            2 => Availability::PerClient {
+                q: (0..pool).map(|_| rng.f64()).collect(),
+            },
+            3 => Availability::Trace(Trace::bernoulli(
+                rng.next_u64(),
+                0.05 + 0.95 * rng.f64(),
+            )),
+            _ => Availability::Trace(Trace {
+                seed: rng.next_u64(),
+                base_q: 0.3 + 0.7 * rng.f64(),
+                diurnal: Some(Diurnal {
+                    amplitude: rng.f64(),
+                    period: rng.range(1, 50),
+                    zones: rng.range(1, 6),
+                }),
+                churn: Some(Churn {
+                    session_len: rng.range(1, 10),
+                    drop_prob: 0.5 * rng.f64(),
+                }),
+                outage: Some(Outage { prob: 0.3 * rng.f64() }),
+            }),
+        }
+    }
+
+    #[test]
+    fn prop_streaming_draw_matches_the_dense_reference_bitwise() {
+        // the trajectory pin: same RNG consumption, same cohort, same
+        // order, for every availability model
+        quick("streaming-vs-dense", |rng, _| {
+            let pool = rng.range(1, 300);
+            let shards = rng.range(1, 9);
+            let n = rng.range(1, 64);
+            let round = rng.range(0, 100);
+            let avail = random_availability(rng, pool);
+            let registry = reg(pool, shards);
+            let seed = rng.next_u64();
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let streaming =
+                sample_round_cohort(&avail, &registry, round, n, &mut a);
+            let dense = reference::sample_cohort_dense(
+                &avail, &registry, round, n, &mut b,
+            );
+            if streaming.cohort != dense {
+                return Err(format!(
+                    "cohorts diverged: {:?} vs {dense:?}",
+                    streaming.cohort
+                ));
+            }
+            if a.next_u64() != b.next_u64() {
+                return Err("post-draw RNG state diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_shard_slices_reassemble_the_global_draw() {
+        quick("shard-slices", |rng, _| {
+            let pool = rng.range(2, 200);
+            let shards = rng.range(1, 7);
+            let n = rng.range(1, 40);
+            let avail = random_availability(rng, pool);
+            let registry = reg(pool, shards);
+            let round_rng = Rng::new(rng.next_u64());
+            let mut global_rng = round_rng.clone();
+            let global = sample_round_cohort(
+                &avail, &registry, 3, n, &mut global_rng,
+            )
+            .cohort;
+            let mut seen = Vec::new();
+            for s in 0..registry.shards() {
+                let slice = shard_cohort_slice(
+                    &avail, &registry, 3, n, s, &round_rng,
+                );
+                for &c in &slice {
+                    if registry.shard_of(c) != s {
+                        return Err(format!("client {c} not on shard {s}"));
+                    }
+                }
+                seen.extend(slice);
+            }
+            let mut want = global.clone();
+            want.sort_unstable();
+            seen.sort_unstable();
+            if seen != want {
+                return Err("shard slices do not cover the global draw".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_trace_is_deterministic_per_seed() {
+        quick("trace-deterministic", |rng, _| {
+            let t = match random_availability(rng, 1) {
+                Availability::Trace(t) => t,
+                _ => Trace::bernoulli(rng.next_u64(), 0.5),
+            };
+            let client = rng.range(0, 10_000);
+            let round = rng.range(0, 1000);
+            let shard = rng.range(0, 64);
+            if t.is_available(client, round) != t.is_available(client, round)
+            {
+                return Err("is_available not a pure function".into());
+            }
+            if t.shard_down(shard, round) != t.shard_down(shard, round) {
+                return Err("shard_down not a pure function".into());
+            }
+            let u = t.clone();
+            if u.is_available(client, round) != t.is_available(client, round)
+            {
+                return Err("clone diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_respects_q() {
+        // empirical frequency over many (client, round) pairs tracks q_at
+        for q in [0.25, 0.6, 0.9] {
+            let t = Trace::bernoulli(11, q);
+            let mut hits = 0usize;
+            let total = 20_000;
+            for round in 0..200 {
+                for client in 0..100 {
+                    if t.is_available(client, round) {
+                        hits += 1;
+                    }
+                }
+            }
+            let rate = hits as f64 / total as f64;
+            assert!((rate - q).abs() < 0.02, "q={q}: rate {rate}");
+        }
+    }
+
+    #[test]
+    fn trace_q1_degrades_to_always_on_bitwise() {
+        let t = Availability::Trace(Trace::bernoulli(99, 1.0));
+        let registry = reg(500, 4);
+        for case in 0..20u64 {
+            let mut a = Rng::new(case);
+            let mut b = Rng::new(case);
+            let trace_draw =
+                sample_round_cohort(&t, &registry, case as usize, 32, &mut a);
+            let always = sample_round_cohort(
+                &Availability::AlwaysOn,
+                &registry,
+                case as usize,
+                32,
+                &mut b,
+            );
+            assert_eq!(trace_draw.cohort, always.cohort, "case {case}");
+            assert_eq!(a.next_u64(), b.next_u64(), "rng state, case {case}");
+        }
+    }
+
+    #[test]
+    fn diurnal_modulation_stays_in_band_and_staggers_zones() {
+        let t = Trace {
+            seed: 5,
+            base_q: 0.8,
+            diurnal: Some(Diurnal { amplitude: 0.5, period: 24, zones: 4 }),
+            churn: None,
+            outage: None,
+        };
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for round in 0..48 {
+            for client in 0..8 {
+                let q = t.q_at(client, round);
+                assert!(q >= 0.8 * 0.5 - 1e-12 && q <= 0.8 + 1e-12, "{q}");
+                lo = lo.min(q);
+                hi = hi.max(q);
+            }
+        }
+        assert!(hi - lo > 0.2, "modulation too flat: [{lo}, {hi}]");
+        // different timezone groups peak at different rounds
+        assert_ne!(t.q_at(0, 3), t.q_at(1, 3));
+    }
+
+    #[test]
+    fn churn_flips_only_at_session_boundaries() {
+        let t = Trace {
+            seed: 21,
+            base_q: 1.0, // isolate the churn gate
+            diurnal: None,
+            churn: Some(Churn { session_len: 5, drop_prob: 0.5 }),
+            outage: None,
+        };
+        let rounds = 50;
+        let mut any_off = false;
+        for client in 0..40 {
+            let states: Vec<bool> =
+                (0..rounds).map(|k| t.is_available(client, k)).collect();
+            let flips =
+                states.windows(2).filter(|w| w[0] != w[1]).count();
+            assert!(flips <= rounds / 5 + 1, "client {client}: {flips} flips");
+            any_off |= states.iter().any(|&s| !s);
+        }
+        assert!(any_off, "churn never took a client offline");
+    }
+
+    #[test]
+    fn outage_downs_whole_shards() {
+        let t = Trace {
+            seed: 33,
+            base_q: 1.0,
+            diurnal: None,
+            churn: None,
+            outage: Some(Outage { prob: 0.5 }),
+        };
+        let registry = reg(60, 4);
+        let avail = Availability::Trace(t.clone());
+        let mut saw_outage = false;
+        for round in 0..30 {
+            let mut rng = Rng::new(round as u64);
+            let draw =
+                sample_round_cohort(&avail, &registry, round, 60, &mut rng);
+            if draw.outaged_shards > 0 {
+                saw_outage = true;
+                for &c in &draw.cohort {
+                    assert!(
+                        !t.shard_down(registry.shard_of(c), round),
+                        "round {round}: client {c} from a downed shard"
+                    );
+                }
+            }
+        }
+        assert!(saw_outage, "outage model never fired at prob 0.5");
+    }
+
+    #[test]
+    fn trace_validation_catches_bad_fields() {
+        assert!(Trace::bernoulli(1, 0.0).validate().is_err());
+        assert!(Trace::bernoulli(1, 1.5).validate().is_err());
+        let mut t = Trace::bernoulli(1, 0.5);
+        t.diurnal = Some(Diurnal { amplitude: 2.0, period: 24, zones: 4 });
+        assert!(t.validate().is_err());
+        t.diurnal = Some(Diurnal { amplitude: 0.5, period: 0, zones: 4 });
+        assert!(t.validate().is_err());
+        t.diurnal = None;
+        t.churn = Some(Churn { session_len: 0, drop_prob: 0.1 });
+        assert!(t.validate().is_err());
+        t.churn = Some(Churn { session_len: 4, drop_prob: 1.0 });
+        assert!(t.validate().is_err());
+        t.churn = None;
+        t.outage = Some(Outage { prob: 1.0 });
+        assert!(t.validate().is_err());
+        t.outage = Some(Outage { prob: 0.3 });
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn trace_json_round_trips() {
+        let t = Trace {
+            seed: 17,
+            base_q: 0.7,
+            diurnal: Some(Diurnal { amplitude: 0.4, period: 24, zones: 3 }),
+            churn: Some(Churn { session_len: 6, drop_prob: 0.2 }),
+            outage: Some(Outage { prob: 0.05 }),
+        };
+        let j = t.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), t);
+        // sparse traces omit absent components
+        let plain = Trace::bernoulli(3, 0.5);
+        let j2 = plain.to_json();
+        assert_eq!(j2.get("diurnal"), &Json::Null);
+        assert_eq!(Trace::from_json(&j2).unwrap(), plain);
     }
 }

@@ -187,6 +187,7 @@ mod tests {
             workers: 1,
             secure_updates: true,
             availability: 1.0,
+            availability_trace: None,
             compressor: None,
         }
     }

@@ -22,7 +22,15 @@
 //!   deadline/straggler handling.
 //! * [`fl`] — FedAvg (Alg. 3) / DSGD (Eq. 2) master-client protocol with
 //!   secure aggregation and per-round communication accounting; `train`
-//!   is a single-shard adapter over [`coordinator`].
+//!   is a single-shard adapter over [`coordinator`]. `fl::availability`
+//!   is the scenario engine's availability layer: streaming
+//!   O(cohort)-memory cohort draws that scale to million-client pools,
+//!   plus time-varying traces (diurnal schedules, session churn,
+//!   correlated shard outages).
+//! * [`exp`] — experiment drivers: figure regeneration, the perf bench
+//!   suites, and `exp::sweep` — the `fedsamp sweep` scenario grid
+//!   ({strategy × compressor × availability × pool} with multi-seed
+//!   averaging → `BENCH_sweep.{json,csv}`).
 //! * [`secure_agg`] — pairwise-mask additive secure aggregation.
 //! * [`data`] — synthetic federated datasets (FEMNIST-like, Shakespeare-
 //!   like, CIFAR-like) incl. the paper's (s,a,b) unbalancing procedure.

@@ -4,7 +4,8 @@
 //!   train       run one experiment (preset or JSON config, with overrides)
 //!   coordinate  run the sharded round coordinator (sim engine)
 //!   figures     regenerate a paper figure's data (2–7, 13)
-//!   sweep       budget/step-size sweeps on the theory testbed
+//!   sweep       scenario grids (strategy × compressor × availability ×
+//!               pool → BENCH_sweep.{json,csv}) + theory sweeps
 //!   inspect     list AOT artifacts and dataset statistics
 
 use fedsamp::bench::{f, Table};
@@ -54,7 +55,8 @@ fn print_usage() {
            train       run one experiment\n\
            coordinate  sharded round coordinator (--shards/--workers)\n\
            figures     regenerate a paper figure (2, 3, 4, 5, 6, 7, 13)\n\
-           sweep       theory sweeps (budget m, step size)\n\
+           sweep       scenario grid (default; --quick for the CI smoke\n\
+                       grid) or theory sweeps (--kind stepsize|budget)\n\
            bench       perf suites (kernels|secure|comm → BENCH_<suite>.json)\n\
            inspect     show artifacts + dataset statistics\n\n\
          Run `fedsamp <subcommand> --help` for options."
@@ -224,6 +226,11 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         "per-round probability that a shard misses the deadline",
     )
     .opt("out", None, "directory for JSON/CSV results")
+    .flag(
+        "sharded-negotiation",
+        "run the AOCS negotiation per shard (secure partial sums over \
+         the worker pool) instead of centrally",
+    )
     .flag("verbose", "print per-round progress");
     let p = parse_or_exit(&cli, args);
 
@@ -271,22 +278,33 @@ fn cmd_coordinate(args: &[String]) -> i32 {
     } else {
         None
     };
-    let mut coordinator =
-        Coordinator::new(CoordinatorOptions { shards, deadline });
+    let mut coordinator = Coordinator::new(CoordinatorOptions {
+        shards,
+        deadline,
+        sharded_negotiation: p.flag("sharded-negotiation"),
+    });
     let opts = TrainOptions {
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
         ..TrainOptions::default()
     };
     println!(
-        "coordinator: {} shards, {} workers, deadline-miss {miss}",
-        shards, workers
+        "coordinator: {} shards, {} workers, deadline-miss {miss}{}",
+        shards,
+        workers,
+        if p.flag("sharded-negotiation") {
+            ", sharded negotiation"
+        } else {
+            ""
+        }
     );
     match coordinator.run(&cfg, &mut runner, &opts) {
         Ok(run) => {
             print_run_summary(&run);
             println!(
-                "coordinator stats: {} shard-rounds dropped, {} no-op rounds",
+                "coordinator stats: {} shard-rounds dropped, {} outaged, \
+                 {} no-op rounds",
                 coordinator.stats.shards_dropped,
+                coordinator.stats.shards_outaged,
                 coordinator.stats.noop_rounds
             );
             if let Some(out) = p.get("out") {
@@ -343,15 +361,124 @@ fn cmd_figures(args: &[String]) -> i32 {
 }
 
 fn cmd_sweep(args: &[String]) -> i32 {
-    let cli = Cli::new("fedsamp sweep", "theory sweeps on the quadratic testbed")
-        .opt("kind", Some("stepsize"), "stepsize|budget")
-        .opt("n", Some("32"), "number of clients")
-        .opt("dim", Some("32"), "problem dimension")
-        .opt("ms", Some("2,4,8,16"), "budgets to sweep (kind=budget)")
-        .opt("m", Some("4"), "budget (kind=stepsize)")
-        .opt("rounds", Some("200"), "rounds per run")
-        .opt("seed", Some("1"), "seed");
+    let cli = Cli::new(
+        "fedsamp sweep",
+        "scenario grid sweeps (default kind=grid: strategy × compressor × \
+         availability × pool with multi-seed averaging, emitting \
+         BENCH_sweep.json + BENCH_sweep.csv) and the quadratic-testbed \
+         theory sweeps (kind=stepsize|budget)",
+    )
+    .opt("kind", Some("grid"), "grid|stepsize|budget")
+    .opt(
+        "strategies",
+        Some("full,uniform,ocs,aocs"),
+        "grid: comma list of full|uniform|ocs|aocs",
+    )
+    .opt(
+        "compressors",
+        Some("none,randk64"),
+        "grid: comma list of none|randk<K>|qsgd<S>",
+    )
+    .opt(
+        "availabilities",
+        Some("alwayson,bern0.7,diurnal0.8"),
+        "grid: comma list of alwayson|bern<q>|diurnal<q>|churn<q>|outage<p>",
+    )
+    .opt("pools", Some("60,240"), "grid: comma list of pool sizes")
+    .opt("seeds", Some("3"), "grid: seeds averaged per arm")
+    .opt("grid-rounds", Some("30"), "grid: rounds per run")
+    .opt("out", Some("."), "grid: directory for BENCH_sweep.{json,csv}")
+    .flag("quick", "grid: tiny CI smoke grid (overrides the axis flags)")
+    .flag("verbose", "grid: print one line per arm")
+    .opt("n", Some("32"), "theory: number of clients")
+    .opt("dim", Some("32"), "theory: problem dimension")
+    .opt("ms", Some("2,4,8,16"), "theory: budgets to sweep (kind=budget)")
+    .opt("m", Some("4"), "theory: budget (kind=stepsize)")
+    .opt("rounds", Some("200"), "theory: rounds per run")
+    .opt("seed", Some("1"), "seed");
     let p = parse_or_exit(&cli, args);
+
+    if p.str("kind") == "grid" {
+        use fedsamp::exp::sweep::{
+            parse_availability_arm, run_sweep, SweepSpec,
+        };
+        let spec = if p.flag("quick") {
+            SweepSpec::quick()
+        } else {
+            let mut strategies = Vec::new();
+            for s in p.str("strategies").split(',').filter(|s| !s.is_empty())
+            {
+                match Strategy::parse(s.trim(), 4) {
+                    Ok(s) => strategies.push(s),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
+            let mut compressors = Vec::new();
+            for c in p.str("compressors").split(',').filter(|s| !s.is_empty())
+            {
+                match Compressor::parse(c.trim()) {
+                    Ok(c) => compressors.push(c),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
+            let mut availabilities = Vec::new();
+            for a in
+                p.str("availabilities").split(',').filter(|s| !s.is_empty())
+            {
+                match parse_availability_arm(a.trim()) {
+                    Ok(a) => availabilities.push(a),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
+            let mut spec = SweepSpec::default_grid();
+            spec.strategies = strategies;
+            spec.compressors = compressors;
+            spec.availabilities = availabilities;
+            spec.pools = p.usize_list("pools");
+            spec.seeds = p.u64("seeds");
+            spec.base_seed = p.u64("seed");
+            spec.rounds = p.usize("grid-rounds");
+            spec
+        };
+        if spec.arm_count() == 0 {
+            eprintln!("empty sweep grid");
+            return 2;
+        }
+        println!(
+            "sweep grid: {} arms × {} seed(s), {} rounds each",
+            spec.arm_count(),
+            spec.seeds.max(1),
+            spec.rounds
+        );
+        let report = match run_sweep(&spec, p.flag("verbose") || p.flag("quick"))
+        {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("sweep failed: {e}");
+                return 1;
+            }
+        };
+        return match report.save(&p.str("out")) {
+            Ok((json_path, csv_path)) => {
+                println!("saved {json_path}\nsaved {csv_path}");
+                0
+            }
+            Err(e) => {
+                eprintln!("save failed: {e}");
+                1
+            }
+        };
+    }
+
     let n = p.usize("n");
     let problem = QuadraticProblem::generate(
         n,

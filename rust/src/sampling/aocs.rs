@@ -15,6 +15,11 @@
 //! Every message is a plain sum, so the whole exchange runs under the
 //! [`crate::secure_agg`] protocol; clients keep no state between rounds.
 
+/// Transport of the sharded negotiation
+/// ([`aocs_probabilities_sharded`]): handed per-shard `(client id,
+/// scalar)` pairs, returns each shard's (securely computed) sum.
+pub type ShardScalarSums = dyn FnMut(&[Vec<(u64, f32)>]) -> Vec<f32>;
+
 /// Result of one AOCS probability negotiation.
 #[derive(Clone, Debug)]
 pub struct AocsResult {
@@ -67,6 +72,118 @@ pub fn aocs_probabilities(norms: &[f64], m: usize, j_max: usize) -> AocsResult {
         if count_open == 0 || mass_open <= 0.0 {
             // all clients capped (m = n) or all open probs are zero —
             // nothing left to rescale
+            converged = true;
+            break;
+        }
+        let c = (m as f64 - n as f64 + count_open as f64) / mass_open;
+        if c > 1.0 {
+            for p in probs.iter_mut() {
+                if *p < 1.0 {
+                    *p = (c * *p).min(1.0);
+                }
+            }
+        } else {
+            converged = true;
+        }
+    }
+
+    AocsResult {
+        probs,
+        iterations,
+        converged,
+        extra_uplink_floats_per_client: 1 + 2 * iterations,
+        extra_downlink_floats: 1 + iterations,
+    }
+}
+
+/// Distributed Algorithm 2: the same fixed point as
+/// [`aocs_probabilities`], negotiated through **per-shard partial sums**
+/// instead of a central scan — the form that scales the negotiation with
+/// the coordinator at large cohorts.
+///
+/// `groups[s]` lists shard `s`'s cohort members as
+/// `(client id, cohort position)` pairs; `shard_sums` is the transport:
+/// handed one scalar per member grouped by shard, it returns each
+/// shard's sum. The coordinator routes it through
+/// `LocalRunner::negotiation_partials`, i.e. secure masked folds fanned
+/// over the shard worker pool, so the master combines only O(shards)
+/// scalars per aggregate — u in the first exchange, (I, P) per
+/// rescaling iteration — and never observes an individual client's
+/// value (the property Algorithm 2 exists to preserve).
+///
+/// Numerics: partial sums travel as f32 through the fixed-point
+/// secure-aggregation ring, so the result can differ from the central
+/// f64 solver in the last ulps; the fixed point itself is identical
+/// (property-pinned: converged runs satisfy Σp ≈ m and preserve the
+/// open-client proportionality p_i/p_j = ũ_i/ũ_j). Use the central path
+/// when bitwise trajectory compatibility with the seed protocol matters.
+pub fn aocs_probabilities_sharded(
+    norms: &[f64],
+    groups: &[Vec<(u64, usize)>],
+    m: usize,
+    j_max: usize,
+    shard_sums: &mut ShardScalarSums,
+) -> AocsResult {
+    let n = norms.len();
+    assert!(m >= 1 && m <= n, "budget m={m} out of range for n={n}");
+    debug_assert_eq!(
+        groups.iter().map(Vec::len).sum::<usize>(),
+        n,
+        "groups must partition the cohort"
+    );
+
+    // stage a per-member scalar, grouped by shard
+    let stage = |f: &dyn Fn(usize) -> f32| -> Vec<Vec<(u64, f32)>> {
+        groups
+            .iter()
+            .map(|g| g.iter().map(|&(id, p)| (id, f(p))).collect())
+            .collect()
+    };
+    let combine = |partials: Vec<f32>| -> f64 {
+        partials.into_iter().map(f64::from).sum()
+    };
+
+    // exchange 1: u = Σ ũ_i as per-shard sums
+    let u = combine(shard_sums(&stage(&|p| norms[p] as f32)));
+    if u <= 0.0 {
+        // degenerate norms: uniform fallback, nothing to rescale
+        return AocsResult {
+            probs: vec![m as f64 / n as f64; n],
+            iterations: 0,
+            converged: true,
+            extra_uplink_floats_per_client: 1,
+            extra_downlink_floats: 1,
+        };
+    }
+
+    // clients initialize locally from the broadcast u
+    let mut probs: Vec<f64> =
+        norms.iter().map(|&ui| (m as f64 * ui / u).min(1.0)).collect();
+
+    let mut iterations = 0;
+    let mut converged = false;
+    for _ in 0..j_max {
+        if converged {
+            break;
+        }
+        iterations += 1;
+        // exchange j: (I, P) over the still-uncapped clients
+        let count_open = combine(shard_sums(&stage(&|p| {
+            if probs[p] < 1.0 {
+                1.0
+            } else {
+                0.0
+            }
+        })))
+        .round() as usize;
+        let mass_open = combine(shard_sums(&stage(&|p| {
+            if probs[p] < 1.0 {
+                probs[p] as f32
+            } else {
+                0.0
+            }
+        })));
+        if count_open == 0 || mass_open <= 0.0 {
             converged = true;
             break;
         }
@@ -189,6 +306,152 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Round-robin shard grouping of cohort positions 0..n.
+    fn round_robin_groups(n: usize, shards: usize) -> Vec<Vec<(u64, usize)>> {
+        let mut groups = vec![Vec::new(); shards];
+        for p in 0..n {
+            groups[p % shards].push((100 + p as u64, p));
+        }
+        groups
+    }
+
+    /// Plain (unmasked) f32 shard sums — isolates the algorithm from the
+    /// secure transport.
+    fn plain_sums(gs: &[Vec<(u64, f32)>]) -> Vec<f32> {
+        gs.iter().map(|g| g.iter().map(|&(_, x)| x).sum()).collect()
+    }
+
+    #[test]
+    fn sharded_matches_central_on_separated_profiles() {
+        // profiles where f32 transport noise cannot flip a cap decision
+        for (norms, m) in [
+            (vec![100.0, 1.0, 1.0], 2usize),
+            (vec![8.0, 4.0, 2.0, 1.0, 1.0, 1.0], 3),
+            (vec![1.0; 8], 4),
+        ] {
+            let central = aocs_probabilities(&norms, m, 6);
+            for shards in [1, 2, 3] {
+                let groups = round_robin_groups(norms.len(), shards);
+                let sharded = aocs_probabilities_sharded(
+                    &norms,
+                    &groups,
+                    m,
+                    6,
+                    &mut plain_sums,
+                );
+                // iteration counts may differ by a no-op rescale when c
+                // sits on the 1.0 boundary; the probabilities may not
+                for (a, b) in sharded.probs.iter().zip(&central.probs) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "shards={shards}: {:?} vs {:?}",
+                        sharded.probs,
+                        central.probs
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_zero_norms_fall_back_to_uniform() {
+        let groups = round_robin_groups(5, 2);
+        let r = aocs_probabilities_sharded(
+            &[0.0; 5],
+            &groups,
+            2,
+            4,
+            &mut plain_sums,
+        );
+        for &p in &r.probs {
+            assert!((p - 0.4).abs() < 1e-12);
+        }
+        assert_eq!(r.iterations, 0);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn prop_sharded_negotiation_reaches_the_same_fixed_point() {
+        // invariants robust to f32 transport noise: probabilities valid,
+        // budget respected, converged runs hit Σp ≈ m, and open clients
+        // keep the proportionality p_i/p_j = ũ_i/ũ_j
+        quick("aocs-sharded-fixed-point", |rng, _| {
+            let n = rng.range(2, 64);
+            let m = rng.range(1, n + 1);
+            let norms: Vec<f64> =
+                (0..n).map(|_| rng.exponential(0.3) + 1e-3).collect();
+            let shards = rng.range(1, 7);
+            let groups = round_robin_groups(n, shards);
+            let r = aocs_probabilities_sharded(
+                &norms,
+                &groups,
+                m,
+                n + 2,
+                &mut plain_sums,
+            );
+            let total: f64 = r.probs.iter().sum();
+            for &p in &r.probs {
+                if !(0.0..=1.0 + 1e-9).contains(&p) {
+                    return Err(format!("p={p}"));
+                }
+            }
+            if total > m as f64 + 1e-3 {
+                return Err(format!("Σp={total} > m={m}"));
+            }
+            if r.converged && (total - m as f64).abs() > 0.02 {
+                return Err(format!("converged but Σp={total} != m={m}"));
+            }
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if r.probs[i] < 1.0 && r.probs[j] < 1.0 {
+                        let lhs = r.probs[i] * norms[j];
+                        let rhs = r.probs[j] * norms[i];
+                        let scale = lhs.abs().max(rhs.abs()).max(1e-12);
+                        if (lhs - rhs).abs() / scale > 1e-6 {
+                            return Err(format!(
+                                "open pair ({i},{j}) broke proportionality"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sharded_secure_transport_tracks_plain_sums() {
+        // the real transport: per-shard masked folds through the
+        // fixed-point ring (what LocalRunner::negotiation_partials runs)
+        use crate::secure_agg::SecureAggregator;
+        let norms = vec![5.0, 3.0, 2.0, 1.0, 0.5, 0.25, 4.0, 0.75];
+        let m = 3;
+        let groups = round_robin_groups(norms.len(), 3);
+        let agg = SecureAggregator::new(0xA0C5);
+        let mut secure_sums = |gs: &[Vec<(u64, f32)>]| -> Vec<f32> {
+            gs.iter().map(|g| agg.aggregate_scalars(g)).collect()
+        };
+        let secure = aocs_probabilities_sharded(
+            &norms,
+            &groups,
+            m,
+            6,
+            &mut secure_sums,
+        );
+        let plain = aocs_probabilities_sharded(
+            &norms,
+            &groups,
+            m,
+            6,
+            &mut plain_sums,
+        );
+        for (a, b) in secure.probs.iter().zip(&plain.probs) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        let total: f64 = secure.probs.iter().sum();
+        assert!(total <= m as f64 + 1e-3, "Σp={total}");
     }
 
     #[test]

@@ -5,6 +5,22 @@
 //! (Algorithm 1 / Eq. 7) and approximate OCS (Algorithm 2). All of them
 //! consume the per-round weighted update norms `ũ_i = w_i‖U_i^k‖` and
 //! produce inclusion probabilities for an independent sampling.
+//!
+//! The supporting modules: [`ocs`] solves Eq. (7) exactly, [`aocs`]
+//! reaches the same fixed point through sum-only exchanges (including
+//! the sharded form [`aocs::aocs_probabilities_sharded`], which
+//! negotiates over per-shard secure partial sums), [`probability`]
+//! draws the independent transmission set, and [`variance`] computes
+//! the α/γ diagnostics (Definitions 11–12).
+//!
+//! ```
+//! use fedsamp::sampling::Sampler;
+//! let norms = vec![5.0, 1.0, 1.0, 1.0]; // ũ_i = w_i‖U_i‖
+//! let d = Sampler::Ocs.decide(&norms, 2); // expected budget m = 2
+//! let expected: f64 = d.probs.iter().sum();
+//! assert!((expected - 2.0).abs() < 1e-6);
+//! assert!(d.probs[0] >= d.probs[1]); // larger norms, larger p_i
+//! ```
 
 pub mod aocs;
 pub mod ocs;
@@ -26,6 +42,20 @@ pub struct Decision {
     pub extra_uplink_floats_per_client: usize,
     /// Extra synchronous communication rounds used by the negotiation.
     pub negotiation_rounds: usize,
+}
+
+impl Decision {
+    /// Decision from an AOCS negotiation outcome — the single site of
+    /// the Remark-3 accounting mapping, shared by the central
+    /// [`Sampler::decide`] arm and the coordinator's sharded-negotiation
+    /// path so the two can never drift apart.
+    pub fn from_aocs(r: aocs::AocsResult) -> Decision {
+        Decision {
+            extra_uplink_floats_per_client: r.extra_uplink_floats_per_client,
+            negotiation_rounds: 1 + r.iterations,
+            probs: r.probs,
+        }
+    }
 }
 
 /// Strategy dispatcher.
@@ -82,15 +112,9 @@ impl Sampler {
                     negotiation_rounds: 1,
                 }
             }
-            Sampler::Aocs { j_max } => {
-                let r = aocs::aocs_probabilities(norms, m.min(n), *j_max);
-                Decision {
-                    probs: r.probs,
-                    extra_uplink_floats_per_client:
-                        r.extra_uplink_floats_per_client,
-                    negotiation_rounds: 1 + r.iterations,
-                }
-            }
+            Sampler::Aocs { j_max } => Decision::from_aocs(
+                aocs::aocs_probabilities(norms, m.min(n), *j_max),
+            ),
         }
     }
 }

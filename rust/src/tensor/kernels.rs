@@ -244,14 +244,14 @@ pub fn wrapping_accumulate(acc: &mut [u64], vecs: &[&[u64]]) {
 /// Window length (ring elements) for the blocked mask kernels: the
 /// encode block + PRG block (2 KB each) plus the accumulator and value
 /// windows stay in L1 while every pair stream is folded in.
-const RING_BLOCK: usize = 256;
+pub const RING_BLOCK: usize = 256;
 
 /// Fixed-point scale of the Z_2^64 ring encoding: 24 fractional bits.
 /// The representable range is |x| < 2^63 / SCALE = 2^39 ≈ 5.5e11 — far
 /// beyond gradient ranges. Outside it the `f64 → i64` cast in
 /// [`encode`] saturates silently and the ring sum is wrong without any
 /// error, so `encode` guards the range with a debug assertion.
-const SCALE: f64 = (1u64 << 24) as f64;
+pub const SCALE: f64 = (1u64 << 24) as f64;
 
 /// Encode an f32 into the ring (re-exported as `secure_agg::encode`,
 /// the protocol-facing name). Debug builds reject values outside the

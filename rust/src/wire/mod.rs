@@ -24,7 +24,17 @@
 //! self-describing little-endian frame (1-byte tag + per-kind header +
 //! body); [`Payload::decode`] inverts it exactly —
 //! `decode(encode(p)) == p` for every payload, pinned by property
-//! tests. [`Payload::wire_bytes`] returns the encoded length without
+//! tests:
+//!
+//! ```
+//! use fedsamp::wire::Payload;
+//! let p = Payload::SparseK { indices: vec![1, 4], values: vec![0.5, -2.0] };
+//! let mut frame = Vec::new();
+//! p.encode_into(&mut frame);
+//! assert_eq!(frame.len(), p.wire_bytes()); // measured, not estimated
+//! assert_eq!(Payload::decode(&frame).unwrap(), p);
+//! ```
+//! [`Payload::wire_bytes`] returns the encoded length without
 //! encoding (property-tested equal to `encode_into`'s output length,
 //! and re-verified against a real encode on every debug-build metering
 //! call); the [`crate::fl::comm::BitMeter`] counts it per upload, so

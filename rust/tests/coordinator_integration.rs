@@ -38,6 +38,7 @@ fn cfg(strategy: Strategy) -> ExperimentConfig {
         workers: 1,
         secure_updates: true,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     }
 }
@@ -57,7 +58,11 @@ fn coordinated(
     let engine = build_native_engine(c);
     let mut runner = ParallelRunner::new(engine, workers);
     let mut coordinator =
-        Coordinator::new(CoordinatorOptions { shards, deadline });
+        Coordinator::new(CoordinatorOptions {
+        shards,
+        deadline,
+        ..CoordinatorOptions::default()
+    });
     let run = coordinator.run(c, &mut runner, &TrainOptions::default()).unwrap();
     (run, coordinator.stats)
 }

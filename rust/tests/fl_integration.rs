@@ -29,6 +29,7 @@ fn tiny_cfg(strategy: Strategy) -> ExperimentConfig {
         workers: 1,
         secure_updates: true,
         availability: 1.0,
+        availability_trace: None,
         compressor: None,
     }
 }

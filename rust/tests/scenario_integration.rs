@@ -1,0 +1,248 @@
+//! Integration: the scenario engine end to end — availability traces
+//! through the coordinator (composing with deadline drops), the
+//! q = 1 degradation to the main-paper setting, the sharded AOCS
+//! negotiation, and the sweep grid driver's file outputs.
+
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{
+    Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
+};
+use fedsamp::exp::sweep::{
+    parse_availability_arm, run_sweep, SweepSpec, CSV_HEADER,
+};
+use fedsamp::fl::availability::{Churn, Diurnal, Outage, Trace};
+use fedsamp::fl::TrainOptions;
+use fedsamp::metrics::RunResult;
+use fedsamp::sim::build_native_engine;
+
+fn cfg(strategy: Strategy) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("scenario_{}", strategy.name()),
+        seed: 9,
+        rounds: 12,
+        cohort: 16,
+        budget: 4,
+        strategy,
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: 3,
+        eval_examples: 128,
+        workers: 1,
+        secure_updates: true,
+        availability: 1.0,
+        availability_trace: None,
+        compressor: None,
+    }
+}
+
+fn run(
+    c: &ExperimentConfig,
+    opts: CoordinatorOptions,
+    workers: usize,
+) -> (RunResult, fedsamp::coordinator::CoordStats) {
+    let engine = build_native_engine(c);
+    let mut runner = ParallelRunner::new(engine, workers);
+    let mut coordinator = Coordinator::new(opts);
+    let result = coordinator
+        .run(c, &mut runner, &TrainOptions::default())
+        .unwrap();
+    (result, coordinator.stats)
+}
+
+fn assert_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{tag}: train_loss round {}",
+            ra.round
+        );
+        assert_eq!(ra.uplink_bits, rb.uplink_bits, "{tag}: bits {}", ra.round);
+        assert_eq!(
+            ra.transmitted, rb.transmitted,
+            "{tag}: transmitted {}",
+            ra.round
+        );
+    }
+}
+
+fn hostile_trace() -> Trace {
+    Trace {
+        seed: 77,
+        base_q: 0.7,
+        diurnal: Some(Diurnal { amplitude: 0.5, period: 6, zones: 3 }),
+        churn: Some(Churn { session_len: 4, drop_prob: 0.25 }),
+        outage: Some(Outage { prob: 0.1 }),
+    }
+}
+
+#[test]
+fn trace_runs_are_deterministic_per_seed() {
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    c.availability_trace = Some(hostile_trace());
+    c.rounds = 10;
+    let opts = || CoordinatorOptions {
+        shards: 4,
+        ..CoordinatorOptions::default()
+    };
+    let (a, sa) = run(&c, opts(), 1);
+    let (b, sb) = run(&c, opts(), 3);
+    // same seed → identical trajectory, for any worker provisioning
+    assert_identical(&a, &b, "trace determinism");
+    assert_eq!(sa.shards_outaged, sb.shards_outaged);
+}
+
+#[test]
+fn trace_unavailability_composes_with_deadline_drops() {
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    c.availability_trace = Some(hostile_trace());
+    c.rounds = 30;
+    let (result, stats) = run(
+        &c,
+        CoordinatorOptions {
+            shards: 4,
+            deadline: Some(DeadlinePolicy { miss_prob: 0.2 }),
+            ..CoordinatorOptions::default()
+        },
+        2,
+    );
+    assert_eq!(result.rounds.len(), c.rounds);
+    assert!(stats.shards_outaged > 0, "outage model never fired");
+    assert!(stats.shards_dropped > 0, "deadline model never fired");
+    // hostile availability + stragglers, and training still progresses
+    let first = result
+        .rounds
+        .iter()
+        .find(|r| !r.train_loss.is_nan())
+        .expect("every round lost its cohort")
+        .train_loss;
+    let last = result
+        .rounds
+        .iter()
+        .rev()
+        .find(|r| !r.train_loss.is_nan())
+        .unwrap()
+        .train_loss;
+    assert!(last < first, "no progress under the trace: {first} -> {last}");
+    // cohorts shrink under unavailability but stay within the ask
+    assert!(result.rounds.iter().all(|r| r.transmitted <= c.cohort));
+}
+
+#[test]
+fn q1_trace_is_bitwise_the_main_paper_setting() {
+    // a trace with base_q = 1 and no modulation must reproduce the
+    // availability-1.0 trajectory bit for bit (the AlwaysOn degradation)
+    let always = cfg(Strategy::Aocs { j_max: 4 });
+    let mut traced = always.clone();
+    traced.availability_trace = Some(Trace::bernoulli(123, 1.0));
+    let (a, _) = run(&always, CoordinatorOptions::default(), 1);
+    let (b, _) = run(&traced, CoordinatorOptions::default(), 1);
+    assert_identical(&a, &b, "q=1 trace vs always-on");
+}
+
+#[test]
+fn sharded_negotiation_tracks_the_central_fixed_point() {
+    let c = cfg(Strategy::Aocs { j_max: 4 });
+    let central = run(
+        &c,
+        CoordinatorOptions { shards: 4, ..CoordinatorOptions::default() },
+        2,
+    )
+    .0;
+    let sharded = run(
+        &c,
+        CoordinatorOptions {
+            shards: 4,
+            sharded_negotiation: true,
+            ..CoordinatorOptions::default()
+        },
+        2,
+    )
+    .0;
+    assert_eq!(central.rounds.len(), sharded.rounds.len());
+    for (rc, rs) in central.rounds.iter().zip(&sharded.rounds) {
+        // same fixed point up to the f32 partial-sum transport: the
+        // expected budget (Σp) must agree closely and respect m
+        assert!(
+            (rc.expected_budget - rs.expected_budget).abs() < 1e-3,
+            "round {}: Σp {} vs {}",
+            rc.round,
+            rc.expected_budget,
+            rs.expected_budget
+        );
+        assert!(rs.expected_budget <= c.budget as f64 + 1e-3);
+    }
+    // and the run still trains
+    assert!(
+        sharded.final_train_loss() < sharded.rounds[0].train_loss,
+        "sharded negotiation broke training"
+    );
+}
+
+#[test]
+fn sharded_negotiation_is_deterministic_across_workers() {
+    let c = cfg(Strategy::Aocs { j_max: 4 });
+    let opts = || CoordinatorOptions {
+        shards: 4,
+        sharded_negotiation: true,
+        ..CoordinatorOptions::default()
+    };
+    let (a, _) = run(&c, opts(), 1);
+    let (b, _) = run(&c, opts(), 3);
+    assert_identical(&a, &b, "sharded negotiation workers 1 vs 3");
+}
+
+#[test]
+fn sweep_quick_grid_writes_csv_and_json() {
+    let dir = std::env::temp_dir().join(format!(
+        "fedsamp_sweep_test_{}",
+        std::process::id()
+    ));
+    let dir = dir.to_str().unwrap().to_string();
+    let spec = SweepSpec::quick();
+    let report = run_sweep(&spec, false).unwrap();
+    assert_eq!(report.arms.len(), 6);
+    // acceptance arms: {full, uniform, aocs} × {alwayson, bernoulli trace}
+    for strategy in ["full", "uniform", "aocs"] {
+        for avail in ["alwayson", "bern0.7"] {
+            assert!(
+                report.arms.iter().any(|a| a.strategy == strategy
+                    && a.availability == avail),
+                "missing arm {strategy}×{avail}"
+            );
+        }
+    }
+    let (json_path, csv_path) = report.save(&dir).unwrap();
+    let json_text = std::fs::read_to_string(&json_path).unwrap();
+    let doc = fedsamp::util::json::Json::parse(&json_text).unwrap();
+    assert_eq!(doc.get("bench").as_str(), Some("sweep"));
+    assert_eq!(doc.get("arms").as_arr().unwrap().len(), 6);
+    let csv_text = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv_text.starts_with(CSV_HEADER));
+    assert_eq!(csv_text.lines().count(), 7, "header + 6 arms");
+    // unavailability must show up in the data: the bern0.7 arms
+    // transmit no more than their always-on counterparts ask for
+    for arm in &report.arms {
+        assert!(arm.mean_transmitted <= spec.cohort as f64 + 1e-9);
+        assert!(arm.final_train_loss.is_finite());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn availability_arms_parse_to_validating_configs() {
+    for spec in ["alwayson", "bern0.5", "diurnal0.8", "churn0.9", "outage0.2"]
+    {
+        let arm = parse_availability_arm(spec).unwrap();
+        let mut c = cfg(Strategy::Uniform);
+        c.availability_trace = arm.trace;
+        c.validate().unwrap_or_else(|e| panic!("{spec}: {e}"));
+    }
+}

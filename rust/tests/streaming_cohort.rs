@@ -1,0 +1,182 @@
+//! Integration: streaming cohort selection at million-client pool scale.
+//!
+//! The acceptance gates of the scenario engine:
+//!
+//! * a round cohort is drawn from a pool of 1,000,000 clients with peak
+//!   heap allocation proportional to the *cohort* (a counting global
+//!   allocator measures it — the dense draw's O(pool) index vector
+//!   alone would be ~8 MiB);
+//! * the streaming draw is bitwise identical to the retained dense
+//!   reference, so every pre-existing seed trajectory is unchanged.
+//!
+//! This file holds only the allocator-measured tests so no concurrent
+//! test thread can pollute the peak counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use fedsamp::coordinator::Registry;
+use fedsamp::fl::availability::{
+    reference, sample_round_cohort, Availability, Churn, Diurnal, Outage,
+    Trace,
+};
+use fedsamp::util::rng::Rng;
+
+/// System allocator wrapped with live/peak byte counters.
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live =
+                LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests of this file: the peak counter is global, so
+/// measured regions must never overlap across harness threads.
+static MEASURE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f`, returning its result and the peak heap growth (bytes above
+/// the live watermark at entry) it caused. Hold [`MEASURE_LOCK`] while
+/// calling.
+fn measure_peak<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    let out = f();
+    let peak = PEAK.load(Ordering::Relaxed);
+    (out, peak.saturating_sub(base))
+}
+
+/// Take the file-wide measurement lock (poison-tolerant: a failed test
+/// must not cascade).
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const POOL: usize = 1_000_000;
+const COHORT: usize = 512;
+
+/// Generous O(cohort) budget: the sparse Fisher–Yates map, the pick
+/// buffers and the cohort itself — and 30× below the ~8 MiB the dense
+/// draw's O(pool) identity vector would cost on its own.
+const COHORT_BUDGET: usize = 256 * 1024;
+
+fn assert_valid_cohort(cohort: &[usize], n: usize) {
+    assert!(cohort.len() <= n);
+    let mut sorted = cohort.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), cohort.len(), "duplicate cohort member");
+    assert!(cohort.iter().all(|&c| c < POOL));
+}
+
+#[test]
+fn million_client_always_on_cohort_is_cohort_memory() {
+    let _guard = serialized();
+    let registry = Registry::new(POOL, 64);
+    let avail = Availability::AlwaysOn;
+    let mut rng = Rng::new(7).fork(0xF1).fork(0);
+    let (draw, peak) = measure_peak(|| {
+        sample_round_cohort(&avail, &registry, 0, COHORT, &mut rng)
+    });
+    assert_eq!(draw.cohort.len(), COHORT);
+    assert_valid_cohort(&draw.cohort, COHORT);
+    assert!(
+        peak < COHORT_BUDGET,
+        "always-on draw peaked at {peak} bytes (budget {COHORT_BUDGET})"
+    );
+    // and it is the exact draw the dense reference produces
+    let mut dense_rng = Rng::new(7).fork(0xF1).fork(0);
+    let dense = reference::sample_cohort_dense(
+        &avail, &registry, 0, COHORT, &mut dense_rng,
+    );
+    assert_eq!(draw.cohort, dense);
+}
+
+#[test]
+fn million_client_trace_cohort_is_cohort_memory() {
+    let _guard = serialized();
+    let registry = Registry::new(POOL, 64);
+    let avail = Availability::Trace(Trace {
+        seed: 41,
+        base_q: 0.6,
+        diurnal: Some(Diurnal { amplitude: 0.5, period: 24, zones: 4 }),
+        churn: Some(Churn { session_len: 8, drop_prob: 0.2 }),
+        outage: Some(Outage { prob: 0.05 }),
+    });
+    let mut rng = Rng::new(11).fork(0xF1).fork(3);
+    let (draw, peak) = measure_peak(|| {
+        sample_round_cohort(&avail, &registry, 3, COHORT, &mut rng)
+    });
+    assert_eq!(draw.cohort.len(), COHORT, "0.6-available 1M pool ≫ cohort");
+    assert_valid_cohort(&draw.cohort, COHORT);
+    assert!(
+        peak < COHORT_BUDGET,
+        "trace draw peaked at {peak} bytes (budget {COHORT_BUDGET})"
+    );
+}
+
+#[test]
+fn million_client_bernoulli_cohort_is_cohort_memory_and_bitwise_exact() {
+    let _guard = serialized();
+    let registry = Registry::new(POOL, 16);
+    let avail = Availability::Bernoulli { q: 0.4 };
+    let mut rng = Rng::new(3).fork(0xF1).fork(5);
+    let (draw, peak) = measure_peak(|| {
+        sample_round_cohort(&avail, &registry, 5, COHORT, &mut rng)
+    });
+    assert_eq!(draw.cohort.len(), COHORT);
+    assert_valid_cohort(&draw.cohort, COHORT);
+    assert!(
+        peak < COHORT_BUDGET,
+        "bernoulli draw peaked at {peak} bytes (budget {COHORT_BUDGET})"
+    );
+    // dense reference agreement at full pool scale (the reference is
+    // allowed its O(pool) materialization here — that is the point)
+    let mut dense_rng = Rng::new(3).fork(0xF1).fork(5);
+    let dense = reference::sample_cohort_dense(
+        &avail, &registry, 5, COHORT, &mut dense_rng,
+    );
+    assert_eq!(draw.cohort, dense);
+    assert_eq!(rng.next_u64(), dense_rng.next_u64(), "rng states diverged");
+}
+
+#[test]
+fn scarce_availability_returns_everyone_reachable() {
+    let _guard = serialized();
+    // when fewer clients are reachable than the cohort asks for, the
+    // draw returns them all — still in O(reachable) memory
+    let registry = Registry::new(POOL, 8);
+    let avail = Availability::Trace(Trace::bernoulli(13, 0.0001));
+    let mut rng = Rng::new(17).fork(0xF1).fork(1);
+    let (draw, peak) =
+        measure_peak(|| sample_round_cohort(&avail, &registry, 1, 512, &mut rng));
+    // ~100 of 1M expected; all of them join the cohort
+    assert!(!draw.cohort.is_empty() && draw.cohort.len() < 512);
+    assert!(
+        peak < COHORT_BUDGET,
+        "scarce draw peaked at {peak} bytes (budget {COHORT_BUDGET})"
+    );
+    let mut dense_rng = Rng::new(17).fork(0xF1).fork(1);
+    let dense = reference::sample_cohort_dense(
+        &avail, &registry, 1, 512, &mut dense_rng,
+    );
+    assert_eq!(draw.cohort, dense);
+}
