@@ -51,10 +51,12 @@ impl Bench {
         }
         let s = summarize(&samples);
         println!(
-            "{:<44} {:>12}/iter (± {}) [batch={} samples={}]",
+            "{:<44} {:>12}/iter (± {}) p50={} p90={} [batch={} samples={}]",
             format!("{}/{}", self.group, name),
             fmt_ns(s.mean),
             fmt_ns(s.std),
+            fmt_ns(s.median),
+            fmt_ns(s.p90),
             batch,
             s.n
         );

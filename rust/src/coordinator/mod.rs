@@ -64,6 +64,7 @@ use crate::fl::comm::BitMeter;
 use crate::fl::TrainOptions;
 use crate::metrics::RunResult;
 use crate::sampling::Sampler;
+use crate::telemetry::Telemetry;
 use crate::util::rng::Rng;
 
 /// Straggler model: each shard independently misses the round deadline
@@ -122,6 +123,8 @@ pub struct CoordStats {
     pub shards_outaged: usize,
     /// Rounds that ended with an empty cohort (no-op rounds).
     pub noop_rounds: usize,
+    /// Rounds the coordinator actually drove (no-op rounds included).
+    pub rounds_run: usize,
 }
 
 /// The master-side driver: owns the shard registry and round loop and
@@ -181,7 +184,16 @@ impl Coordinator {
         let mut meter = BitMeter::new();
         let mut result = RunResult::new(&cfg.name, sampler.name());
 
+        // Telemetry sits entirely outside the protocol: it never reads
+        // an RNG stream, so trajectories are bit-identical with it on or
+        // off. A disabled recorder records nothing and installs no clock.
+        let mut tel = Telemetry::from_config(&opts.telemetry)?;
+        if tel.enabled() {
+            runner.set_clock(Some(tel.clock()));
+        }
+
         for round in 0..cfg.rounds {
+            self.stats.rounds_run += 1;
             let mut round_rng = rng.fork(round as u64);
             let mut machine = RoundMachine::new(round);
             self.stats.shards_dropped += machine.announce(
@@ -190,15 +202,17 @@ impl Coordinator {
                 &registry,
                 self.opts.deadline.as_ref(),
                 &mut round_rng,
+                &mut tel,
             );
             self.stats.shards_outaged += machine.outaged_shards();
             if machine.cohort().is_empty() {
                 self.stats.noop_rounds += 1;
                 result.push(round::noop_record(round, &meter));
+                tel.flush_round(round);
                 continue;
             }
-            machine.local_compute(runner, &x);
-            machine.norm_report();
+            machine.local_compute(runner, &x, &mut tel);
+            machine.norm_report(&mut tel);
             machine.negotiate(
                 &sampler,
                 cfg,
@@ -209,6 +223,7 @@ impl Coordinator {
                 },
                 &mut meter,
                 &mut round_rng,
+                &mut tel,
             );
             machine.secure_aggregate(
                 cfg,
@@ -217,6 +232,7 @@ impl Coordinator {
                 runner,
                 &mut meter,
                 &mut round_rng,
+                &mut tel,
             );
             result.push(machine.commit(
                 cfg,
@@ -225,8 +241,13 @@ impl Coordinator {
                 &mut x,
                 runner,
                 &meter,
+                &mut tel,
             )?);
         }
+        if tel.enabled() {
+            runner.set_clock(None);
+        }
+        result.telemetry = tel.finish();
         Ok(result)
     }
 }

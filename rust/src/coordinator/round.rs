@@ -23,6 +23,7 @@ use crate::fl::comm::BitMeter;
 use crate::fl::{EvalOutcome, LocalOutcome, TrainOptions};
 use crate::metrics::RoundRecord;
 use crate::sampling::{aocs, probability, variance, Decision, Sampler};
+use crate::telemetry::{Counter, PhaseSpan, Telemetry};
 use crate::tensor;
 use crate::tensor::kernels;
 use crate::util::rng::Rng;
@@ -146,8 +147,10 @@ impl RoundMachine {
         registry: &Registry,
         deadline: Option<&DeadlinePolicy>,
         round_rng: &mut Rng,
+        tel: &mut Telemetry,
     ) -> usize {
         self.expect(Phase::Announce);
+        tel.span_begin(self.round, PhaseSpan::Announce);
         let draw = sample_round_cohort(
             avail,
             registry,
@@ -157,6 +160,7 @@ impl RoundMachine {
         );
         self.outaged_shards = draw.outaged_shards;
         let mut cohort = draw.cohort;
+        let announced = cohort.len();
         if let Some(policy) = deadline {
             if policy.miss_prob > 0.0 {
                 let stream = Rng::new(cfg.seed ^ STRAGGLER_STREAM)
@@ -173,6 +177,13 @@ impl RoundMachine {
                 cohort.retain(|&c| !missed[registry.shard_of(c)]);
             }
         }
+        tel.add(Counter::ClientsAnnounced, announced as u64);
+        tel.add(
+            Counter::ClientsDeadlineDropped,
+            (announced - cohort.len()) as u64,
+        );
+        tel.add(Counter::ShardsOutaged, self.outaged_shards as u64);
+        tel.add(Counter::ShardsDeadlineDropped, self.dropped_shards as u64);
         let part = registry.split_cohort(&cohort);
         self.cohort = cohort;
         self.shard_clients = part.clients;
@@ -182,6 +193,7 @@ impl RoundMachine {
         } else {
             Phase::LocalCompute
         };
+        tel.span_end(self.round, PhaseSpan::Announce);
         self.dropped_shards
     }
 
@@ -191,10 +203,13 @@ impl RoundMachine {
         &mut self,
         runner: &mut dyn LocalRunner,
         global: &[f32],
+        tel: &mut Telemetry,
     ) {
         self.expect(Phase::LocalCompute);
+        tel.span_begin(self.round, PhaseSpan::LocalCompute);
         let by_shard =
             runner.run_shards(self.round, global, &self.shard_clients);
+        tel.collect_jobs(self.round, &mut |buf| runner.drain_timings(buf));
         assert_eq!(
             by_shard.len(),
             self.shard_clients.len(),
@@ -217,14 +232,16 @@ impl RoundMachine {
             .map(|s| s.expect("shard left a cohort position unfilled"))
             .collect();
         self.phase = Phase::NormReport;
+        tel.span_end(self.round, PhaseSpan::LocalCompute);
     }
 
     /// (3) Cohort weights `w_i ∝ n_i` and weighted norms `ũ_i = w_i‖U_i‖`.
     /// Example counts combine per shard first (integer partial sums are
     /// order-independent, so this matches the flat sum exactly); the
     /// master then touches only O(cohort) scalars, never update vectors.
-    pub fn norm_report(&mut self) {
+    pub fn norm_report(&mut self, tel: &mut Telemetry) {
         self.expect(Phase::NormReport);
+        tel.span_begin(self.round, PhaseSpan::NormReport);
         let shard_examples: Vec<usize> = self
             .shard_positions
             .iter()
@@ -243,6 +260,7 @@ impl RoundMachine {
             .map(|(o, &w)| w * tensor::norm(&o.delta))
             .collect();
         self.phase = Phase::Negotiate;
+        tel.span_end(self.round, PhaseSpan::NormReport);
     }
 
     /// (4)+(5) Sampling negotiation (Eq. 7 / Alg. 2) and the independent
@@ -264,8 +282,10 @@ impl RoundMachine {
         sharded: Option<&mut dyn LocalRunner>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
+        tel: &mut Telemetry,
     ) {
         self.expect(Phase::Negotiate);
+        tel.span_begin(self.round, PhaseSpan::Negotiate);
         let m = cfg.budget.min(self.cohort.len());
         let decision = match (sampler, sharded) {
             (Sampler::Aocs { j_max }, Some(runner)) => {
@@ -301,6 +321,9 @@ impl RoundMachine {
                         runner.negotiation_partials(seed, scalars)
                     },
                 );
+                tel.collect_jobs(self.round, &mut |buf| {
+                    runner.drain_timings(buf)
+                });
                 Decision::from_aocs(r)
             }
             _ => sampler.decide(&self.norms, m),
@@ -308,6 +331,15 @@ impl RoundMachine {
         meter.add_negotiation(
             self.cohort.len(),
             decision.extra_uplink_floats_per_client,
+        );
+        tel.add(
+            Counter::NegotiationRounds,
+            decision.negotiation_rounds as u64,
+        );
+        tel.add(
+            Counter::NegotiationUplinkFloats,
+            (self.cohort.len() * decision.extra_uplink_floats_per_client)
+                as u64,
         );
 
         // diagnostics: α^k / γ^k for this round's norm profile. For the
@@ -336,8 +368,13 @@ impl RoundMachine {
         self.gamma = variance::gamma(self.alpha, self.cohort.len(), m);
         self.selected =
             probability::draw_independent(&decision.probs, round_rng);
+        tel.add(
+            Counter::ClientsSelected,
+            self.selected.iter().filter(|&&s| s).count() as u64,
+        );
         self.decision = Some(decision);
         self.phase = Phase::SecureAggregate;
+        tel.span_end(self.round, PhaseSpan::Negotiate);
     }
 
     /// (6) Participants upload `(w_i/p_i)·U_i`; shards fold their members
@@ -345,6 +382,7 @@ impl RoundMachine {
     /// combine stage reduces O(shards) partials rather than folding
     /// O(participants) vectors directly. Under `secure_updates` the
     /// per-shard masked folds fan out over the runner's worker pool.
+    #[allow(clippy::too_many_arguments)]
     pub fn secure_aggregate(
         &mut self,
         cfg: &ExperimentConfig,
@@ -353,15 +391,21 @@ impl RoundMachine {
         runner: &mut dyn LocalRunner,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
+        tel: &mut Telemetry,
     ) {
         self.expect(Phase::SecureAggregate);
+        tel.span_begin(self.round, PhaseSpan::SecureAggregate);
         let dim = runner.dim();
         self.aggregate = if cfg.secure_updates {
-            self.masked_aggregate(cfg, opts, registry, runner, meter, round_rng)
+            self.masked_aggregate(
+                cfg, opts, registry, runner, meter, round_rng, tel,
+            )
         } else {
-            self.plain_aggregate(opts, registry, dim, meter, round_rng)
+            self.plain_aggregate(opts, registry, dim, meter, round_rng, tel)
         };
+        tel.add(Counter::ClientsTransmitted, self.transmitted as u64);
         self.phase = Phase::Commit;
+        tel.span_end(self.round, PhaseSpan::SecureAggregate);
     }
 
     /// The secure path: stage each participant's upload — the typed wire
@@ -381,6 +425,7 @@ impl RoundMachine {
     /// simulated mask fold is dense — the accounting models a
     /// compression-compatible secure scheme, the seed's semantics; see
     /// DESIGN.md §7).
+    #[allow(clippy::too_many_arguments)]
     fn masked_aggregate(
         &mut self,
         cfg: &ExperimentConfig,
@@ -389,6 +434,7 @@ impl RoundMachine {
         runner: &mut dyn LocalRunner,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
+        tel: &mut Telemetry,
     ) -> Vec<f32> {
         let dim = runner.dim();
         let decision = self.decision.as_ref().expect("negotiate ran");
@@ -408,6 +454,7 @@ impl RoundMachine {
                 None => Payload::Dense(std::mem::take(&mut o.delta)),
             };
             meter.add_payload(&payload);
+            tel.payload(&payload);
             let client = self.cohort[i] as u64;
             batch.roster.push(client);
             batch.groups[registry.shard_of(self.cohort[i])]
@@ -425,6 +472,7 @@ impl RoundMachine {
             .into_iter()
             .map(ShardPartial::Masked)
             .collect();
+        tel.collect_jobs(self.round, &mut |buf| runner.drain_timings(buf));
         aggregate::finish(
             aggregate::tree_reduce(partials)
                 .expect("some shard has a participant"),
@@ -447,6 +495,7 @@ impl RoundMachine {
         dim: usize,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
+        tel: &mut Telemetry,
     ) -> Vec<f32> {
         let decision = self.decision.as_ref().expect("negotiate ran");
         let mut uploads: Vec<(usize, Payload, f32)> = Vec::new();
@@ -460,6 +509,7 @@ impl RoundMachine {
                 None => Payload::Dense(std::mem::take(&mut o.delta)),
             };
             meter.add_payload(&payload);
+            tel.payload(&payload);
             uploads.push((i, payload, factor));
         }
         let transmitted = uploads.len();
@@ -505,6 +555,7 @@ impl RoundMachine {
 
     /// (7)+(8) Master update, divergence guard, metrics and (periodic)
     /// evaluation. Consumes the phase; the machine ends in `Done`.
+    #[allow(clippy::too_many_arguments)]
     pub fn commit(
         &mut self,
         cfg: &ExperimentConfig,
@@ -513,8 +564,10 @@ impl RoundMachine {
         x: &mut [f32],
         runner: &mut dyn LocalRunner,
         meter: &BitMeter,
+        tel: &mut Telemetry,
     ) -> Result<RoundRecord, String> {
         self.expect(Phase::Commit);
+        tel.span_begin(self.round, PhaseSpan::Commit);
         let round = self.round;
         // fused master update + finiteness probe: Σx'² is finite iff
         // every updated parameter is (finite f32 squares cannot overflow
@@ -558,6 +611,8 @@ impl RoundMachine {
         }
         let decision = self.decision.as_ref().expect("negotiate ran");
         self.phase = Phase::Done;
+        tel.span_end(self.round, PhaseSpan::Commit);
+        tel.flush_round(round);
         Ok(RoundRecord {
             round,
             train_loss,
@@ -666,15 +721,16 @@ mod tests {
         let mut x = runner.init_params(c.seed);
         let opts = TrainOptions::default();
 
+        let mut tel = Telemetry::disabled();
         let mut m = RoundMachine::new(0);
         assert_eq!(m.phase(), Phase::Announce);
-        m.announce(&c, &avail, &registry, None, &mut round_rng);
+        m.announce(&c, &avail, &registry, None, &mut round_rng, &mut tel);
         assert_eq!(m.phase(), Phase::LocalCompute);
-        m.local_compute(&mut runner, &x);
+        m.local_compute(&mut runner, &x, &mut tel);
         assert_eq!(m.phase(), Phase::NormReport);
-        m.norm_report();
+        m.norm_report(&mut tel);
         assert_eq!(m.phase(), Phase::Negotiate);
-        m.negotiate(&sampler, &c, None, &mut meter, &mut round_rng);
+        m.negotiate(&sampler, &c, None, &mut meter, &mut round_rng, &mut tel);
         assert_eq!(m.phase(), Phase::SecureAggregate);
         m.secure_aggregate(
             &c,
@@ -683,10 +739,11 @@ mod tests {
             &mut runner,
             &mut meter,
             &mut round_rng,
+            &mut tel,
         );
         assert_eq!(m.phase(), Phase::Commit);
         let rec = m
-            .commit(&c, &opts, 0.1, &mut x, &mut runner, &meter)
+            .commit(&c, &opts, 0.1, &mut x, &mut runner, &meter, &mut tel)
             .unwrap();
         assert_eq!(m.phase(), Phase::Done);
         (rec, x)
@@ -722,7 +779,14 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut m = RoundMachine::new(0);
         // negotiate before announce/local_compute must refuse
-        m.negotiate(&sampler, &c, None, &mut meter, &mut rng);
+        m.negotiate(
+            &sampler,
+            &c,
+            None,
+            &mut meter,
+            &mut rng,
+            &mut Telemetry::disabled(),
+        );
     }
 
     #[test]
@@ -740,6 +804,7 @@ mod tests {
             &registry,
             Some(&policy),
             &mut round_rng,
+            &mut Telemetry::disabled(),
         );
         assert_eq!(dropped, 3);
         assert!(m.cohort().is_empty());

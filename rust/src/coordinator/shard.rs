@@ -24,6 +24,7 @@ use std::thread::JoinHandle;
 
 use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
 use crate::secure_agg::SecureAggregator;
+use crate::telemetry::{Clock, JobKind, JobTiming};
 use crate::tensor::kernels::Scratch;
 
 use super::aggregate::{fused_masked_partial, MaskBatch};
@@ -81,6 +82,15 @@ pub trait LocalRunner {
     }
     /// Evaluate global parameters on the validation split.
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome;
+    /// Install (or clear) a telemetry clock. Runners that support job
+    /// timing start stamping [`JobTiming`]s for [`drain_timings`]
+    /// while a clock is installed; the default runner records nothing.
+    ///
+    /// [`drain_timings`]: LocalRunner::drain_timings
+    fn set_clock(&mut self, _clock: Option<Arc<dyn Clock>>) {}
+    /// Append and clear accumulated job timings into `out`. Timings
+    /// never influence results — purely observational.
+    fn drain_timings(&mut self, _out: &mut Vec<JobTiming>) {}
 }
 
 /// A thread-shareable per-client compute backend (the sim engines). One
@@ -107,17 +117,51 @@ pub trait ClientCompute: Send + Sync + 'static {
 // legacy-engine adapter
 // ---------------------------------------------------------------------------
 
+/// Run `f`, stamping a [`JobTiming`] into `timings` when a clock is
+/// installed. Inline execution never waits in a queue (queue_ns = 0)
+/// and always runs on the calling thread (worker 0).
+fn time_inline<R>(
+    clock: &Option<Arc<dyn Clock>>,
+    timings: &mut Vec<JobTiming>,
+    kind: JobKind,
+    items: u64,
+    f: impl FnOnce() -> R,
+) -> R {
+    let Some(c) = clock else { return f() };
+    let t0 = c.now_ns();
+    let r = f();
+    timings.push(JobTiming {
+        kind,
+        worker: 0,
+        start_ns: t0,
+        queue_ns: 0,
+        exec_ns: c.now_ns().saturating_sub(t0),
+        items,
+    });
+    r
+}
+
 /// [`LocalRunner`] over a `&mut dyn ClientEngine` (single-threaded per
 /// shard; the engine may parallelize internally). Owns one scratch arena
-/// for the masked fold, allocated once for the runner's lifetime.
+/// for the masked fold, allocated once for the runner's lifetime. With a
+/// telemetry clock installed, each shard's `run_local` is timed as one
+/// `Local` job (items = shard cohort size) and each fold group as one
+/// `MaskFold`/`ScalarFold` job.
 pub struct EngineRunner<'a> {
     engine: &'a mut dyn ClientEngine,
     scratch: Scratch,
+    clock: Option<Arc<dyn Clock>>,
+    timings: Vec<JobTiming>,
 }
 
 impl<'a> EngineRunner<'a> {
     pub fn new(engine: &'a mut dyn ClientEngine) -> EngineRunner<'a> {
-        EngineRunner { engine, scratch: Scratch::new() }
+        EngineRunner {
+            engine,
+            scratch: Scratch::new(),
+            clock: None,
+            timings: Vec::new(),
+        }
     }
 }
 
@@ -140,33 +184,72 @@ impl LocalRunner for EngineRunner<'_> {
         global: &[f32],
         shard_cohorts: &[Vec<usize>],
     ) -> Vec<Vec<LocalOutcome>> {
-        shard_cohorts
-            .iter()
-            .map(|clients| {
-                if clients.is_empty() {
-                    return Vec::new();
-                }
-                let outs = self.engine.run_local(round, global, clients);
-                assert_eq!(
-                    outs.len(),
-                    clients.len(),
-                    "engine cohort mismatch"
-                );
-                outs
-            })
-            .collect()
+        let Self { engine, clock, timings, .. } = self;
+        let mut out = Vec::with_capacity(shard_cohorts.len());
+        for clients in shard_cohorts {
+            if clients.is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            let outs = time_inline(
+                clock,
+                timings,
+                JobKind::Local,
+                clients.len() as u64,
+                || engine.run_local(round, global, clients),
+            );
+            assert_eq!(outs.len(), clients.len(), "engine cohort mismatch");
+            out.push(outs);
+        }
+        out
     }
 
     fn secure_partials(&mut self, batch: MaskBatch) -> Vec<Vec<u64>> {
-        batch
-            .groups
+        let Self { scratch, clock, timings, .. } = self;
+        let mut out = Vec::with_capacity(batch.groups.len());
+        for g in &batch.groups {
+            out.push(time_inline(
+                clock,
+                timings,
+                JobKind::MaskFold,
+                g.len() as u64,
+                || fused_masked_partial(&batch, g, scratch),
+            ));
+        }
+        out
+    }
+
+    fn negotiation_partials(
+        &mut self,
+        round_seed: u64,
+        groups: &[ScalarGroup],
+    ) -> Vec<f32> {
+        let Self { clock, timings, .. } = self;
+        let agg = SecureAggregator::new(round_seed);
+        groups
             .iter()
-            .map(|g| fused_masked_partial(&batch, g, &mut self.scratch))
+            .map(|g| {
+                time_inline(
+                    clock,
+                    timings,
+                    JobKind::ScalarFold,
+                    g.len() as u64,
+                    || agg.aggregate_scalars(g),
+                )
+            })
             .collect()
     }
 
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
         self.engine.evaluate(global)
+    }
+
+    fn set_clock(&mut self, clock: Option<Arc<dyn Clock>>) {
+        self.clock = clock;
+    }
+
+    fn drain_timings(&mut self, out: &mut Vec<JobTiming>) {
+        out.append(&mut self.timings);
     }
 }
 
@@ -197,6 +280,16 @@ enum ShardJob {
     },
 }
 
+/// A queued job plus the telemetry context it travels with: the enqueue
+/// timestamp (for queue-wait measurement) and the clock the executing
+/// worker stamps with. `clock` is `None` when telemetry is off, making
+/// dispatch overhead a single `Option` move.
+struct Dispatch {
+    job: ShardJob,
+    enqueued_ns: u64,
+    clock: Option<Arc<dyn Clock>>,
+}
+
 enum ShardReply {
     Local {
         shard: usize,
@@ -213,33 +306,40 @@ enum ShardReply {
     },
 }
 
+/// A worker's reply plus its job timing (when a clock was installed).
+struct Reply {
+    reply: ShardReply,
+    timing: Option<JobTiming>,
+}
+
 struct ShardPool {
-    jobs: mpsc::Sender<ShardJob>,
-    replies: mpsc::Receiver<ShardReply>,
+    jobs: mpsc::Sender<Dispatch>,
+    replies: mpsc::Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
 }
 
 fn recv_job(
-    rx: &Arc<Mutex<mpsc::Receiver<ShardJob>>>,
-) -> Result<ShardJob, mpsc::RecvError> {
+    rx: &Arc<Mutex<mpsc::Receiver<Dispatch>>>,
+) -> Result<Dispatch, mpsc::RecvError> {
     rx.lock().expect("shard job queue poisoned").recv()
 }
 
 impl ShardPool {
     fn spawn<C: ClientCompute>(workers: usize, compute: Arc<C>) -> ShardPool {
-        let (job_tx, job_rx) = mpsc::channel::<ShardJob>();
+        let (job_tx, job_rx) = mpsc::channel::<Dispatch>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (rep_tx, rep_rx) = mpsc::channel::<ShardReply>();
+        let (rep_tx, rep_rx) = mpsc::channel::<Reply>();
         let handles = (0..workers)
-            .map(|_| {
+            .map(|worker| {
                 let job_rx = Arc::clone(&job_rx);
                 let rep_tx = rep_tx.clone();
                 let compute = Arc::clone(&compute);
                 std::thread::spawn(move || {
                     // one arena per worker, alive for the pool's lifetime
                     let mut scratch = Scratch::new();
-                    while let Ok(job) = recv_job(&job_rx) {
-                        let reply = match job {
+                    while let Ok(d) = recv_job(&job_rx) {
+                        let t0 = d.clock.as_ref().map(|c| c.now_ns());
+                        let (reply, kind, items) = match d.job {
                             ShardJob::Local {
                                 shard,
                                 pos,
@@ -253,27 +353,52 @@ impl ShardPool {
                                     client,
                                     &mut scratch,
                                 );
-                                ShardReply::Local { shard, pos, outcome }
+                                (
+                                    ShardReply::Local { shard, pos, outcome },
+                                    JobKind::Local,
+                                    1,
+                                )
                             }
                             ShardJob::MaskFold { group, batch } => {
+                                let items = batch.groups[group].len() as u64;
                                 let partial = fused_masked_partial(
                                     &batch,
                                     &batch.groups[group],
                                     &mut scratch,
                                 );
-                                ShardReply::MaskFold { group, partial }
+                                (
+                                    ShardReply::MaskFold { group, partial },
+                                    JobKind::MaskFold,
+                                    items,
+                                )
                             }
                             ShardJob::ScalarFold {
                                 group,
                                 round_seed,
                                 groups,
                             } => {
+                                let items = groups[group].len() as u64;
                                 let sum = SecureAggregator::new(round_seed)
                                     .aggregate_scalars(&groups[group]);
-                                ShardReply::ScalarFold { group, sum }
+                                (
+                                    ShardReply::ScalarFold { group, sum },
+                                    JobKind::ScalarFold,
+                                    items,
+                                )
                             }
                         };
-                        if rep_tx.send(reply).is_err() {
+                        let timing = match (&d.clock, t0) {
+                            (Some(c), Some(t0)) => Some(JobTiming {
+                                kind,
+                                worker,
+                                start_ns: t0,
+                                queue_ns: t0.saturating_sub(d.enqueued_ns),
+                                exec_ns: c.now_ns().saturating_sub(t0),
+                                items,
+                            }),
+                            _ => None,
+                        };
+                        if rep_tx.send(Reply { reply, timing }).is_err() {
                             break;
                         }
                     }
@@ -307,6 +432,10 @@ pub struct ParallelRunner<C: ClientCompute> {
     pool: Option<ShardPool>,
     /// arena for the inline (workers <= 1) path
     scratch: Scratch,
+    /// telemetry clock; `None` (the default) keeps dispatch timing-free
+    clock: Option<Arc<dyn Clock>>,
+    /// job timings accumulated since the last `drain_timings`
+    timings: Vec<JobTiming>,
 }
 
 impl<C: ClientCompute> ParallelRunner<C> {
@@ -317,12 +446,28 @@ impl<C: ClientCompute> ParallelRunner<C> {
         } else {
             None
         };
-        ParallelRunner { compute, pool, scratch: Scratch::new() }
+        ParallelRunner {
+            compute,
+            pool,
+            scratch: Scratch::new(),
+            clock: None,
+            timings: Vec::new(),
+        }
     }
 
     /// Shared access to the underlying compute backend.
     pub fn compute(&self) -> &C {
         &self.compute
+    }
+
+    fn dispatch(&self, pool: &ShardPool, job: ShardJob) {
+        let enqueued_ns = match &self.clock {
+            Some(c) => c.now_ns(),
+            None => 0,
+        };
+        pool.jobs
+            .send(Dispatch { job, enqueued_ns, clock: self.clock.clone() })
+            .expect("shard pool dead");
     }
 }
 
@@ -345,43 +490,52 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
         global: &[f32],
         shard_cohorts: &[Vec<usize>],
     ) -> Vec<Vec<LocalOutcome>> {
-        let Some(pool) = &self.pool else {
+        if self.pool.is_none() {
             // inline path: one scratch arena, owned by the runner
+            let Self { compute, scratch, clock, timings, .. } = self;
             let mut out = Vec::with_capacity(shard_cohorts.len());
             for clients in shard_cohorts {
                 let mut shard_out = Vec::with_capacity(clients.len());
                 for &c in clients {
-                    shard_out.push(self.compute.local_one(
-                        round,
-                        global,
-                        c,
-                        &mut self.scratch,
+                    shard_out.push(time_inline(
+                        clock,
+                        timings,
+                        JobKind::Local,
+                        1,
+                        || compute.local_one(round, global, c, scratch),
                     ));
                 }
                 out.push(shard_out);
             }
             return out;
-        };
+        }
+        let pool = self.pool.as_ref().expect("pool checked above");
         let global = Arc::new(global.to_vec());
         let mut total = 0usize;
         for (shard, clients) in shard_cohorts.iter().enumerate() {
             for (pos, &client) in clients.iter().enumerate() {
-                pool.jobs
-                    .send(ShardJob::Local {
+                self.dispatch(
+                    pool,
+                    ShardJob::Local {
                         shard,
                         pos,
                         client,
                         round,
                         global: Arc::clone(&global),
-                    })
-                    .expect("shard pool dead");
+                    },
+                );
                 total += 1;
             }
         }
         let mut out: Vec<Vec<Option<LocalOutcome>>> =
             shard_cohorts.iter().map(|c| vec![None; c.len()]).collect();
         for _ in 0..total {
-            match pool.replies.recv().expect("shard pool dead") {
+            let Reply { reply, timing } =
+                pool.replies.recv().expect("shard pool dead");
+            if let Some(t) = timing {
+                self.timings.push(t);
+            }
+            match reply {
                 ShardReply::Local { shard, pos, outcome } => {
                     debug_assert!(out[shard][pos].is_none());
                     out[shard][pos] = Some(outcome);
@@ -401,27 +555,38 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
     /// result is bit-identical to the sequential fold for any worker
     /// count or completion order.
     fn secure_partials(&mut self, batch: MaskBatch) -> Vec<Vec<u64>> {
-        let Some(pool) = &self.pool else {
+        if self.pool.is_none() {
             // inline path: the runner-owned arena, as in run_shards
+            let Self { scratch, clock, timings, .. } = self;
             let mut out = Vec::with_capacity(batch.groups.len());
             for g in &batch.groups {
-                out.push(fused_masked_partial(&batch, g, &mut self.scratch));
+                out.push(time_inline(
+                    clock,
+                    timings,
+                    JobKind::MaskFold,
+                    g.len() as u64,
+                    || fused_masked_partial(&batch, g, scratch),
+                ));
             }
             return out;
-        };
+        }
+        let pool = self.pool.as_ref().expect("pool checked above");
         let total = batch.groups.len();
         let batch = Arc::new(batch);
         for group in 0..total {
-            pool.jobs
-                .send(ShardJob::MaskFold {
-                    group,
-                    batch: Arc::clone(&batch),
-                })
-                .expect("shard pool dead");
+            self.dispatch(
+                pool,
+                ShardJob::MaskFold { group, batch: Arc::clone(&batch) },
+            );
         }
         let mut out: Vec<Option<Vec<u64>>> = vec![None; total];
         for _ in 0..total {
-            match pool.replies.recv().expect("shard pool dead") {
+            let Reply { reply, timing } =
+                pool.replies.recv().expect("shard pool dead");
+            if let Some(t) = timing {
+                self.timings.push(t);
+            }
+            match reply {
                 ShardReply::MaskFold { group, partial } => {
                     debug_assert!(out[group].is_none());
                     out[group] = Some(partial);
@@ -442,24 +607,43 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
         round_seed: u64,
         groups: &[ScalarGroup],
     ) -> Vec<f32> {
-        let Some(pool) = &self.pool else {
+        if self.pool.is_none() {
+            let Self { clock, timings, .. } = self;
             let agg = SecureAggregator::new(round_seed);
-            return groups.iter().map(|g| agg.aggregate_scalars(g)).collect();
-        };
+            return groups
+                .iter()
+                .map(|g| {
+                    time_inline(
+                        clock,
+                        timings,
+                        JobKind::ScalarFold,
+                        g.len() as u64,
+                        || agg.aggregate_scalars(g),
+                    )
+                })
+                .collect();
+        }
+        let pool = self.pool.as_ref().expect("pool checked above");
         let total = groups.len();
         let groups: Arc<Vec<ScalarGroup>> = Arc::new(groups.to_vec());
         for group in 0..total {
-            pool.jobs
-                .send(ShardJob::ScalarFold {
+            self.dispatch(
+                pool,
+                ShardJob::ScalarFold {
                     group,
                     round_seed,
                     groups: Arc::clone(&groups),
-                })
-                .expect("shard pool dead");
+                },
+            );
         }
         let mut out: Vec<Option<f32>> = vec![None; total];
         for _ in 0..total {
-            match pool.replies.recv().expect("shard pool dead") {
+            let Reply { reply, timing } =
+                pool.replies.recv().expect("shard pool dead");
+            if let Some(t) = timing {
+                self.timings.push(t);
+            }
+            match reply {
                 ShardReply::ScalarFold { group, sum } => {
                     debug_assert!(out[group].is_none());
                     out[group] = Some(sum);
@@ -472,6 +656,14 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
 
     fn evaluate(&mut self, global: &[f32]) -> EvalOutcome {
         self.compute.evaluate(global)
+    }
+
+    fn set_clock(&mut self, clock: Option<Arc<dyn Clock>>) {
+        self.clock = clock;
+    }
+
+    fn drain_timings(&mut self, out: &mut Vec<JobTiming>) {
+        out.append(&mut self.timings);
     }
 }
 
@@ -629,5 +821,53 @@ mod tests {
             let out = pooled.run_shards(round, &[0.0], &shard_cohorts());
             assert_eq!(out.iter().map(Vec::len).sum::<usize>(), 9);
         }
+    }
+
+    #[test]
+    fn timings_recorded_only_with_clock_and_results_unchanged() {
+        use crate::telemetry::ManualClock;
+        let global = vec![0.5f32; 3];
+        let mut plain = ParallelRunner::new(TagCompute { n: 16, dim: 3 }, 4);
+        let mut timed = ParallelRunner::new(TagCompute { n: 16, dim: 3 }, 4);
+        timed.set_clock(Some(Arc::new(ManualClock::new(10))));
+        let a = plain.run_shards(2, &global, &shard_cohorts());
+        let b = timed.run_shards(2, &global, &shard_cohorts());
+        for (sa, sb) in a.iter().zip(&b) {
+            for (oa, ob) in sa.iter().zip(sb) {
+                assert_eq!(oa.delta, ob.delta);
+            }
+        }
+        let mut t = Vec::new();
+        plain.drain_timings(&mut t);
+        assert!(t.is_empty(), "no clock installed, no timings");
+        timed.drain_timings(&mut t);
+        assert_eq!(t.len(), 9, "one Local timing per cohort member");
+        assert!(t
+            .iter()
+            .all(|x| matches!(x.kind, JobKind::Local) && x.items == 1));
+        let mut again = Vec::new();
+        timed.drain_timings(&mut again);
+        assert!(again.is_empty(), "drain clears the buffer");
+    }
+
+    #[test]
+    fn inline_runner_times_scalar_folds() {
+        use crate::telemetry::ManualClock;
+        let groups: Vec<ScalarGroup> = vec![
+            (0..5u64).map(|i| (i, 0.25 + i as f32 * 0.5)).collect(),
+            vec![(7, -3.5)],
+        ];
+        let mut inline = ParallelRunner::new(TagCompute { n: 8, dim: 2 }, 1);
+        inline.set_clock(Some(Arc::new(ManualClock::new(7))));
+        let sums = inline.negotiation_partials(77, &groups);
+        assert_eq!(sums.len(), 2);
+        let mut t = Vec::new();
+        inline.drain_timings(&mut t);
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|x| matches!(x.kind, JobKind::ScalarFold)
+            && x.worker == 0
+            && x.queue_ns == 0));
+        assert_eq!(t[0].items, 5);
+        assert_eq!(t[1].items, 1);
     }
 }

@@ -195,7 +195,12 @@ fn sim_arm(
     let tag = format!("{sname}_{cname}_{fold}");
     let cfg = arm_cfg(&tag, rounds).with_strategy(strategy);
     let opts =
-        TrainOptions { compressor, verbose_every: 0, densify_folds };
+        TrainOptions {
+            compressor,
+            verbose_every: 0,
+            densify_folds,
+            ..TrainOptions::default()
+        };
     let mut engine = build_native_engine(&cfg);
     let b = bench("comm/sim", quick);
     let mut bytes_per_round = 0.0;

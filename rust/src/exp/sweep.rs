@@ -20,11 +20,14 @@
 
 use crate::compress::Compressor;
 use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
-use crate::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
+use crate::coordinator::{
+    CoordStats, Coordinator, CoordinatorOptions, ParallelRunner,
+};
 use crate::fl::availability::{Churn, Diurnal, Outage, Trace};
 use crate::fl::TrainOptions;
 use crate::metrics::{average_runs, RunResult};
 use crate::sim::build_native_engine;
+use crate::telemetry::{TelemetryConfig, TelemetrySummary};
 use crate::util::json::Json;
 
 /// Seed for the trace draw streams of CLI/preset availability arms —
@@ -113,6 +116,9 @@ pub struct SweepSpec {
     pub shards: usize,
     /// Echoed into the JSON so quick smoke outputs are identifiable.
     pub quick: bool,
+    /// Record a [`TelemetrySummary`] per arm (summary-only: no trace
+    /// files, latency rollups attached to each arm's JSON record).
+    pub telemetry: bool,
 }
 
 impl SweepSpec {
@@ -139,6 +145,7 @@ impl SweepSpec {
             budget: 4,
             shards: 4,
             quick: true,
+            telemetry: false,
         }
     }
 
@@ -169,6 +176,7 @@ impl SweepSpec {
             budget: 4,
             shards: 4,
             quick: false,
+            telemetry: false,
         }
     }
 
@@ -197,6 +205,18 @@ pub struct ArmSummary {
     pub mean_transmitted: f64,
     /// Rounds where no client was reachable (availability too hostile).
     pub noop_rounds: usize,
+    /// Shard-rounds lost to correlated trace outages, summed over the
+    /// arm's seeds (from [`CoordStats`]).
+    pub shards_outaged: usize,
+    /// Shard-rounds lost to missed deadlines, summed over seeds.
+    pub shards_dropped: usize,
+    /// Rounds actually driven across all the arm's seed runs
+    /// (`spec.rounds × seeds` unless a run aborted).
+    pub rounds_run: usize,
+    /// Present when the sweep ran with [`SweepSpec::telemetry`]: the
+    /// first seed's latency/counter rollup (distributions don't
+    /// average — see `metrics::average_runs`).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl ArmSummary {
@@ -207,6 +227,7 @@ impl ArmSummary {
         availability: &AvailabilityArm,
         pool: usize,
         seeds: u64,
+        stats: &CoordStats,
     ) -> ArmSummary {
         let n = run.rounds.len().max(1);
         let noop_rounds =
@@ -241,11 +262,15 @@ impl ArmSummary {
             bytes_per_round: run.total_uplink_bytes() as f64 / n as f64,
             mean_transmitted,
             noop_rounds,
+            shards_outaged: stats.shards_outaged,
+            shards_dropped: stats.shards_dropped,
+            rounds_run: stats.rounds_run,
+            telemetry: run.telemetry.clone(),
         }
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("strategy", Json::str(self.strategy.clone())),
             ("compressor", Json::str(self.compressor.clone())),
             ("availability", Json::str(self.availability.clone())),
@@ -262,12 +287,19 @@ impl ArmSummary {
             ("bytes_per_round", Json::num(self.bytes_per_round)),
             ("mean_transmitted", Json::num(self.mean_transmitted)),
             ("noop_rounds", Json::num(self.noop_rounds as f64)),
-        ])
+            ("shards_outaged", Json::num(self.shards_outaged as f64)),
+            ("shards_dropped", Json::num(self.shards_dropped as f64)),
+            ("rounds_run", Json::num(self.rounds_run as f64)),
+        ];
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", t.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.strategy,
             self.compressor,
             self.availability,
@@ -280,7 +312,10 @@ impl ArmSummary {
             self.total_uplink_bytes,
             self.bytes_per_round,
             self.mean_transmitted,
-            self.noop_rounds
+            self.noop_rounds,
+            self.shards_outaged,
+            self.shards_dropped,
+            self.rounds_run
         )
     }
 }
@@ -289,7 +324,8 @@ impl ArmSummary {
 /// EXPERIMENTS.md §Scenarios).
 pub const CSV_HEADER: &str = "strategy,compressor,availability,pool,seeds,\
 rounds,final_train_loss,final_accuracy,mean_alpha,total_uplink_bytes,\
-bytes_per_round,mean_transmitted,noop_rounds";
+bytes_per_round,mean_transmitted,noop_rounds,shards_outaged,\
+shards_dropped,rounds_run";
 
 /// A completed grid.
 #[derive(Clone, Debug)]
@@ -393,7 +429,16 @@ pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String>
                         availability,
                         *pool,
                     );
+                    let train_opts = TrainOptions {
+                        telemetry: if spec.telemetry {
+                            TelemetryConfig::summary_only()
+                        } else {
+                            TelemetryConfig::off()
+                        },
+                        ..TrainOptions::default()
+                    };
                     let mut runs = Vec::with_capacity(spec.seeds as usize);
+                    let mut stats = CoordStats::default();
                     for s in 0..spec.seeds.max(1) {
                         let mut c = cfg.clone();
                         c.seed = spec.base_seed + s;
@@ -407,8 +452,14 @@ pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String>
                         runs.push(coordinator.run(
                             &c,
                             &mut runner,
-                            &TrainOptions::default(),
+                            &train_opts,
                         )?);
+                        stats.shards_dropped +=
+                            coordinator.stats.shards_dropped;
+                        stats.shards_outaged +=
+                            coordinator.stats.shards_outaged;
+                        stats.noop_rounds += coordinator.stats.noop_rounds;
+                        stats.rounds_run += coordinator.stats.rounds_run;
                     }
                     let avg = average_runs(&runs);
                     let summary = ArmSummary::from_run(
@@ -418,6 +469,7 @@ pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String>
                         availability,
                         *pool,
                         spec.seeds.max(1),
+                        &stats,
                     );
                     if verbose {
                         println!(
@@ -528,18 +580,126 @@ mod tests {
             budget: 2,
             shards: 3,
             quick: true,
+            telemetry: false,
         };
         let report = run_sweep(&spec, false).unwrap();
         assert_eq!(report.arms.len(), 2);
         let csv = report.to_csv();
         assert!(csv.starts_with(CSV_HEADER));
         assert_eq!(csv.lines().count(), 3);
+        // header and every row agree on the column count
+        let cols = CSV_HEADER.split(',').count();
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
         let j = report.to_json();
         assert_eq!(j.get("bench").as_str(), Some("sweep"));
         assert_eq!(j.get("arms").as_arr().unwrap().len(), 2);
         for arm in &report.arms {
             assert!(arm.total_uplink_bytes > 0, "{arm:?}");
             assert_eq!(arm.rounds, 3);
+            // telemetry off: no rollup attached, and stats still flow
+            assert!(arm.telemetry.is_none());
+            assert_eq!(arm.rounds_run, 3);
+            assert_eq!(
+                arm.to_json().get("telemetry"),
+                &crate::util::json::Json::Null
+            );
         }
+    }
+
+    /// Satellite pin: an `outage` arm must surface its shard-outage
+    /// count in the arm record (CoordStats flows through to CSV/JSON).
+    #[test]
+    fn outage_arm_reports_coordinator_stats() {
+        let spec = SweepSpec {
+            strategies: vec![Strategy::Uniform],
+            compressors: vec![Compressor::None],
+            availabilities: vec![
+                AvailabilityArm::always_on(),
+                parse_availability_arm("outage0.5").unwrap(),
+            ],
+            pools: vec![24],
+            seeds: 2,
+            base_seed: 1,
+            rounds: 8,
+            cohort: 8,
+            budget: 2,
+            shards: 4,
+            quick: true,
+            telemetry: false,
+        };
+        let report = run_sweep(&spec, false).unwrap();
+        assert_eq!(report.arms.len(), 2);
+        let always = &report.arms[0];
+        let outage = &report.arms[1];
+        assert_eq!(always.availability, "alwayson");
+        assert_eq!(always.shards_outaged, 0);
+        assert_eq!(outage.availability, "outage0.5");
+        // p=0.5 over 4 shards × 8 rounds × 2 seeds: astronomically
+        // unlikely to dodge every outage draw (trace seed is pinned)
+        assert!(outage.shards_outaged > 0, "{outage:?}");
+        // the sweep runs no deadline policy: outages must not leak into
+        // the deadline-drop column
+        assert_eq!(outage.shards_dropped, 0);
+        for arm in &report.arms {
+            assert_eq!(arm.rounds_run, 8 * 2);
+            let j = arm.to_json();
+            assert_eq!(
+                j.get("shards_outaged").as_usize(),
+                Some(arm.shards_outaged)
+            );
+            assert_eq!(j.get("rounds_run").as_usize(), Some(16));
+        }
+        let header_cols = CSV_HEADER.split(',').count();
+        for line in report.to_csv().lines() {
+            assert_eq!(line.split(',').count(), header_cols);
+        }
+    }
+
+    /// `telemetry: true` attaches a per-arm summary with all six phase
+    /// spans and a consistent round count.
+    #[test]
+    fn telemetry_sweep_attaches_arm_summaries() {
+        let mut spec = SweepSpec {
+            strategies: vec![Strategy::Uniform],
+            compressors: vec![Compressor::None],
+            availabilities: vec![AvailabilityArm::always_on()],
+            pools: vec![24],
+            seeds: 1,
+            base_seed: 5,
+            rounds: 3,
+            cohort: 8,
+            budget: 2,
+            shards: 2,
+            quick: true,
+            telemetry: true,
+        };
+        let report = run_sweep(&spec, false).unwrap();
+        let tel = report.arms[0]
+            .telemetry
+            .as_ref()
+            .expect("telemetry sweep must attach a summary");
+        assert_eq!(tel.rounds, 3);
+        for name in crate::telemetry::PHASE_NAMES {
+            let s = tel.phase(name).unwrap_or_else(|| {
+                panic!("missing phase rollup for {name}")
+            });
+            assert_eq!(s.n, 3, "{name}");
+        }
+        assert!(tel.counter("clients_transmitted") > 0);
+        let j = report.arms[0].to_json();
+        assert_eq!(j.get("telemetry").get("rounds").as_usize(), Some(3));
+        // same grid with telemetry off: identical trajectory
+        spec.telemetry = false;
+        let off = run_sweep(&spec, false).unwrap();
+        assert_eq!(
+            off.arms[0].final_train_loss,
+            report.arms[0].final_train_loss
+        );
+        assert_eq!(
+            off.arms[0].total_uplink_bytes,
+            report.arms[0].total_uplink_bytes
+        );
     }
 }

@@ -21,6 +21,7 @@ use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, CoordinatorOptions, EngineRunner};
 use crate::metrics::RunResult;
+use crate::telemetry::TelemetryConfig;
 
 /// Result of one client's local work in a round.
 #[derive(Clone, Debug)]
@@ -78,6 +79,10 @@ pub struct TrainOptions {
     /// scatter kernels. Bit-identical by contract (the end-to-end
     /// exactness tests pin it); the baseline arm of `fedsamp bench comm`.
     pub densify_folds: bool,
+    /// Observability configuration (see [`crate::telemetry`]). Default
+    /// off: no clocks read, no events recorded, trajectories bit-
+    /// identical to a build without the subsystem in the call path.
+    pub telemetry: TelemetryConfig,
 }
 
 /// Run a full federated training experiment.

@@ -32,6 +32,10 @@
 //!   ({strategy × compressor × availability × pool} with multi-seed
 //!   averaging → `BENCH_sweep.{json,csv}`).
 //! * [`secure_agg`] — pairwise-mask additive secure aggregation.
+//! * [`telemetry`] — opt-in observability: round-phase spans, per-worker
+//!   job timing histograms (p50/p90/p99), per-round counters, and JSONL +
+//!   Chrome `trace_event` export; off by default and bitwise-free when
+//!   off.
 //! * [`data`] — synthetic federated datasets (FEMNIST-like, Shakespeare-
 //!   like, CIFAR-like) incl. the paper's (s,a,b) unbalancing procedure.
 //! * [`sim`] — pure-rust FL simulator over [`model`] (logistic/quadratic)
@@ -66,6 +70,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod secure_agg;
 pub mod sim;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 pub mod wire;

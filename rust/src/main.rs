@@ -23,7 +23,8 @@ use fedsamp::runtime::manifest::load_manifests;
 use fedsamp::sampling::Sampler;
 use fedsamp::sim::build_native_engine;
 use fedsamp::sim::theory::{max_stable_eta, run_dsgd_quadratic};
-use fedsamp::util::args::Cli;
+use fedsamp::telemetry::TelemetryConfig;
+use fedsamp::util::args::{Cli, Parsed};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -91,7 +92,51 @@ fn print_run_summary(run: &RunResult) {
     );
 }
 
-fn parse_or_exit(cli: &Cli, args: &[String]) -> fedsamp::util::args::Parsed {
+/// The shared telemetry CLI surface (`train` and `coordinate`):
+/// `--telemetry` enables recording, `--telemetry-out`/`--trace-out` pick
+/// the export paths (either implies `--telemetry`). Enabled without an
+/// explicit `--telemetry-out` defaults the event stream to
+/// `telemetry.jsonl` in the working directory.
+fn telemetry_cli(cli: Cli) -> Cli {
+    cli.flag(
+        "telemetry",
+        "record round-phase spans, shard timing histograms and counters",
+    )
+    .opt(
+        "telemetry-out",
+        None,
+        "telemetry JSONL event stream path (implies --telemetry; \
+         default telemetry.jsonl when enabled)",
+    )
+    .opt(
+        "trace-out",
+        None,
+        "Chrome trace_event JSON path, loadable in Perfetto/about:tracing \
+         (implies --telemetry)",
+    )
+}
+
+fn telemetry_from_cli(p: &Parsed) -> TelemetryConfig {
+    let jsonl = p.get("telemetry-out").map(String::from);
+    let trace = p.get("trace-out").map(String::from);
+    if !p.flag("telemetry") && jsonl.is_none() && trace.is_none() {
+        return TelemetryConfig::off();
+    }
+    TelemetryConfig {
+        enabled: true,
+        jsonl_out: Some(jsonl.unwrap_or_else(|| "telemetry.jsonl".into())),
+        trace_out: trace,
+        manual_clock: false,
+    }
+}
+
+fn print_telemetry_summary(run: &RunResult) {
+    if let Some(t) = &run.telemetry {
+        println!("telemetry: {}", t.one_line());
+    }
+}
+
+fn parse_or_exit(cli: &Cli, args: &[String]) -> Parsed {
     if args.iter().any(|a| a == "--help" || a == "-h") {
         println!("{}", cli.usage());
         std::process::exit(0);
@@ -125,6 +170,7 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("out", None, "directory for JSON/CSV results")
         .opt("artifacts", None, "artifacts directory")
         .flag("verbose", "print per-round progress");
+    let cli = telemetry_cli(cli);
     let p = parse_or_exit(&cli, args);
 
     let mut cfg: ExperimentConfig = if let Some(path) = p.get("config") {
@@ -179,6 +225,7 @@ fn cmd_train(args: &[String]) -> i32 {
         .get("artifacts")
         .map(String::from)
         .unwrap_or_else(default_artifacts_dir);
+    let telemetry = telemetry_from_cli(&p);
     let opts = TrainOptions {
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
         ..TrainOptions::default()
@@ -189,7 +236,15 @@ fn cmd_train(args: &[String]) -> i32 {
     for s in 0..seeds {
         let mut c = cfg.clone();
         c.seed = cfg.seed + s;
-        match run_experiment(&c, &artifacts, &opts) {
+        let mut o = opts.clone();
+        // multi-seed runs get per-seed export paths so seed k's stream
+        // does not clobber seed k-1's
+        o.telemetry = if seeds > 1 {
+            telemetry.with_seed_suffix(c.seed)
+        } else {
+            telemetry.clone()
+        };
+        match run_experiment(&c, &artifacts, &o) {
             Ok(r) => runs.push(r),
             Err(e) => {
                 eprintln!("run failed: {e}");
@@ -199,6 +254,7 @@ fn cmd_train(args: &[String]) -> i32 {
     }
     let avg = fedsamp::metrics::average_runs(&runs);
     print_run_summary(&avg);
+    print_telemetry_summary(&avg);
     if let Some(out) = p.get("out") {
         match avg.save(out) {
             Ok(path) => println!("saved {path}"),
@@ -232,6 +288,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
          the worker pool) instead of centrally",
     )
     .flag("verbose", "print per-round progress");
+    let cli = telemetry_cli(cli);
     let p = parse_or_exit(&cli, args);
 
     let mut cfg = match preset_by_name(&p.str("preset")) {
@@ -285,6 +342,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
     });
     let opts = TrainOptions {
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
+        telemetry: telemetry_from_cli(&p),
         ..TrainOptions::default()
     };
     println!(
@@ -300,6 +358,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
     match coordinator.run(&cfg, &mut runner, &opts) {
         Ok(run) => {
             print_run_summary(&run);
+            print_telemetry_summary(&run);
             println!(
                 "coordinator stats: {} shard-rounds dropped, {} outaged, \
                  {} no-op rounds",
@@ -389,6 +448,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
     .opt("grid-rounds", Some("30"), "grid: rounds per run")
     .opt("out", Some("."), "grid: directory for BENCH_sweep.{json,csv}")
     .flag("quick", "grid: tiny CI smoke grid (overrides the axis flags)")
+    .flag(
+        "telemetry",
+        "grid: attach a per-arm telemetry summary (phase latencies, \
+         counters) to every BENCH_sweep.json arm record",
+    )
     .flag("verbose", "grid: print one line per arm")
     .opt("n", Some("32"), "theory: number of clients")
     .opt("dim", Some("32"), "theory: problem dimension")
@@ -402,7 +466,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
         use fedsamp::exp::sweep::{
             parse_availability_arm, run_sweep, SweepSpec,
         };
-        let spec = if p.flag("quick") {
+        let mut spec = if p.flag("quick") {
             SweepSpec::quick()
         } else {
             let mut strategies = Vec::new();
@@ -449,6 +513,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
             spec.rounds = p.usize("grid-rounds");
             spec
         };
+        spec.telemetry = p.flag("telemetry");
         if spec.arm_count() == 0 {
             eprintln!("empty sweep grid");
             return 2;

@@ -3,6 +3,7 @@
 
 use std::fmt::Write as _;
 
+use crate::telemetry::TelemetrySummary;
 use crate::util::json::Json;
 
 /// One communication round's observables.
@@ -37,11 +38,19 @@ pub struct RunResult {
     pub name: String,
     pub strategy: String,
     pub rounds: Vec<RoundRecord>,
+    /// Telemetry rollup when the run recorded with telemetry enabled
+    /// (`None` otherwise — the common case).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl RunResult {
     pub fn new(name: &str, strategy: &str) -> Self {
-        RunResult { name: name.into(), strategy: strategy.into(), rounds: vec![] }
+        RunResult {
+            name: name.into(),
+            strategy: strategy.into(),
+            rounds: vec![],
+            telemetry: None,
+        }
     }
 
     pub fn push(&mut self, rec: RoundRecord) {
@@ -159,12 +168,16 @@ impl RunResult {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(self.name.clone())),
             ("strategy", Json::str(self.strategy.clone())),
-            (
-                "rounds",
-                Json::Arr(
+        ];
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", t.to_json()));
+        }
+        pairs.push((
+            "rounds",
+            Json::Arr(
                     self.rounds
                         .iter()
                         .map(|r| {
@@ -184,9 +197,9 @@ impl RunResult {
                             ])
                         })
                         .collect(),
-                ),
             ),
-        ])
+        ));
+        Json::obj(pairs)
     }
 
     pub fn save(&self, dir: &str) -> std::io::Result<String> {
@@ -207,6 +220,9 @@ pub fn average_runs(runs: &[RunResult]) -> RunResult {
         "seed runs must align"
     );
     let mut out = RunResult::new(&runs[0].name, &runs[0].strategy);
+    // telemetry isn't averaged across seeds (latency distributions don't
+    // combine meaningfully pointwise); keep the first seed's rollup
+    out.telemetry = runs[0].telemetry.clone();
     for i in 0..n {
         let k = runs.len() as f64;
         let get = |f: &dyn Fn(&RoundRecord) -> f64| -> f64 {
@@ -236,9 +252,12 @@ pub fn average_runs(runs: &[RunResult]) -> RunResult {
                 .map(|r| r.rounds[i].uplink_bytes)
                 .sum::<u64>() as f64
                 / k) as u64,
+            // round to nearest, not floor: seeds transmitting {1, 2}
+            // average to 2, matching how the mean reads off a plot
             transmitted: (runs.iter().map(|r| r.rounds[i].transmitted).sum::<usize>()
                 as f64
-                / k) as usize,
+                / k)
+                .round() as usize,
             expected_budget: get(&|r| r.expected_budget),
             alpha: get(&|r| r.alpha),
             gamma: get(&|r| r.gamma),
@@ -351,6 +370,61 @@ mod tests {
             avg.rounds[0].uplink_bytes * 8
         );
         assert_eq!(avg.rounds[0].uplink_bytes, 9); // floor(19/2)
+    }
+
+    #[test]
+    fn averaging_rounds_transmitted_to_nearest() {
+        // regression: floor-division used to turn seeds transmitting
+        // {1, 2} into an average of 1; round-to-nearest reports 2
+        let mk = |transmitted: usize| {
+            let mut r = RunResult::new("t", "ocs");
+            r.push(RoundRecord {
+                round: 0,
+                train_loss: 1.0,
+                val_accuracy: 0.5,
+                uplink_bits: 80,
+                uplink_bytes: 10,
+                transmitted,
+                expected_budget: 1.5,
+                alpha: 0.5,
+                gamma: 0.6,
+            });
+            r
+        };
+        let avg = average_runs(&[mk(1), mk(2)]);
+        assert_eq!(avg.rounds[0].transmitted, 2, "1.5 rounds to 2");
+        let avg = average_runs(&[mk(1), mk(1), mk(2)]);
+        assert_eq!(avg.rounds[0].transmitted, 1, "4/3 rounds to 1");
+        let avg = average_runs(&[mk(3), mk(3)]);
+        assert_eq!(avg.rounds[0].transmitted, 3, "exact mean unchanged");
+    }
+
+    #[test]
+    fn json_carries_telemetry_only_when_present() {
+        let mut r = RunResult::new("t", "ocs");
+        r.push(rec(0, 2.0, 0.1, 80));
+        assert_eq!(r.to_json().get("telemetry"), &Json::Null);
+        r.telemetry = Some(TelemetrySummary {
+            rounds: 1,
+            phases: vec![],
+            job_exec: vec![],
+            job_queue: vec![],
+            job_items: vec![],
+            payload_bytes: crate::util::stats::LogSummary::empty(),
+            counters: vec![("clients_transmitted", 7)],
+        });
+        let j = r.to_json();
+        assert_eq!(
+            j.get("telemetry").get("rounds").as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("telemetry")
+                .get("counters")
+                .get("clients_transmitted")
+                .as_f64(),
+            Some(7.0)
+        );
     }
 
     #[test]

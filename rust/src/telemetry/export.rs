@@ -1,0 +1,167 @@
+//! Telemetry exporters: newline-delimited JSON event log and Chrome
+//! `trace_event` JSON (loadable in `chrome://tracing` / Perfetto).
+//!
+//! Both writers format into a reusable `String` line buffer and append
+//! to a `BufWriter`, so steady-state export does no per-event heap
+//! allocation. Write errors after a successful create are recorded once
+//! and silence the writer — telemetry must never abort a training run.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::JobTiming;
+
+fn create_file(path: &str) -> Result<BufWriter<File>, String> {
+    if let Some(dir) = Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("telemetry: mkdir {}: {e}", dir.display()))?;
+        }
+    }
+    let f = File::create(path).map_err(|e| format!("telemetry: create {path}: {e}"))?;
+    Ok(BufWriter::new(f))
+}
+
+/// One JSON object per line; schema documented in DESIGN.md §9.
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+    line: String,
+    ok: bool,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &str) -> Result<JsonlWriter, String> {
+        Ok(JsonlWriter { w: create_file(path)?, line: String::new(), ok: true })
+    }
+
+    pub fn span(&mut self, name: &str, end: bool, round: usize, t_ns: u64, dur_ns: u64) {
+        self.line.clear();
+        let ev = if end { "span_end" } else { "span_begin" };
+        let _ = write!(
+            self.line,
+            "{{\"ev\":\"{ev}\",\"name\":\"{name}\",\"round\":{round},\"t_ns\":{t_ns}"
+        );
+        if end {
+            let _ = write!(self.line, ",\"dur_ns\":{dur_ns}");
+        }
+        self.line.push('}');
+        self.emit();
+    }
+
+    pub fn counter(&mut self, name: &str, round: usize, value: u64) {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            "{{\"ev\":\"counter\",\"name\":\"{name}\",\"round\":{round},\"value\":{value}}}"
+        );
+        self.emit();
+    }
+
+    pub fn job(&mut self, round: usize, t: &JobTiming) {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            "{{\"ev\":\"job\",\"kind\":\"{}\",\"round\":{round},\"worker\":{},\
+             \"start_ns\":{},\"queue_ns\":{},\"exec_ns\":{},\"items\":{}}}",
+            t.kind.name(),
+            t.worker,
+            t.start_ns,
+            t.queue_ns,
+            t.exec_ns,
+            t.items
+        );
+        self.emit();
+    }
+
+    pub fn finish(mut self, rounds: usize) {
+        self.line.clear();
+        let _ = write!(self.line, "{{\"ev\":\"run_end\",\"rounds\":{rounds}}}");
+        self.emit();
+        if self.ok {
+            let _ = self.w.flush();
+        }
+    }
+
+    fn emit(&mut self) {
+        if !self.ok {
+            return;
+        }
+        self.line.push('\n');
+        if self.w.write_all(self.line.as_bytes()).is_err() {
+            self.ok = false;
+            eprintln!("telemetry: jsonl write failed; disabling event log");
+        }
+    }
+}
+
+/// Chrome `trace_event` JSON: `{"traceEvents":[...]}` with B/E duration
+/// events for round phases (tid 0 = coordinator master) and X complete
+/// events for pool jobs (tid = worker + 1). Timestamps are microseconds
+/// with sub-µs precision as Chrome expects.
+pub struct TraceWriter {
+    w: BufWriter<File>,
+    line: String,
+    first: bool,
+    ok: bool,
+}
+
+impl TraceWriter {
+    pub fn create(path: &str) -> Result<TraceWriter, String> {
+        let mut w = create_file(path)?;
+        let ok = w.write_all(b"{\"traceEvents\":[").is_ok();
+        Ok(TraceWriter { w, line: String::new(), first: true, ok })
+    }
+
+    pub fn phase(&mut self, name: &str, end: bool, round: usize, t_ns: u64) {
+        self.line.clear();
+        let ph = if end { "E" } else { "B" };
+        let _ = write!(
+            self.line,
+            "{{\"name\":\"{name}\",\"cat\":\"round\",\"ph\":\"{ph}\",\"pid\":1,\"tid\":0,\
+             \"ts\":{:.3},\"args\":{{\"round\":{round}}}}}",
+            t_ns as f64 / 1_000.0
+        );
+        self.emit();
+    }
+
+    pub fn job(&mut self, round: usize, t: &JobTiming) {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            "{{\"name\":\"{}\",\"cat\":\"job\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{:.3},\"dur\":{:.3},\
+             \"args\":{{\"round\":{round},\"queue_ns\":{},\"items\":{}}}}}",
+            t.kind.name(),
+            t.worker + 1,
+            t.start_ns as f64 / 1_000.0,
+            t.exec_ns as f64 / 1_000.0,
+            t.queue_ns,
+            t.items
+        );
+        self.emit();
+    }
+
+    pub fn finish(mut self) {
+        if self.ok {
+            let _ = self.w.write_all(b"]}");
+            let _ = self.w.flush();
+        }
+    }
+
+    fn emit(&mut self) {
+        if !self.ok {
+            return;
+        }
+        if self.first {
+            self.first = false;
+        } else {
+            self.line.insert(0, ',');
+        }
+        if self.w.write_all(self.line.as_bytes()).is_err() {
+            self.ok = false;
+            eprintln!("telemetry: trace write failed; disabling trace export");
+        }
+    }
+}

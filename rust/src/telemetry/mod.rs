@@ -1,0 +1,622 @@
+//! Opt-in runtime telemetry: round-phase spans, shard/worker job timing
+//! histograms, per-round counters, and machine-readable trace export.
+//!
+//! Design contract (DESIGN.md §9):
+//!
+//! * **Off by default, bitwise-free when off.** [`TelemetryConfig`]
+//!   defaults to disabled; a disabled [`Telemetry`] never reads the
+//!   clock, never allocates, and never touches an RNG stream, so
+//!   trajectories are bit-identical with or without the subsystem
+//!   compiled in the call path.
+//! * **Allocation-light when on.** Events are fixed-size `Copy` values
+//!   pushed into a preallocated ring that is drained to the exporters at
+//!   each Commit (or when full); histograms are fixed 65-bucket
+//!   [`LogHistogram`]s; counter names are `&'static str`.
+//! * **Never aborts a run.** Export I/O errors disable the writer and
+//!   warn once; recording continues into the in-memory summary.
+//!
+//! The recorder is fed by [`crate::coordinator::RoundMachine`] (phase
+//! spans + counters) and by [`crate::coordinator::LocalRunner`]
+//! implementations (per-job [`JobTiming`]s measured inside the
+//! `ShardPool` workers), and folds everything into a
+//! [`TelemetrySummary`] merged into run JSON and sweep arm records.
+
+pub mod clock;
+pub mod export;
+
+pub use clock::{Clock, ManualClock, MonoClock};
+
+use std::sync::Arc;
+
+use crate::util::json::Json;
+use crate::util::stats::{LogHistogram, LogSummary};
+use crate::wire::Payload;
+use export::{JsonlWriter, TraceWriter};
+
+/// The six phases of one federated round, in protocol order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseSpan {
+    Announce = 0,
+    LocalCompute = 1,
+    NormReport = 2,
+    Negotiate = 3,
+    SecureAggregate = 4,
+    Commit = 5,
+}
+
+pub const PHASE_NAMES: [&str; 6] =
+    ["announce", "local_compute", "norm_report", "negotiate", "secure_aggregate", "commit"];
+
+impl PhaseSpan {
+    pub fn name(self) -> &'static str {
+        PHASE_NAMES[self as usize]
+    }
+}
+
+/// Worker-pool job kinds timed inside `ShardPool` (and on the inline
+/// single-worker paths).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// One client's local epochs (LocalCompute phase).
+    Local = 0,
+    /// Fused encode+scale+mask partial for one pairwise-mask group.
+    MaskFold = 1,
+    /// Masked scalar partial for one group (AOCS negotiation).
+    ScalarFold = 2,
+}
+
+pub const JOB_KIND_NAMES: [&str; 3] = ["local", "mask_fold", "scalar_fold"];
+
+impl JobKind {
+    pub fn name(self) -> &'static str {
+        JOB_KIND_NAMES[self as usize]
+    }
+}
+
+/// One measured job: when it started, how long it waited in the queue,
+/// how long it executed, which worker ran it, and its work size (clients
+/// for `Local`, group members for folds).
+#[derive(Clone, Copy, Debug)]
+pub struct JobTiming {
+    pub kind: JobKind,
+    pub worker: usize,
+    pub start_ns: u64,
+    pub queue_ns: u64,
+    pub exec_ns: u64,
+    pub items: u64,
+}
+
+/// Per-round counters the round machine decides but (pre-telemetry)
+/// never reported. Values accumulate within a round and are emitted +
+/// rolled into run totals at Commit.
+#[derive(Clone, Copy, Debug)]
+pub enum Counter {
+    /// Cohort size drawn from availability, before deadline drops.
+    ClientsAnnounced = 0,
+    /// Cohort members dropped by the per-shard deadline model.
+    ClientsDeadlineDropped = 1,
+    /// Clients with `selected[i] = 1` after the sampling draw.
+    ClientsSelected = 2,
+    /// Clients that actually uploaded a payload.
+    ClientsTransmitted = 3,
+    /// Shards offline for the whole round (pre-selection outage).
+    ShardsOutaged = 4,
+    /// Shards that missed the reporting deadline (post-selection drop).
+    ShardsDeadlineDropped = 5,
+    /// Negotiation round trips this round (0 = fixed-probability).
+    NegotiationRounds = 6,
+    /// Extra uplink floats across the cohort spent on negotiation.
+    NegotiationUplinkFloats = 7,
+    PayloadsDense = 8,
+    PayloadsSparse = 9,
+    PayloadsQuantized = 10,
+    PayloadBytesDense = 11,
+    PayloadBytesSparse = 12,
+    PayloadBytesQuantized = 13,
+}
+
+pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
+    "clients_announced",
+    "clients_deadline_dropped",
+    "clients_selected",
+    "clients_transmitted",
+    "shards_outaged",
+    "shards_deadline_dropped",
+    "negotiation_rounds",
+    "negotiation_uplink_floats",
+    "payloads_dense",
+    "payloads_sparse",
+    "payloads_quantized",
+    "payload_bytes_dense",
+    "payload_bytes_sparse",
+    "payload_bytes_quantized",
+];
+
+const NUM_COUNTERS: usize = 14;
+
+/// Event ring capacity; full ring forces an early drain to the writers.
+const RING_CAPACITY: usize = 8192;
+
+/// Configuration for one run's telemetry. Default = fully disabled.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryConfig {
+    pub enabled: bool,
+    /// Per-run JSONL event log path (`None` = summary only).
+    pub jsonl_out: Option<String>,
+    /// Chrome `trace_event` JSON path (`None` = no trace export).
+    pub trace_out: Option<String>,
+    /// Use the deterministic auto-ticking [`ManualClock`] (1 µs/read)
+    /// instead of the wall monotonic clock; for reproducible traces in
+    /// tests.
+    pub manual_clock: bool,
+}
+
+impl TelemetryConfig {
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig::default()
+    }
+
+    /// Enabled, in-memory summary only — no file exports.
+    pub fn summary_only() -> TelemetryConfig {
+        TelemetryConfig { enabled: true, ..TelemetryConfig::default() }
+    }
+
+    /// Rewrite output paths with a `.seed<k>` suffix so multi-seed runs
+    /// don't clobber each other's logs.
+    pub fn with_seed_suffix(&self, seed: u64) -> TelemetryConfig {
+        let tag = |p: &Option<String>| p.as_ref().map(|p| format!("{p}.seed{seed}"));
+        TelemetryConfig {
+            enabled: self.enabled,
+            jsonl_out: tag(&self.jsonl_out),
+            trace_out: tag(&self.trace_out),
+            manual_clock: self.manual_clock,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    Begin { phase: usize, round: usize, t_ns: u64 },
+    End { phase: usize, round: usize, t_ns: u64, dur_ns: u64 },
+    Count { id: usize, round: usize, value: u64 },
+    Job { round: usize, timing: JobTiming },
+}
+
+/// The per-run recorder. Construct with [`Telemetry::from_config`];
+/// every recording method is a no-op when disabled.
+pub struct Telemetry {
+    enabled: bool,
+    clock: Arc<dyn Clock>,
+    events: Vec<Event>,
+    jsonl: Option<JsonlWriter>,
+    trace: Option<TraceWriter>,
+    span_t0: [u64; 6],
+    phase_hist: Vec<LogHistogram>,
+    exec_hist: Vec<LogHistogram>,
+    queue_hist: Vec<LogHistogram>,
+    items_hist: Vec<LogHistogram>,
+    payload_hist: LogHistogram,
+    round_counters: [u64; NUM_COUNTERS],
+    total_counters: [u64; NUM_COUNTERS],
+    rounds_flushed: usize,
+    timing_scratch: Vec<JobTiming>,
+}
+
+impl Telemetry {
+    /// A recorder that records nothing; for tests and telemetry-off
+    /// call paths. Performs no allocation.
+    pub fn disabled() -> Telemetry {
+        Telemetry {
+            enabled: false,
+            clock: Arc::new(ManualClock::new(0)),
+            events: Vec::new(),
+            jsonl: None,
+            trace: None,
+            span_t0: [0; 6],
+            phase_hist: Vec::new(),
+            exec_hist: Vec::new(),
+            queue_hist: Vec::new(),
+            items_hist: Vec::new(),
+            payload_hist: LogHistogram::new(),
+            round_counters: [0; NUM_COUNTERS],
+            total_counters: [0; NUM_COUNTERS],
+            rounds_flushed: 0,
+            timing_scratch: Vec::new(),
+        }
+    }
+
+    /// Build a recorder from config; opens export files eagerly so path
+    /// errors surface before the run starts.
+    pub fn from_config(cfg: &TelemetryConfig) -> Result<Telemetry, String> {
+        if !cfg.enabled {
+            return Ok(Telemetry::disabled());
+        }
+        let clock: Arc<dyn Clock> = if cfg.manual_clock {
+            Arc::new(ManualClock::new(1_000))
+        } else {
+            Arc::new(MonoClock::new())
+        };
+        let jsonl = match &cfg.jsonl_out {
+            Some(p) => Some(JsonlWriter::create(p)?),
+            None => None,
+        };
+        let trace = match &cfg.trace_out {
+            Some(p) => Some(TraceWriter::create(p)?),
+            None => None,
+        };
+        Ok(Telemetry {
+            enabled: true,
+            clock,
+            events: Vec::with_capacity(RING_CAPACITY),
+            jsonl,
+            trace,
+            span_t0: [0; 6],
+            phase_hist: (0..6).map(|_| LogHistogram::new()).collect(),
+            exec_hist: (0..3).map(|_| LogHistogram::new()).collect(),
+            queue_hist: (0..3).map(|_| LogHistogram::new()).collect(),
+            items_hist: (0..3).map(|_| LogHistogram::new()).collect(),
+            payload_hist: LogHistogram::new(),
+            round_counters: [0; NUM_COUNTERS],
+            total_counters: [0; NUM_COUNTERS],
+            rounds_flushed: 0,
+            timing_scratch: Vec::with_capacity(256),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The clock to install into runners via `LocalRunner::set_clock`.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.clock)
+    }
+
+    pub fn span_begin(&mut self, round: usize, phase: PhaseSpan) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_ns();
+        self.span_t0[phase as usize] = t;
+        self.push(Event::Begin { phase: phase as usize, round, t_ns: t });
+    }
+
+    pub fn span_end(&mut self, round: usize, phase: PhaseSpan) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_ns();
+        let dur = t.saturating_sub(self.span_t0[phase as usize]);
+        self.phase_hist[phase as usize].record(dur);
+        self.push(Event::End { phase: phase as usize, round, t_ns: t, dur_ns: dur });
+    }
+
+    /// Accumulate `v` into a per-round counter.
+    pub fn add(&mut self, c: Counter, v: u64) {
+        if self.enabled {
+            self.round_counters[c as usize] += v;
+        }
+    }
+
+    /// Record one uploaded payload: size histogram + per-variant
+    /// count/byte counters.
+    pub fn payload(&mut self, p: &Payload) {
+        if !self.enabled {
+            return;
+        }
+        let bytes = p.wire_bytes() as u64;
+        self.payload_hist.record(bytes);
+        let (count, total) = match p {
+            Payload::Dense(_) => (Counter::PayloadsDense, Counter::PayloadBytesDense),
+            Payload::SparseK { .. } => (Counter::PayloadsSparse, Counter::PayloadBytesSparse),
+            Payload::Quantized { .. } => {
+                (Counter::PayloadsQuantized, Counter::PayloadBytesQuantized)
+            }
+        };
+        self.add(count, 1);
+        self.add(total, bytes);
+    }
+
+    /// Drain job timings out of a runner (via `drain`, which appends
+    /// into the provided buffer) and fold them into histograms and the
+    /// event ring. The buffer is reused across calls.
+    pub fn collect_jobs(&mut self, round: usize, drain: &mut dyn FnMut(&mut Vec<JobTiming>)) {
+        if !self.enabled {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.timing_scratch);
+        buf.clear();
+        drain(&mut buf);
+        for t in &buf {
+            self.exec_hist[t.kind as usize].record(t.exec_ns);
+            self.queue_hist[t.kind as usize].record(t.queue_ns);
+            self.items_hist[t.kind as usize].record(t.items);
+            self.push(Event::Job { round, timing: *t });
+        }
+        self.timing_scratch = buf;
+    }
+
+    /// End-of-round flush: emit counter events, roll round counters into
+    /// run totals, and drain the event ring to the exporters.
+    pub fn flush_round(&mut self, round: usize) {
+        if !self.enabled {
+            return;
+        }
+        for id in 0..NUM_COUNTERS {
+            let value = self.round_counters[id];
+            if value > 0 {
+                self.push(Event::Count { id, round, value });
+            }
+            self.total_counters[id] += value;
+            self.round_counters[id] = 0;
+        }
+        self.rounds_flushed += 1;
+        self.drain_events();
+    }
+
+    /// Finalize: drain remaining events, close export files, and return
+    /// the in-memory summary. `None` when disabled.
+    pub fn finish(mut self) -> Option<TelemetrySummary> {
+        if !self.enabled {
+            return None;
+        }
+        self.drain_events();
+        if let Some(w) = self.jsonl.take() {
+            w.finish(self.rounds_flushed);
+        }
+        if let Some(w) = self.trace.take() {
+            w.finish();
+        }
+        let zip = |hists: &[LogHistogram], names: &[&'static str]| {
+            hists
+                .iter()
+                .zip(names.iter())
+                .map(|(h, &n)| (n, h.summary()))
+                .collect::<Vec<_>>()
+        };
+        Some(TelemetrySummary {
+            rounds: self.rounds_flushed,
+            phases: zip(&self.phase_hist, &PHASE_NAMES),
+            job_exec: zip(&self.exec_hist, &JOB_KIND_NAMES),
+            job_queue: zip(&self.queue_hist, &JOB_KIND_NAMES),
+            job_items: zip(&self.items_hist, &JOB_KIND_NAMES),
+            payload_bytes: self.payload_hist.summary(),
+            counters: COUNTER_NAMES
+                .iter()
+                .zip(self.total_counters.iter())
+                .map(|(&n, &v)| (n, v))
+                .collect(),
+        })
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.events.len() == RING_CAPACITY {
+            self.drain_events();
+        }
+        self.events.push(e);
+    }
+
+    fn drain_events(&mut self) {
+        if self.jsonl.is_none() && self.trace.is_none() {
+            self.events.clear();
+            return;
+        }
+        for i in 0..self.events.len() {
+            let e = self.events[i];
+            match e {
+                Event::Begin { phase, round, t_ns } => {
+                    let name = PHASE_NAMES[phase];
+                    if let Some(w) = &mut self.jsonl {
+                        w.span(name, false, round, t_ns, 0);
+                    }
+                    if let Some(w) = &mut self.trace {
+                        w.phase(name, false, round, t_ns);
+                    }
+                }
+                Event::End { phase, round, t_ns, dur_ns } => {
+                    let name = PHASE_NAMES[phase];
+                    if let Some(w) = &mut self.jsonl {
+                        w.span(name, true, round, t_ns, dur_ns);
+                    }
+                    if let Some(w) = &mut self.trace {
+                        w.phase(name, true, round, t_ns);
+                    }
+                }
+                Event::Count { id, round, value } => {
+                    if let Some(w) = &mut self.jsonl {
+                        w.counter(COUNTER_NAMES[id], round, value);
+                    }
+                }
+                Event::Job { round, timing } => {
+                    if let Some(w) = &mut self.jsonl {
+                        w.job(round, &timing);
+                    }
+                    if let Some(w) = &mut self.trace {
+                        w.job(round, &timing);
+                    }
+                }
+            }
+        }
+        self.events.clear();
+    }
+}
+
+/// End-of-run rollup merged into run JSON (`"telemetry"` key) and sweep
+/// arm records: per-phase latency summaries, per-job-kind exec/queue
+/// latency and size summaries, payload size summary, and run-total
+/// counters.
+#[derive(Clone, Debug)]
+pub struct TelemetrySummary {
+    pub rounds: usize,
+    pub phases: Vec<(&'static str, LogSummary)>,
+    pub job_exec: Vec<(&'static str, LogSummary)>,
+    pub job_queue: Vec<(&'static str, LogSummary)>,
+    pub job_items: Vec<(&'static str, LogSummary)>,
+    pub payload_bytes: LogSummary,
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+fn log_summary_json(s: &LogSummary) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(s.n as f64)),
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50)),
+        ("p90", Json::num(s.p90)),
+        ("p99", Json::num(s.p99)),
+        ("max", Json::num(s.max as f64)),
+    ])
+}
+
+impl TelemetrySummary {
+    pub fn to_json(&self) -> Json {
+        let section = |xs: &[(&'static str, LogSummary)]| {
+            Json::obj(xs.iter().map(|(n, s)| (*n, log_summary_json(s))).collect())
+        };
+        Json::obj(vec![
+            ("rounds", Json::num(self.rounds as f64)),
+            ("phases_ns", section(&self.phases)),
+            (
+                "jobs",
+                Json::obj(vec![
+                    ("exec_ns", section(&self.job_exec)),
+                    ("queue_ns", section(&self.job_queue)),
+                    ("items", section(&self.job_items)),
+                ]),
+            ),
+            ("payload_bytes", log_summary_json(&self.payload_bytes)),
+            (
+                "counters",
+                Json::obj(
+                    self.counters.iter().map(|(n, v)| (*n, Json::num(*v as f64))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Run-total counter by name; 0 if absent.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Phase latency summary by name.
+    pub fn phase(&self, name: &str) -> Option<&LogSummary> {
+        self.phases.iter().find(|(n, _)| *n == name).map(|(_, s)| s)
+    }
+
+    /// Job exec-latency summary by kind name.
+    pub fn job_exec(&self, name: &str) -> Option<&LogSummary> {
+        self.job_exec.iter().find(|(n, _)| *n == name).map(|(_, s)| s)
+    }
+
+    /// Compact single-line rendering for CLI output.
+    pub fn one_line(&self) -> String {
+        let us = |x: f64| x / 1_000.0;
+        let lc = self.phase("local_compute").cloned().unwrap_or_else(LogSummary::empty);
+        let sa = self.phase("secure_aggregate").cloned().unwrap_or_else(LogSummary::empty);
+        format!(
+            "rounds={} local_compute p50={:.1}us p99={:.1}us | secure_aggregate p50={:.1}us \
+             p99={:.1}us | payload_bytes p50={:.0} | transmitted={}",
+            self.rounds,
+            us(lc.p50),
+            us(lc.p99),
+            us(sa.p50),
+            us(sa.p99),
+            self.payload_bytes.p50,
+            self.counter("clients_transmitted"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut tel = Telemetry::disabled();
+        assert!(!tel.enabled());
+        tel.span_begin(0, PhaseSpan::Announce);
+        tel.add(Counter::ClientsAnnounced, 5);
+        tel.span_end(0, PhaseSpan::Announce);
+        tel.flush_round(0);
+        assert!(tel.finish().is_none());
+    }
+
+    #[test]
+    fn summary_only_records_spans_and_counters() {
+        let cfg = TelemetryConfig { manual_clock: true, ..TelemetryConfig::summary_only() };
+        let mut tel = Telemetry::from_config(&cfg).unwrap();
+        for round in 0..3 {
+            tel.span_begin(round, PhaseSpan::LocalCompute);
+            tel.span_end(round, PhaseSpan::LocalCompute);
+            tel.add(Counter::ClientsAnnounced, 10);
+            tel.add(Counter::ClientsTransmitted, 4);
+            tel.flush_round(round);
+        }
+        let s = tel.finish().unwrap();
+        assert_eq!(s.rounds, 3);
+        let lc = s.phase("local_compute").unwrap();
+        assert_eq!(lc.n, 3);
+        // ManualClock ticks 1 µs per read: every span lasts exactly 1 µs.
+        assert_eq!(lc.max, 1_000);
+        assert_eq!(s.counter("clients_announced"), 30);
+        assert_eq!(s.counter("clients_transmitted"), 12);
+        assert_eq!(s.counter("shards_outaged"), 0);
+    }
+
+    #[test]
+    fn collect_jobs_feeds_histograms() {
+        let cfg = TelemetryConfig { manual_clock: true, ..TelemetryConfig::summary_only() };
+        let mut tel = Telemetry::from_config(&cfg).unwrap();
+        tel.collect_jobs(0, &mut |buf| {
+            for w in 0..4u64 {
+                buf.push(JobTiming {
+                    kind: JobKind::Local,
+                    worker: w as usize,
+                    start_ns: w * 100,
+                    queue_ns: w * 10,
+                    exec_ns: 1_000 + w,
+                    items: 1,
+                });
+            }
+        });
+        tel.flush_round(0);
+        let s = tel.finish().unwrap();
+        let exec = s.job_exec("local").unwrap();
+        assert_eq!(exec.n, 4);
+        assert!(exec.p50 <= exec.p99 && exec.p99 <= exec.max as f64);
+        assert_eq!(exec.max, 1_003);
+    }
+
+    #[test]
+    fn payload_variants_split_counters() {
+        let cfg = TelemetryConfig { manual_clock: true, ..TelemetryConfig::summary_only() };
+        let mut tel = Telemetry::from_config(&cfg).unwrap();
+        let dense = Payload::Dense(vec![1.0; 8]);
+        let sparse = Payload::SparseK { indices: vec![0, 3], values: vec![1.0, 2.0] };
+        tel.payload(&dense);
+        tel.payload(&dense);
+        tel.payload(&sparse);
+        tel.flush_round(0);
+        let s = tel.finish().unwrap();
+        assert_eq!(s.counter("payloads_dense"), 2);
+        assert_eq!(s.counter("payloads_sparse"), 1);
+        assert_eq!(s.counter("payloads_quantized"), 0);
+        assert_eq!(s.counter("payload_bytes_dense"), 2 * dense.wire_bytes() as u64);
+        assert_eq!(s.counter("payload_bytes_sparse"), sparse.wire_bytes() as u64);
+        assert_eq!(s.payload_bytes.n, 3);
+    }
+
+    #[test]
+    fn seed_suffix_rewrites_paths() {
+        let cfg = TelemetryConfig {
+            enabled: true,
+            jsonl_out: Some("tel.jsonl".into()),
+            trace_out: Some("trace.json".into()),
+            manual_clock: false,
+        };
+        let s = cfg.with_seed_suffix(3);
+        assert_eq!(s.jsonl_out.as_deref(), Some("tel.jsonl.seed3"));
+        assert_eq!(s.trace_out.as_deref(), Some("trace.json.seed3"));
+    }
+}

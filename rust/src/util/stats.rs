@@ -165,6 +165,128 @@ impl Histogram {
     }
 }
 
+/// Quantile summary of a [`LogHistogram`] (durations in ns, sizes in
+/// bytes — whatever unit was recorded).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogSummary {
+    pub n: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: u64,
+}
+
+impl LogSummary {
+    pub fn empty() -> LogSummary {
+        LogSummary { n: 0, mean: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0 }
+    }
+}
+
+/// Log2-bucketed histogram over `u64` magnitudes. Bucket `b` holds
+/// values in `[2^(b-1), 2^b)` (bucket 0 holds exactly 0), so recording
+/// is a `leading_zeros` plus one array increment — no allocation, fixed
+/// 65-slot footprint — which is what lets `ShardPool` workers record
+/// per-job latencies on the hot path. Quantiles interpolate linearly
+/// within a bucket and are clamped by the exact tracked max, keeping
+/// relative error below ~2x in the worst case and far tighter near the
+/// top of the distribution.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; 65],
+    n: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { counts: [0; 65], n: 0, sum: 0, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = (64 - v.leading_zeros()) as usize;
+        self.counts[b] += 1;
+        self.n += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn total(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Interpolated quantile, q in [0,1]; 0.0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.n as f64;
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = cum as f64;
+            cum += c;
+            if cum as f64 >= target {
+                let lo = if b <= 1 { 0.0 } else { (1u128 << (b - 1)) as f64 };
+                let hi = if b >= 64 {
+                    u64::MAX as f64
+                } else {
+                    (1u128 << b) as f64
+                };
+                let hi = hi.min(self.max as f64).max(lo);
+                let frac = ((target - before) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+        }
+        self.max as f64
+    }
+
+    pub fn summary(&self) -> LogSummary {
+        LogSummary {
+            n: self.n,
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            max: self.max,
+        }
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +340,77 @@ mod tests {
         assert_eq!(h.total(), 5);
         assert_eq!(h.counts[0], 3); // 0.5, 1.5, -4.0(clamped)
         assert_eq!(h.counts[4], 2); // 9.9, 42.0(clamped)
+    }
+
+    #[test]
+    fn log_histogram_empty() {
+        let h = LogHistogram::new();
+        assert_eq!(h.n(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let s = h.summary();
+        assert_eq!(s, LogSummary::empty());
+    }
+
+    #[test]
+    fn log_histogram_exact_stats() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 2, 3, 1000, 1_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.n(), 6);
+        assert_eq!(h.max(), 1_000_000);
+        assert_eq!(h.total(), 1_001_006);
+        assert!((h.mean() - 1_001_006.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_ordered_and_bounded() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i);
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p99 <= h.max() as f64);
+        // log2 bucketing: quantiles within ~2x of the true value.
+        assert!(p50 >= 250.0 && p50 <= 1000.0, "p50={p50}");
+        assert!(p99 >= 500.0, "p99={p99}");
+    }
+
+    #[test]
+    fn log_histogram_single_value_collapses() {
+        let mut h = LogHistogram::new();
+        for _ in 0..10 {
+            h.record(7);
+        }
+        // Every quantile stays inside the value's bucket [4, 7].
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!((4.0..=7.0).contains(&v), "q={q} v={v}");
+        }
+        assert_eq!(h.max(), 7);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_combined() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        for v in [1u64, 5, 9, 100] {
+            a.record(v);
+            c.record(v);
+        }
+        for v in [2u64, 800, 4096] {
+            b.record(v);
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.n(), c.n());
+        assert_eq!(a.total(), c.total());
+        assert_eq!(a.max(), c.max());
+        assert_eq!(a.quantile(0.5), c.quantile(0.5));
     }
 }

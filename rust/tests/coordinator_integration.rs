@@ -8,14 +8,20 @@
 use fedsamp::compress::Compressor;
 use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use fedsamp::coordinator::{
-    Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner,
+    Coordinator, CoordinatorOptions, DeadlinePolicy, ParallelRunner, Phase,
+    Registry, RoundMachine,
 };
 use fedsamp::data::ClientData;
+use fedsamp::fl::availability::{Availability, Outage, Trace};
+use fedsamp::fl::comm::BitMeter;
 use fedsamp::fl::{train, TrainOptions};
 use fedsamp::metrics::RunResult;
 use fedsamp::model::logistic::Logistic;
 use fedsamp::model::NativeModel;
+use fedsamp::sampling::Sampler;
 use fedsamp::sim::{build_native_engine, NativeEngine};
+use fedsamp::telemetry::Telemetry;
+use fedsamp::util::rng::Rng;
 
 fn cfg(strategy: Strategy) -> ExperimentConfig {
     ExperimentConfig {
@@ -242,6 +248,7 @@ fn payload_native_folds_match_the_densified_reference_end_to_end() {
                 compressor: compressor.clone(),
                 verbose_every: 0,
                 densify_folds,
+                ..TrainOptions::default()
             };
             train(&c, &mut engine, &opts).unwrap()
         };
@@ -333,6 +340,134 @@ fn partial_deadline_misses_still_train() {
     assert!(
         last < first,
         "no training progress under stragglers: {first} -> {last}"
+    );
+}
+
+#[test]
+fn outage_and_deadline_drop_accounting_is_consistent() {
+    // satellite pin for the round machine's loss bookkeeping: trace
+    // outages (pre-selection) and deadline drops (post-selection) must
+    // stay disjoint in accounting, conserve the announced cohort, and
+    // leave `transmitted` bounded by the surviving cohort
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    c.rounds = 60;
+    c.availability_trace = Some(Trace {
+        seed: 77,
+        base_q: 1.0,
+        diurnal: None,
+        churn: None,
+        outage: Some(Outage { prob: 0.45 }),
+    });
+    let shards = 4usize;
+    let registry = Registry::new(40, shards);
+    let avail = Availability::Trace(c.availability_trace.clone().unwrap());
+    let policy = DeadlinePolicy { miss_prob: 0.4 };
+    let sampler = Sampler::from_strategy(&c.strategy);
+    let rng = Rng::new(c.seed).fork(0xF1);
+    let mut tel = Telemetry::disabled();
+
+    let mut both_fired = 0;
+    for round in 0..c.rounds {
+        // two machines over identical RNG streams: outage-only vs
+        // outage + deadline — the deadline may only remove whole shards
+        // from the announced cohort, and never perturbs the outage draw
+        let mut a = RoundMachine::new(round);
+        a.announce(
+            &c,
+            &avail,
+            &registry,
+            None,
+            &mut rng.fork(round as u64),
+            &mut tel,
+        );
+        let mut b = RoundMachine::new(round);
+        let dropped = b.announce(
+            &c,
+            &avail,
+            &registry,
+            Some(&policy),
+            &mut rng.fork(round as u64),
+            &mut tel,
+        );
+        assert_eq!(dropped, b.dropped_shards());
+        assert_eq!(a.dropped_shards(), 0);
+        assert_eq!(a.outaged_shards(), b.outaged_shards());
+        assert!(b.outaged_shards() <= shards);
+        assert!(b.dropped_shards() <= shards);
+        // cohort conservation: b's cohort is exactly a's minus the
+        // members of deadline-dropped shards
+        let removed: Vec<usize> = a
+            .cohort()
+            .iter()
+            .copied()
+            .filter(|id| !b.cohort().contains(id))
+            .collect();
+        assert_eq!(a.cohort().len(), b.cohort().len() + removed.len());
+        let dead: std::collections::BTreeSet<usize> =
+            removed.iter().map(|&id| registry.shard_of(id)).collect();
+        assert!(dead.len() <= b.dropped_shards(), "round {round}");
+        for &kept in b.cohort() {
+            assert!(
+                !dead.contains(&registry.shard_of(kept)),
+                "round {round}: deadline drops must take whole shards"
+            );
+        }
+
+        if b.outaged_shards() == 0
+            || b.dropped_shards() == 0
+            || b.cohort().is_empty()
+        {
+            continue;
+        }
+        both_fired += 1;
+        // both loss mechanisms fired this round: drive a fresh machine
+        // through commit and pin the downstream accounting
+        let engine = build_native_engine(&c);
+        let mut runner = ParallelRunner::new(engine, 1);
+        let mut x = runner.init_params(c.seed);
+        let mut meter = BitMeter::new();
+        let mut round_rng = rng.fork(round as u64);
+        let opts = TrainOptions::default();
+        let mut m = RoundMachine::new(round);
+        m.announce(
+            &c,
+            &avail,
+            &registry,
+            Some(&policy),
+            &mut round_rng,
+            &mut tel,
+        );
+        assert_eq!(m.cohort(), b.cohort());
+        m.local_compute(&mut runner, &x, &mut tel);
+        m.norm_report(&mut tel);
+        m.negotiate(&sampler, &c, None, &mut meter, &mut round_rng, &mut tel);
+        m.secure_aggregate(
+            &c,
+            &opts,
+            &registry,
+            &mut runner,
+            &mut meter,
+            &mut round_rng,
+            &mut tel,
+        );
+        let rec = m
+            .commit(&c, &opts, 1.0, &mut x, &mut runner, &meter, &mut tel)
+            .unwrap();
+        assert_eq!(m.phase(), Phase::Done);
+        assert!(m.outaged_shards() > 0 && m.dropped_shards() > 0);
+        assert!(
+            rec.transmitted <= m.cohort().len(),
+            "round {round}: {} transmitted from a {}-client cohort",
+            rec.transmitted,
+            m.cohort().len()
+        );
+        assert!(rec.train_loss.is_finite());
+        break;
+    }
+    assert!(
+        both_fired > 0,
+        "60 rounds at outage p=0.45 × deadline p=0.4 over 4 shards never \
+         fired both loss mechanisms in one round — accounting untestable"
     );
 }
 

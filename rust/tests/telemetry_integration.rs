@@ -1,0 +1,300 @@
+//! Integration: the telemetry subsystem end to end — exports are
+//! machine-readable (JSONL parses line by line, the Chrome trace loads
+//! as one JSON document with balanced B/E spans), summaries are
+//! internally consistent, and switching telemetry on moves no bit of
+//! the training trajectory.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
+use fedsamp::fl::TrainOptions;
+use fedsamp::metrics::RunResult;
+use fedsamp::sim::build_native_engine;
+use fedsamp::telemetry::{TelemetryConfig, PHASE_NAMES};
+use fedsamp::util::json::Json;
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "telemetry_it".into(),
+        seed: 11,
+        rounds: 4,
+        cohort: 12,
+        budget: 4,
+        strategy: Strategy::Aocs { j_max: 4 },
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: 2,
+        eval_examples: 128,
+        workers: 2,
+        secure_updates: true,
+        availability: 1.0,
+        availability_trace: None,
+        compressor: None,
+    }
+}
+
+fn run_with(telemetry: TelemetryConfig, shards: usize, workers: usize) -> RunResult {
+    let c = cfg();
+    let engine = build_native_engine(&c);
+    let mut runner = ParallelRunner::new(engine, workers);
+    let mut coordinator = Coordinator::new(CoordinatorOptions {
+        shards,
+        ..CoordinatorOptions::default()
+    });
+    let opts = TrainOptions { telemetry, ..TrainOptions::default() };
+    coordinator.run(&c, &mut runner, &opts).unwrap()
+}
+
+/// Unique temp path per test so parallel test threads never collide.
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "fedsamp_telemetry_{}_{tag}",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn jsonl_export_parses_with_balanced_spans_and_counters() {
+    let jsonl = temp_path("events.jsonl");
+    let telemetry = TelemetryConfig {
+        enabled: true,
+        jsonl_out: Some(jsonl.to_string_lossy().into_owned()),
+        trace_out: None,
+        manual_clock: true,
+    };
+    let run = run_with(telemetry, 2, 2);
+    assert!(run.telemetry.is_some());
+
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let _ = std::fs::remove_file(&jsonl);
+    assert!(!text.trim().is_empty(), "empty event log");
+
+    // (phase name, round) -> (begin count, end count)
+    let mut spans: BTreeMap<(String, usize), (usize, usize)> = BTreeMap::new();
+    let mut jobs = 0usize;
+    let mut counters = 0usize;
+    let mut run_end_rounds = None;
+    for line in text.lines() {
+        let j = Json::parse(line)
+            .unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e:?}"));
+        match j.get("ev").as_str().expect("every event has an ev tag") {
+            ev @ ("span_begin" | "span_end") => {
+                let key = (
+                    j.get("name").as_str().unwrap().to_string(),
+                    j.get("round").as_usize().unwrap(),
+                );
+                let e = spans.entry(key).or_insert((0, 0));
+                if ev == "span_begin" {
+                    e.0 += 1;
+                } else {
+                    e.1 += 1;
+                    assert!(j.get("dur_ns").as_f64().is_some());
+                }
+            }
+            "job" => {
+                jobs += 1;
+                assert!(j.get("exec_ns").as_f64().is_some());
+                assert!(j.get("queue_ns").as_f64().is_some());
+            }
+            "counter" => {
+                counters += 1;
+                assert!(j.get("value").as_f64().is_some());
+            }
+            "run_end" => {
+                run_end_rounds = j.get("rounds").as_usize();
+            }
+            other => panic!("unknown event kind {other}"),
+        }
+    }
+    assert_eq!(run_end_rounds, Some(cfg().rounds), "run_end footer");
+    assert!(jobs > 0, "no worker job events recorded");
+    assert!(counters > 0, "no counter events recorded");
+    for ((name, round), (b, e)) in &spans {
+        assert_eq!(b, e, "unbalanced span {name} round {round}");
+    }
+    // always-on availability: every round runs all six phases
+    for round in 0..cfg().rounds {
+        for name in PHASE_NAMES {
+            assert!(
+                spans.contains_key(&(name.to_string(), round)),
+                "round {round} missing {name} span"
+            );
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_loads_and_balances_phase_events() {
+    let trace = temp_path("trace.json");
+    let telemetry = TelemetryConfig {
+        enabled: true,
+        jsonl_out: None,
+        trace_out: Some(trace.to_string_lossy().into_owned()),
+        manual_clock: true,
+    };
+    run_with(telemetry, 2, 2);
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let _ = std::fs::remove_file(&trace);
+    let doc = Json::parse(&text).expect("trace must be one JSON document");
+    let events = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    let mut complete = 0usize;
+    let mut phase_names_seen = std::collections::BTreeSet::new();
+    for e in events {
+        assert_eq!(e.get("pid").as_usize(), Some(1));
+        assert!(e.get("ts").as_f64().is_some());
+        match e.get("ph").as_str().unwrap() {
+            "B" => {
+                begins += 1;
+                phase_names_seen
+                    .insert(e.get("name").as_str().unwrap().to_string());
+                // master-thread events carry tid 0
+                assert_eq!(e.get("tid").as_usize(), Some(0));
+            }
+            "E" => ends += 1,
+            "X" => {
+                complete += 1;
+                assert!(e.get("dur").as_f64().is_some());
+                // pool jobs render on tid = worker + 1
+                assert!(e.get("tid").as_usize().unwrap() >= 1);
+            }
+            other => panic!("unexpected trace phase {other}"),
+        }
+    }
+    assert_eq!(begins, ends, "unbalanced B/E trace events");
+    assert_eq!(begins, cfg().rounds * PHASE_NAMES.len());
+    assert!(complete > 0, "no X (job) events in trace");
+    for name in PHASE_NAMES {
+        assert!(phase_names_seen.contains(name), "trace missing {name}");
+    }
+}
+
+#[test]
+fn telemetry_on_moves_no_bit_of_the_trajectory() {
+    let jsonl = temp_path("bitwise.jsonl");
+    let trace = temp_path("bitwise_trace.json");
+    let off = run_with(TelemetryConfig::off(), 4, 3);
+    assert!(off.telemetry.is_none());
+    let on = run_with(
+        TelemetryConfig {
+            enabled: true,
+            jsonl_out: Some(jsonl.to_string_lossy().into_owned()),
+            trace_out: Some(trace.to_string_lossy().into_owned()),
+            manual_clock: false, // the real monotonic clock, full export
+        },
+        4,
+        3,
+    );
+    let _ = std::fs::remove_file(&jsonl);
+    let _ = std::fs::remove_file(&trace);
+    assert!(on.telemetry.is_some());
+    assert_eq!(off.rounds.len(), on.rounds.len());
+    for (a, b) in off.rounds.iter().zip(&on.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.val_accuracy.to_bits(), b.val_accuracy.to_bits());
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.transmitted, b.transmitted);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        assert_eq!(a.expected_budget.to_bits(), b.expected_budget.to_bits());
+    }
+}
+
+#[test]
+fn summary_is_internally_consistent() {
+    let run = run_with(
+        TelemetryConfig { manual_clock: true, ..TelemetryConfig::summary_only() },
+        2,
+        2,
+    );
+    let s = run.telemetry.as_ref().expect("summary-only still summarizes");
+    let c = cfg();
+    assert_eq!(s.rounds, c.rounds);
+    for name in PHASE_NAMES {
+        let p = s
+            .phase(name)
+            .unwrap_or_else(|| panic!("no phase summary for {name}"));
+        assert_eq!(p.n as usize, c.rounds, "{name}: one span per round");
+        assert!(
+            p.p50 <= p.p90 && p.p90 <= p.p99 && p.p99 <= p.max as f64,
+            "{name}: quantiles out of order"
+        );
+    }
+    let transmitted: usize = run.rounds.iter().map(|r| r.transmitted).sum();
+    assert_eq!(s.counter("clients_transmitted"), transmitted as u64);
+    assert_eq!(s.payload_bytes.n, transmitted as u64);
+    assert!(
+        s.counter("clients_announced") >= s.counter("clients_transmitted")
+    );
+    assert!(s.counter("clients_selected") >= s.counter("clients_transmitted"));
+    // secure path over a worker pool: local + mask-fold jobs measured
+    let local = s.job_exec("local").unwrap();
+    assert!(local.n > 0, "no local jobs timed");
+    let folds = s.job_exec("mask_fold").unwrap();
+    assert!(folds.n > 0, "no mask-fold jobs timed");
+    // the run JSON carries the same rollup
+    let j = run.to_json();
+    assert_eq!(
+        j.get("telemetry").get("rounds").as_usize(),
+        Some(c.rounds)
+    );
+}
+
+#[test]
+fn cli_train_smoke_emits_parseable_exports() {
+    let jsonl = temp_path("cli.jsonl");
+    let trace = temp_path("cli_trace.json");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_fedsamp"))
+        .args([
+            "train",
+            "--preset",
+            "femnist1",
+            "--rounds",
+            "2",
+            "--sim",
+            "true",
+            "--telemetry",
+            "--telemetry-out",
+            &jsonl.to_string_lossy(),
+            "--trace-out",
+            &trace.to_string_lossy(),
+        ])
+        .output()
+        .expect("spawn fedsamp train");
+    assert!(
+        out.status.success(),
+        "train failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("telemetry:"),
+        "missing telemetry summary line:\n{stdout}"
+    );
+
+    let events = std::fs::read_to_string(&jsonl).unwrap();
+    let _ = std::fs::remove_file(&jsonl);
+    assert!(!events.trim().is_empty());
+    for line in events.lines() {
+        Json::parse(line)
+            .unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e:?}"));
+    }
+    assert!(events.lines().last().unwrap().contains("run_end"));
+
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    let _ = std::fs::remove_file(&trace);
+    let doc = Json::parse(&trace_text).expect("trace JSON");
+    assert!(!doc.get("traceEvents").as_arr().unwrap().is_empty());
+}
