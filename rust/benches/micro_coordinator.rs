@@ -75,6 +75,7 @@ fn bench_cfg(rounds: usize, cohort: usize, secure: bool) -> ExperimentConfig {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 

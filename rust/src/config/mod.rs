@@ -4,6 +4,7 @@
 pub mod presets;
 
 use crate::compress::Compressor;
+use crate::faults::FaultPlan;
 use crate::fl::availability::Trace;
 use crate::util::json::Json;
 
@@ -200,6 +201,11 @@ pub struct ExperimentConfig {
     /// update compression applied to participant uploads (§6 composition;
     /// wire-payload kind). `TrainOptions::compressor` overrides when set.
     pub compressor: Option<Compressor>,
+    /// chaos layer: seeded deterministic fault injection (mid-round
+    /// crashes, payload corruption, stalled negotiation partials) plus
+    /// the Repair phase that makes the estimator survive them. `None`
+    /// (or an all-zero plan) is bitwise identical to no chaos at all.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl ExperimentConfig {
@@ -223,6 +229,9 @@ impl ExperimentConfig {
         }
         if !(0.0 < self.availability && self.availability <= 1.0) {
             return Err("availability must be in (0, 1]".into());
+        }
+        if let Some(p) = &self.fault_plan {
+            p.validate()?;
         }
         if let Some(t) = &self.availability_trace {
             t.validate()?;
@@ -268,6 +277,13 @@ impl ExperimentConfig {
                     None => Json::Null,
                 },
             ),
+            (
+                "fault_plan",
+                match &self.fault_plan {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -279,6 +295,10 @@ impl ExperimentConfig {
         let availability_trace = match v.get("availability_trace") {
             Json::Null => None,
             j => Some(Trace::from_json(j)?),
+        };
+        let fault_plan = match v.get("fault_plan") {
+            Json::Null => None,
+            j => Some(FaultPlan::from_json(j)?),
         };
         let cfg = ExperimentConfig {
             name: v.get("name").as_str().unwrap_or("experiment").to_string(),
@@ -298,6 +318,7 @@ impl ExperimentConfig {
             availability: v.get("availability").as_f64().unwrap_or(1.0),
             availability_trace,
             compressor,
+            fault_plan,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -346,6 +367,7 @@ mod tests {
             availability: 1.0,
             availability_trace: None,
             compressor: None,
+            fault_plan: None,
         }
     }
 
@@ -402,6 +424,35 @@ mod tests {
             ExperimentConfig::from_json(&v).unwrap().compressor,
             None
         );
+    }
+
+    #[test]
+    fn fault_plan_round_trips_and_defaults_off() {
+        use crate::faults::FaultPlan;
+        let mut c = sample();
+        c.fault_plan = Some(FaultPlan {
+            crash_pre: 0.05,
+            crash_post: 0.2,
+            corrupt: 0.1,
+            stall: 0.15,
+            max_retries: 2,
+            ..FaultPlan::new(11)
+        });
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        // absent field → no chaos
+        assert_eq!(
+            ExperimentConfig::from_json(&sample().to_json())
+                .unwrap()
+                .fault_plan,
+            None
+        );
+        // validation rejects out-of-range rates
+        c.fault_plan = Some(FaultPlan {
+            crash_post: 1.5,
+            ..FaultPlan::new(0)
+        });
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -73,6 +73,7 @@ fn base(name: &str, data: DataSpec, model: &str, cohort: usize, m: usize,
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 
@@ -134,6 +135,7 @@ pub fn dsgd_theory(m: usize, eta: f64) -> ExperimentConfig {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 

@@ -8,7 +8,9 @@
 //!   cohort partitioning);
 //! * [`round`] — the round state machine
 //!   `Announce → LocalCompute → NormReport → Negotiate → SecureAggregate
-//!   → Commit`, one phase per method, seed-trajectory-faithful;
+//!   → Repair → Commit`, one phase per method, seed-trajectory-faithful
+//!   (Repair is the chaos layer's recovery phase — a pass-through decode
+//!   when no faults fire);
 //! * [`shard`] — execution backends: [`EngineRunner`] adapts any legacy
 //!   [`ClientEngine`], [`ParallelRunner`] fans shard cohorts — and the
 //!   secure-aggregation masked folds — over a persistent
@@ -59,6 +61,7 @@ pub use round::{Phase, RoundMachine};
 pub use shard::{ClientCompute, EngineRunner, LocalRunner, ParallelRunner};
 
 use crate::config::{Algorithm, ExperimentConfig};
+use crate::faults::{FaultCounters, FaultCtx};
 use crate::fl::availability::Availability;
 use crate::fl::comm::BitMeter;
 use crate::fl::TrainOptions;
@@ -125,6 +128,10 @@ pub struct CoordStats {
     pub noop_rounds: usize,
     /// Rounds the coordinator actually drove (no-op rounds included).
     pub rounds_run: usize,
+    /// Chaos-layer tally: faults injected and repairs performed. All
+    /// zero unless the config carries a non-zero
+    /// [`crate::faults::FaultPlan`].
+    pub faults: FaultCounters,
 }
 
 /// The master-side driver: owns the shard registry and round loop and
@@ -192,6 +199,11 @@ impl Coordinator {
             runner.set_clock(Some(tel.clock()));
         }
 
+        // the chaos context exists only when a plan can actually fire —
+        // a zero-rate (or absent) plan stays on the bitwise fault-free
+        // path (see `faults::FaultCtx::from_plan`)
+        let mut faults = FaultCtx::from_plan(cfg.fault_plan.as_ref());
+
         for round in 0..cfg.rounds {
             self.stats.rounds_run += 1;
             let mut round_rng = rng.fork(round as u64);
@@ -221,6 +233,7 @@ impl Coordinator {
                 } else {
                     None
                 },
+                faults.as_mut(),
                 &mut meter,
                 &mut round_rng,
                 &mut tel,
@@ -230,10 +243,12 @@ impl Coordinator {
                 opts,
                 &registry,
                 runner,
+                faults.as_mut(),
                 &mut meter,
                 &mut round_rng,
                 &mut tel,
             );
+            machine.repair(cfg, faults.as_mut(), &mut tel);
             result.push(machine.commit(
                 cfg,
                 opts,
@@ -246,6 +261,9 @@ impl Coordinator {
         }
         if tel.enabled() {
             runner.set_clock(None);
+        }
+        if let Some(ctx) = &faults {
+            self.stats.faults = ctx.counters;
         }
         result.telemetry = tel.finish();
         Ok(result)

@@ -1,7 +1,8 @@
 //! The explicit round state machine:
 //!
 //! ```text
-//! Announce → LocalCompute → NormReport → Negotiate → SecureAggregate → Commit
+//! Announce → LocalCompute → NormReport → Negotiate → SecureAggregate
+//!          → Repair → Commit
 //! ```
 //!
 //! Each phase is a method on [`RoundMachine`] that asserts it runs in
@@ -16,13 +17,27 @@
 //! deadline contributes nothing that round (its cohort members are
 //! dropped before norm collection). AOCS tolerates this by design — the
 //! negotiation only ever consumes aggregates of the surviving cohort.
+//!
+//! **Repair** is the chaos layer's recovery phase (DESIGN.md §10). When
+//! a [`crate::faults::FaultPlan`] injects mid-round failures, the phase
+//! (a) reconstructs and subtracts the uncancelled pairwise-mask residue
+//! of clients that crashed *after* mask commitment
+//! ([`crate::secure_agg::SecureAggregator::recover`]), (b) renormalizes
+//! the w_i/p_i estimator over the surviving participant set, and the
+//! upload loops quarantine clients whose frames fail the hardened wire
+//! integrity checks. On the secure path the decode of the combined ring
+//! sum is deferred from `SecureAggregate` into `Repair` so the residue
+//! subtraction happens in the exact ring; with no faults the phase is a
+//! pass-through decode — bitwise identical to the pre-chaos pipeline.
 
 use crate::config::ExperimentConfig;
+use crate::faults::{self, FaultCtx};
 use crate::fl::availability::{sample_round_cohort, Availability};
 use crate::fl::comm::BitMeter;
 use crate::fl::{EvalOutcome, LocalOutcome, TrainOptions};
 use crate::metrics::RoundRecord;
 use crate::sampling::{aocs, probability, variance, Decision, Sampler};
+use crate::secure_agg::SecureAggregator;
 use crate::telemetry::{Counter, PhaseSpan, Telemetry};
 use crate::tensor;
 use crate::tensor::kernels;
@@ -43,6 +58,14 @@ const STRAGGLER_STREAM: u64 = 0x57A6_61E5;
 /// exchanges of a round never share mask streams.
 const NEGOTIATION_STREAM: u64 = 0x4E60_71A7;
 
+/// Integrity bound on a decoded upload's fold magnitudes: the
+/// fixed-point ring represents |x| < 2^39 per element, so a
+/// corrupted-but-decodable frame whose values (after the w_i/p_i upload
+/// scale) could reach that range is quarantined rather than folded — in
+/// production the master rejects implausible updates the same way.
+/// Honest updates sit many orders of magnitude below this.
+const RING_SAFE_MAGNITUDE: f32 = 1.0e9;
+
 /// The protocol phases, in execution order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
@@ -51,6 +74,7 @@ pub enum Phase {
     NormReport,
     Negotiate,
     SecureAggregate,
+    Repair,
     Commit,
     Done,
 }
@@ -78,6 +102,20 @@ pub struct RoundMachine {
     gamma: f64,
     aggregate: Vec<f32>,
     transmitted: usize,
+    /// combined (still-masked) ring sum, awaiting the Repair phase's
+    /// residue subtraction + decode (secure path only)
+    masked_sum: Option<Vec<u64>>,
+    /// the agreed mask roster, including post-commit dropouts
+    mask_roster: Vec<u64>,
+    /// roster members whose upload never arrived (crash-after-commit or
+    /// quarantined): their uncancelled mask residue is repaired
+    post_dropped: Vec<u64>,
+    /// Σ w_i/p_i over every *selected* client (the estimator's intended
+    /// mass this round)
+    sel_mass: f64,
+    /// Σ w_i/p_i over selected clients whose contribution was lost to a
+    /// fault — exactly 0.0 on the fault-free path (no float ops run)
+    lost_mass: f64,
 }
 
 impl RoundMachine {
@@ -99,6 +137,11 @@ impl RoundMachine {
             gamma: f64::NAN,
             aggregate: Vec::new(),
             transmitted: 0,
+            masked_sum: None,
+            mask_roster: Vec::new(),
+            post_dropped: Vec::new(),
+            sel_mass: 0.0,
+            lost_mass: 0.0,
         }
     }
 
@@ -275,11 +318,20 @@ impl RoundMachine {
     /// travel as f32 through the fixed-point ring and reorder the
     /// central f64 fold: the fixed point is the same, the last ulps are
     /// not, so seed-exact trajectories need the central path.
+    ///
+    /// With a chaos context, each sharded exchange's partial delivery
+    /// may stall ([`crate::faults::FaultPlan::stalls`]); the master
+    /// retries with a bounded backoff budget and, when every attempt of
+    /// an exchange stalls, degrades that shard to its members'
+    /// last-good probabilities (uniform m/n before any succeed) — the
+    /// other shards' aggregates are untouched.
+    #[allow(clippy::too_many_arguments)]
     pub fn negotiate(
         &mut self,
         sampler: &Sampler,
         cfg: &ExperimentConfig,
         sharded: Option<&mut dyn LocalRunner>,
+        faults: Option<&mut FaultCtx>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
         tel: &mut Telemetry,
@@ -309,6 +361,15 @@ impl RoundMachine {
                 // masked P-upload would reveal its individual p_i — the
                 // value the sum-only protocol exists to hide
                 let mut exchange: u64 = 0;
+                // chaos: stall draws per (shard, exchange, attempt) —
+                // accounting only; the partial's value is still computed
+                // (retries deliver the same deterministic sum), so other
+                // shards' aggregates never shift
+                let plan = faults.as_ref().map(|f| f.plan.clone());
+                let round = self.round as u64;
+                let mut stalls: u64 = 0;
+                let mut retries: u64 = 0;
+                let mut degraded = vec![false; groups.len()];
                 let r = aocs::aocs_probabilities_sharded(
                     &self.norms,
                     &groups,
@@ -317,14 +378,71 @@ impl RoundMachine {
                     &mut |scalars: &[Vec<(u64, f32)>]| {
                         let seed = base
                             ^ exchange.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        let ex = exchange;
                         exchange += 1;
+                        if let Some(p) = &plan {
+                            for (g, group) in scalars.iter().enumerate() {
+                                if group.is_empty() {
+                                    continue;
+                                }
+                                let mut attempt: u64 = 0;
+                                loop {
+                                    if !p.stalls(
+                                        g as u64, round, ex, attempt,
+                                    ) {
+                                        break;
+                                    }
+                                    stalls += 1;
+                                    if attempt >= p.max_retries as u64 {
+                                        degraded[g] = true;
+                                        break;
+                                    }
+                                    retries += 1;
+                                    attempt += 1;
+                                }
+                            }
+                        }
                         runner.negotiation_partials(seed, scalars)
                     },
                 );
                 tel.collect_jobs(self.round, &mut |buf| {
                     runner.drain_timings(buf)
                 });
-                Decision::from_aocs(r)
+                let mut decision = Decision::from_aocs(r);
+                if let Some(ctx) = faults {
+                    ctx.counters.stalls += stalls;
+                    ctx.counters.retries += retries;
+                    tel.add(Counter::FaultsStalled, stalls);
+                    tel.add(Counter::NegotiationRetries, retries);
+                    let uniform = m as f64 / self.cohort.len() as f64;
+                    let mut shards_degraded = 0u64;
+                    for (g, members) in groups.iter().enumerate() {
+                        if !degraded[g] {
+                            continue;
+                        }
+                        shards_degraded += 1;
+                        for &(c, p) in members {
+                            decision.probs[p] = ctx
+                                .last_probs
+                                .get(&c)
+                                .copied()
+                                .unwrap_or(uniform)
+                                .min(1.0);
+                        }
+                    }
+                    ctx.counters.shards_degraded += shards_degraded;
+                    tel.add(Counter::ShardsDegraded, shards_degraded);
+                    // cache last-good probabilities for future fallbacks
+                    for (g, members) in groups.iter().enumerate() {
+                        if degraded[g] {
+                            continue;
+                        }
+                        for &(c, p) in members {
+                            ctx.last_probs.insert(c, decision.probs[p]);
+                        }
+                    }
+                }
+                decision
             }
             _ => sampler.decide(&self.norms, m),
         };
@@ -389,6 +507,7 @@ impl RoundMachine {
         opts: &TrainOptions,
         registry: &Registry,
         runner: &mut dyn LocalRunner,
+        faults: Option<&mut FaultCtx>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
         tel: &mut Telemetry,
@@ -396,15 +515,19 @@ impl RoundMachine {
         self.expect(Phase::SecureAggregate);
         tel.span_begin(self.round, PhaseSpan::SecureAggregate);
         let dim = runner.dim();
-        self.aggregate = if cfg.secure_updates {
+        if cfg.secure_updates {
+            // the combined ring sum stays masked-domain until Repair
+            // decodes it (after any mask-residue subtraction)
             self.masked_aggregate(
-                cfg, opts, registry, runner, meter, round_rng, tel,
-            )
+                cfg, opts, registry, runner, faults, meter, round_rng, tel,
+            );
         } else {
-            self.plain_aggregate(opts, registry, dim, meter, round_rng, tel)
-        };
+            self.aggregate = self.plain_aggregate(
+                opts, registry, dim, faults, meter, round_rng, tel,
+            );
+        }
         tel.add(Counter::ClientsTransmitted, self.transmitted as u64);
-        self.phase = Phase::Commit;
+        self.phase = Phase::Repair;
         tel.span_end(self.round, PhaseSpan::SecureAggregate);
     }
 
@@ -425,6 +548,17 @@ impl RoundMachine {
     /// simulated mask fold is dense — the accounting models a
     /// compression-compatible secure scheme, the seed's semantics; see
     /// DESIGN.md §7).
+    ///
+    /// Fault injection happens in the upload loop, at the point each
+    /// failure occurs in a deployment: crash-before-upload skips the
+    /// client entirely; crash-after-commitment keeps it in the mask
+    /// roster (its pairwise masks are woven into everyone's uploads)
+    /// but withholds its upload; corruption mangles the encoded frame
+    /// in flight — frames failing the hardened decode or the integrity
+    /// bounds quarantine the sender (also a roster member whose residue
+    /// needs repair), frames that still parse fold as garbage, exactly
+    /// as they would in production. The combined ring sum is stored
+    /// still-masked in `masked_sum` for [`RoundMachine::repair`].
     #[allow(clippy::too_many_arguments)]
     fn masked_aggregate(
         &mut self,
@@ -432,15 +566,17 @@ impl RoundMachine {
         opts: &TrainOptions,
         registry: &Registry,
         runner: &mut dyn LocalRunner,
+        mut faults: Option<&mut FaultCtx>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
         tel: &mut Telemetry,
-    ) -> Vec<f32> {
+    ) {
         let dim = runner.dim();
         let decision = self.decision.as_ref().expect("negotiate ran");
+        let round = self.round as u64;
         let mut batch = MaskBatch {
             dim,
-            round_seed: cfg.seed ^ self.round as u64,
+            round_seed: cfg.seed ^ round,
             roster: Vec::new(),
             groups: vec![Vec::new(); registry.shards()],
         };
@@ -448,35 +584,114 @@ impl RoundMachine {
             if !self.selected[i] {
                 continue;
             }
-            let factor = (self.weights[i] / decision.probs[i]) as f32;
+            let mass = self.weights[i] / decision.probs[i];
+            let factor = mass as f32;
+            self.sel_mass += mass;
+            let client = self.cohort[i] as u64;
+            if let Some(ctx) = faults.as_deref_mut() {
+                if ctx.plan.crash_pre(client, round) {
+                    // died before upload: no masks, no bytes
+                    ctx.counters.crash_pre += 1;
+                    tel.add(Counter::FaultsCrashPre, 1);
+                    self.lost_mass += mass;
+                    continue;
+                }
+            }
             let payload = match &opts.compressor {
                 Some(c) => c.compress(&o.delta, round_rng),
                 None => Payload::Dense(std::mem::take(&mut o.delta)),
             };
+            if let Some(ctx) = faults.as_deref_mut() {
+                if ctx.plan.crash_post(client, round) {
+                    // masks committed, upload never arrives: the roster
+                    // keeps the client (everyone already wove its pair
+                    // masks in); Repair subtracts the residue
+                    ctx.counters.crash_post += 1;
+                    tel.add(Counter::FaultsCrashPost, 1);
+                    self.lost_mass += mass;
+                    batch.roster.push(client);
+                    self.post_dropped.push(client);
+                    continue;
+                }
+                if ctx.plan.corrupts(client, round) {
+                    ctx.counters.corrupt += 1;
+                    tel.add(Counter::FaultsCorrupt, 1);
+                    let mut frame = Vec::new();
+                    payload.encode_into(&mut frame);
+                    let mut frng = ctx.plan.corruption_rng(client, round);
+                    faults::corrupt_frame(&mut frame, &mut frng);
+                    let checked = Payload::decode(&frame)
+                        .and_then(|p| p.validate_for_dim(dim).map(|_| p))
+                        .ok()
+                        .filter(|p| {
+                            p.max_abs() * factor.abs()
+                                < RING_SAFE_MAGNITUDE
+                        });
+                    match checked {
+                        Some(p) => {
+                            // mutation survived every integrity check:
+                            // it folds (and is metered) like any upload
+                            meter.add_payload(&p);
+                            tel.payload(&p);
+                            batch.roster.push(client);
+                            batch.groups
+                                [registry.shard_of(self.cohort[i])]
+                            .push(MaskUpload {
+                                client,
+                                factor,
+                                payload: p,
+                            });
+                        }
+                        None => {
+                            // quarantined — but its masks committed, so
+                            // like a post-commit dropout it stays on the
+                            // roster and leaves residue to repair
+                            ctx.counters.quarantined += 1;
+                            tel.add(Counter::ClientsQuarantined, 1);
+                            self.lost_mass += mass;
+                            batch.roster.push(client);
+                            self.post_dropped.push(client);
+                        }
+                    }
+                    continue;
+                }
+            }
             meter.add_payload(&payload);
             tel.payload(&payload);
-            let client = self.cohort[i] as u64;
             batch.roster.push(client);
             batch.groups[registry.shard_of(self.cohort[i])]
                 .push(MaskUpload { client, factor, payload });
         }
-        self.transmitted = batch.roster.len();
+        self.transmitted = batch.roster.len() - self.post_dropped.len();
         if batch.roster.is_empty() {
-            return vec![0.0; dim];
+            self.aggregate = vec![0.0; dim];
+            return;
         }
+        self.mask_roster = batch.roster.clone();
         // shards with no participants are dropped — their partials would
         // merge as no-ops
         batch.groups.retain(|g| !g.is_empty());
+        if batch.groups.is_empty() {
+            // every roster member dropped after committing masks: no
+            // upload exists, so there is no ring sum to repair — the
+            // round contributes nothing
+            self.aggregate = vec![0.0; dim];
+            return;
+        }
         let partials: Vec<ShardPartial> = runner
             .secure_partials(batch)
             .into_iter()
             .map(ShardPartial::Masked)
             .collect();
         tel.collect_jobs(self.round, &mut |buf| runner.drain_timings(buf));
-        aggregate::finish(
-            aggregate::tree_reduce(partials)
-                .expect("some shard has a participant"),
-        )
+        match aggregate::tree_reduce(partials)
+            .expect("some shard has a participant")
+        {
+            ShardPartial::Masked(sum) => self.masked_sum = Some(sum),
+            ShardPartial::Plain(_) => {
+                unreachable!("masked path produced a plain partial")
+            }
+        }
     }
 
     /// The plain-f32 path: uploads in cohort order (cohort position,
@@ -488,26 +703,82 @@ impl RoundMachine {
     /// densify-then-accumulate reference, selectable via
     /// `TrainOptions::densify_folds` as the baseline arm). The meter
     /// records each payload's measured frame length.
+    ///
+    /// Fault injection mirrors the masked path, minus the mask-roster
+    /// bookkeeping (no masks exist here): crashed clients simply never
+    /// upload, quarantined clients are excluded, and mutations that
+    /// survive the integrity checks fold as garbage.
+    #[allow(clippy::too_many_arguments)]
     fn plain_aggregate(
         &mut self,
         opts: &TrainOptions,
         registry: &Registry,
         dim: usize,
+        mut faults: Option<&mut FaultCtx>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
         tel: &mut Telemetry,
     ) -> Vec<f32> {
         let decision = self.decision.as_ref().expect("negotiate ran");
+        let round = self.round as u64;
         let mut uploads: Vec<(usize, Payload, f32)> = Vec::new();
         for (i, o) in self.outcomes.iter_mut().enumerate() {
             if !self.selected[i] {
                 continue;
             }
-            let factor = (self.weights[i] / decision.probs[i]) as f32;
+            let mass = self.weights[i] / decision.probs[i];
+            let factor = mass as f32;
+            self.sel_mass += mass;
+            let client = self.cohort[i] as u64;
+            if let Some(ctx) = faults.as_deref_mut() {
+                if ctx.plan.crash_pre(client, round) {
+                    ctx.counters.crash_pre += 1;
+                    tel.add(Counter::FaultsCrashPre, 1);
+                    self.lost_mass += mass;
+                    continue;
+                }
+            }
             let payload = match &opts.compressor {
                 Some(c) => c.compress(&o.delta, round_rng),
                 None => Payload::Dense(std::mem::take(&mut o.delta)),
             };
+            if let Some(ctx) = faults.as_deref_mut() {
+                if ctx.plan.crash_post(client, round) {
+                    // no masks on this path: the crash is pure absence
+                    ctx.counters.crash_post += 1;
+                    tel.add(Counter::FaultsCrashPost, 1);
+                    self.lost_mass += mass;
+                    continue;
+                }
+                if ctx.plan.corrupts(client, round) {
+                    ctx.counters.corrupt += 1;
+                    tel.add(Counter::FaultsCorrupt, 1);
+                    let mut frame = Vec::new();
+                    payload.encode_into(&mut frame);
+                    let mut frng = ctx.plan.corruption_rng(client, round);
+                    faults::corrupt_frame(&mut frame, &mut frng);
+                    let checked = Payload::decode(&frame)
+                        .and_then(|p| p.validate_for_dim(dim).map(|_| p))
+                        .ok()
+                        .filter(|p| {
+                            p.max_abs() * factor.abs()
+                                < RING_SAFE_MAGNITUDE
+                        });
+                    match checked {
+                        Some(p) => {
+                            meter.add_payload(&p);
+                            tel.payload(&p);
+                            uploads.push((i, p, factor));
+                        }
+                        None => {
+                            ctx.counters.quarantined += 1;
+                            tel.add(Counter::ClientsQuarantined, 1);
+                            self.lost_mass += mass;
+                        }
+                    }
+                    continue;
+                }
+            }
             meter.add_payload(&payload);
             tel.payload(&payload);
             uploads.push((i, payload, factor));
@@ -553,7 +824,71 @@ impl RoundMachine {
         out
     }
 
-    /// (7)+(8) Master update, divergence guard, metrics and (periodic)
+    /// (7) Repair: recover from whatever the round's faults broke, then
+    /// hand the (now plain-f32) aggregate to Commit. Three actions, each
+    /// a no-op when its trigger is absent:
+    ///
+    /// * **Mask-residue subtraction** — roster members whose upload never
+    ///   arrived (crash-after-commitment, quarantine) left uncancelled
+    ///   pairwise masks in the ring sum; reconstruct each survivor↔drop
+    ///   pair stream and subtract it
+    ///   ([`SecureAggregator::recover`]), then decode. The subtraction
+    ///   happens in the exact ring, so the repaired aggregate is
+    ///   **bitwise** the plain fixed-point aggregation over the
+    ///   survivors.
+    /// * **Estimator renormalization** — the w_i/p_i estimator lost the
+    ///   mass of failed participants; rescale the aggregate by
+    ///   `sel_mass / surviving_mass` so its expectation stays anchored
+    ///   to the full selected set.
+    /// * **Empty-survivor guard** — when no participant's contribution
+    ///   survived, the round commits a no-op update (zero aggregate)
+    ///   rather than renormalizing over an empty set.
+    ///
+    /// With no faults the phase decodes the ring sum and nothing else —
+    /// bitwise identical to the pre-Repair pipeline (`lost_mass` is
+    /// exactly 0.0, so not a single float op touches the aggregate).
+    pub fn repair(
+        &mut self,
+        cfg: &ExperimentConfig,
+        faults: Option<&mut FaultCtx>,
+        tel: &mut Telemetry,
+    ) {
+        self.expect(Phase::Repair);
+        tel.span_begin(self.round, PhaseSpan::Repair);
+        if let Some(mut sum) = self.masked_sum.take() {
+            if !self.post_dropped.is_empty() {
+                let survivors: Vec<u64> = self
+                    .mask_roster
+                    .iter()
+                    .copied()
+                    .filter(|c| !self.post_dropped.contains(c))
+                    .collect();
+                SecureAggregator::new(cfg.seed ^ self.round as u64)
+                    .recover(&mut sum, &survivors, &self.post_dropped);
+                let repairs = self.post_dropped.len() as u64;
+                if let Some(ctx) = faults {
+                    ctx.counters.mask_repairs += repairs;
+                }
+                tel.add(Counter::MaskRepairs, repairs);
+            }
+            self.aggregate = SecureAggregator::decode_sum(&sum);
+        }
+        if self.lost_mass > 0.0 {
+            let surviving = self.sel_mass - self.lost_mass;
+            if surviving <= 0.0 || self.transmitted == 0 {
+                // nothing survived: a no-op round, not a division by the
+                // empty set
+                self.aggregate.iter_mut().for_each(|v| *v = 0.0);
+            } else {
+                let scale = (self.sel_mass / surviving) as f32;
+                tensor::scale(&mut self.aggregate, scale);
+            }
+        }
+        self.phase = Phase::Commit;
+        tel.span_end(self.round, PhaseSpan::Repair);
+    }
+
+    /// (8)+(9) Master update, divergence guard, metrics and (periodic)
     /// evaluation. Consumes the phase; the machine ends in `Done`.
     #[allow(clippy::too_many_arguments)]
     pub fn commit(
@@ -647,6 +982,7 @@ pub fn noop_record(round: usize, meter: &BitMeter) -> RoundRecord {
 mod tests {
     use super::*;
     use crate::config::{Algorithm, DataSpec, Strategy};
+    use crate::faults::{FaultCtx, FaultPlan};
 
     struct FixedRunner {
         dim: usize,
@@ -706,10 +1042,18 @@ mod tests {
             availability: 1.0,
             availability_trace: None,
             compressor: None,
+            fault_plan: None,
         }
     }
 
     fn run_one_round(shards: usize) -> (RoundRecord, Vec<f32>) {
+        run_one_round_with(shards, None)
+    }
+
+    fn run_one_round_with(
+        shards: usize,
+        mut faults: Option<&mut FaultCtx>,
+    ) -> (RoundRecord, Vec<f32>) {
         let c = cfg();
         let mut runner = FixedRunner { dim: 4, n: 12 };
         let registry = Registry::new(12, shards);
@@ -730,17 +1074,28 @@ mod tests {
         assert_eq!(m.phase(), Phase::NormReport);
         m.norm_report(&mut tel);
         assert_eq!(m.phase(), Phase::Negotiate);
-        m.negotiate(&sampler, &c, None, &mut meter, &mut round_rng, &mut tel);
+        m.negotiate(
+            &sampler,
+            &c,
+            None,
+            faults.as_deref_mut(),
+            &mut meter,
+            &mut round_rng,
+            &mut tel,
+        );
         assert_eq!(m.phase(), Phase::SecureAggregate);
         m.secure_aggregate(
             &c,
             &opts,
             &registry,
             &mut runner,
+            faults.as_deref_mut(),
             &mut meter,
             &mut round_rng,
             &mut tel,
         );
+        assert_eq!(m.phase(), Phase::Repair);
+        m.repair(&c, faults.as_deref_mut(), &mut tel);
         assert_eq!(m.phase(), Phase::Commit);
         let rec = m
             .commit(&c, &opts, 0.1, &mut x, &mut runner, &meter, &mut tel)
@@ -783,10 +1138,135 @@ mod tests {
             &sampler,
             &c,
             None,
+            None,
             &mut meter,
             &mut rng,
             &mut Telemetry::disabled(),
         );
+    }
+
+    /// Drive a full secure round (single shard) with a chaos context,
+    /// stopping after Repair so the machine's internals stay inspectable.
+    fn drive_secure_round(
+        c: &ExperimentConfig,
+        ctx: &mut FaultCtx,
+    ) -> RoundMachine {
+        let mut runner = FixedRunner { dim: 4, n: 12 };
+        let registry = Registry::new(12, 1);
+        let avail = Availability::AlwaysOn;
+        let sampler = Sampler::from_strategy(&c.strategy);
+        let mut meter = BitMeter::new();
+        let rng = Rng::new(c.seed).fork(0xF1);
+        let mut round_rng = rng.fork(0);
+        let opts = TrainOptions::default();
+        let mut tel = Telemetry::disabled();
+        let mut m = RoundMachine::new(0);
+        m.announce(c, &avail, &registry, None, &mut round_rng, &mut tel);
+        m.local_compute(&mut runner, &[0.0; 4], &mut tel);
+        m.norm_report(&mut tel);
+        m.negotiate(
+            &sampler,
+            c,
+            None,
+            Some(ctx),
+            &mut meter,
+            &mut round_rng,
+            &mut tel,
+        );
+        m.secure_aggregate(
+            c,
+            &opts,
+            &registry,
+            &mut runner,
+            Some(ctx),
+            &mut meter,
+            &mut round_rng,
+            &mut tel,
+        );
+        m.repair(c, Some(ctx), &mut tel);
+        m
+    }
+
+    #[test]
+    fn zero_rate_chaos_context_is_bitwise_inert() {
+        let (rec_ref, x_ref) = run_one_round(1);
+        let mut ctx = FaultCtx::new(FaultPlan::new(123));
+        let (rec, x) = run_one_round_with(1, Some(&mut ctx));
+        assert_eq!(rec.train_loss.to_bits(), rec_ref.train_loss.to_bits());
+        assert_eq!(rec.uplink_bits, rec_ref.uplink_bits);
+        assert_eq!(rec.transmitted, rec_ref.transmitted);
+        let a: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = x_ref.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(ctx.counters.injected(), 0);
+        assert_eq!(ctx.counters.repaired(), 0);
+    }
+
+    #[test]
+    fn chaos_wipeout_commits_a_noop_update() {
+        // every selected client crashes before upload: the round must
+        // commit an unchanged model, not renormalize over an empty set
+        let plan = FaultPlan { crash_pre: 1.0, ..FaultPlan::new(1) };
+        let mut ctx = FaultCtx::new(plan);
+        let (rec, x) = run_one_round_with(1, Some(&mut ctx));
+        assert!(ctx.counters.crash_pre > 0);
+        assert_eq!(rec.transmitted, 0);
+        assert!(rec.train_loss.is_finite());
+        assert_eq!(x, vec![0.0; 4], "zero aggregate must not move x");
+    }
+
+    #[test]
+    fn post_commit_dropout_repair_is_bitwise_survivor_aggregation() {
+        // the tentpole's secure-path acceptance property: subtracting
+        // the uncancelled mask residue of post-commit dropouts leaves
+        // exactly the plain fixed-point fold over the survivors
+        let c = cfg();
+        let mut found = false;
+        for seed in 0..64 {
+            let plan =
+                FaultPlan { crash_post: 0.5, ..FaultPlan::new(seed) };
+            let mut ctx = FaultCtx::new(plan.clone());
+            let m = drive_secure_round(&c, &mut ctx);
+            if ctx.counters.crash_post == 0 || m.transmitted == 0 {
+                continue; // need a partial dropout, not none/all
+            }
+            found = true;
+            assert_eq!(
+                ctx.counters.mask_repairs,
+                ctx.counters.crash_post
+            );
+            // expected: survivors' uploads encode-folded with no masks
+            // at all, then the same surviving-mass renormalization
+            let probs = &m.decision.as_ref().unwrap().probs;
+            let mut ring = vec![0u64; 4];
+            let mut streams = Vec::new();
+            let mut block = Vec::new();
+            for (i, &sel) in m.selected.iter().enumerate() {
+                if !sel {
+                    continue;
+                }
+                let client = m.cohort[i] as u64;
+                if plan.crash_post(client, 0) {
+                    continue;
+                }
+                let factor = (m.weights[i] / probs[i]) as f32;
+                let delta = vec![(m.cohort[i] + 1) as f32; 4];
+                kernels::scale_encode_mask_accumulate(
+                    &mut ring, &delta, factor, &mut streams, &mut block,
+                );
+            }
+            let mut want = SecureAggregator::decode_sum(&ring);
+            let scale =
+                (m.sel_mass / (m.sel_mass - m.lost_mass)) as f32;
+            tensor::scale(&mut want, scale);
+            let got: Vec<u32> =
+                m.aggregate.iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> =
+                want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "plan seed {seed}");
+            break;
+        }
+        assert!(found, "no plan seed produced a partial dropout");
     }
 
     #[test]

@@ -178,6 +178,7 @@ fn arm_cfg(tag: &str, rounds: usize) -> ExperimentConfig {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 

@@ -213,6 +213,7 @@ fn rounds_per_sec(quick: bool) -> (f64, usize) {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     };
     let mut engine = build_native_engine(&cfg);
     let b = bench("sim", quick);

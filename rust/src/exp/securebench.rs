@@ -167,6 +167,7 @@ fn sim_rounds_per_sec(
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     };
     let b = bench("secure/sim", quick);
     let name = format!("{tag}_rounds");

@@ -17,12 +17,20 @@
 //! (base q with a 24-round day cycle over 4 timezone groups),
 //! `churn<q>` (8-round sessions, 30% dropped), `outage<p>` (per-round
 //! whole-shard outage probability p) — see [`parse_availability_arm`].
+//!
+//! Fault arms compose the chaos layer into the grid: `none` is the
+//! fault-free arm, any other spec is a [`crate::faults::FaultPlan`] in
+//! the `--faults` CLI grammar with `'+'` joining kinds *within* an arm
+//! (`,` separates arms), e.g. `none,crash0.2+corrupt0.05` — see
+//! [`parse_fault_arms`]. Fault/repair tallies land in the
+//! `faults_injected`/`faults_repaired` CSV columns.
 
 use crate::compress::Compressor;
 use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use crate::coordinator::{
     CoordStats, Coordinator, CoordinatorOptions, ParallelRunner,
 };
+use crate::faults::{parse_fault_spec, FaultPlan};
 use crate::fl::availability::{Churn, Diurnal, Outage, Trace};
 use crate::fl::TrainOptions;
 use crate::metrics::{average_runs, RunResult};
@@ -97,6 +105,42 @@ pub fn parse_availability_arm(spec: &str) -> Result<AvailabilityArm, String> {
     ))
 }
 
+/// One fault arm of the grid: a display name plus the chaos plan it
+/// runs under (`None` = the fault-free arm).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultArm {
+    pub name: String,
+    pub plan: Option<FaultPlan>,
+}
+
+impl FaultArm {
+    pub fn none() -> FaultArm {
+        FaultArm { name: "none".into(), plan: None }
+    }
+}
+
+/// Parse a comma-separated fault-arm list (the `--faults` sweep
+/// grammar): each arm is `none` or a `'+'`-joined
+/// [`crate::faults::parse_fault_spec`] plan, e.g.
+/// `none,crash0.2+corrupt0.05,stall0.3+retries2`.
+pub fn parse_fault_arms(spec: &str) -> Result<Vec<FaultArm>, String> {
+    let mut arms = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if part == "none" {
+            arms.push(FaultArm::none());
+        } else {
+            arms.push(FaultArm {
+                name: part.to_string(),
+                plan: Some(parse_fault_spec(part)?),
+            });
+        }
+    }
+    if arms.is_empty() {
+        return Err("empty fault-arm list".into());
+    }
+    Ok(arms)
+}
+
 /// The grid axes plus the per-arm run shape.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
@@ -104,6 +148,8 @@ pub struct SweepSpec {
     /// `Compressor::None` is the uncompressed arm.
     pub compressors: Vec<Compressor>,
     pub availabilities: Vec<AvailabilityArm>,
+    /// Chaos-layer arms ([`FaultArm::none`] is the fault-free arm).
+    pub faults: Vec<FaultArm>,
     pub pools: Vec<usize>,
     /// Seeds averaged per arm (`base_seed..base_seed + seeds`).
     pub seeds: u64,
@@ -123,8 +169,9 @@ pub struct SweepSpec {
 
 impl SweepSpec {
     /// The CI smoke grid: {full, uniform, aocs} × {none} ×
-    /// {alwayson, bern0.7} × {40}, one seed, 6 rounds — seconds of work,
-    /// every layer exercised.
+    /// {alwayson, bern0.7} × {none, crash0.2+corrupt0.05} × {40}, one
+    /// seed, 6 rounds — seconds of work, every layer (the chaos layer
+    /// included) exercised.
     pub fn quick() -> SweepSpec {
         SweepSpec {
             strategies: vec![
@@ -137,6 +184,7 @@ impl SweepSpec {
                 AvailabilityArm::always_on(),
                 parse_availability_arm("bern0.7").unwrap(),
             ],
+            faults: parse_fault_arms("none,crash0.2+corrupt0.05").unwrap(),
             pools: vec![40],
             seeds: 1,
             base_seed: 1,
@@ -168,6 +216,7 @@ impl SweepSpec {
                 parse_availability_arm("bern0.7").unwrap(),
                 parse_availability_arm("diurnal0.8").unwrap(),
             ],
+            faults: vec![FaultArm::none()],
             pools: vec![60, 240],
             seeds: 3,
             base_seed: 1,
@@ -184,6 +233,7 @@ impl SweepSpec {
         self.strategies.len()
             * self.compressors.len()
             * self.availabilities.len()
+            * self.faults.len()
             * self.pools.len()
     }
 }
@@ -194,6 +244,8 @@ pub struct ArmSummary {
     pub strategy: String,
     pub compressor: String,
     pub availability: String,
+    /// The fault arm's name (`none` for the fault-free arm).
+    pub faults: String,
     pub pool: usize,
     pub seeds: u64,
     pub rounds: usize,
@@ -213,6 +265,12 @@ pub struct ArmSummary {
     /// Rounds actually driven across all the arm's seed runs
     /// (`spec.rounds × seeds` unless a run aborted).
     pub rounds_run: usize,
+    /// Chaos-layer faults injected, summed over the arm's seeds
+    /// (see [`crate::faults::FaultCounters::injected`]).
+    pub faults_injected: u64,
+    /// Chaos-layer repair actions taken, summed over the arm's seeds
+    /// (see [`crate::faults::FaultCounters::repaired`]).
+    pub faults_repaired: u64,
     /// Present when the sweep ran with [`SweepSpec::telemetry`]: the
     /// first seed's latency/counter rollup (distributions don't
     /// average — see `metrics::average_runs`).
@@ -220,11 +278,13 @@ pub struct ArmSummary {
 }
 
 impl ArmSummary {
+    #[allow(clippy::too_many_arguments)]
     fn from_run(
         run: &RunResult,
         strategy: &Strategy,
         compressor: &Compressor,
         availability: &AvailabilityArm,
+        fault: &FaultArm,
         pool: usize,
         seeds: u64,
         stats: &CoordStats,
@@ -252,6 +312,7 @@ impl ArmSummary {
             strategy: strategy.name().into(),
             compressor: compressor.name(),
             availability: availability.name.clone(),
+            faults: fault.name.clone(),
             pool,
             seeds,
             rounds: run.rounds.len(),
@@ -265,6 +326,8 @@ impl ArmSummary {
             shards_outaged: stats.shards_outaged,
             shards_dropped: stats.shards_dropped,
             rounds_run: stats.rounds_run,
+            faults_injected: stats.faults.injected(),
+            faults_repaired: stats.faults.repaired(),
             telemetry: run.telemetry.clone(),
         }
     }
@@ -274,6 +337,7 @@ impl ArmSummary {
             ("strategy", Json::str(self.strategy.clone())),
             ("compressor", Json::str(self.compressor.clone())),
             ("availability", Json::str(self.availability.clone())),
+            ("faults", Json::str(self.faults.clone())),
             ("pool", Json::num(self.pool as f64)),
             ("seeds", Json::num(self.seeds as f64)),
             ("rounds", Json::num(self.rounds as f64)),
@@ -290,6 +354,8 @@ impl ArmSummary {
             ("shards_outaged", Json::num(self.shards_outaged as f64)),
             ("shards_dropped", Json::num(self.shards_dropped as f64)),
             ("rounds_run", Json::num(self.rounds_run as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("faults_repaired", Json::num(self.faults_repaired as f64)),
         ];
         if let Some(t) = &self.telemetry {
             pairs.push(("telemetry", t.to_json()));
@@ -299,10 +365,11 @@ impl ArmSummary {
 
     fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.strategy,
             self.compressor,
             self.availability,
+            self.faults,
             self.pool,
             self.seeds,
             self.rounds,
@@ -315,17 +382,19 @@ impl ArmSummary {
             self.noop_rounds,
             self.shards_outaged,
             self.shards_dropped,
-            self.rounds_run
+            self.rounds_run,
+            self.faults_injected,
+            self.faults_repaired
         )
     }
 }
 
 /// The CSV header [`SweepReport::to_csv`] emits (column semantics:
 /// EXPERIMENTS.md §Scenarios).
-pub const CSV_HEADER: &str = "strategy,compressor,availability,pool,seeds,\
-rounds,final_train_loss,final_accuracy,mean_alpha,total_uplink_bytes,\
-bytes_per_round,mean_transmitted,noop_rounds,shards_outaged,\
-shards_dropped,rounds_run";
+pub const CSV_HEADER: &str = "strategy,compressor,availability,faults,pool,\
+seeds,rounds,final_train_loss,final_accuracy,mean_alpha,\
+total_uplink_bytes,bytes_per_round,mean_transmitted,noop_rounds,\
+shards_outaged,shards_dropped,rounds_run,faults_injected,faults_repaired";
 
 /// A completed grid.
 #[derive(Clone, Debug)]
@@ -378,14 +447,21 @@ fn arm_cfg(
     strategy: &Strategy,
     compressor: &Compressor,
     availability: &AvailabilityArm,
+    fault: &FaultArm,
     pool: usize,
 ) -> ExperimentConfig {
     ExperimentConfig {
+        // fault-free arms keep the historical name (no suffix churn)
         name: format!(
-            "sweep_{}_{}_{}_p{pool}",
+            "sweep_{}_{}_{}_p{pool}{}",
             strategy.name(),
             compressor.name(),
-            availability.name
+            availability.name,
+            if fault.plan.is_some() {
+                format!("_{}", fault.name)
+            } else {
+                String::new()
+            }
         ),
         seed: spec.base_seed,
         rounds: spec.rounds,
@@ -410,6 +486,7 @@ fn arm_cfg(
             Compressor::None => None,
             c => Some(c.clone()),
         },
+        fault_plan: fault.plan.clone(),
     }
 }
 
@@ -418,77 +495,79 @@ fn arm_cfg(
 /// (`metrics::average_runs`, the paper's mean-over-seeds convention).
 pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String> {
     let mut arms = Vec::with_capacity(spec.arm_count());
+    let mut grid = Vec::new();
     for pool in &spec.pools {
         for availability in &spec.availabilities {
-            for strategy in &spec.strategies {
-                for compressor in &spec.compressors {
-                    let cfg = arm_cfg(
-                        spec,
-                        strategy,
-                        compressor,
-                        availability,
-                        *pool,
-                    );
-                    let train_opts = TrainOptions {
-                        telemetry: if spec.telemetry {
-                            TelemetryConfig::summary_only()
-                        } else {
-                            TelemetryConfig::off()
-                        },
-                        ..TrainOptions::default()
-                    };
-                    let mut runs = Vec::with_capacity(spec.seeds as usize);
-                    let mut stats = CoordStats::default();
-                    for s in 0..spec.seeds.max(1) {
-                        let mut c = cfg.clone();
-                        c.seed = spec.base_seed + s;
-                        let engine = build_native_engine(&c);
-                        let mut runner = ParallelRunner::new(engine, 1);
-                        let mut coordinator =
-                            Coordinator::new(CoordinatorOptions {
-                                shards: spec.shards.max(1),
-                                ..CoordinatorOptions::default()
-                            });
-                        runs.push(coordinator.run(
-                            &c,
-                            &mut runner,
-                            &train_opts,
-                        )?);
-                        stats.shards_dropped +=
-                            coordinator.stats.shards_dropped;
-                        stats.shards_outaged +=
-                            coordinator.stats.shards_outaged;
-                        stats.noop_rounds += coordinator.stats.noop_rounds;
-                        stats.rounds_run += coordinator.stats.rounds_run;
+            for fault in &spec.faults {
+                for strategy in &spec.strategies {
+                    for compressor in &spec.compressors {
+                        grid.push((
+                            *pool,
+                            availability,
+                            fault,
+                            strategy,
+                            compressor,
+                        ));
                     }
-                    let avg = average_runs(&runs);
-                    let summary = ArmSummary::from_run(
-                        &avg,
-                        strategy,
-                        compressor,
-                        availability,
-                        *pool,
-                        spec.seeds.max(1),
-                        &stats,
-                    );
-                    if verbose {
-                        println!(
-                            "sweep {}×{}×{}×p{}: loss {:.4} acc {:.3} \
-                             {:.0} B/round sent {:.1}/round",
-                            summary.strategy,
-                            summary.compressor,
-                            summary.availability,
-                            summary.pool,
-                            summary.final_train_loss,
-                            summary.final_accuracy,
-                            summary.bytes_per_round,
-                            summary.mean_transmitted,
-                        );
-                    }
-                    arms.push(summary);
                 }
             }
         }
+    }
+    for (pool, availability, fault, strategy, compressor) in grid {
+        let cfg = arm_cfg(spec, strategy, compressor, availability, fault, pool);
+        let train_opts = TrainOptions {
+            telemetry: if spec.telemetry {
+                TelemetryConfig::summary_only()
+            } else {
+                TelemetryConfig::off()
+            },
+            ..TrainOptions::default()
+        };
+        let mut runs = Vec::with_capacity(spec.seeds as usize);
+        let mut stats = CoordStats::default();
+        for s in 0..spec.seeds.max(1) {
+            let mut c = cfg.clone();
+            c.seed = spec.base_seed + s;
+            let engine = build_native_engine(&c);
+            let mut runner = ParallelRunner::new(engine, 1);
+            let mut coordinator = Coordinator::new(CoordinatorOptions {
+                shards: spec.shards.max(1),
+                ..CoordinatorOptions::default()
+            });
+            runs.push(coordinator.run(&c, &mut runner, &train_opts)?);
+            stats.shards_dropped += coordinator.stats.shards_dropped;
+            stats.shards_outaged += coordinator.stats.shards_outaged;
+            stats.noop_rounds += coordinator.stats.noop_rounds;
+            stats.rounds_run += coordinator.stats.rounds_run;
+            stats.faults.absorb(&coordinator.stats.faults);
+        }
+        let avg = average_runs(&runs);
+        let summary = ArmSummary::from_run(
+            &avg,
+            strategy,
+            compressor,
+            availability,
+            fault,
+            pool,
+            spec.seeds.max(1),
+            &stats,
+        );
+        if verbose {
+            println!(
+                "sweep {}×{}×{}×{}×p{}: loss {:.4} acc {:.3} \
+                 {:.0} B/round sent {:.1}/round",
+                summary.strategy,
+                summary.compressor,
+                summary.availability,
+                summary.faults,
+                summary.pool,
+                summary.final_train_loss,
+                summary.final_accuracy,
+                summary.bytes_per_round,
+                summary.mean_transmitted,
+            );
+        }
+        arms.push(summary);
     }
     Ok(SweepReport { quick: spec.quick, arms })
 }
@@ -518,9 +597,44 @@ mod tests {
     }
 
     #[test]
+    fn fault_arm_grammar() {
+        let arms = parse_fault_arms("none,crash0.2+corrupt0.05").unwrap();
+        assert_eq!(arms.len(), 2);
+        assert_eq!(arms[0], FaultArm::none());
+        assert_eq!(arms[1].name, "crash0.2+corrupt0.05");
+        let plan = arms[1].plan.as_ref().unwrap();
+        assert_eq!(plan.crash_pre, 0.2);
+        assert_eq!(plan.crash_post, 0.2);
+        assert_eq!(plan.corrupt, 0.05);
+        assert_eq!(plan.stall, 0.0);
+        let stall = parse_fault_arms("stall0.3+retries2").unwrap();
+        assert_eq!(stall[0].plan.as_ref().unwrap().max_retries, 2);
+        assert!(parse_fault_arms("").is_err());
+        assert!(parse_fault_arms("gremlin0.1").is_err());
+        assert!(parse_fault_arms("crash1.5").is_err());
+    }
+
+    /// Validate every arm config a spec's grid builds.
+    fn validate_grid(spec: &SweepSpec) {
+        for pool in &spec.pools {
+            for avail in &spec.availabilities {
+                for fault in &spec.faults {
+                    for s in &spec.strategies {
+                        for c in &spec.compressors {
+                            arm_cfg(spec, s, c, avail, fault, *pool)
+                                .validate()
+                                .unwrap();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn quick_spec_covers_the_acceptance_arms() {
         let spec = SweepSpec::quick();
-        assert_eq!(spec.arm_count(), 6);
+        assert_eq!(spec.arm_count(), 12);
         let names: Vec<&str> =
             spec.strategies.iter().map(Strategy::name).collect();
         assert_eq!(names, vec!["full", "uniform", "aocs"]);
@@ -532,35 +646,22 @@ mod tests {
             .availabilities
             .iter()
             .any(|a| matches!(&a.trace, Some(t) if t.base_q < 1.0)));
-        // every arm config the quick grid builds must validate
-        for pool in &spec.pools {
-            for avail in &spec.availabilities {
-                for s in &spec.strategies {
-                    for c in &spec.compressors {
-                        arm_cfg(&spec, s, c, avail, *pool)
-                            .validate()
-                            .unwrap();
-                    }
-                }
-            }
-        }
+        // the CI smoke grid must include a fault-free arm and a chaos
+        // arm that can actually fire
+        assert!(spec.faults.iter().any(|f| f.plan.is_none()));
+        assert!(spec
+            .faults
+            .iter()
+            .any(|f| matches!(&f.plan, Some(p) if !p.is_zero())));
+        validate_grid(&spec);
     }
 
     #[test]
     fn default_grid_validates() {
         let spec = SweepSpec::default_grid();
         assert_eq!(spec.arm_count(), 4 * 2 * 3 * 2);
-        for pool in &spec.pools {
-            for avail in &spec.availabilities {
-                for s in &spec.strategies {
-                    for c in &spec.compressors {
-                        arm_cfg(&spec, s, c, avail, *pool)
-                            .validate()
-                            .unwrap();
-                    }
-                }
-            }
-        }
+        assert_eq!(spec.faults, vec![FaultArm::none()]);
+        validate_grid(&spec);
     }
 
     #[test]
@@ -572,6 +673,7 @@ mod tests {
                 AvailabilityArm::always_on(),
                 parse_availability_arm("bern0.6").unwrap(),
             ],
+            faults: vec![FaultArm::none()],
             pools: vec![24],
             seeds: 1,
             base_seed: 5,
@@ -619,6 +721,7 @@ mod tests {
                 AvailabilityArm::always_on(),
                 parse_availability_arm("outage0.5").unwrap(),
             ],
+            faults: vec![FaultArm::none()],
             pools: vec![24],
             seeds: 2,
             base_seed: 1,
@@ -657,6 +760,52 @@ mod tests {
         }
     }
 
+    /// Satellite pin: a chaos arm surfaces its fault/repair tallies in
+    /// the arm record while the fault-free arm of the same grid stays
+    /// at zero, and the widened CSV stays column-aligned.
+    #[test]
+    fn fault_arm_reports_chaos_counters() {
+        let spec = SweepSpec {
+            strategies: vec![Strategy::Uniform],
+            compressors: vec![Compressor::None],
+            availabilities: vec![AvailabilityArm::always_on()],
+            faults: parse_fault_arms("none,crash0.3+corrupt0.2").unwrap(),
+            pools: vec![24],
+            seeds: 2,
+            base_seed: 1,
+            rounds: 6,
+            cohort: 8,
+            budget: 4,
+            shards: 3,
+            quick: true,
+            telemetry: false,
+        };
+        let report = run_sweep(&spec, false).unwrap();
+        assert_eq!(report.arms.len(), 2);
+        let clean = &report.arms[0];
+        let chaos = &report.arms[1];
+        assert_eq!(clean.faults, "none");
+        assert_eq!(clean.faults_injected, 0);
+        assert_eq!(clean.faults_repaired, 0);
+        assert_eq!(chaos.faults, "crash0.3+corrupt0.2");
+        // p=0.3 crash over ~4 transmitters × 6 rounds × 2 seeds:
+        // astronomically unlikely to dodge every draw (seed is pinned)
+        assert!(chaos.faults_injected > 0, "{chaos:?}");
+        // chaos must not poison the headline metrics
+        assert!(chaos.final_train_loss.is_finite());
+        for arm in &report.arms {
+            let j = arm.to_json();
+            assert_eq!(
+                j.get("faults_injected").as_usize(),
+                Some(arm.faults_injected as usize)
+            );
+        }
+        let header_cols = CSV_HEADER.split(',').count();
+        for line in report.to_csv().lines() {
+            assert_eq!(line.split(',').count(), header_cols);
+        }
+    }
+
     /// `telemetry: true` attaches a per-arm summary with all six phase
     /// spans and a consistent round count.
     #[test]
@@ -665,6 +814,7 @@ mod tests {
             strategies: vec![Strategy::Uniform],
             compressors: vec![Compressor::None],
             availabilities: vec![AvailabilityArm::always_on()],
+            faults: vec![FaultArm::none()],
             pools: vec![24],
             seeds: 1,
             base_seed: 5,

@@ -1,0 +1,539 @@
+//! Deterministic chaos layer: seeded fault injection and the bookkeeping
+//! the round state machine needs to repair what the faults break.
+//!
+//! Production-scale FL must assume clients vanish mid-round and bytes
+//! arrive mangled. A [`FaultPlan`] makes that regime *reproducible*:
+//! every fault is a pure function of `(client, round)` (or
+//! `(shard, round, exchange, attempt)` for negotiation stalls) over
+//! dedicated seed streams, mirroring [`crate::fl::availability::Trace`].
+//! Enabling a plan never consumes or perturbs the cohort/selection RNG,
+//! so a zero-rate plan degrades **bitwise** to the fault-free trajectory
+//! — the property the integration suite pins.
+//!
+//! Four injection points, matching where real deployments fail:
+//!
+//! * **crash-before-upload** (`crash_pre`): the client negotiated but its
+//!   upload never starts — it neither commits pairwise masks nor sends
+//!   bytes. Pure absence; no repair beyond estimator renormalization.
+//! * **crash-after-mask-commitment** (`crash_post`): under secure
+//!   aggregation the client joined the mask roster (its pairwise masks
+//!   are woven into everyone else's uploads) and *then* died. Its
+//!   uncancelled mask residue must be reconstructed and subtracted in
+//!   the Repair phase ([`crate::secure_agg::SecureAggregator::recover`]).
+//! * **payload corruption/truncation** (`corrupt`): the upload arrives
+//!   but its wire frame is mangled in flight ([`corrupt_frame`]). Frames
+//!   that fail the hardened decode ([`crate::wire::Payload::decode`] +
+//!   [`crate::wire::Payload::validate_for_dim`]) quarantine the client;
+//!   mutations that survive integrity checks fold silently, exactly as
+//!   they would in production.
+//! * **stalled negotiation partials** (`stall`): a sharded-AOCS scalar
+//!   partial misses its delivery window. The coordinator retries with
+//!   bounded exponential backoff (modeled as attempt-indexed draws — a
+//!   later attempt is an independent, later delivery) and degrades the
+//!   shard to last-good probabilities when retries are exhausted.
+//!
+//! ```
+//! use fedsamp::faults::FaultPlan;
+//! let plan = FaultPlan { crash_post: 0.2, ..FaultPlan::new(7)};
+//! // pure per-(client, round) predicates: replayable anywhere
+//! assert_eq!(plan.crash_post(3, 1), plan.crash_post(3, 1));
+//! assert!(!FaultPlan::new(7).crash_post(3, 1)); // zero rate never fires
+//! ```
+
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Seed-stream labels for the fault draws — dedicated streams, so chaos
+/// never consumes (or perturbs) the round RNG that drives selection.
+const CRASH_PRE_STREAM: u64 = 0xC4A5_15B4_E302_AD00;
+const CRASH_POST_STREAM: u64 = 0xC4A5_1AF7_E302_AD01;
+const CORRUPT_STREAM: u64 = 0xBAD0_B17E_5000_0002;
+const CORRUPT_BYTES_STREAM: u64 = 0xBAD0_B17E_5000_0003;
+const STALL_STREAM: u64 = 0x57A1_1ED0_AC75_0004;
+
+/// Seed used when a plan comes from a CLI/sweep spec string rather than
+/// config JSON — fixed so `--faults crash0.2` is reproducible across
+/// runs and machines (the same convention as the sweep's trace arms).
+pub const SPEC_FAULT_SEED: u64 = 0xFA17_5EED;
+
+/// Default bounded-retry budget for stalled negotiation partials.
+pub const DEFAULT_MAX_RETRIES: u32 = 3;
+
+/// A deterministic fault-injection plan: per-kind rates over dedicated
+/// seed streams. All predicates are pure functions — two evaluations of
+/// the same `(client, round)` always agree, and a zero rate never even
+/// constructs an RNG (the draw-free guard every hot path relies on).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the plan's dedicated draw streams (independent of the
+    /// experiment seed so chaos ablations can hold it fixed).
+    pub seed: u64,
+    /// Per-(client, round) probability the client crashes before its
+    /// upload starts (no mask commitment, no bytes), in `[0, 1]`.
+    pub crash_pre: f64,
+    /// Per-(client, round) probability the client crashes after
+    /// committing its pairwise masks but before its upload arrives
+    /// (secure path: leaves uncancelled residue), in `[0, 1]`.
+    pub crash_post: f64,
+    /// Per-(client, round) probability the upload's wire frame is
+    /// corrupted or truncated in flight, in `[0, 1]`.
+    pub corrupt: f64,
+    /// Per-(shard, round, exchange, attempt) probability a sharded
+    /// negotiation partial stalls past its delivery window, in `[0, 1)`
+    /// (1.0 would stall every retry forever, which is a dead master,
+    /// not a fault model).
+    pub stall: f64,
+    /// Bounded retry budget per stalled partial before the shard is
+    /// degraded to last-good probabilities.
+    pub max_retries: u32,
+}
+
+impl FaultPlan {
+    /// An all-zero plan over `seed`: injects nothing, draws nothing.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            crash_pre: 0.0,
+            crash_post: 0.0,
+            corrupt: 0.0,
+            stall: 0.0,
+            max_retries: DEFAULT_MAX_RETRIES,
+        }
+    }
+
+    /// True when no fault kind can ever fire — the coordinator skips
+    /// building a [`FaultCtx`] entirely (bitwise-inert fast path).
+    pub fn is_zero(&self) -> bool {
+        self.crash_pre <= 0.0
+            && self.crash_post <= 0.0
+            && self.corrupt <= 0.0
+            && self.stall <= 0.0
+    }
+
+    fn draw(&self, stream: u64, a: u64, b: u64, p: f64) -> bool {
+        // draw-free guards: rate-0 plans construct no RNG at all, and
+        // certain faults burn no entropy either
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        Rng::new(self.seed ^ stream).fork(a).fork(b).bernoulli(p)
+    }
+
+    /// Does `client` crash before upload at `round`?
+    pub fn crash_pre(&self, client: u64, round: u64) -> bool {
+        self.draw(CRASH_PRE_STREAM, round, client, self.crash_pre)
+    }
+
+    /// Does `client` crash after mask commitment at `round`? A
+    /// crash-before-upload takes precedence: a client cannot commit
+    /// masks it never lived to compute.
+    pub fn crash_post(&self, client: u64, round: u64) -> bool {
+        !self.crash_pre(client, round)
+            && self.draw(CRASH_POST_STREAM, round, client, self.crash_post)
+    }
+
+    /// Is `client`'s upload frame corrupted in flight at `round`?
+    /// (Only meaningful for clients that upload at all.)
+    pub fn corrupts(&self, client: u64, round: u64) -> bool {
+        self.draw(CORRUPT_STREAM, round, client, self.corrupt)
+    }
+
+    /// Does delivery attempt `attempt` of `shard`'s partial for scalar
+    /// exchange `exchange` stall at `round`? Attempt-indexed draws model
+    /// exponential backoff: each retry is an independent, later delivery
+    /// attempt, so the per-partial stall-out probability is
+    /// `stall^(max_retries + 1)`.
+    pub fn stalls(&self, shard: u64, round: u64, exchange: u64, attempt: u64) -> bool {
+        if self.stall <= 0.0 {
+            return false;
+        }
+        if self.stall >= 1.0 {
+            return true;
+        }
+        Rng::new(self.seed ^ STALL_STREAM)
+            .fork(round)
+            .fork(shard)
+            .fork(exchange)
+            .fork(attempt)
+            .bernoulli(self.stall)
+    }
+
+    /// The dedicated byte-mutation RNG for `client`'s round-`round`
+    /// frame — separate stream from the fire/no-fire draw so adding
+    /// mutation entropy never changes *which* uploads corrupt.
+    pub fn corruption_rng(&self, client: u64, round: u64) -> Rng {
+        Rng::new(self.seed ^ CORRUPT_BYTES_STREAM).fork(round).fork(client)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("crash_pre", self.crash_pre),
+            ("crash_post", self.crash_post),
+            ("corrupt", self.corrupt),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("fault_plan.{name} must be in [0, 1]"));
+            }
+        }
+        if !(0.0..1.0).contains(&self.stall) {
+            return Err("fault_plan.stall must be in [0, 1)".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("crash_pre", Json::num(self.crash_pre)),
+            ("crash_post", Json::num(self.crash_post)),
+            ("corrupt", Json::num(self.corrupt)),
+            ("stall", Json::num(self.stall)),
+            ("max_retries", Json::num(self.max_retries as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultPlan, String> {
+        let seed = v.get("seed").as_f64().unwrap_or(0.0) as u64;
+        let mut plan = FaultPlan::new(seed);
+        plan.crash_pre = v.get("crash_pre").as_f64().unwrap_or(0.0);
+        plan.crash_post = v.get("crash_post").as_f64().unwrap_or(0.0);
+        plan.corrupt = v.get("corrupt").as_f64().unwrap_or(0.0);
+        plan.stall = v.get("stall").as_f64().unwrap_or(0.0);
+        plan.max_retries = v
+            .get("max_retries")
+            .as_usize()
+            .map(|r| r as u32)
+            .unwrap_or(DEFAULT_MAX_RETRIES);
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// Parse a CLI/sweep fault spec into a plan over [`SPEC_FAULT_SEED`].
+///
+/// Grammar: kinds joined by `,` or `+` —
+/// `crash<p>` (sets both crash rates), `crashpre<p>`, `crashpost<p>`,
+/// `corrupt<p>`, `stall<p>`, `retries<k>`, `seed<k>`.
+/// Examples: `crash0.2,corrupt0.05` · `crashpost0.3+stall0.1+retries2`.
+pub fn parse_fault_spec(spec: &str) -> Result<FaultPlan, String> {
+    let mut plan = FaultPlan::new(SPEC_FAULT_SEED);
+    for token in spec.split([',', '+']).filter(|t| !t.is_empty()) {
+        let rate = |rest: &str| -> Result<f64, String> {
+            rest.parse::<f64>()
+                .map_err(|_| format!("bad fault rate in token '{token}'"))
+        };
+        // longest prefixes first: "crash" is a prefix of the others
+        if let Some(rest) = token.strip_prefix("crashpre") {
+            plan.crash_pre = rate(rest)?;
+        } else if let Some(rest) = token.strip_prefix("crashpost") {
+            plan.crash_post = rate(rest)?;
+        } else if let Some(rest) = token.strip_prefix("crash") {
+            let p = rate(rest)?;
+            plan.crash_pre = p;
+            plan.crash_post = p;
+        } else if let Some(rest) = token.strip_prefix("corrupt") {
+            plan.corrupt = rate(rest)?;
+        } else if let Some(rest) = token.strip_prefix("stall") {
+            plan.stall = rate(rest)?;
+        } else if let Some(rest) = token.strip_prefix("retries") {
+            plan.max_retries = rest
+                .parse::<u32>()
+                .map_err(|_| format!("bad retry count in token '{token}'"))?;
+        } else if let Some(rest) = token.strip_prefix("seed") {
+            plan.seed = rest
+                .parse::<u64>()
+                .map_err(|_| format!("bad seed in token '{token}'"))?;
+        } else {
+            return Err(format!(
+                "unknown fault kind '{token}' (want crash/crashpre/crashpost/\
+                 corrupt/stall/retries/seed)"
+            ));
+        }
+    }
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Mutate an encoded wire frame in place the way a flaky transport
+/// would: a handful of byte flips, occasionally a truncation. The
+/// mutation is guaranteed to change the frame (a flip XORs a nonzero
+/// value), so every `corrupt` fire produces a genuinely adversarial
+/// input for the hardened decoder.
+pub fn corrupt_frame(frame: &mut Vec<u8>, rng: &mut Rng) {
+    if frame.is_empty() {
+        return;
+    }
+    if rng.bernoulli(0.25) {
+        // truncation: cut the frame short (possibly to nothing)
+        let keep = rng.below(frame.len() as u64) as usize;
+        frame.truncate(keep);
+    }
+    if frame.is_empty() {
+        return;
+    }
+    let flips = 1 + rng.below(4) as usize;
+    for _ in 0..flips {
+        let pos = rng.below(frame.len() as u64) as usize;
+        frame[pos] ^= 1 + rng.below(255) as u8;
+    }
+}
+
+/// Running fault/repair tally for one run — the chaos analogue of
+/// `CoordStats`, surfaced in run JSON (via telemetry counters) and the
+/// sweep CSV.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Clients that crashed before upload.
+    pub crash_pre: u64,
+    /// Clients that crashed after mask commitment.
+    pub crash_post: u64,
+    /// Uploads whose frames were corrupted in flight.
+    pub corrupt: u64,
+    /// Corrupted uploads that failed integrity checks and were
+    /// quarantined (the rest folded silently, as in production).
+    pub quarantined: u64,
+    /// Stalled negotiation-partial delivery attempts.
+    pub stalls: u64,
+    /// Retry attempts issued for stalled partials.
+    pub retries: u64,
+    /// Shards degraded to last-good probabilities after retries ran out.
+    pub shards_degraded: u64,
+    /// Post-commit dropouts whose uncancelled mask residue was
+    /// reconstructed and subtracted in the Repair phase.
+    pub mask_repairs: u64,
+}
+
+impl FaultCounters {
+    /// Total faults injected across all kinds.
+    pub fn injected(&self) -> u64 {
+        self.crash_pre + self.crash_post + self.corrupt + self.stalls
+    }
+
+    /// Total repair actions taken (mask-residue subtractions,
+    /// quarantines, shard degradations).
+    pub fn repaired(&self) -> u64 {
+        self.mask_repairs + self.quarantined + self.shards_degraded
+    }
+
+    /// Fold another tally into this one (multi-seed sweep arms sum
+    /// their per-run counters).
+    pub fn absorb(&mut self, other: &FaultCounters) {
+        self.crash_pre += other.crash_pre;
+        self.crash_post += other.crash_post;
+        self.corrupt += other.corrupt;
+        self.quarantined += other.quarantined;
+        self.stalls += other.stalls;
+        self.retries += other.retries;
+        self.shards_degraded += other.shards_degraded;
+        self.mask_repairs += other.mask_repairs;
+    }
+}
+
+/// Per-run chaos state threaded through the round machine: the plan,
+/// the running counters, and the last-good probability cache that
+/// degraded negotiation shards fall back to.
+#[derive(Clone, Debug)]
+pub struct FaultCtx {
+    pub plan: FaultPlan,
+    pub counters: FaultCounters,
+    /// client id → last successfully negotiated inclusion probability
+    /// (the degradation target for stalled-out shards).
+    pub last_probs: HashMap<u64, f64>,
+}
+
+impl FaultCtx {
+    pub fn new(plan: FaultPlan) -> FaultCtx {
+        FaultCtx { plan, counters: FaultCounters::default(), last_probs: HashMap::new() }
+    }
+
+    /// Build the coordinator's chaos context: `None` unless the config
+    /// carries a plan that can actually fire (zero-rate plans stay on
+    /// the bitwise fault-free path).
+    pub fn from_plan(plan: Option<&FaultPlan>) -> Option<FaultCtx> {
+        plan.filter(|p| !p.is_zero()).map(|p| FaultCtx::new(p.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+    use crate::wire::Payload;
+
+    #[test]
+    fn zero_plan_never_fires() {
+        let plan = FaultPlan::new(9);
+        assert!(plan.is_zero());
+        for round in 0..20 {
+            for client in 0..50 {
+                assert!(!plan.crash_pre(client, round));
+                assert!(!plan.crash_post(client, round));
+                assert!(!plan.corrupts(client, round));
+            }
+            assert!(!plan.stalls(0, round, 1, 0));
+        }
+        assert!(FaultCtx::from_plan(Some(&plan)).is_none());
+        assert!(FaultCtx::from_plan(None).is_none());
+    }
+
+    #[test]
+    fn prop_draws_are_pure_and_seed_dependent() {
+        quick("fault-draws", |rng, _| {
+            let plan = FaultPlan {
+                crash_pre: rng.f64(),
+                crash_post: rng.f64(),
+                corrupt: rng.f64(),
+                stall: 0.99 * rng.f64(),
+                ..FaultPlan::new(rng.next_u64())
+            };
+            let (c, k) = (rng.next_u64() % 10_000, rng.next_u64() % 1000);
+            if plan.crash_pre(c, k) != plan.crash_pre(c, k)
+                || plan.crash_post(c, k) != plan.crash_post(c, k)
+                || plan.corrupts(c, k) != plan.corrupts(c, k)
+                || plan.stalls(c % 16, k, 2, 1) != plan.stalls(c % 16, k, 2, 1)
+            {
+                return Err("fault draw not a pure function".into());
+            }
+            if plan.crash_pre(c, k) && plan.crash_post(c, k) {
+                return Err("crash_pre and crash_post both fired".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rates_are_respected_empirically() {
+        let plan = FaultPlan { crash_pre: 0.3, corrupt: 0.1, ..FaultPlan::new(5) };
+        let (mut pre, mut cor) = (0usize, 0usize);
+        let total = 20_000;
+        for round in 0..200 {
+            for client in 0..100 {
+                pre += plan.crash_pre(client, round) as usize;
+                cor += plan.corrupts(client, round) as usize;
+            }
+        }
+        let pre_rate = pre as f64 / total as f64;
+        let cor_rate = cor as f64 / total as f64;
+        assert!((pre_rate - 0.3).abs() < 0.02, "{pre_rate}");
+        assert!((cor_rate - 0.1).abs() < 0.02, "{cor_rate}");
+    }
+
+    #[test]
+    fn spec_grammar_round_trips_the_readme_examples() {
+        let plan = parse_fault_spec("crash0.2,corrupt0.05").unwrap();
+        assert_eq!(plan.crash_pre, 0.2);
+        assert_eq!(plan.crash_post, 0.2);
+        assert_eq!(plan.corrupt, 0.05);
+        assert_eq!(plan.seed, SPEC_FAULT_SEED);
+        assert_eq!(plan.max_retries, DEFAULT_MAX_RETRIES);
+
+        let plan = parse_fault_spec("crashpost0.3+stall0.1+retries2+seed7").unwrap();
+        assert_eq!(plan.crash_pre, 0.0);
+        assert_eq!(plan.crash_post, 0.3);
+        assert_eq!(plan.stall, 0.1);
+        assert_eq!(plan.max_retries, 2);
+        assert_eq!(plan.seed, 7);
+
+        assert!(parse_fault_spec("crashpre1.0").unwrap().crash_pre == 1.0);
+        assert!(parse_fault_spec("jitter0.5").is_err());
+        assert!(parse_fault_spec("crash1.5").is_err()); // validate() rejects
+        assert!(parse_fault_spec("stall1.0").is_err());
+        assert!(parse_fault_spec("crashNaNo").is_err());
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan {
+            crash_pre: 0.1,
+            crash_post: 0.25,
+            corrupt: 0.05,
+            stall: 0.2,
+            max_retries: 5,
+            ..FaultPlan::new(42)
+        };
+        assert_eq!(FaultPlan::from_json(&plan.to_json()).unwrap(), plan);
+        assert!(FaultPlan::from_json(&Json::obj(vec![(
+            "crash_pre",
+            Json::num(2.0)
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn corrupt_frame_always_changes_a_nonempty_frame() {
+        quick("corrupt-frame", |rng, _| {
+            let len = 1 + rng.below(200) as usize;
+            let frame: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let mut mutated = frame.clone();
+            let mut frng = Rng::new(rng.next_u64());
+            corrupt_frame(&mut mutated, &mut frng);
+            if mutated == frame {
+                return Err("mutation left the frame untouched".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corruption_rng_is_per_client_per_round() {
+        let plan = FaultPlan { corrupt: 1.0, ..FaultPlan::new(3) };
+        let mut payload = Vec::new();
+        Payload::Dense(vec![1.0; 8]).encode_into(&mut payload);
+        let mut a = payload.clone();
+        let mut b = payload.clone();
+        corrupt_frame(&mut a, &mut plan.corruption_rng(1, 0));
+        corrupt_frame(&mut b, &mut plan.corruption_rng(2, 0));
+        // different clients draw from different mutation streams
+        assert_ne!(a, b);
+        let mut a2 = payload.clone();
+        corrupt_frame(&mut a2, &mut plan.corruption_rng(1, 0));
+        assert_eq!(a, a2, "mutation must be replayable");
+    }
+
+    #[test]
+    fn stallout_needs_every_attempt_to_stall() {
+        let plan = FaultPlan { stall: 0.5, max_retries: 2, ..FaultPlan::new(8) };
+        // empirical stall-out rate across many (shard, round) cells is
+        // roughly stall^(retries+1)
+        let mut outs = 0usize;
+        let cells = 4000;
+        for round in 0..500u64 {
+            for shard in 0..8u64 {
+                let mut attempt = 0u64;
+                let stalled_out = loop {
+                    if !plan.stalls(shard, round, 1, attempt) {
+                        break false;
+                    }
+                    if attempt >= plan.max_retries as u64 {
+                        break true;
+                    }
+                    attempt += 1;
+                };
+                outs += stalled_out as usize;
+            }
+        }
+        let rate = outs as f64 / cells as f64;
+        assert!((rate - 0.125).abs() < 0.03, "stall-out rate {rate}");
+    }
+
+    #[test]
+    fn counters_summarize() {
+        let c = FaultCounters {
+            crash_pre: 2,
+            crash_post: 3,
+            corrupt: 4,
+            quarantined: 1,
+            stalls: 5,
+            retries: 4,
+            shards_degraded: 1,
+            mask_repairs: 3,
+        };
+        assert_eq!(c.injected(), 14);
+        assert_eq!(c.repaired(), 5);
+    }
+}

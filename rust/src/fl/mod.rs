@@ -194,6 +194,7 @@ mod tests {
             availability: 1.0,
             availability_trace: None,
             compressor: None,
+            fault_plan: None,
         }
     }
 

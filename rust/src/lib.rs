@@ -17,7 +17,7 @@
 //!   variance & improvement-factor machinery (Defs. 11–12).
 //! * [`coordinator`] — the sharded round coordinator: an explicit round
 //!   state machine (Announce → LocalCompute → NormReport → Negotiate →
-//!   SecureAggregate → Commit) over a sharded client registry with
+//!   SecureAggregate → Repair → Commit) over a sharded client registry with
 //!   worker-pool shard execution, per-shard partial tree-aggregation and
 //!   deadline/straggler handling.
 //! * [`fl`] — FedAvg (Alg. 3) / DSGD (Eq. 2) master-client protocol with
@@ -32,6 +32,11 @@
 //!   ({strategy × compressor × availability × pool} with multi-seed
 //!   averaging → `BENCH_sweep.{json,csv}`).
 //! * [`secure_agg`] — pairwise-mask additive secure aggregation.
+//! * [`faults`] — the chaos layer: seeded, deterministic fault injection
+//!   (mid-round crashes, payload corruption, stalled negotiation
+//!   partials) over dedicated seed streams, paired with the round
+//!   machine's Repair phase (mask-residue recovery, estimator
+//!   renormalization, quarantine); a zero-rate plan is bitwise inert.
 //! * [`telemetry`] — opt-in observability: round-phase spans, per-worker
 //!   job timing histograms (p50/p90/p99), per-round counters, and JSONL +
 //!   Chrome `trace_event` export; off by default and bitwise-free when
@@ -63,6 +68,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod faults;
 pub mod fl;
 pub mod metrics;
 pub mod model;

@@ -16,6 +16,7 @@ use fedsamp::coordinator::{
 };
 use fedsamp::exp::figures::{run_figure, Scale};
 use fedsamp::exp::{default_artifacts_dir, run_experiment};
+use fedsamp::faults::parse_fault_spec;
 use fedsamp::fl::TrainOptions;
 use fedsamp::metrics::RunResult;
 use fedsamp::model::quadratic::QuadraticProblem;
@@ -166,6 +167,14 @@ fn cmd_train(args: &[String]) -> i32 {
             "update compressor: none|randk<K>|qsgd<S> (overrides the \
              config file's compressor; none disables)",
         )
+        .opt(
+            "faults",
+            None,
+            "chaos fault plan: '+'- or ','-joined kinds, e.g. \
+             crash0.2+corrupt0.05 (crash|crashpre|crashpost|corrupt|\
+             stall<p>, retries<k>, seed<k>; overrides the config file's \
+             fault_plan)",
+        )
         .opt("sim", Some("false"), "true = force native sim engine")
         .opt("out", None, "directory for JSON/CSV results")
         .opt("artifacts", None, "artifacts directory")
@@ -215,6 +224,15 @@ fn cmd_train(args: &[String]) -> i32 {
         match Compressor::parse(spec) {
             Ok(Compressor::None) => cfg.compressor = None,
             Ok(c) => cfg.compressor = Some(c),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(spec) = p.get("faults") {
+        match parse_fault_spec(spec) {
+            Ok(plan) => cfg.fault_plan = Some(plan),
             Err(e) => {
                 eprintln!("{e}");
                 return 2;
@@ -281,6 +299,13 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         Some("0"),
         "per-round probability that a shard misses the deadline",
     )
+    .opt(
+        "faults",
+        None,
+        "chaos fault plan: '+'- or ','-joined kinds, e.g. \
+         crash0.2,corrupt0.05 (crash|crashpre|crashpost|corrupt|\
+         stall<p>, retries<k>, seed<k>)",
+    )
     .opt("out", None, "directory for JSON/CSV results")
     .flag(
         "sharded-negotiation",
@@ -327,6 +352,15 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         eprintln!("--deadline-miss must be in [0, 1]");
         return 2;
     }
+    if let Some(spec) = p.get("faults") {
+        match parse_fault_spec(spec) {
+            Ok(plan) => cfg.fault_plan = Some(plan),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
 
     let engine = build_native_engine(&cfg);
     let mut runner = ParallelRunner::new(engine, workers);
@@ -366,6 +400,24 @@ fn cmd_coordinate(args: &[String]) -> i32 {
                 coordinator.stats.shards_outaged,
                 coordinator.stats.noop_rounds
             );
+            if cfg.fault_plan.is_some() {
+                let f = &coordinator.stats.faults;
+                println!(
+                    "chaos stats: {} injected ({} crash-pre, {} crash-post, \
+                     {} corrupt, {} stalls), {} repaired ({} mask repairs, \
+                     {} quarantined, {} shards degraded), {} retries",
+                    f.injected(),
+                    f.crash_pre,
+                    f.crash_post,
+                    f.corrupt,
+                    f.stalls,
+                    f.repaired(),
+                    f.mask_repairs,
+                    f.quarantined,
+                    f.shards_degraded,
+                    f.retries
+                );
+            }
             if let Some(out) = p.get("out") {
                 match run.save(out) {
                     Ok(path) => println!("saved {path}"),
@@ -443,6 +495,13 @@ fn cmd_sweep(args: &[String]) -> i32 {
         Some("alwayson,bern0.7,diurnal0.8"),
         "grid: comma list of alwayson|bern<q>|diurnal<q>|churn<q>|outage<p>",
     )
+    .opt(
+        "faults",
+        Some("none"),
+        "grid: comma list of chaos fault arms — none, or '+'-joined \
+         kinds (crash|crashpre|crashpost|corrupt|stall<p>, retries<k>, \
+         seed<k>), e.g. none,crash0.2+corrupt0.05",
+    )
     .opt("pools", Some("60,240"), "grid: comma list of pool sizes")
     .opt("seeds", Some("3"), "grid: seeds averaged per arm")
     .opt("grid-rounds", Some("30"), "grid: rounds per run")
@@ -464,7 +523,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
 
     if p.str("kind") == "grid" {
         use fedsamp::exp::sweep::{
-            parse_availability_arm, run_sweep, SweepSpec,
+            parse_availability_arm, parse_fault_arms, run_sweep, SweepSpec,
         };
         let mut spec = if p.flag("quick") {
             SweepSpec::quick()
@@ -503,10 +562,18 @@ fn cmd_sweep(args: &[String]) -> i32 {
                     }
                 }
             }
+            let faults = match parse_fault_arms(&p.str("faults")) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
             let mut spec = SweepSpec::default_grid();
             spec.strategies = strategies;
             spec.compressors = compressors;
             spec.availabilities = availabilities;
+            spec.faults = faults;
             spec.pools = p.usize_list("pools");
             spec.seeds = p.u64("seeds");
             spec.base_seed = p.u64("seed");

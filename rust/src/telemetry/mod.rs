@@ -33,7 +33,10 @@ use crate::util::stats::{LogHistogram, LogSummary};
 use crate::wire::Payload;
 use export::{JsonlWriter, TraceWriter};
 
-/// The six phases of one federated round, in protocol order.
+/// The seven phases of one federated round, in protocol order. The
+/// Repair span doubles as the repair-latency histogram: it is recorded
+/// every committed round, so a fault-free round contributes its (near
+/// zero) baseline and chaos runs surface the recovery cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PhaseSpan {
     Announce = 0,
@@ -41,11 +44,19 @@ pub enum PhaseSpan {
     NormReport = 2,
     Negotiate = 3,
     SecureAggregate = 4,
-    Commit = 5,
+    Repair = 5,
+    Commit = 6,
 }
 
-pub const PHASE_NAMES: [&str; 6] =
-    ["announce", "local_compute", "norm_report", "negotiate", "secure_aggregate", "commit"];
+pub const PHASE_NAMES: [&str; 7] = [
+    "announce",
+    "local_compute",
+    "norm_report",
+    "negotiate",
+    "secure_aggregate",
+    "repair",
+    "commit",
+];
 
 impl PhaseSpan {
     pub fn name(self) -> &'static str {
@@ -113,6 +124,22 @@ pub enum Counter {
     PayloadBytesDense = 11,
     PayloadBytesSparse = 12,
     PayloadBytesQuantized = 13,
+    /// Injected crash-before-upload faults (chaos layer).
+    FaultsCrashPre = 14,
+    /// Injected crash-after-mask-commitment faults.
+    FaultsCrashPost = 15,
+    /// Injected payload corruption/truncation faults.
+    FaultsCorrupt = 16,
+    /// Stalled negotiation-partial delivery attempts.
+    FaultsStalled = 17,
+    /// Retry attempts issued for stalled negotiation partials.
+    NegotiationRetries = 18,
+    /// Shards degraded to last-good probabilities after retries ran out.
+    ShardsDegraded = 19,
+    /// Clients quarantined because their payload failed integrity checks.
+    ClientsQuarantined = 20,
+    /// Post-commit dropouts whose mask residue was repaired out.
+    MaskRepairs = 21,
 }
 
 pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
@@ -130,9 +157,17 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "payload_bytes_dense",
     "payload_bytes_sparse",
     "payload_bytes_quantized",
+    "faults_crash_pre",
+    "faults_crash_post",
+    "faults_corrupt",
+    "faults_stalled",
+    "negotiation_retries",
+    "shards_degraded",
+    "clients_quarantined",
+    "mask_repairs",
 ];
 
-const NUM_COUNTERS: usize = 14;
+const NUM_COUNTERS: usize = 22;
 
 /// Event ring capacity; full ring forces an early drain to the writers.
 const RING_CAPACITY: usize = 8192;
@@ -190,7 +225,7 @@ pub struct Telemetry {
     events: Vec<Event>,
     jsonl: Option<JsonlWriter>,
     trace: Option<TraceWriter>,
-    span_t0: [u64; 6],
+    span_t0: [u64; 7],
     phase_hist: Vec<LogHistogram>,
     exec_hist: Vec<LogHistogram>,
     queue_hist: Vec<LogHistogram>,
@@ -212,7 +247,7 @@ impl Telemetry {
             events: Vec::new(),
             jsonl: None,
             trace: None,
-            span_t0: [0; 6],
+            span_t0: [0; 7],
             phase_hist: Vec::new(),
             exec_hist: Vec::new(),
             queue_hist: Vec::new(),
@@ -250,8 +285,8 @@ impl Telemetry {
             events: Vec::with_capacity(RING_CAPACITY),
             jsonl,
             trace,
-            span_t0: [0; 6],
-            phase_hist: (0..6).map(|_| LogHistogram::new()).collect(),
+            span_t0: [0; 7],
+            phase_hist: (0..7).map(|_| LogHistogram::new()).collect(),
             exec_hist: (0..3).map(|_| LogHistogram::new()).collect(),
             queue_hist: (0..3).map(|_| LogHistogram::new()).collect(),
             items_hist: (0..3).map(|_| LogHistogram::new()).collect(),

@@ -57,6 +57,69 @@ const TAG_DENSE: u8 = 0;
 const TAG_SPARSE: u8 = 1;
 const TAG_QUANT: u8 = 2;
 
+/// Typed decode/validation failure for an adversarial or damaged frame.
+///
+/// Every way a hostile frame can lie is a variant here, not a panic and
+/// not silently folded garbage: the chaos layer's corruption faults and
+/// any future real transport route through these errors to quarantine
+/// the sender.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Frame ended before the field at byte `at` (needed `need` more).
+    Truncated { at: usize, need: usize },
+    /// Bytes left over after a complete payload frame.
+    TrailingBytes(usize),
+    /// First byte is not a known payload tag.
+    UnknownTag(u8),
+    /// Sparse indices not strictly ascending (duplicates double-count
+    /// in the scatter fold).
+    UnsortedIndices,
+    /// A carried f32 (`field`) is NaN or infinite — folding it would
+    /// silently poison the aggregate.
+    NonFinite { field: &'static str },
+    /// A sparse index addresses past the model dimension.
+    IndexOutOfRange { index: u32, dim: usize },
+    /// Payload's coordinate count disagrees with the model dimension.
+    DimMismatch { got: usize, want: usize },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { at, need } => write!(
+                f,
+                "truncated payload frame at byte {at} (need {need} more)"
+            ),
+            DecodeError::TrailingBytes(n) => {
+                write!(f, "{n} trailing bytes after payload frame")
+            }
+            DecodeError::UnknownTag(tag) => {
+                write!(f, "unknown payload tag {tag}")
+            }
+            DecodeError::UnsortedIndices => {
+                write!(f, "sparse indices must be strictly ascending")
+            }
+            DecodeError::NonFinite { field } => {
+                write!(f, "non-finite {field} in payload")
+            }
+            DecodeError::IndexOutOfRange { index, dim } => {
+                write!(f, "sparse index {index} out of dim {dim}")
+            }
+            DecodeError::DimMismatch { got, want } => {
+                write!(f, "payload dim {got} does not match model dim {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl From<DecodeError> for String {
+    fn from(e: DecodeError) -> String {
+        e.to_string()
+    }
+}
+
 /// One client upload, in its native (possibly compressed) representation.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
@@ -152,8 +215,11 @@ impl Payload {
     }
 
     /// Decode one frame; the input must be exactly one encoded payload
-    /// (trailing bytes are an error, as is truncation).
-    pub fn decode(bytes: &[u8]) -> Result<Payload, String> {
+    /// (trailing bytes are an error, as is truncation). Carried floats
+    /// must be finite: a NaN or infinity would silently poison every
+    /// coordinate it is folded into, so adversarial frames carrying them
+    /// are rejected here, where the sender can still be quarantined.
+    pub fn decode(bytes: &[u8]) -> Result<Payload, DecodeError> {
         let mut r = Reader { b: bytes, i: 0 };
         // pre-allocations are bounded by the bytes actually present so a
         // corrupt length prefix yields the truncation error, not an
@@ -163,7 +229,7 @@ impl Payload {
                 let n = r.u32()? as usize;
                 let mut v = Vec::with_capacity(n.min(r.remaining() / 4));
                 for _ in 0..n {
-                    v.push(r.f32()?);
+                    v.push(r.finite_f32("dense value")?);
                 }
                 Payload::Dense(v)
             }
@@ -178,22 +244,20 @@ impl Payload {
                 // makes the scatter fold bit-exact to the densified
                 // reference — reject frames that violate it rather than
                 // letting a duplicate index double-count downstream.
-                // (Index *range* is validated at fold/densify time,
-                // where the model dimension is known.)
+                // (Index *range* is validated against the model dim by
+                // `validate_for_dim`, where the dimension is known.)
                 if !indices.windows(2).all(|w| w[0] < w[1]) {
-                    return Err(
-                        "sparse indices must be strictly ascending".into()
-                    );
+                    return Err(DecodeError::UnsortedIndices);
                 }
                 let mut values = Vec::with_capacity(k);
                 for _ in 0..k {
-                    values.push(r.f32()?);
+                    values.push(r.finite_f32("sparse value")?);
                 }
                 Payload::SparseK { indices, values }
             }
             TAG_QUANT => {
                 let dim = r.u32()?;
-                let norm = r.f32()?;
+                let norm = r.finite_f32("quantized norm")?;
                 let levels = r.u32()?;
                 let words = kernels::qsgd_packed_words(dim as usize, levels);
                 let mut packed =
@@ -203,15 +267,75 @@ impl Payload {
                 }
                 Payload::Quantized { dim, norm, levels, packed }
             }
-            tag => return Err(format!("unknown payload tag {tag}")),
+            tag => return Err(DecodeError::UnknownTag(tag)),
         };
         if r.i != bytes.len() {
-            return Err(format!(
-                "{} trailing bytes after payload frame",
-                bytes.len() - r.i
-            ));
+            return Err(DecodeError::TrailingBytes(bytes.len() - r.i));
         }
         Ok(payload)
+    }
+
+    /// Validate the payload against the model dimension — the checks
+    /// [`Payload::decode`] cannot do because a frame does not carry the
+    /// model dim: sparse index range / count, dense and quantized
+    /// coordinate counts. A payload passing `decode` + `validate_for_dim`
+    /// is safe to fold (`densify_into` cannot panic on it).
+    pub fn validate_for_dim(&self, dim: usize) -> Result<(), DecodeError> {
+        match self {
+            Payload::Dense(v) => {
+                if v.len() != dim {
+                    return Err(DecodeError::DimMismatch {
+                        got: v.len(),
+                        want: dim,
+                    });
+                }
+            }
+            Payload::SparseK { indices, .. } => {
+                if indices.len() > dim {
+                    return Err(DecodeError::DimMismatch {
+                        got: indices.len(),
+                        want: dim,
+                    });
+                }
+                // ascending (decode invariant) ⇒ checking the last
+                // index bounds them all
+                if let Some(&last) = indices.last() {
+                    if last as usize >= dim {
+                        return Err(DecodeError::IndexOutOfRange {
+                            index: last,
+                            dim,
+                        });
+                    }
+                }
+            }
+            Payload::Quantized { dim: d, .. } => {
+                if *d as usize != dim {
+                    return Err(DecodeError::DimMismatch {
+                        got: *d as usize,
+                        want: dim,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Largest magnitude the payload can fold into any coordinate:
+    /// max |value| for dense/sparse, |norm| for quantized (a code word
+    /// reconstructs as ±norm·level/levels, bounded by the norm). The
+    /// round machine's integrity check uses this to quarantine
+    /// corrupted-but-decodable frames whose garbage magnitudes would
+    /// overflow the fixed-point aggregation ring.
+    pub fn max_abs(&self) -> f32 {
+        match self {
+            Payload::Dense(v) => {
+                v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+            }
+            Payload::SparseK { values, .. } => {
+                values.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+            }
+            Payload::Quantized { norm, .. } => norm.abs(),
+        }
     }
 
     /// Reconstruct the dense decompressed-equivalent vector into a
@@ -273,13 +397,10 @@ impl Reader<'_> {
         self.b.len() - self.i
     }
 
-    fn take<const N: usize>(&mut self) -> Result<[u8; N], String> {
+    fn take<const N: usize>(&mut self) -> Result<[u8; N], DecodeError> {
         let end = self.i + N;
         if end > self.b.len() {
-            return Err(format!(
-                "truncated payload frame at byte {} (need {N} more)",
-                self.i
-            ));
+            return Err(DecodeError::Truncated { at: self.i, need: N });
         }
         let mut out = [0u8; N];
         out.copy_from_slice(&self.b[self.i..end]);
@@ -287,19 +408,26 @@ impl Reader<'_> {
         Ok(out)
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
+    fn u8(&mut self) -> Result<u8, DecodeError> {
         Ok(self.take::<1>()?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    fn u32(&mut self) -> Result<u32, DecodeError> {
         Ok(u32::from_le_bytes(self.take::<4>()?))
     }
 
-    fn f32(&mut self) -> Result<f32, String> {
-        Ok(f32::from_le_bytes(self.take::<4>()?))
+    fn finite_f32(
+        &mut self,
+        field: &'static str,
+    ) -> Result<f32, DecodeError> {
+        let x = f32::from_le_bytes(self.take::<4>()?);
+        if !x.is_finite() {
+            return Err(DecodeError::NonFinite { field });
+        }
+        Ok(x)
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    fn u64(&mut self) -> Result<u64, DecodeError> {
         Ok(u64::from_le_bytes(self.take::<8>()?))
     }
 }
@@ -436,9 +564,9 @@ mod tests {
 
     #[test]
     fn special_float_bits_survive_the_frame() {
-        // signed zero and NaN payloads must round-trip bit-for-bit —
-        // the frame carries raw f32 bit patterns, not values
-        let v = vec![0.0f32, -0.0, f32::NAN, f32::INFINITY, -1.5e-40];
+        // signed zero and denormal payloads must round-trip bit-for-bit
+        // — the frame carries raw f32 bit patterns, not values
+        let v = vec![0.0f32, -0.0, -1.5e-40, f32::MIN_POSITIVE];
         let p = Payload::Dense(v.clone());
         let mut frame = Vec::new();
         p.encode_into(&mut frame);
@@ -450,6 +578,102 @@ mod tests {
             }
             other => panic!("wrong kind {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn non_finite_floats_are_rejected_at_decode() {
+        // NaN/∞ anywhere in a frame would silently poison the fold —
+        // the hardened decoder refuses them with a typed error
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut frame = Vec::new();
+            Payload::Dense(vec![1.0, bad, 2.0]).encode_into(&mut frame);
+            assert!(matches!(
+                Payload::decode(&frame),
+                Err(DecodeError::NonFinite { field: "dense value" })
+            ));
+
+            let mut frame = Vec::new();
+            Payload::SparseK { indices: vec![2], values: vec![bad] }
+                .encode_into(&mut frame);
+            assert!(matches!(
+                Payload::decode(&frame),
+                Err(DecodeError::NonFinite { field: "sparse value" })
+            ));
+
+            let mut frame = Vec::new();
+            Payload::Quantized {
+                dim: 4,
+                norm: bad,
+                levels: 4,
+                packed: vec![0; kernels::qsgd_packed_words(4, 4)],
+            }
+            .encode_into(&mut frame);
+            assert!(matches!(
+                Payload::decode(&frame),
+                Err(DecodeError::NonFinite { field: "quantized norm" })
+            ));
+        }
+    }
+
+    #[test]
+    fn validate_for_dim_catches_range_and_count_lies() {
+        let d = 10usize;
+        // honest payloads pass
+        assert!(Payload::Dense(vec![0.0; d]).validate_for_dim(d).is_ok());
+        let sp = Payload::SparseK { indices: vec![0, 9], values: vec![1.0, 2.0] };
+        assert!(sp.validate_for_dim(d).is_ok());
+        // out-of-range sparse index
+        let bad = Payload::SparseK { indices: vec![0, 10], values: vec![1.0, 2.0] };
+        assert_eq!(
+            bad.validate_for_dim(d),
+            Err(DecodeError::IndexOutOfRange { index: 10, dim: d })
+        );
+        // more sparse coordinates than the model has
+        let fat = Payload::SparseK {
+            indices: (0..11).collect(),
+            values: vec![0.0; 11],
+        };
+        assert!(matches!(
+            fat.validate_for_dim(d),
+            Err(DecodeError::DimMismatch { got: 11, want: 10 })
+        ));
+        // dense / quantized dim mismatches
+        assert!(Payload::Dense(vec![0.0; 9]).validate_for_dim(d).is_err());
+        let q = Payload::Quantized {
+            dim: 8,
+            norm: 1.0,
+            levels: 4,
+            packed: vec![0; kernels::qsgd_packed_words(8, 4)],
+        };
+        assert!(q.validate_for_dim(d).is_err());
+        assert!(q.validate_for_dim(8).is_ok());
+    }
+
+    #[test]
+    fn prop_mutated_frames_never_panic_or_fold_garbage() {
+        // seeded byte-mutation fuzz over all three variants: every
+        // mutated frame either fails decode/validation (typed error) or
+        // decodes to a payload that is safe to densify and all-finite
+        use crate::faults::corrupt_frame;
+        quick("wire-mutation", |rng, _| {
+            let (p, d) = random_payload(rng);
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            let mut mrng = Rng::new(rng.next_u64());
+            corrupt_frame(&mut frame, &mut mrng);
+            let Ok(q) = Payload::decode(&frame) else {
+                return Ok(()); // typed rejection is the common case
+            };
+            if q.validate_for_dim(d).is_err() {
+                return Ok(()); // quarantine path
+            }
+            // survived integrity checks: folding must be total + finite
+            let dense = q.densify(d);
+            if dense.iter().any(|v| !v.is_finite()) {
+                return Err("validated payload densified non-finite".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

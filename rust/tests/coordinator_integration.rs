@@ -12,6 +12,7 @@ use fedsamp::coordinator::{
     Registry, RoundMachine,
 };
 use fedsamp::data::ClientData;
+use fedsamp::faults::{parse_fault_spec, FaultCounters, FaultPlan};
 use fedsamp::fl::availability::{Availability, Outage, Trace};
 use fedsamp::fl::comm::BitMeter;
 use fedsamp::fl::{train, TrainOptions};
@@ -46,6 +47,7 @@ fn cfg(strategy: Strategy) -> ExperimentConfig {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 
@@ -440,16 +442,26 @@ fn outage_and_deadline_drop_accounting_is_consistent() {
         assert_eq!(m.cohort(), b.cohort());
         m.local_compute(&mut runner, &x, &mut tel);
         m.norm_report(&mut tel);
-        m.negotiate(&sampler, &c, None, &mut meter, &mut round_rng, &mut tel);
+        m.negotiate(
+            &sampler,
+            &c,
+            None,
+            None,
+            &mut meter,
+            &mut round_rng,
+            &mut tel,
+        );
         m.secure_aggregate(
             &c,
             &opts,
             &registry,
             &mut runner,
+            None,
             &mut meter,
             &mut round_rng,
             &mut tel,
         );
+        m.repair(&c, None, &mut tel);
         let rec = m
             .commit(&c, &opts, 1.0, &mut x, &mut runner, &meter, &mut tel)
             .unwrap();
@@ -469,6 +481,99 @@ fn outage_and_deadline_drop_accounting_is_consistent() {
         "60 rounds at outage p=0.45 × deadline p=0.4 over 4 shards never \
          fired both loss mechanisms in one round — accounting untestable"
     );
+}
+
+#[test]
+fn zero_rate_fault_plan_is_bitwise_inert() {
+    // chaos-layer acceptance gate: a fault plan that can never fire must
+    // leave the trajectory bit-identical to the plan-free run across the
+    // full shard/worker acceptance matrix
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    let baseline = reference(&c);
+    c.fault_plan = Some(FaultPlan::new(0xC0FFEE));
+    for shards in [1usize, 4] {
+        for workers in [1usize, 3] {
+            let (run, stats) = coordinated(&c, shards, workers, None);
+            assert_trajectories_identical(
+                &baseline,
+                &run,
+                &format!("faults=0 shards={shards} workers={workers}"),
+            );
+            assert_eq!(stats.faults, FaultCounters::default());
+        }
+    }
+}
+
+#[test]
+fn chaos_secure_run_repairs_dropouts_end_to_end() {
+    // crash-after-commitment and in-flight corruption under secure
+    // aggregation: every round must complete (mask residues subtracted,
+    // estimator renormalized, quarantines absorbed) with finite losses
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    assert!(c.secure_updates);
+    c.rounds = 20;
+    c.fault_plan =
+        Some(parse_fault_spec("crashpost0.3+corrupt0.3").unwrap());
+    let (run, stats) = coordinated(&c, 4, 3, None);
+    assert_eq!(run.rounds.len(), c.rounds);
+    let f = stats.faults;
+    // ~4 transmitters × 20 rounds at p=0.3 each: dodging every draw is
+    // astronomically unlikely (the fault seed stream is pinned)
+    assert!(f.crash_post > 0, "{f:?}");
+    assert!(f.corrupt > 0, "{f:?}");
+    assert!(f.mask_repairs > 0, "{f:?}");
+    assert!(f.injected() > 0 && f.repaired() > 0);
+    for r in &run.rounds {
+        assert!(r.train_loss.is_finite(), "round {}: {f:?}", r.round);
+    }
+}
+
+#[test]
+fn chaos_plain_run_survives_crashes_and_quarantines() {
+    // same chaos arm on the plain-f32 path: failures are pure absences /
+    // exclusions, and the renormalized run still trains
+    let mut c = cfg(Strategy::Ocs);
+    c.secure_updates = false;
+    c.rounds = 20;
+    c.fault_plan =
+        Some(parse_fault_spec("crash0.2+corrupt0.3").unwrap());
+    let (run, stats) = coordinated(&c, 4, 2, None);
+    let f = stats.faults;
+    assert!(f.crash_pre > 0, "{f:?}");
+    assert!(f.crash_post > 0, "{f:?}");
+    assert!(f.corrupt > 0, "{f:?}");
+    assert_eq!(f.mask_repairs, 0, "no masks exist on the plain path");
+    for r in &run.rounds {
+        assert!(r.train_loss.is_finite());
+    }
+}
+
+#[test]
+fn stalled_negotiation_degrades_and_recovers() {
+    // stall faults live in the sharded AOCS negotiation: retries must be
+    // issued, some shards must exhaust them and degrade to last-good
+    // probabilities, and the run must keep training through it all
+    let mut c = cfg(Strategy::Aocs { j_max: 4 });
+    c.fault_plan = Some(parse_fault_spec("stall0.4+retries1").unwrap());
+    let engine = build_native_engine(&c);
+    let mut runner = ParallelRunner::new(engine, 2);
+    let mut coordinator = Coordinator::new(CoordinatorOptions {
+        shards: 4,
+        deadline: None,
+        sharded_negotiation: true,
+    });
+    let run = coordinator
+        .run(&c, &mut runner, &TrainOptions::default())
+        .unwrap();
+    let f = coordinator.stats.faults;
+    assert!(f.stalls > 0, "{f:?}");
+    assert!(f.retries > 0, "{f:?}");
+    // p=0.4 with one retry: a shard-exchange degrades with p=0.16; over
+    // 4 shards × ~9 exchanges × 12 rounds dodging all is implausible
+    assert!(f.shards_degraded > 0, "{f:?}");
+    for r in &run.rounds {
+        assert!(r.train_loss.is_finite());
+    }
 }
 
 #[test]

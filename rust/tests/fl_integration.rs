@@ -31,6 +31,7 @@ fn tiny_cfg(strategy: Strategy) -> ExperimentConfig {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 

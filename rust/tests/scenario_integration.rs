@@ -38,6 +38,7 @@ fn cfg(strategy: Strategy) -> ExperimentConfig {
         availability: 1.0,
         availability_trace: None,
         compressor: None,
+        fault_plan: None,
     }
 }
 
