@@ -1,0 +1,910 @@
+//! Durable coordinator checkpoints: crash-safe snapshots of the full
+//! master-side state, restored byte-for-byte so a killed run resumes
+//! onto the *identical* trajectory.
+//!
+//! The subsystem carries the same contract every other layer pins:
+//!
+//! * **Byte-exact framing.** A [`Snapshot`] serializes through the
+//!   `wire`-style little-endian codec (versioned magic header, length
+//!   framing, typed [`CheckpointError`] on every way a damaged file can
+//!   lie, a trailing FNV-1a checksum over the whole frame). Floats are
+//!   stored as raw IEEE-754 bits (`to_bits`/`from_bits`), so NaN
+//!   accuracies and last-ulp loss values survive the round trip
+//!   untouched.
+//! * **Crash-safe writes.** [`Snapshot::write_atomic`] writes to
+//!   `<path>.tmp`, fsyncs, then atomically renames over `<path>`: a kill
+//!   mid-write can never leave a truncated snapshot at the real path.
+//! * **What is snapshotted is only what round index cannot derive.**
+//!   The round RNG is forked fresh from the experiment seed each round
+//!   (`Rng::fork` is pure), the registry is stateless arithmetic, and
+//!   every fault/availability draw is a pure function of
+//!   `(client, round)` — so the checkpoint stores the *round index*, not
+//!   RNG stream positions, alongside the genuinely mutable state: model
+//!   vector, uplink meter, metrics history, coordinator/fault counters,
+//!   the AOCS last-good probability cache, and telemetry run totals.
+//! * **Config fingerprinting.** A snapshot binds to the canonical JSON
+//!   of its [`ExperimentConfig`] via [`config_fingerprint`]; resuming
+//!   under a different config is a typed
+//!   [`CheckpointError::ConfigMismatch`], not a silently divergent run.
+//!
+//! The same codec underlies the sweep's per-arm completion ledger
+//! ([`SweepLedger`]): one entry per finished `(arm, seed)` unit, so an
+//! interrupted grid resumes at the first unfinished unit and emits
+//! byte-identical `BENCH_sweep.json`/`.csv` (see `exp::sweep`).
+//!
+//! ```
+//! use fedsamp::checkpoint::{Snapshot, config_fingerprint};
+//! use fedsamp::config::presets;
+//! let cfg = presets::femnist(1, 3);
+//! let snap = Snapshot::empty(config_fingerprint(&cfg), 0);
+//! let bytes = snap.to_bytes();
+//! let back = Snapshot::from_bytes(&bytes).unwrap();
+//! assert_eq!(back.to_bytes(), bytes); // byte-exact round trip
+//! ```
+
+use std::io::Write as _;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::CoordStats;
+use crate::faults::FaultCounters;
+use crate::metrics::RoundRecord;
+
+/// Snapshot file magic ("FSNP": fedsamp snapshot).
+const SNAP_MAGIC: [u8; 4] = *b"FSNP";
+/// Sweep-ledger file magic ("FSLG": fedsamp sweep ledger).
+const LEDGER_MAGIC: [u8; 4] = *b"FSLG";
+/// Current snapshot/ledger format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit — the checksum and fingerprint hash. In-tree (no deps),
+/// deterministic across platforms, and a single flipped byte always
+/// changes the digest (the per-byte XOR→multiply step is injective in
+/// the running state).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of an experiment config: FNV-1a over its canonical JSON
+/// rendering. Any field that can steer the trajectory (seed, rounds,
+/// strategy, data, compressor, fault plan, …) is part of the canonical
+/// form, so two configs fingerprint equal iff a run under either is the
+/// same run.
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
+    fnv1a64(cfg.to_json().to_pretty().as_bytes())
+}
+
+/// Typed failure decoding or loading a snapshot/ledger — the checkpoint
+/// analogue of `wire::DecodeError`: every way a damaged or mismatched
+/// file can lie is a variant, not a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// File ended before the field at byte `at` (needed `need` more).
+    Truncated { at: usize, need: usize },
+    /// Bytes left over after a complete frame.
+    TrailingBytes(usize),
+    /// Leading magic is not a fedsamp snapshot/ledger.
+    BadMagic([u8; 4]),
+    /// Format version this build does not understand.
+    UnsupportedVersion(u32),
+    /// Trailing checksum does not match the frame contents.
+    ChecksumMismatch { got: u64, want: u64 },
+    /// Snapshot was taken under a different experiment config.
+    ConfigMismatch { got: u64, want: u64 },
+    /// Snapshot model dimension disagrees with the runner's.
+    DimMismatch { got: usize, want: usize },
+    /// Ledger belongs to a different sweep spec.
+    SpecMismatch { got: u64, want: u64 },
+    /// Filesystem failure reading or writing `path`.
+    Io { path: String, message: String },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Truncated { at, need } => write!(
+                f,
+                "truncated checkpoint at byte {at} (need {need} more)"
+            ),
+            CheckpointError::TrailingBytes(n) => {
+                write!(f, "{n} trailing bytes after checkpoint frame")
+            }
+            CheckpointError::BadMagic(m) => {
+                write!(f, "not a fedsamp checkpoint (magic {m:02x?})")
+            }
+            CheckpointError::UnsupportedVersion(v) => write!(
+                f,
+                "unsupported checkpoint format version {v} \
+                 (this build reads {FORMAT_VERSION})"
+            ),
+            CheckpointError::ChecksumMismatch { got, want } => write!(
+                f,
+                "checkpoint checksum mismatch (got {got:#018x}, \
+                 want {want:#018x}) — file is corrupt"
+            ),
+            CheckpointError::ConfigMismatch { got, want } => write!(
+                f,
+                "checkpoint was taken under a different experiment config \
+                 (snapshot fingerprint {got:#018x}, current {want:#018x}); \
+                 resume with the exact flags of the original run"
+            ),
+            CheckpointError::DimMismatch { got, want } => write!(
+                f,
+                "checkpoint model dimension {got} does not match the \
+                 runner dimension {want}"
+            ),
+            CheckpointError::SpecMismatch { got, want } => write!(
+                f,
+                "sweep ledger belongs to a different sweep spec \
+                 (ledger fingerprint {got:#018x}, current {want:#018x}); \
+                 rerun with the original grid flags or delete the ledger"
+            ),
+            CheckpointError::Io { path, message } => {
+                write!(f, "checkpoint I/O on {path}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<CheckpointError> for String {
+    fn from(e: CheckpointError) -> String {
+        e.to_string()
+    }
+}
+
+/// Typed CLI-surface parse failure for the checkpoint flags — carries
+/// the offending token so `--checkpoint-every banana` names the culprit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointSpecError {
+    /// `--checkpoint-every` is not a positive integer.
+    BadEvery { token: String },
+    /// `--resume` was given an empty path.
+    EmptyResumePath,
+}
+
+impl std::fmt::Display for CheckpointSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointSpecError::BadEvery { token } => write!(
+                f,
+                "bad --checkpoint-every '{token}' (want a round count, \
+                 e.g. --checkpoint-every 10; 0 disables)"
+            ),
+            CheckpointSpecError::EmptyResumePath => {
+                write!(f, "--resume needs a snapshot path")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointSpecError {}
+
+impl From<CheckpointSpecError> for String {
+    fn from(e: CheckpointSpecError) -> String {
+        e.to_string()
+    }
+}
+
+/// Parse the `--checkpoint-every` token: a non-negative round count
+/// (`0` = checkpointing disabled).
+pub fn parse_checkpoint_every(token: &str) -> Result<usize, CheckpointSpecError> {
+    token
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| CheckpointSpecError::BadEvery { token: token.to_string() })
+}
+
+/// Parse the `--resume` token: any non-empty path.
+pub fn parse_resume_path(token: &str) -> Result<String, CheckpointSpecError> {
+    let t = token.trim();
+    if t.is_empty() {
+        return Err(CheckpointSpecError::EmptyResumePath);
+    }
+    Ok(t.to_string())
+}
+
+/// Checkpoint knobs threaded through `TrainOptions` into the
+/// coordinator. Default = fully disabled (bitwise inert: the round loop
+/// takes no checkpoint branch, reads no clock, writes no file).
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointOptions {
+    /// Snapshot cadence in rounds (`0` = never checkpoint).
+    pub every: usize,
+    /// Snapshot path; required when `every > 0`.
+    pub out: Option<String>,
+    /// Restore from this snapshot before round 0 (and disarm a
+    /// `masterkill` fault — the kill already happened).
+    pub resume: Option<String>,
+}
+
+impl CheckpointOptions {
+    /// Enabled cadence + path, validated: `every > 0` without a path is
+    /// a config error the CLI surfaces before the run starts.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.every > 0 && self.out.is_none() {
+            return Err(
+                "--checkpoint-every needs --checkpoint-out <path>".into()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Chaos-layer state carried across a resume: the running fault/repair
+/// tally plus the AOCS last-good probability cache (serialized sorted by
+/// client id so encoding is deterministic).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultState {
+    pub counters: FaultCounters,
+    /// `(client id, last negotiated inclusion probability)`, ascending
+    /// by client id.
+    pub last_probs: Vec<(u64, f64)>,
+}
+
+/// One coordinator snapshot: everything the round loop mutates across
+/// rounds. See the module docs for why RNG stream positions and the
+/// registry cursor are *not* here (both derive from the round index).
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// [`config_fingerprint`] of the experiment this state belongs to.
+    pub config_fingerprint: u64,
+    /// First round the resumed loop should execute.
+    pub next_round: u64,
+    /// Global model vector, bit-exact f32s.
+    pub x: Vec<f32>,
+    /// Cumulative uplink bytes (`fl::comm::BitMeter`).
+    pub meter_bytes: u64,
+    /// Per-round metrics history (`metrics::RunResult::rounds`),
+    /// f64 fields bit-exact.
+    pub records: Vec<RoundRecord>,
+    /// Coordinator observability counters, fault tally included.
+    pub stats: CoordStats,
+    /// Chaos context state (`None` when the run carries no live plan).
+    pub fault: Option<FaultState>,
+    /// Telemetry run-total counters (empty when telemetry is off).
+    pub tel_counters: Vec<u64>,
+    /// Telemetry rounds flushed so far.
+    pub tel_rounds: u64,
+}
+
+impl Snapshot {
+    /// A round-zero snapshot with no history (doc tests, codec tests).
+    pub fn empty(config_fingerprint: u64, next_round: u64) -> Snapshot {
+        Snapshot { config_fingerprint, next_round, ..Snapshot::default() }
+    }
+
+    /// Encode the full frame: magic + version + body + FNV-1a checksum
+    /// of everything preceding it.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 4 * self.x.len() + 80 * self.records.len());
+        out.extend_from_slice(&SNAP_MAGIC);
+        put_u32(&mut out, FORMAT_VERSION);
+        put_u64(&mut out, self.config_fingerprint);
+        put_u64(&mut out, self.next_round);
+        put_u32(&mut out, self.x.len() as u32);
+        for &v in &self.x {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        put_u64(&mut out, self.meter_bytes);
+        put_u32(&mut out, self.records.len() as u32);
+        for r in &self.records {
+            put_record(&mut out, r);
+        }
+        put_stats(&mut out, &self.stats);
+        match &self.fault {
+            None => out.push(0),
+            Some(fs) => {
+                out.push(1);
+                put_fault_counters(&mut out, &fs.counters);
+                put_u32(&mut out, fs.last_probs.len() as u32);
+                for &(client, p) in &fs.last_probs {
+                    put_u64(&mut out, client);
+                    put_u64(&mut out, p.to_bits());
+                }
+            }
+        }
+        put_u32(&mut out, self.tel_counters.len() as u32);
+        for &c in &self.tel_counters {
+            put_u64(&mut out, c);
+        }
+        put_u64(&mut out, self.tel_rounds);
+        let sum = fnv1a64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode one frame; the input must be exactly one snapshot
+    /// (truncation, trailing bytes, bad magic/version and checksum
+    /// mismatches are all typed errors, mirroring `wire::Payload::decode`).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, CheckpointError> {
+        let body_len = check_frame(bytes, &SNAP_MAGIC)?;
+        let mut r = Reader { b: &bytes[..body_len], i: 8 };
+        let config_fingerprint = r.u64()?;
+        let next_round = r.u64()?;
+        let n = r.u32()? as usize;
+        // bounded preallocation: a corrupt length prefix yields the
+        // truncation error, not an attempted multi-GiB allocation
+        let mut x = Vec::with_capacity(n.min(r.remaining() / 4));
+        for _ in 0..n {
+            x.push(f32::from_bits(r.u32()?));
+        }
+        let meter_bytes = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut records = Vec::with_capacity(n.min(r.remaining() / 72));
+        for _ in 0..n {
+            records.push(get_record(&mut r)?);
+        }
+        let stats = get_stats(&mut r)?;
+        let fault = match r.u8()? {
+            0 => None,
+            _ => {
+                let counters = get_fault_counters(&mut r)?;
+                let k = r.u32()? as usize;
+                let mut last_probs = Vec::with_capacity(k.min(r.remaining() / 16));
+                for _ in 0..k {
+                    let client = r.u64()?;
+                    let p = f64::from_bits(r.u64()?);
+                    last_probs.push((client, p));
+                }
+                Some(FaultState { counters, last_probs })
+            }
+        };
+        let k = r.u32()? as usize;
+        let mut tel_counters = Vec::with_capacity(k.min(r.remaining() / 8));
+        for _ in 0..k {
+            tel_counters.push(r.u64()?);
+        }
+        let tel_rounds = r.u64()?;
+        if r.i != body_len {
+            return Err(CheckpointError::TrailingBytes(body_len - r.i));
+        }
+        Ok(Snapshot {
+            config_fingerprint,
+            next_round,
+            x,
+            meter_bytes,
+            records,
+            stats,
+            fault,
+            tel_counters,
+            tel_rounds,
+        })
+    }
+
+    /// Crash-safe write: encode, write to `<path>.tmp`, fsync, rename
+    /// over `path`. Returns the snapshot's encoded size in bytes.
+    pub fn write_atomic(&self, path: &str) -> Result<usize, CheckpointError> {
+        let bytes = self.to_bytes();
+        write_atomic(path, &bytes)?;
+        Ok(bytes.len())
+    }
+
+    /// Load and decode a snapshot file.
+    pub fn load(path: &str) -> Result<Snapshot, CheckpointError> {
+        let bytes = std::fs::read(path).map_err(|e| CheckpointError::Io {
+            path: path.to_string(),
+            message: e.to_string(),
+        })?;
+        Snapshot::from_bytes(&bytes)
+    }
+}
+
+/// Write `bytes` to `<path>.tmp`, fsync, and atomically rename over
+/// `path` — the shared crash-write sequence for snapshots, ledgers and
+/// the BENCH/run artifacts (DESIGN.md §11).
+pub fn write_atomic(path: &str, bytes: &[u8]) -> Result<(), CheckpointError> {
+    let io = |e: std::io::Error| CheckpointError::Io {
+        path: path.to_string(),
+        message: e.to_string(),
+    };
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(io)?;
+        }
+    }
+    let tmp = format!("{path}.tmp");
+    let mut f = std::fs::File::create(&tmp).map_err(io)?;
+    f.write_all(bytes).map_err(io)?;
+    f.sync_all().map_err(io)?;
+    drop(f);
+    std::fs::rename(&tmp, path).map_err(io)?;
+    Ok(())
+}
+
+/// One finished `(arm, seed)` unit of a sweep grid: the per-round
+/// metrics history plus the coordinator stats the arm summary needs.
+#[derive(Clone, Debug)]
+pub struct LedgerEntry {
+    /// Fingerprint of the arm's experiment config (seed-independent).
+    pub arm_fingerprint: u64,
+    /// The unit's seed offset (`base_seed + seed` ran this unit).
+    pub seed: u64,
+    pub records: Vec<RoundRecord>,
+    pub stats: CoordStats,
+}
+
+/// The sweep's per-arm completion ledger: which `(arm, seed)` units of a
+/// grid already ran, with enough bit-exact state to rebuild their arm
+/// summaries without re-running them. Written atomically after every
+/// completed unit, so an interrupted `fedsamp sweep --ledger` resumes at
+/// the first unfinished unit and emits byte-identical BENCH_sweep
+/// artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct SweepLedger {
+    /// Fingerprint of the sweep spec the ledger belongs to.
+    pub spec_fingerprint: u64,
+    pub entries: Vec<LedgerEntry>,
+}
+
+impl SweepLedger {
+    pub fn new(spec_fingerprint: u64) -> SweepLedger {
+        SweepLedger { spec_fingerprint, entries: Vec::new() }
+    }
+
+    /// Find a finished unit.
+    pub fn entry(&self, arm_fingerprint: u64, seed: u64) -> Option<&LedgerEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.arm_fingerprint == arm_fingerprint && e.seed == seed)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&LEDGER_MAGIC);
+        put_u32(&mut out, FORMAT_VERSION);
+        put_u64(&mut out, self.spec_fingerprint);
+        put_u32(&mut out, self.entries.len() as u32);
+        for e in &self.entries {
+            put_u64(&mut out, e.arm_fingerprint);
+            put_u64(&mut out, e.seed);
+            put_u32(&mut out, e.records.len() as u32);
+            for r in &e.records {
+                put_record(&mut out, r);
+            }
+            put_stats(&mut out, &e.stats);
+        }
+        let sum = fnv1a64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<SweepLedger, CheckpointError> {
+        let body_len = check_frame(bytes, &LEDGER_MAGIC)?;
+        let mut r = Reader { b: &bytes[..body_len], i: 8 };
+        let spec_fingerprint = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(n.min(r.remaining() / 24));
+        for _ in 0..n {
+            let arm_fingerprint = r.u64()?;
+            let seed = r.u64()?;
+            let k = r.u32()? as usize;
+            let mut records = Vec::with_capacity(k.min(r.remaining() / 72));
+            for _ in 0..k {
+                records.push(get_record(&mut r)?);
+            }
+            let stats = get_stats(&mut r)?;
+            entries.push(LedgerEntry { arm_fingerprint, seed, records, stats });
+        }
+        if r.i != body_len {
+            return Err(CheckpointError::TrailingBytes(body_len - r.i));
+        }
+        Ok(SweepLedger { spec_fingerprint, entries })
+    }
+
+    pub fn write_atomic(&self, path: &str) -> Result<(), CheckpointError> {
+        write_atomic(path, &self.to_bytes())
+    }
+
+    pub fn load(path: &str) -> Result<SweepLedger, CheckpointError> {
+        let bytes = std::fs::read(path).map_err(|e| CheckpointError::Io {
+            path: path.to_string(),
+            message: e.to_string(),
+        })?;
+        SweepLedger::from_bytes(&bytes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared frame plumbing
+
+/// Validate magic, version and the trailing checksum; return the body
+/// length (frame length minus the 8 checksum bytes).
+fn check_frame(bytes: &[u8], magic: &[u8; 4]) -> Result<usize, CheckpointError> {
+    if bytes.len() < 4 {
+        return Err(CheckpointError::Truncated { at: bytes.len(), need: 4 - bytes.len() });
+    }
+    if &bytes[..4] != magic {
+        return Err(CheckpointError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+    }
+    if bytes.len() < 8 {
+        return Err(CheckpointError::Truncated { at: bytes.len(), need: 8 - bytes.len() });
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != FORMAT_VERSION {
+        return Err(CheckpointError::UnsupportedVersion(version));
+    }
+    if bytes.len() < 16 {
+        return Err(CheckpointError::Truncated { at: bytes.len(), need: 16 - bytes.len() });
+    }
+    let body_len = bytes.len() - 8;
+    let want = u64::from_le_bytes(bytes[body_len..].try_into().unwrap());
+    let got = fnv1a64(&bytes[..body_len]);
+    if got != want {
+        return Err(CheckpointError::ChecksumMismatch { got, want });
+    }
+    Ok(body_len)
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.remaining() < n {
+            return Err(CheckpointError::Truncated {
+                at: self.i,
+                need: n - self.remaining(),
+            });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_record(out: &mut Vec<u8>, r: &RoundRecord) {
+    put_u64(out, r.round as u64);
+    put_u64(out, r.train_loss.to_bits());
+    put_u64(out, r.val_accuracy.to_bits());
+    put_u64(out, r.uplink_bits);
+    put_u64(out, r.uplink_bytes);
+    put_u64(out, r.transmitted as u64);
+    put_u64(out, r.expected_budget.to_bits());
+    put_u64(out, r.alpha.to_bits());
+    put_u64(out, r.gamma.to_bits());
+}
+
+fn get_record(r: &mut Reader) -> Result<RoundRecord, CheckpointError> {
+    Ok(RoundRecord {
+        round: r.u64()? as usize,
+        train_loss: f64::from_bits(r.u64()?),
+        val_accuracy: f64::from_bits(r.u64()?),
+        uplink_bits: r.u64()?,
+        uplink_bytes: r.u64()?,
+        transmitted: r.u64()? as usize,
+        expected_budget: f64::from_bits(r.u64()?),
+        alpha: f64::from_bits(r.u64()?),
+        gamma: f64::from_bits(r.u64()?),
+    })
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &CoordStats) {
+    put_u64(out, s.shards_dropped as u64);
+    put_u64(out, s.shards_outaged as u64);
+    put_u64(out, s.noop_rounds as u64);
+    put_u64(out, s.rounds_run as u64);
+    put_fault_counters(out, &s.faults);
+}
+
+fn get_stats(r: &mut Reader) -> Result<CoordStats, CheckpointError> {
+    Ok(CoordStats {
+        shards_dropped: r.u64()? as usize,
+        shards_outaged: r.u64()? as usize,
+        noop_rounds: r.u64()? as usize,
+        rounds_run: r.u64()? as usize,
+        faults: get_fault_counters(r)?,
+    })
+}
+
+fn put_fault_counters(out: &mut Vec<u8>, c: &FaultCounters) {
+    for v in [
+        c.crash_pre,
+        c.crash_post,
+        c.corrupt,
+        c.quarantined,
+        c.stalls,
+        c.retries,
+        c.shards_degraded,
+        c.mask_repairs,
+    ] {
+        put_u64(out, v);
+    }
+}
+
+fn get_fault_counters(r: &mut Reader) -> Result<FaultCounters, CheckpointError> {
+    Ok(FaultCounters {
+        crash_pre: r.u64()?,
+        crash_post: r.u64()?,
+        corrupt: r.u64()?,
+        quarantined: r.u64()?,
+        stalls: r.u64()?,
+        retries: r.u64()?,
+        shards_degraded: r.u64()?,
+        mask_repairs: r.u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::prop::quick;
+    use crate::util::rng::Rng;
+
+    fn arb_record(rng: &mut Rng) -> RoundRecord {
+        let arb_f64 = |rng: &mut Rng| match rng.below(5) {
+            0 => f64::NAN,
+            1 => 0.0,
+            2 => -rng.f64() * 1e300,
+            _ => rng.f64(),
+        };
+        RoundRecord {
+            round: rng.next_u64() as usize,
+            train_loss: arb_f64(rng),
+            val_accuracy: arb_f64(rng),
+            uplink_bits: rng.next_u64(),
+            uplink_bytes: rng.next_u64(),
+            transmitted: rng.below(1 << 20) as usize,
+            expected_budget: arb_f64(rng),
+            alpha: arb_f64(rng),
+            gamma: arb_f64(rng),
+        }
+    }
+
+    fn arb_snapshot(rng: &mut Rng) -> Snapshot {
+        let dim = rng.below(64) as usize;
+        let n_rec = rng.below(16) as usize;
+        let fault = match rng.below(3) {
+            0 => None,
+            // empty and partial AOCS caches both covered
+            k => Some(FaultState {
+                counters: FaultCounters {
+                    crash_pre: rng.next_u64() % 100,
+                    crash_post: rng.next_u64() % 100,
+                    corrupt: rng.next_u64() % 100,
+                    quarantined: rng.next_u64() % 100,
+                    stalls: rng.next_u64() % 100,
+                    retries: rng.next_u64() % 100,
+                    shards_degraded: rng.next_u64() % 100,
+                    mask_repairs: rng.next_u64() % 100,
+                },
+                last_probs: (0..if k == 1 { 0 } else { rng.below(20) })
+                    .map(|i| (i * 7, rng.f64()))
+                    .collect(),
+            }),
+        };
+        Snapshot {
+            config_fingerprint: rng.next_u64(),
+            // zero and max round indices exercised explicitly
+            next_round: match rng.below(4) {
+                0 => 0,
+                1 => u64::MAX,
+                _ => rng.next_u64(),
+            },
+            x: (0..dim).map(|_| f32::from_bits(rng.next_u64() as u32)).collect(),
+            meter_bytes: rng.next_u64(),
+            records: (0..n_rec).map(|_| arb_record(rng)).collect(),
+            stats: CoordStats {
+                shards_dropped: rng.below(1000) as usize,
+                shards_outaged: rng.below(1000) as usize,
+                noop_rounds: rng.below(1000) as usize,
+                rounds_run: rng.below(1000) as usize,
+                faults: FaultCounters::default(),
+            },
+            fault,
+            tel_counters: (0..rng.below(30)).map(|_| rng.next_u64()).collect(),
+            tel_rounds: rng.next_u64(),
+        }
+    }
+
+    #[test]
+    fn prop_snapshot_codec_round_trips_bit_exactly() {
+        quick("snapshot-roundtrip", |rng, _| {
+            let snap = arb_snapshot(rng);
+            let bytes = snap.to_bytes();
+            let back = Snapshot::from_bytes(&bytes)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            // byte-exact round trip: re-encoding the decoded snapshot
+            // reproduces the frame (covers every field bit, NaNs incl.)
+            if back.to_bytes() != bytes {
+                return Err("re-encoded snapshot differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncation_never_panics_and_always_errors() {
+        quick("snapshot-truncation", |rng, _| {
+            let bytes = arb_snapshot(rng).to_bytes();
+            let cut = rng.below(bytes.len() as u64) as usize;
+            match Snapshot::from_bytes(&bytes[..cut]) {
+                Ok(_) => Err(format!("truncation to {cut} bytes decoded")),
+                Err(_) => Ok(()),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_single_byte_mutation_is_detected() {
+        quick("snapshot-mutation", |rng, _| {
+            let mut bytes = arb_snapshot(rng).to_bytes();
+            let pos = rng.below(bytes.len() as u64) as usize;
+            bytes[pos] ^= 1 + rng.below(255) as u8;
+            match Snapshot::from_bytes(&bytes) {
+                Ok(_) => Err(format!("flip at byte {pos} went unnoticed")),
+                Err(_) => Ok(()),
+            }
+        });
+    }
+
+    #[test]
+    fn frame_errors_are_typed() {
+        let snap = Snapshot::empty(7, 3);
+        let good = snap.to_bytes();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            Snapshot::from_bytes(&bad_magic),
+            Err(CheckpointError::BadMagic(_))
+        ));
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        assert!(matches!(
+            Snapshot::from_bytes(&bad_version),
+            Err(CheckpointError::UnsupportedVersion(99))
+        ));
+
+        let mut bad_sum = good.clone();
+        let last = bad_sum.len() - 1;
+        bad_sum[last] ^= 0xFF;
+        assert!(matches!(
+            Snapshot::from_bytes(&bad_sum),
+            Err(CheckpointError::ChecksumMismatch { .. })
+        ));
+
+        assert!(matches!(
+            Snapshot::from_bytes(&good[..10]),
+            Err(CheckpointError::Truncated { .. })
+        ));
+
+        let mut trailing = good.clone();
+        // splice an extra byte into the body and re-checksum so only
+        // the TrailingBytes check can fire
+        trailing.truncate(good.len() - 8);
+        trailing.push(0);
+        let sum = fnv1a64(&trailing);
+        trailing.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            Snapshot::from_bytes(&trailing),
+            Err(CheckpointError::TrailingBytes(1))
+        ));
+    }
+
+    #[test]
+    fn atomic_write_round_trips_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!(
+            "fedsamp_ckpt_{}",
+            std::process::id()
+        ));
+        let path = dir.join("snap.bin");
+        let path = path.to_string_lossy().into_owned();
+        let mut snap = Snapshot::empty(42, 9);
+        snap.x = vec![1.5, -2.25, f32::NAN];
+        snap.meter_bytes = 1234;
+        let bytes = snap.write_atomic(&path).unwrap();
+        assert_eq!(bytes, snap.to_bytes().len());
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let back = Snapshot::load(&path).unwrap();
+        assert_eq!(back.to_bytes(), snap.to_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_fingerprint_separates_configs() {
+        let a = presets::femnist(1, 3);
+        let mut b = a.clone();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.seed += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        let mut c = a.clone();
+        c.rounds += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+
+    #[test]
+    fn checkpoint_cli_tokens_parse_with_typed_errors() {
+        assert_eq!(parse_checkpoint_every("10"), Ok(10));
+        assert_eq!(parse_checkpoint_every(" 0 "), Ok(0));
+        assert_eq!(
+            parse_checkpoint_every("banana"),
+            Err(CheckpointSpecError::BadEvery { token: "banana".into() })
+        );
+        assert_eq!(
+            parse_checkpoint_every("-3"),
+            Err(CheckpointSpecError::BadEvery { token: "-3".into() })
+        );
+        assert_eq!(parse_resume_path("snap.bin"), Ok("snap.bin".into()));
+        assert_eq!(
+            parse_resume_path("  "),
+            Err(CheckpointSpecError::EmptyResumePath)
+        );
+        // the messages carry the offending token
+        let e: String = CheckpointSpecError::BadEvery { token: "banana".into() }.into();
+        assert!(e.contains("banana"));
+    }
+
+    #[test]
+    fn options_validate_cadence_needs_path() {
+        assert!(CheckpointOptions::default().validate().is_ok());
+        let bad = CheckpointOptions { every: 2, ..CheckpointOptions::default() };
+        assert!(bad.validate().is_err());
+        let ok = CheckpointOptions {
+            every: 2,
+            out: Some("snap.bin".into()),
+            ..CheckpointOptions::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn ledger_round_trips_and_rejects_spec_drift() {
+        let mut rng = Rng::new(5);
+        let mut ledger = SweepLedger::new(77);
+        for i in 0..4u64 {
+            ledger.entries.push(LedgerEntry {
+                arm_fingerprint: 1000 + i,
+                seed: i % 2,
+                records: (0..3).map(|_| arb_record_pub(&mut rng)).collect(),
+                stats: CoordStats::default(),
+            });
+        }
+        let bytes = ledger.to_bytes();
+        let back = SweepLedger::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        assert!(back.entry(1002, 0).is_some());
+        assert!(back.entry(1002, 1).is_none());
+        // file-level tampering is caught
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        assert!(SweepLedger::from_bytes(&bad).is_err());
+    }
+
+    fn arb_record_pub(rng: &mut Rng) -> RoundRecord {
+        arb_record(rng)
+    }
+}

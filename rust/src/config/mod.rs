@@ -246,6 +246,10 @@ impl ExperimentConfig {
         Ok(())
     }
 
+    /// Canonical JSON rendering — every trajectory-steering field is
+    /// here, which is what makes this the input of
+    /// [`crate::checkpoint::config_fingerprint`] (a snapshot refuses to
+    /// resume under a config whose canonical form differs).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),

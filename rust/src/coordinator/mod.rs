@@ -60,14 +60,15 @@ pub use registry::{CohortPartition, Registry};
 pub use round::{Phase, RoundMachine};
 pub use shard::{ClientCompute, EngineRunner, LocalRunner, ParallelRunner};
 
+use crate::checkpoint::{self, CheckpointError, CheckpointOptions, Snapshot};
 use crate::config::{Algorithm, ExperimentConfig};
-use crate::faults::{FaultCounters, FaultCtx};
+use crate::faults::{FaultCounters, FaultCtx, MASTERKILL_ERR_PREFIX};
 use crate::fl::availability::Availability;
 use crate::fl::comm::BitMeter;
 use crate::fl::TrainOptions;
 use crate::metrics::RunResult;
 use crate::sampling::Sampler;
-use crate::telemetry::Telemetry;
+use crate::telemetry::{PhaseSpan, Telemetry};
 use crate::util::rng::Rng;
 
 /// Straggler model: each shard independently misses the round deadline
@@ -204,7 +205,67 @@ impl Coordinator {
         // path (see `faults::FaultCtx::from_plan`)
         let mut faults = FaultCtx::from_plan(cfg.fault_plan.as_ref());
 
-        for round in 0..cfg.rounds {
+        // Checkpointing (crate::checkpoint) sits outside the protocol
+        // like telemetry: snapshots are taken after Commit and restores
+        // happen before round 0, so the trajectory is bit-identical with
+        // it on or off. The fingerprint binds snapshots to this exact
+        // config; it is only computed when the subsystem is in play.
+        let ck = &opts.checkpoint;
+        ck.validate()?;
+        let fingerprint = if ck.every > 0 || ck.resume.is_some() {
+            checkpoint::config_fingerprint(cfg)
+        } else {
+            0
+        };
+        let mut start_round = 0usize;
+        let mut resumed = false;
+        if let Some(path) = &ck.resume {
+            let snap = Snapshot::load(path).map_err(String::from)?;
+            if snap.config_fingerprint != fingerprint {
+                return Err(CheckpointError::ConfigMismatch {
+                    got: snap.config_fingerprint,
+                    want: fingerprint,
+                }
+                .into());
+            }
+            if snap.x.len() != x.len() {
+                return Err(CheckpointError::DimMismatch {
+                    got: snap.x.len(),
+                    want: x.len(),
+                }
+                .into());
+            }
+            x.copy_from_slice(&snap.x);
+            meter = BitMeter::with_bytes(snap.meter_bytes);
+            result.rounds = snap.records.clone();
+            self.stats = snap.stats.clone();
+            if let (Some(ctx), Some(fs)) = (faults.as_mut(), &snap.fault) {
+                ctx.counters = fs.counters;
+                ctx.last_probs = fs.last_probs.iter().copied().collect();
+            }
+            tel.restore_counters(&snap.tel_counters, snap.tel_rounds as usize);
+            start_round = snap.next_round as usize;
+            tel.resumed(start_round);
+            resumed = true;
+        }
+
+        // master-side chaos: kill the coordinator at the top of this
+        // round. One-shot — disarmed on resume (the kill already
+        // happened; the cadence may lag the kill round, so re-arming
+        // would re-die forever).
+        let masterkill = if resumed {
+            None
+        } else {
+            cfg.fault_plan.as_ref().and_then(|p| p.masterkill)
+        };
+
+        for round in start_round..cfg.rounds {
+            if masterkill == Some(round as u64) {
+                return Err(format!(
+                    "{MASTERKILL_ERR_PREFIX} fault plan killed the \
+                     coordinator at round {round}"
+                ));
+            }
             self.stats.rounds_run += 1;
             let mut round_rng = rng.fork(round as u64);
             let mut machine = RoundMachine::new(round);
@@ -221,6 +282,7 @@ impl Coordinator {
                 self.stats.noop_rounds += 1;
                 result.push(round::noop_record(round, &meter));
                 tel.flush_round(round);
+                self.maybe_snapshot(ck, fingerprint, round, &x, &meter, &result, &faults, &mut tel)?;
                 continue;
             }
             machine.local_compute(runner, &x, &mut tel);
@@ -258,6 +320,7 @@ impl Coordinator {
                 &meter,
                 &mut tel,
             )?);
+            self.maybe_snapshot(ck, fingerprint, round, &x, &meter, &result, &faults, &mut tel)?;
         }
         if tel.enabled() {
             runner.set_clock(None);
@@ -267,5 +330,56 @@ impl Coordinator {
         }
         result.telemetry = tel.finish();
         Ok(result)
+    }
+
+    /// Write a durable snapshot if this round is on the checkpoint
+    /// cadence — called after Commit (and after no-op rounds), so the
+    /// snapshot captures exactly the state the next round starts from.
+    #[allow(clippy::too_many_arguments)]
+    fn maybe_snapshot(
+        &self,
+        ck: &CheckpointOptions,
+        fingerprint: u64,
+        round: usize,
+        x: &[f32],
+        meter: &BitMeter,
+        result: &RunResult,
+        faults: &Option<FaultCtx>,
+        tel: &mut Telemetry,
+    ) -> Result<(), String> {
+        if ck.every == 0 || (round + 1) % ck.every != 0 {
+            return Ok(());
+        }
+        let Some(path) = &ck.out else { return Ok(()) };
+        tel.span_begin(round, PhaseSpan::Checkpoint);
+        let fault = faults.as_ref().map(|ctx| {
+            // HashMap iteration order is nondeterministic — sort by
+            // client id so the snapshot bytes are reproducible
+            let mut last_probs: Vec<(u64, f64)> =
+                ctx.last_probs.iter().map(|(&c, &p)| (c, p)).collect();
+            last_probs.sort_unstable_by_key(|&(c, _)| c);
+            checkpoint::FaultState { counters: ctx.counters, last_probs }
+        });
+        let mut stats = self.stats.clone();
+        if let Some(ctx) = faults {
+            // the live tally only lands in self.stats at end of run
+            stats.faults = ctx.counters;
+        }
+        let (tel_counters, tel_rounds) = tel.checkpoint_state();
+        let snap = Snapshot {
+            config_fingerprint: fingerprint,
+            next_round: (round + 1) as u64,
+            x: x.to_vec(),
+            meter_bytes: meter.total_bytes(),
+            records: result.rounds.clone(),
+            stats,
+            fault,
+            tel_counters,
+            tel_rounds: tel_rounds as u64,
+        };
+        let bytes = snap.write_atomic(path).map_err(String::from)?;
+        tel.checkpoint_written(round, bytes as u64);
+        tel.span_end(round, PhaseSpan::Checkpoint);
+        Ok(())
     }
 }

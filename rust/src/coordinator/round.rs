@@ -963,7 +963,9 @@ impl RoundMachine {
 }
 
 /// The record a round with no reachable clients leaves behind (identical
-/// to the seed protocol's no-op round).
+/// to the seed protocol's no-op round). No-op rounds still hit the
+/// checkpoint cadence: the snapshot after a no-op captures this record,
+/// so a resume replays hostile-availability stretches bit-exactly.
 pub fn noop_record(round: usize, meter: &BitMeter) -> RoundRecord {
     RoundRecord {
         round,

@@ -24,7 +24,14 @@
 //! (`,` separates arms), e.g. `none,crash0.2+corrupt0.05` — see
 //! [`parse_fault_arms`]. Fault/repair tallies land in the
 //! `faults_injected`/`faults_repaired` CSV columns.
+//!
+//! With `--ledger <path>` the grid is **resumable**: every completed
+//! `(arm, seed)` unit is appended to a crash-safe
+//! [`crate::checkpoint::SweepLedger`], so an interrupted sweep picks up
+//! at the first unfinished unit and emits byte-identical
+//! `BENCH_sweep.json`/`.csv` (see [`run_sweep_resumable`]).
 
+use crate::checkpoint::{fnv1a64, CheckpointError, LedgerEntry, SweepLedger};
 use crate::compress::Compressor;
 use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use crate::coordinator::{
@@ -426,16 +433,21 @@ impl SweepReport {
     }
 
     /// Write `BENCH_sweep.json` + `BENCH_sweep.csv` into `dir`; returns
-    /// the two paths.
+    /// the two paths. Crash-safe: each file is written to a temp path
+    /// and atomically renamed (`checkpoint::write_atomic`), so a kill
+    /// mid-write never leaves a truncated artifact.
     pub fn save(&self, dir: &str) -> Result<(String, String), String> {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("cannot create {dir}: {e}"))?;
         let json_path = format!("{dir}/BENCH_sweep.json");
         let csv_path = format!("{dir}/BENCH_sweep.csv");
-        std::fs::write(&json_path, self.to_json().to_pretty())
-            .map_err(|e| format!("write {json_path}: {e}"))?;
-        std::fs::write(&csv_path, self.to_csv())
-            .map_err(|e| format!("write {csv_path}: {e}"))?;
+        crate::checkpoint::write_atomic(
+            &json_path,
+            self.to_json().to_pretty().as_bytes(),
+        )
+        .map_err(String::from)?;
+        crate::checkpoint::write_atomic(&csv_path, self.to_csv().as_bytes())
+            .map_err(String::from)?;
         Ok((json_path, csv_path))
     }
 }
@@ -490,12 +502,48 @@ fn arm_cfg(
     }
 }
 
-/// Run the full grid: every {strategy × compressor × availability ×
-/// pool} arm, `spec.seeds` seeds each, seed runs averaged pointwise
-/// (`metrics::average_runs`, the paper's mean-over-seeds convention).
-pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String> {
-    let mut arms = Vec::with_capacity(spec.arm_count());
-    let mut grid = Vec::new();
+/// Prefix of the error [`run_sweep_resumable`] surfaces when
+/// `abort_after` fires — the CLI maps it to exit code 3 (the same
+/// planned-kill convention as `faults::MASTERKILL_ERR_PREFIX`), so the
+/// sweep-resume CI smoke can tell a planned kill from a real failure.
+pub const SWEEP_ABORT_ERR_PREFIX: &str = "sweep-abort:";
+
+/// Fingerprint of the whole grid a spec expands to: FNV-1a over every
+/// arm config's canonical JSON (in grid order) plus the seed/shard
+/// shape. Two specs fingerprint equal iff they run the same units, so a
+/// [`SweepLedger`] can refuse to resume a different grid.
+pub fn spec_fingerprint(spec: &SweepSpec) -> u64 {
+    let mut canon = String::new();
+    for (pool, availability, fault, strategy, compressor) in build_grid(spec) {
+        canon.push_str(
+            &arm_cfg(spec, strategy, compressor, availability, fault, pool)
+                .to_json()
+                .to_pretty(),
+        );
+        canon.push('\n');
+    }
+    canon.push_str(&format!(
+        "seeds={}|base_seed={}|shards={}",
+        spec.seeds.max(1),
+        spec.base_seed,
+        spec.shards.max(1),
+    ));
+    fnv1a64(canon.as_bytes())
+}
+
+/// Fingerprint of one arm (seed-independent — the unit key in the
+/// ledger is `(arm_fingerprint, seed offset)`).
+fn arm_fingerprint(cfg: &ExperimentConfig, shards: usize) -> u64 {
+    fnv1a64(format!("{}|shards={shards}", cfg.to_json().to_pretty()).as_bytes())
+}
+
+/// The grid in its canonical order (pools → availabilities → faults →
+/// strategies → compressors) — the order arms appear in the report and
+/// the order the ledger completes units in.
+fn build_grid(
+    spec: &SweepSpec,
+) -> Vec<(usize, &AvailabilityArm, &FaultArm, &Strategy, &Compressor)> {
+    let mut grid = Vec::with_capacity(spec.arm_count());
     for pool in &spec.pools {
         for availability in &spec.availabilities {
             for fault in &spec.faults {
@@ -513,8 +561,72 @@ pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String>
             }
         }
     }
-    for (pool, availability, fault, strategy, compressor) in grid {
+    grid
+}
+
+/// Run the full grid: every {strategy × compressor × availability ×
+/// pool} arm, `spec.seeds` seeds each, seed runs averaged pointwise
+/// (`metrics::average_runs`, the paper's mean-over-seeds convention).
+pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String> {
+    run_sweep_resumable(spec, None, None, verbose)
+}
+
+/// [`run_sweep`] with a per-unit completion ledger.
+///
+/// With `ledger_path` set, every completed `(arm, seed)` unit is
+/// appended to a [`SweepLedger`] at that path (written crash-safely
+/// after each unit). A rerun against the same path loads the ledger,
+/// verifies it belongs to this grid ([`spec_fingerprint`] — a mismatch
+/// is a typed [`CheckpointError::SpecMismatch`]), replays the finished
+/// units' bit-exact round records without re-running them, and resumes
+/// at the first unfinished unit — the final report is **byte-identical**
+/// to an uninterrupted sweep's.
+///
+/// `abort_after = Some(n)` aborts the sweep (with a
+/// [`SWEEP_ABORT_ERR_PREFIX`] error) after `n` *newly* completed units —
+/// the deterministic kill the resume tests and the CI smoke use.
+///
+/// Ledger mode requires `spec.telemetry == false`: the ledger stores
+/// round records, not telemetry summaries, so a resumed telemetry sweep
+/// could not reproduce the uninterrupted report.
+pub fn run_sweep_resumable(
+    spec: &SweepSpec,
+    ledger_path: Option<&str>,
+    abort_after: Option<usize>,
+    verbose: bool,
+) -> Result<SweepReport, String> {
+    if spec.telemetry && ledger_path.is_some() {
+        return Err(
+            "--ledger cannot be combined with a telemetry sweep (the ledger \
+             stores round records, not telemetry summaries)"
+            .into(),
+        );
+    }
+    let mut ledger = match ledger_path {
+        Some(path) => {
+            let want = spec_fingerprint(spec);
+            if std::path::Path::new(path).exists() {
+                let l = SweepLedger::load(path).map_err(String::from)?;
+                if l.spec_fingerprint != want {
+                    return Err(CheckpointError::SpecMismatch {
+                        got: l.spec_fingerprint,
+                        want,
+                    }
+                    .into());
+                }
+                Some(l)
+            } else {
+                Some(SweepLedger::new(want))
+            }
+        }
+        None => None,
+    };
+    let mut newly_completed = 0usize;
+
+    let mut arms = Vec::with_capacity(spec.arm_count());
+    for (pool, availability, fault, strategy, compressor) in build_grid(spec) {
         let cfg = arm_cfg(spec, strategy, compressor, availability, fault, pool);
+        let arm_fp = arm_fingerprint(&cfg, spec.shards.max(1));
         let train_opts = TrainOptions {
             telemetry: if spec.telemetry {
                 TelemetryConfig::summary_only()
@@ -528,18 +640,48 @@ pub fn run_sweep(spec: &SweepSpec, verbose: bool) -> Result<SweepReport, String>
         for s in 0..spec.seeds.max(1) {
             let mut c = cfg.clone();
             c.seed = spec.base_seed + s;
-            let engine = build_native_engine(&c);
-            let mut runner = ParallelRunner::new(engine, 1);
-            let mut coordinator = Coordinator::new(CoordinatorOptions {
-                shards: spec.shards.max(1),
-                ..CoordinatorOptions::default()
-            });
-            runs.push(coordinator.run(&c, &mut runner, &train_opts)?);
-            stats.shards_dropped += coordinator.stats.shards_dropped;
-            stats.shards_outaged += coordinator.stats.shards_outaged;
-            stats.noop_rounds += coordinator.stats.noop_rounds;
-            stats.rounds_run += coordinator.stats.rounds_run;
-            stats.faults.absorb(&coordinator.stats.faults);
+            let (run, run_stats) = match ledger.as_ref().and_then(|l| l.entry(arm_fp, s)) {
+                Some(entry) => {
+                    // unit already ran before the interruption: rebuild
+                    // its run from the ledger's bit-exact records
+                    let mut run = RunResult::new(&c.name, strategy.name());
+                    run.rounds = entry.records.clone();
+                    (run, entry.stats.clone())
+                }
+                None => {
+                    let engine = build_native_engine(&c);
+                    let mut runner = ParallelRunner::new(engine, 1);
+                    let mut coordinator = Coordinator::new(CoordinatorOptions {
+                        shards: spec.shards.max(1),
+                        ..CoordinatorOptions::default()
+                    });
+                    let run = coordinator.run(&c, &mut runner, &train_opts)?;
+                    if let (Some(l), Some(path)) = (ledger.as_mut(), ledger_path) {
+                        l.entries.push(LedgerEntry {
+                            arm_fingerprint: arm_fp,
+                            seed: s,
+                            records: run.rounds.clone(),
+                            stats: coordinator.stats.clone(),
+                        });
+                        l.write_atomic(path).map_err(String::from)?;
+                    }
+                    newly_completed += 1;
+                    let stats = coordinator.stats.clone();
+                    if abort_after.is_some_and(|n| newly_completed >= n) {
+                        return Err(format!(
+                            "{SWEEP_ABORT_ERR_PREFIX} sweep aborted after \
+                             {newly_completed} newly completed units"
+                        ));
+                    }
+                    (run, stats)
+                }
+            };
+            runs.push(run);
+            stats.shards_dropped += run_stats.shards_dropped;
+            stats.shards_outaged += run_stats.shards_outaged;
+            stats.noop_rounds += run_stats.noop_rounds;
+            stats.rounds_run += run_stats.rounds_run;
+            stats.faults.absorb(&run_stats.faults);
         }
         let avg = average_runs(&runs);
         let summary = ArmSummary::from_run(
@@ -831,12 +973,17 @@ mod tests {
             .as_ref()
             .expect("telemetry sweep must attach a summary");
         assert_eq!(tel.rounds, 3);
-        for name in crate::telemetry::PHASE_NAMES {
+        // every *round* phase fires once per round; the trailing
+        // checkpoint span only fires on snapshot cadence rounds
+        let round_phases =
+            &crate::telemetry::PHASE_NAMES[..crate::telemetry::NUM_ROUND_PHASES];
+        for &name in round_phases {
             let s = tel.phase(name).unwrap_or_else(|| {
                 panic!("missing phase rollup for {name}")
             });
             assert_eq!(s.n, 3, "{name}");
         }
+        assert_eq!(tel.phase("checkpoint").unwrap().n, 0);
         assert!(tel.counter("clients_transmitted") > 0);
         let j = report.arms[0].to_json();
         assert_eq!(j.get("telemetry").get("rounds").as_usize(), Some(3));
@@ -851,5 +998,85 @@ mod tests {
             off.arms[0].total_uplink_bytes,
             report.arms[0].total_uplink_bytes
         );
+    }
+
+    fn resume_spec() -> SweepSpec {
+        SweepSpec {
+            strategies: vec![Strategy::Uniform, Strategy::Aocs { j_max: 4 }],
+            compressors: vec![Compressor::None],
+            availabilities: vec![
+                AvailabilityArm::always_on(),
+                parse_availability_arm("bern0.7").unwrap(),
+            ],
+            faults: vec![FaultArm::none()],
+            pools: vec![24],
+            seeds: 2,
+            base_seed: 3,
+            rounds: 4,
+            cohort: 8,
+            budget: 2,
+            shards: 2,
+            quick: true,
+            telemetry: false,
+        }
+    }
+
+    /// Tentpole pin: a sweep killed after k newly-completed units and
+    /// resumed from its ledger emits a report byte-identical to the
+    /// uninterrupted sweep's, for every possible kill point.
+    #[test]
+    fn interrupted_sweep_resumes_byte_identically() {
+        let spec = resume_spec();
+        let reference = run_sweep(&spec, false).unwrap();
+        let ref_json = reference.to_json().to_pretty();
+        let ref_csv = reference.to_csv();
+        let total_units = spec.arm_count() * spec.seeds as usize;
+
+        let dir = std::env::temp_dir()
+            .join(format!("fedsamp_sweepledger_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for kill_after in [1, total_units / 2, total_units - 1] {
+            let path = dir.join(format!("ledger_{kill_after}.bin"));
+            let path = path.to_string_lossy().into_owned();
+            let err = run_sweep_resumable(&spec, Some(&path), Some(kill_after), false)
+                .unwrap_err();
+            assert!(
+                err.starts_with(SWEEP_ABORT_ERR_PREFIX),
+                "expected planned abort, got: {err}"
+            );
+            // the ledger holds exactly the units finished before the kill
+            let ledger = SweepLedger::load(&path).unwrap();
+            assert_eq!(ledger.entries.len(), kill_after);
+            let resumed =
+                run_sweep_resumable(&spec, Some(&path), None, false).unwrap();
+            assert_eq!(resumed.to_json().to_pretty(), ref_json, "kill at {kill_after}");
+            assert_eq!(resumed.to_csv(), ref_csv, "kill at {kill_after}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A ledger from a different grid is rejected with a typed error,
+    /// and ledger mode refuses telemetry sweeps.
+    #[test]
+    fn ledger_rejects_spec_drift_and_telemetry() {
+        let spec = resume_spec();
+        let dir = std::env::temp_dir()
+            .join(format!("fedsamp_sweepdrift_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ledger.bin");
+        let path = path.to_string_lossy().into_owned();
+        let _ = run_sweep_resumable(&spec, Some(&path), None, false).unwrap();
+
+        let mut other = resume_spec();
+        other.rounds += 1;
+        assert_ne!(spec_fingerprint(&spec), spec_fingerprint(&other));
+        let err = run_sweep_resumable(&other, Some(&path), None, false).unwrap_err();
+        assert!(err.contains("different sweep spec"), "{err}");
+
+        let mut tele = resume_spec();
+        tele.telemetry = true;
+        let err = run_sweep_resumable(&tele, Some(&path), None, false).unwrap_err();
+        assert!(err.contains("telemetry"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -61,6 +61,11 @@ pub const SPEC_FAULT_SEED: u64 = 0xFA17_5EED;
 /// Default bounded-retry budget for stalled negotiation partials.
 pub const DEFAULT_MAX_RETRIES: u32 = 3;
 
+/// Prefix of the error message a `masterkill<r>` abort surfaces through
+/// `Coordinator::run` — the CLI maps it to its own exit code (3) so the
+/// kill-and-resume CI smoke can tell a planned kill from a real failure.
+pub const MASTERKILL_ERR_PREFIX: &str = "masterkill:";
+
 /// A deterministic fault-injection plan: per-kind rates over dedicated
 /// seed streams. All predicates are pure functions — two evaluations of
 /// the same `(client, round)` always agree, and a zero rate never even
@@ -88,6 +93,15 @@ pub struct FaultPlan {
     /// Bounded retry budget per stalled partial before the shard is
     /// degraded to last-good probabilities.
     pub max_retries: u32,
+    /// Deterministically kill the **coordinator itself** at the start of
+    /// this round (the chaos layer's master-side fault; spec token
+    /// `masterkill<r>`). Unlike the client-side rates, this does not
+    /// flip [`FaultPlan::is_zero`]: a masterkill-only plan injects no
+    /// client faults and stays on the bitwise fault-free path — the run
+    /// simply dies at round `r`, which is exactly what the
+    /// kill-and-resume checkpoint contract needs. Disarmed on
+    /// `--resume` (the kill already happened).
+    pub masterkill: Option<u64>,
 }
 
 impl FaultPlan {
@@ -100,11 +114,15 @@ impl FaultPlan {
             corrupt: 0.0,
             stall: 0.0,
             max_retries: DEFAULT_MAX_RETRIES,
+            masterkill: None,
         }
     }
 
-    /// True when no fault kind can ever fire — the coordinator skips
-    /// building a [`FaultCtx`] entirely (bitwise-inert fast path).
+    /// True when no *client-side* fault kind can ever fire — the
+    /// coordinator skips building a [`FaultCtx`] entirely (bitwise-inert
+    /// fast path). Deliberately ignores [`FaultPlan::masterkill`]: a
+    /// master-side kill is not a client fault and must not perturb the
+    /// trajectory before it fires.
     pub fn is_zero(&self) -> bool {
         self.crash_pre <= 0.0
             && self.crash_post <= 0.0
@@ -194,6 +212,13 @@ impl FaultPlan {
             ("corrupt", Json::num(self.corrupt)),
             ("stall", Json::num(self.stall)),
             ("max_retries", Json::num(self.max_retries as f64)),
+            (
+                "masterkill",
+                match self.masterkill {
+                    Some(r) => Json::num(r as f64),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -209,8 +234,63 @@ impl FaultPlan {
             .as_usize()
             .map(|r| r as u32)
             .unwrap_or(DEFAULT_MAX_RETRIES);
+        plan.masterkill = v.get("masterkill").as_f64().map(|r| r as u64);
         plan.validate()?;
         Ok(plan)
+    }
+}
+
+/// Typed failure parsing a `--faults` spec — each variant carries the
+/// offending token, so `--faults crash0.2,jitter0.5` names `jitter0.5`
+/// instead of dying with a generic message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultSpecError {
+    /// Token starts with no known fault kind.
+    UnknownKind { token: String },
+    /// A rate suffix (`crash<p>`, `corrupt<p>`, `stall<p>`) is not a
+    /// number.
+    BadRate { token: String },
+    /// `retries<k>` suffix is not a non-negative integer.
+    BadRetries { token: String },
+    /// `seed<k>` suffix is not a non-negative integer.
+    BadSeed { token: String },
+    /// `masterkill<r>` suffix is not a round index.
+    BadRound { token: String },
+    /// Tokens parsed but the resulting plan fails
+    /// [`FaultPlan::validate`] (e.g. a rate outside `[0, 1]`).
+    InvalidPlan { message: String },
+}
+
+impl std::fmt::Display for FaultSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultSpecError::UnknownKind { token } => write!(
+                f,
+                "unknown fault kind '{token}' (want crash/crashpre/crashpost/\
+                 corrupt/stall/retries/seed/masterkill)"
+            ),
+            FaultSpecError::BadRate { token } => {
+                write!(f, "bad fault rate in token '{token}'")
+            }
+            FaultSpecError::BadRetries { token } => {
+                write!(f, "bad retry count in token '{token}'")
+            }
+            FaultSpecError::BadSeed { token } => {
+                write!(f, "bad seed in token '{token}'")
+            }
+            FaultSpecError::BadRound { token } => {
+                write!(f, "bad round index in token '{token}'")
+            }
+            FaultSpecError::InvalidPlan { message } => write!(f, "{message}"),
+        }
+    }
+}
+
+impl std::error::Error for FaultSpecError {}
+
+impl From<FaultSpecError> for String {
+    fn from(e: FaultSpecError) -> String {
+        e.to_string()
     }
 }
 
@@ -218,17 +298,23 @@ impl FaultPlan {
 ///
 /// Grammar: kinds joined by `,` or `+` —
 /// `crash<p>` (sets both crash rates), `crashpre<p>`, `crashpost<p>`,
-/// `corrupt<p>`, `stall<p>`, `retries<k>`, `seed<k>`.
-/// Examples: `crash0.2,corrupt0.05` · `crashpost0.3+stall0.1+retries2`.
-pub fn parse_fault_spec(spec: &str) -> Result<FaultPlan, String> {
+/// `corrupt<p>`, `stall<p>`, `retries<k>`, `seed<k>`,
+/// `masterkill<r>` (kill the coordinator at round `r`).
+/// Examples: `crash0.2,corrupt0.05` · `crashpost0.3+stall0.1+retries2`
+/// · `masterkill5`.
+pub fn parse_fault_spec(spec: &str) -> Result<FaultPlan, FaultSpecError> {
     let mut plan = FaultPlan::new(SPEC_FAULT_SEED);
     for token in spec.split([',', '+']).filter(|t| !t.is_empty()) {
-        let rate = |rest: &str| -> Result<f64, String> {
+        let rate = |rest: &str| -> Result<f64, FaultSpecError> {
             rest.parse::<f64>()
-                .map_err(|_| format!("bad fault rate in token '{token}'"))
+                .map_err(|_| FaultSpecError::BadRate { token: token.to_string() })
         };
         // longest prefixes first: "crash" is a prefix of the others
-        if let Some(rest) = token.strip_prefix("crashpre") {
+        if let Some(rest) = token.strip_prefix("masterkill") {
+            plan.masterkill = Some(rest.parse::<u64>().map_err(|_| {
+                FaultSpecError::BadRound { token: token.to_string() }
+            })?);
+        } else if let Some(rest) = token.strip_prefix("crashpre") {
             plan.crash_pre = rate(rest)?;
         } else if let Some(rest) = token.strip_prefix("crashpost") {
             plan.crash_post = rate(rest)?;
@@ -241,21 +327,18 @@ pub fn parse_fault_spec(spec: &str) -> Result<FaultPlan, String> {
         } else if let Some(rest) = token.strip_prefix("stall") {
             plan.stall = rate(rest)?;
         } else if let Some(rest) = token.strip_prefix("retries") {
-            plan.max_retries = rest
-                .parse::<u32>()
-                .map_err(|_| format!("bad retry count in token '{token}'"))?;
+            plan.max_retries = rest.parse::<u32>().map_err(|_| {
+                FaultSpecError::BadRetries { token: token.to_string() }
+            })?;
         } else if let Some(rest) = token.strip_prefix("seed") {
-            plan.seed = rest
-                .parse::<u64>()
-                .map_err(|_| format!("bad seed in token '{token}'"))?;
+            plan.seed = rest.parse::<u64>().map_err(|_| {
+                FaultSpecError::BadSeed { token: token.to_string() }
+            })?;
         } else {
-            return Err(format!(
-                "unknown fault kind '{token}' (want crash/crashpre/crashpost/\
-                 corrupt/stall/retries/seed)"
-            ));
+            return Err(FaultSpecError::UnknownKind { token: token.to_string() });
         }
     }
-    plan.validate()?;
+    plan.validate().map_err(|message| FaultSpecError::InvalidPlan { message })?;
     Ok(plan)
 }
 
@@ -444,6 +527,60 @@ mod tests {
         assert!(parse_fault_spec("crash1.5").is_err()); // validate() rejects
         assert!(parse_fault_spec("stall1.0").is_err());
         assert!(parse_fault_spec("crashNaNo").is_err());
+    }
+
+    #[test]
+    fn spec_errors_are_typed_and_name_the_offending_token() {
+        assert_eq!(
+            parse_fault_spec("jitter0.5"),
+            Err(FaultSpecError::UnknownKind { token: "jitter0.5".into() })
+        );
+        assert_eq!(
+            parse_fault_spec("corruptx"),
+            Err(FaultSpecError::BadRate { token: "corruptx".into() })
+        );
+        assert_eq!(
+            parse_fault_spec("retries-1"),
+            Err(FaultSpecError::BadRetries { token: "retries-1".into() })
+        );
+        assert_eq!(
+            parse_fault_spec("seedless"),
+            Err(FaultSpecError::BadSeed { token: "seedless".into() })
+        );
+        assert_eq!(
+            parse_fault_spec("masterkillx"),
+            Err(FaultSpecError::BadRound { token: "masterkillx".into() })
+        );
+        assert!(matches!(
+            parse_fault_spec("crash1.5"),
+            Err(FaultSpecError::InvalidPlan { .. })
+        ));
+        // every Display carries the culprit token so CLI users see it
+        for spec in ["jitter0.5", "corruptx", "retries-1", "seedless", "masterkillx"] {
+            let msg: String = parse_fault_spec(spec).unwrap_err().into();
+            let token = spec;
+            assert!(msg.contains(token), "{msg} should name {token}");
+        }
+    }
+
+    #[test]
+    fn masterkill_parses_and_stays_off_the_client_fault_path() {
+        let plan = parse_fault_spec("masterkill5").unwrap();
+        assert_eq!(plan.masterkill, Some(5));
+        // a masterkill-only plan is still "zero": no client faults, no
+        // FaultCtx, bitwise-identical trajectory until the kill fires
+        assert!(plan.is_zero());
+        assert!(FaultCtx::from_plan(Some(&plan)).is_none());
+
+        let plan = parse_fault_spec("masterkill3,crash0.2").unwrap();
+        assert_eq!(plan.masterkill, Some(3));
+        assert!(!plan.is_zero());
+
+        // JSON round trip keeps the field (and its absence)
+        let with = FaultPlan { masterkill: Some(9), ..FaultPlan::new(1) };
+        assert_eq!(FaultPlan::from_json(&with.to_json()).unwrap(), with);
+        let without = FaultPlan::new(1);
+        assert_eq!(FaultPlan::from_json(&without.to_json()).unwrap(), without);
     }
 
     #[test]

@@ -31,6 +31,13 @@ impl BitMeter {
         BitMeter::default()
     }
 
+    /// A meter resumed at `bytes` cumulative uplink bytes — used by
+    /// [`crate::checkpoint`] restore so post-resume uplink metrics
+    /// continue the interrupted tally bit-exactly.
+    pub fn with_bytes(bytes: u64) -> Self {
+        BitMeter { bytes }
+    }
+
     /// One participant upload: count the bytes its wire frame occupies
     /// (debug builds encode the frame and verify the count against it).
     pub fn add_payload(&mut self, p: &Payload) {

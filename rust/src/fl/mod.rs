@@ -17,6 +17,7 @@
 pub mod availability;
 pub mod comm;
 
+use crate::checkpoint::CheckpointOptions;
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, CoordinatorOptions, EngineRunner};
@@ -83,6 +84,11 @@ pub struct TrainOptions {
     /// off: no clocks read, no events recorded, trajectories bit-
     /// identical to a build without the subsystem in the call path.
     pub telemetry: TelemetryConfig,
+    /// Durable-snapshot configuration (see [`crate::checkpoint`]).
+    /// Default fully off: no cadence branch taken, no file written, no
+    /// restore attempted — bitwise inert by the same contract as
+    /// telemetry.
+    pub checkpoint: CheckpointOptions,
 }
 
 /// Run a full federated training experiment.

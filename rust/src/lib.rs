@@ -52,6 +52,10 @@
 //! * [`wire`] — typed upload payloads (dense / sparse-k / quantized)
 //!   with byte-exact framing; communication metrics are measured from
 //!   the encoded wire bytes, not estimated.
+//! * [`checkpoint`] — durable coordinator snapshots and the sweep's
+//!   per-arm completion ledger: versioned, checksummed, crash-safely
+//!   written (`--checkpoint-every` / `--resume`), with kill-and-resume
+//!   pinned bitwise identical to the uninterrupted trajectory.
 //!
 //! ```no_run
 //! use fedsamp::config::presets;
@@ -63,6 +67,7 @@
 //! ```
 
 pub mod bench;
+pub mod checkpoint;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

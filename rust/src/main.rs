@@ -9,6 +9,9 @@
 //!   inspect     list AOT artifacts and dataset statistics
 
 use fedsamp::bench::{f, Table};
+use fedsamp::checkpoint::{
+    parse_checkpoint_every, parse_resume_path, CheckpointOptions,
+};
 use fedsamp::compress::Compressor;
 use fedsamp::config::{presets, ExperimentConfig, Strategy};
 use fedsamp::coordinator::{
@@ -16,7 +19,7 @@ use fedsamp::coordinator::{
 };
 use fedsamp::exp::figures::{run_figure, Scale};
 use fedsamp::exp::{default_artifacts_dir, run_experiment};
-use fedsamp::faults::parse_fault_spec;
+use fedsamp::faults::{parse_fault_spec, MASTERKILL_ERR_PREFIX};
 use fedsamp::fl::TrainOptions;
 use fedsamp::metrics::RunResult;
 use fedsamp::model::quadratic::QuadraticProblem;
@@ -131,6 +134,46 @@ fn telemetry_from_cli(p: &Parsed) -> TelemetryConfig {
     }
 }
 
+/// The shared checkpoint CLI surface (`train` and `coordinate`):
+/// `--checkpoint-every k` snapshots the coordinator state every `k`
+/// rounds to `--checkpoint-out` (default `checkpoint.bin`), and
+/// `--resume <path>` restarts a run from a snapshot written by the
+/// same config (fingerprint-checked).
+fn checkpoint_cli(cli: Cli) -> Cli {
+    cli.opt(
+        "checkpoint-every",
+        Some("0"),
+        "write a durable coordinator snapshot every k rounds (0 = off)",
+    )
+    .opt(
+        "checkpoint-out",
+        None,
+        "snapshot path (default checkpoint.bin when --checkpoint-every > 0)",
+    )
+    .opt(
+        "resume",
+        None,
+        "resume from a snapshot written by --checkpoint-out; the run \
+         config must fingerprint-match the snapshot's",
+    )
+}
+
+fn checkpoint_from_cli(p: &Parsed) -> Result<CheckpointOptions, String> {
+    let every = parse_checkpoint_every(&p.str("checkpoint-every"))
+        .map_err(|e| e.to_string())?;
+    let out = p
+        .get("checkpoint-out")
+        .map(String::from)
+        .or_else(|| (every > 0).then(|| "checkpoint.bin".into()));
+    let resume = match p.get("resume") {
+        Some(token) => {
+            Some(parse_resume_path(token).map_err(|e| e.to_string())?)
+        }
+        None => None,
+    };
+    Ok(CheckpointOptions { every, out, resume })
+}
+
 fn print_telemetry_summary(run: &RunResult) {
     if let Some(t) = &run.telemetry {
         println!("telemetry: {}", t.one_line());
@@ -172,14 +215,14 @@ fn cmd_train(args: &[String]) -> i32 {
             None,
             "chaos fault plan: '+'- or ','-joined kinds, e.g. \
              crash0.2+corrupt0.05 (crash|crashpre|crashpost|corrupt|\
-             stall<p>, retries<k>, seed<k>; overrides the config file's \
-             fault_plan)",
+             stall<p>, retries<k>, seed<k>, masterkill<r>; overrides the \
+             config file's fault_plan)",
         )
         .opt("sim", Some("false"), "true = force native sim engine")
         .opt("out", None, "directory for JSON/CSV results")
         .opt("artifacts", None, "artifacts directory")
         .flag("verbose", "print per-round progress");
-    let cli = telemetry_cli(cli);
+    let cli = checkpoint_cli(telemetry_cli(cli));
     let p = parse_or_exit(&cli, args);
 
     let mut cfg: ExperimentConfig = if let Some(path) = p.get("config") {
@@ -244,12 +287,27 @@ fn cmd_train(args: &[String]) -> i32 {
         .map(String::from)
         .unwrap_or_else(default_artifacts_dir);
     let telemetry = telemetry_from_cli(&p);
+    let checkpoint = match checkpoint_from_cli(&p) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seeds = p.u64("seeds");
+    if seeds > 1 && (checkpoint.every > 0 || checkpoint.resume.is_some()) {
+        eprintln!(
+            "--checkpoint-every/--resume describe one trajectory; they \
+             cannot be combined with --seeds > 1"
+        );
+        return 2;
+    }
     let opts = TrainOptions {
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
+        checkpoint,
         ..TrainOptions::default()
     };
 
-    let seeds = p.u64("seeds");
     let mut runs = Vec::new();
     for s in 0..seeds {
         let mut c = cfg.clone();
@@ -266,7 +324,14 @@ fn cmd_train(args: &[String]) -> i32 {
             Ok(r) => runs.push(r),
             Err(e) => {
                 eprintln!("run failed: {e}");
-                return 1;
+                // a masterkill fault is a *planned* abort (chaos smoke):
+                // give it a distinct exit code so CI can tell it from a
+                // real failure
+                return if e.starts_with(MASTERKILL_ERR_PREFIX) {
+                    3
+                } else {
+                    1
+                };
             }
         }
     }
@@ -304,7 +369,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         None,
         "chaos fault plan: '+'- or ','-joined kinds, e.g. \
          crash0.2,corrupt0.05 (crash|crashpre|crashpost|corrupt|\
-         stall<p>, retries<k>, seed<k>)",
+         stall<p>, retries<k>, seed<k>, masterkill<r>)",
     )
     .opt("out", None, "directory for JSON/CSV results")
     .flag(
@@ -313,7 +378,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
          the worker pool) instead of centrally",
     )
     .flag("verbose", "print per-round progress");
-    let cli = telemetry_cli(cli);
+    let cli = checkpoint_cli(telemetry_cli(cli));
     let p = parse_or_exit(&cli, args);
 
     let mut cfg = match preset_by_name(&p.str("preset")) {
@@ -374,9 +439,17 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         deadline,
         sharded_negotiation: p.flag("sharded-negotiation"),
     });
+    let checkpoint = match checkpoint_from_cli(&p) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let opts = TrainOptions {
         verbose_every: if p.flag("verbose") { 1 } else { 10 },
         telemetry: telemetry_from_cli(&p),
+        checkpoint,
         ..TrainOptions::default()
     };
     println!(
@@ -428,7 +501,12 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("coordinate failed: {e}");
-            1
+            // planned masterkill abort (kill-and-resume smoke) → exit 3
+            if e.starts_with(MASTERKILL_ERR_PREFIX) {
+                3
+            } else {
+                1
+            }
         }
     }
 }
@@ -506,6 +584,19 @@ fn cmd_sweep(args: &[String]) -> i32 {
     .opt("seeds", Some("3"), "grid: seeds averaged per arm")
     .opt("grid-rounds", Some("30"), "grid: rounds per run")
     .opt("out", Some("."), "grid: directory for BENCH_sweep.{json,csv}")
+    .opt(
+        "ledger",
+        None,
+        "grid: per-(arm,seed) completion ledger path; an interrupted \
+         sweep rerun with the same spec + ledger resumes at the first \
+         unfinished unit and emits byte-identical BENCH files",
+    )
+    .opt(
+        "abort-after",
+        None,
+        "grid: abort after n newly completed units (sweep-resume CI \
+         smoke; requires --ledger)",
+    )
     .flag("quick", "grid: tiny CI smoke grid (overrides the axis flags)")
     .flag(
         "telemetry",
@@ -523,7 +614,8 @@ fn cmd_sweep(args: &[String]) -> i32 {
 
     if p.str("kind") == "grid" {
         use fedsamp::exp::sweep::{
-            parse_availability_arm, parse_fault_arms, run_sweep, SweepSpec,
+            parse_availability_arm, parse_fault_arms, run_sweep_resumable,
+            SweepSpec, SWEEP_ABORT_ERR_PREFIX,
         };
         let mut spec = if p.flag("quick") {
             SweepSpec::quick()
@@ -591,12 +683,39 @@ fn cmd_sweep(args: &[String]) -> i32 {
             spec.seeds.max(1),
             spec.rounds
         );
-        let report = match run_sweep(&spec, p.flag("verbose") || p.flag("quick"))
-        {
+        let ledger = p.get("ledger").map(String::from);
+        let abort_after = match p.get("abort-after") {
+            Some(n) => match n.parse::<usize>() {
+                Ok(n) if n > 0 => Some(n),
+                _ => {
+                    eprintln!(
+                        "--abort-after: expected a positive integer, \
+                         got '{n}'"
+                    );
+                    return 2;
+                }
+            },
+            None => None,
+        };
+        if abort_after.is_some() && ledger.is_none() {
+            eprintln!("--abort-after requires --ledger");
+            return 2;
+        }
+        let report = match run_sweep_resumable(
+            &spec,
+            ledger.as_deref(),
+            abort_after,
+            p.flag("verbose") || p.flag("quick"),
+        ) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("sweep failed: {e}");
-                return 1;
+                // planned --abort-after kill (sweep-resume smoke) → exit 3
+                return if e.starts_with(SWEEP_ABORT_ERR_PREFIX) {
+                    3
+                } else {
+                    1
+                };
             }
         };
         return match report.save(&p.str("out")) {

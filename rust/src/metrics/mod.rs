@@ -205,7 +205,10 @@ impl RunResult {
     pub fn save(&self, dir: &str) -> std::io::Result<String> {
         std::fs::create_dir_all(dir)?;
         let path = format!("{dir}/{}.json", self.name);
-        std::fs::write(&path, self.to_json().to_pretty())?;
+        // crash-safe: a kill mid-write must never leave a truncated
+        // artifact at the final path (checkpoint::write_atomic)
+        crate::checkpoint::write_atomic(&path, self.to_json().to_pretty().as_bytes())
+            .map_err(|e| std::io::Error::other(e.to_string()))?;
         Ok(path)
     }
 }

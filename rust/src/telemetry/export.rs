@@ -5,6 +5,13 @@
 //! to a `BufWriter`, so steady-state export does no per-event heap
 //! allocation. Write errors after a successful create are recorded once
 //! and silence the writer — telemetry must never abort a training run.
+//!
+//! Final flush is **crash-safe**: writers stream into `<path>.tmp` and
+//! atomically rename onto the real path at `finish()` (after fsync), so
+//! a kill mid-run never leaves a truncated log where a complete one is
+//! expected — the same write sequence as `crate::checkpoint`
+//! (DESIGN.md §11). A run that dies before `finish()` leaves only the
+//! `.tmp` file.
 
 use std::fmt::Write as _;
 use std::fs::File;
@@ -24,16 +31,36 @@ fn create_file(path: &str) -> Result<BufWriter<File>, String> {
     Ok(BufWriter::new(f))
 }
 
+/// Flush + fsync the buffered tmp file and rename it onto `path`.
+/// Errors silence-warn, matching the writers' never-abort contract.
+fn finalize_atomic(mut w: BufWriter<File>, path: &str) {
+    let tmp = format!("{path}.tmp");
+    if w.flush().is_err() || w.get_ref().sync_all().is_err() {
+        eprintln!("telemetry: final flush of {tmp} failed");
+        return;
+    }
+    drop(w);
+    if std::fs::rename(&tmp, path).is_err() {
+        eprintln!("telemetry: rename {tmp} -> {path} failed");
+    }
+}
+
 /// One JSON object per line; schema documented in DESIGN.md §9.
 pub struct JsonlWriter {
     w: BufWriter<File>,
+    path: String,
     line: String,
     ok: bool,
 }
 
 impl JsonlWriter {
     pub fn create(path: &str) -> Result<JsonlWriter, String> {
-        Ok(JsonlWriter { w: create_file(path)?, line: String::new(), ok: true })
+        Ok(JsonlWriter {
+            w: create_file(&format!("{path}.tmp"))?,
+            path: path.to_string(),
+            line: String::new(),
+            ok: true,
+        })
     }
 
     pub fn span(&mut self, name: &str, end: bool, round: usize, t_ns: u64, dur_ns: u64) {
@@ -80,7 +107,8 @@ impl JsonlWriter {
         let _ = write!(self.line, "{{\"ev\":\"run_end\",\"rounds\":{rounds}}}");
         self.emit();
         if self.ok {
-            let _ = self.w.flush();
+            let path = std::mem::take(&mut self.path);
+            finalize_atomic(self.w, &path);
         }
     }
 
@@ -102,6 +130,7 @@ impl JsonlWriter {
 /// with sub-µs precision as Chrome expects.
 pub struct TraceWriter {
     w: BufWriter<File>,
+    path: String,
     line: String,
     first: bool,
     ok: bool,
@@ -109,9 +138,9 @@ pub struct TraceWriter {
 
 impl TraceWriter {
     pub fn create(path: &str) -> Result<TraceWriter, String> {
-        let mut w = create_file(path)?;
+        let mut w = create_file(&format!("{path}.tmp"))?;
         let ok = w.write_all(b"{\"traceEvents\":[").is_ok();
-        Ok(TraceWriter { w, line: String::new(), first: true, ok })
+        Ok(TraceWriter { w, path: path.to_string(), line: String::new(), first: true, ok })
     }
 
     pub fn phase(&mut self, name: &str, end: bool, round: usize, t_ns: u64) {
@@ -144,9 +173,9 @@ impl TraceWriter {
     }
 
     pub fn finish(mut self) {
-        if self.ok {
-            let _ = self.w.write_all(b"]}");
-            let _ = self.w.flush();
+        if self.ok && self.w.write_all(b"]}").is_ok() {
+            let path = std::mem::take(&mut self.path);
+            finalize_atomic(self.w, &path);
         }
     }
 

@@ -33,10 +33,12 @@ use crate::util::stats::{LogHistogram, LogSummary};
 use crate::wire::Payload;
 use export::{JsonlWriter, TraceWriter};
 
-/// The seven phases of one federated round, in protocol order. The
-/// Repair span doubles as the repair-latency histogram: it is recorded
-/// every committed round, so a fault-free round contributes its (near
-/// zero) baseline and chaos runs surface the recovery cost.
+/// The seven phases of one federated round, in protocol order, plus the
+/// out-of-round `Checkpoint` span (a cadenced snapshot write after
+/// Commit — see `crate::checkpoint`). The Repair span doubles as the
+/// repair-latency histogram: it is recorded every committed round, so a
+/// fault-free round contributes its (near zero) baseline and chaos runs
+/// surface the recovery cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PhaseSpan {
     Announce = 0,
@@ -46,9 +48,16 @@ pub enum PhaseSpan {
     SecureAggregate = 4,
     Repair = 5,
     Commit = 6,
+    /// Durable snapshot write (only on `--checkpoint-every` rounds).
+    Checkpoint = 7,
 }
 
-pub const PHASE_NAMES: [&str; 7] = [
+/// Number of *per-round* phases — every committed round emits exactly
+/// one span per phase in `PHASE_NAMES[..NUM_ROUND_PHASES]`; the
+/// trailing `checkpoint` span fires only on snapshot cadence rounds.
+pub const NUM_ROUND_PHASES: usize = 7;
+
+pub const PHASE_NAMES: [&str; 8] = [
     "announce",
     "local_compute",
     "norm_report",
@@ -56,6 +65,7 @@ pub const PHASE_NAMES: [&str; 7] = [
     "secure_aggregate",
     "repair",
     "commit",
+    "checkpoint",
 ];
 
 impl PhaseSpan {
@@ -140,6 +150,12 @@ pub enum Counter {
     ClientsQuarantined = 20,
     /// Post-commit dropouts whose mask residue was repaired out.
     MaskRepairs = 21,
+    /// Durable coordinator snapshots written (`--checkpoint-every`).
+    CheckpointsWritten = 22,
+    /// Total encoded snapshot bytes written.
+    CheckpointBytes = 23,
+    /// Runs restored from a snapshot (`--resume`); 0 or 1 per process.
+    Resumes = 24,
 }
 
 pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
@@ -165,9 +181,12 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "shards_degraded",
     "clients_quarantined",
     "mask_repairs",
+    "checkpoints_written",
+    "checkpoint_bytes",
+    "resumes",
 ];
 
-const NUM_COUNTERS: usize = 22;
+const NUM_COUNTERS: usize = 25;
 
 /// Event ring capacity; full ring forces an early drain to the writers.
 const RING_CAPACITY: usize = 8192;
@@ -225,7 +244,7 @@ pub struct Telemetry {
     events: Vec<Event>,
     jsonl: Option<JsonlWriter>,
     trace: Option<TraceWriter>,
-    span_t0: [u64; 7],
+    span_t0: [u64; 8],
     phase_hist: Vec<LogHistogram>,
     exec_hist: Vec<LogHistogram>,
     queue_hist: Vec<LogHistogram>,
@@ -247,7 +266,7 @@ impl Telemetry {
             events: Vec::new(),
             jsonl: None,
             trace: None,
-            span_t0: [0; 7],
+            span_t0: [0; 8],
             phase_hist: Vec::new(),
             exec_hist: Vec::new(),
             queue_hist: Vec::new(),
@@ -285,8 +304,8 @@ impl Telemetry {
             events: Vec::with_capacity(RING_CAPACITY),
             jsonl,
             trace,
-            span_t0: [0; 7],
-            phase_hist: (0..7).map(|_| LogHistogram::new()).collect(),
+            span_t0: [0; 8],
+            phase_hist: (0..8).map(|_| LogHistogram::new()).collect(),
             exec_hist: (0..3).map(|_| LogHistogram::new()).collect(),
             queue_hist: (0..3).map(|_| LogHistogram::new()).collect(),
             items_hist: (0..3).map(|_| LogHistogram::new()).collect(),
@@ -369,6 +388,53 @@ impl Telemetry {
             self.push(Event::Job { round, timing: *t });
         }
         self.timing_scratch = buf;
+    }
+
+    /// Record one durable snapshot write of `bytes` encoded bytes.
+    /// Checkpoints happen *after* Commit has already flushed the round's
+    /// counters, so these bump the run totals directly (a cadence write
+    /// after the final round would otherwise be lost) and emit their
+    /// count events immediately.
+    pub fn checkpoint_written(&mut self, round: usize, bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.total_counters[Counter::CheckpointsWritten as usize] += 1;
+        self.total_counters[Counter::CheckpointBytes as usize] += bytes;
+        self.push(Event::Count { id: Counter::CheckpointsWritten as usize, round, value: 1 });
+        self.push(Event::Count { id: Counter::CheckpointBytes as usize, round, value: bytes });
+    }
+
+    /// Record a restore-from-snapshot (fires once, before the resumed
+    /// round loop starts).
+    pub fn resumed(&mut self, round: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.total_counters[Counter::Resumes as usize] += 1;
+        self.push(Event::Count { id: Counter::Resumes as usize, round, value: 1 });
+    }
+
+    /// The run-total counters + rounds flushed, for inclusion in a
+    /// snapshot. Empty when telemetry is off (a resumed run may enable
+    /// or disable telemetry independently of the killed one).
+    pub fn checkpoint_state(&self) -> (Vec<u64>, usize) {
+        if !self.enabled {
+            return (Vec::new(), 0);
+        }
+        (self.total_counters.to_vec(), self.rounds_flushed)
+    }
+
+    /// Restore run-total counters + rounds flushed from a snapshot. A
+    /// length mismatch (snapshot from a build with different counters,
+    /// or telemetry off when it was taken) restores nothing — counters
+    /// then cover only the post-resume segment.
+    pub fn restore_counters(&mut self, totals: &[u64], rounds: usize) {
+        if !self.enabled || totals.len() != NUM_COUNTERS {
+            return;
+        }
+        self.total_counters.copy_from_slice(totals);
+        self.rounds_flushed = rounds;
     }
 
     /// End-of-round flush: emit counter events, roll round counters into
@@ -640,6 +706,52 @@ mod tests {
         assert_eq!(s.counter("payload_bytes_dense"), 2 * dense.wire_bytes() as u64);
         assert_eq!(s.counter("payload_bytes_sparse"), sparse.wire_bytes() as u64);
         assert_eq!(s.payload_bytes.n, 3);
+    }
+
+    #[test]
+    fn checkpoint_counters_survive_the_final_flush() {
+        let cfg = TelemetryConfig { manual_clock: true, ..TelemetryConfig::summary_only() };
+        let mut tel = Telemetry::from_config(&cfg).unwrap();
+        tel.flush_round(0);
+        // checkpoint lands after the round's flush — totals must still
+        // see it at finish()
+        tel.span_begin(0, PhaseSpan::Checkpoint);
+        tel.span_end(0, PhaseSpan::Checkpoint);
+        tel.checkpoint_written(0, 512);
+        let s = tel.finish().unwrap();
+        assert_eq!(s.counter("checkpoints_written"), 1);
+        assert_eq!(s.counter("checkpoint_bytes"), 512);
+        assert_eq!(s.counter("resumes"), 0);
+        assert_eq!(s.phase("checkpoint").unwrap().n, 1);
+    }
+
+    #[test]
+    fn restore_counters_round_trips_checkpoint_state() {
+        let cfg = TelemetryConfig { manual_clock: true, ..TelemetryConfig::summary_only() };
+        let mut a = Telemetry::from_config(&cfg).unwrap();
+        a.add(Counter::ClientsTransmitted, 7);
+        a.flush_round(0);
+        let (totals, rounds) = a.checkpoint_state();
+        assert_eq!(rounds, 1);
+
+        let mut b = Telemetry::from_config(&cfg).unwrap();
+        b.restore_counters(&totals, rounds);
+        b.resumed(1);
+        b.add(Counter::ClientsTransmitted, 3);
+        b.flush_round(1);
+        let s = b.finish().unwrap();
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.counter("clients_transmitted"), 10);
+        assert_eq!(s.counter("resumes"), 1);
+
+        // length-mismatched restores are ignored, not mis-mapped
+        let mut c = Telemetry::from_config(&cfg).unwrap();
+        c.restore_counters(&[1, 2, 3], 9);
+        c.flush_round(0);
+        assert_eq!(c.finish().unwrap().rounds, 1);
+
+        // disabled recorders expose no state
+        assert_eq!(Telemetry::disabled().checkpoint_state(), (Vec::new(), 0));
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Integration: the checkpoint subsystem end to end — a run killed at
+//! any round and resumed from its last snapshot lands on the *bitwise
+//! identical* trajectory (metrics, uplink bytes, coordinator stats),
+//! checkpointing switched off is bitwise inert, and resuming under the
+//! wrong config or model dimension is a typed refusal.
+
+use std::path::PathBuf;
+
+use fedsamp::checkpoint::{CheckpointOptions, Snapshot};
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{
+    CoordStats, Coordinator, CoordinatorOptions, ParallelRunner,
+};
+use fedsamp::faults::{parse_fault_spec, MASTERKILL_ERR_PREFIX};
+use fedsamp::fl::TrainOptions;
+use fedsamp::metrics::RunResult;
+use fedsamp::sim::build_native_engine;
+
+fn cfg(secure: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "checkpoint_it".into(),
+        seed: 23,
+        rounds: 6,
+        cohort: 12,
+        budget: 4,
+        strategy: Strategy::Aocs { j_max: 4 },
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 24, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: 2,
+        eval_examples: 128,
+        workers: 2,
+        secure_updates: secure,
+        availability: 1.0,
+        availability_trace: None,
+        compressor: None,
+        fault_plan: None,
+    }
+}
+
+fn run(
+    c: &ExperimentConfig,
+    shards: usize,
+    workers: usize,
+    checkpoint: CheckpointOptions,
+) -> Result<(RunResult, CoordStats), String> {
+    let engine = build_native_engine(c);
+    let mut runner = ParallelRunner::new(engine, workers);
+    let mut coordinator = Coordinator::new(CoordinatorOptions {
+        shards,
+        ..CoordinatorOptions::default()
+    });
+    let opts = TrainOptions { checkpoint, ..TrainOptions::default() };
+    let result = coordinator.run(c, &mut runner, &opts)?;
+    Ok((result, coordinator.stats.clone()))
+}
+
+/// Unique temp path per test case so parallel test threads never collide.
+fn temp_path(tag: &str) -> String {
+    PathBuf::from(std::env::temp_dir())
+        .join(format!("fedsamp_ckpt_it_{}_{tag}.bin", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Every trajectory-bearing bit must match: float fields compared via
+/// `to_bits` (NaN accuracies on non-eval rounds included).
+fn assert_bitwise(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.round, y.round, "{what}: round index");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{what}: train_loss round {}",
+            x.round
+        );
+        assert_eq!(
+            x.val_accuracy.to_bits(),
+            y.val_accuracy.to_bits(),
+            "{what}: val_accuracy round {}",
+            x.round
+        );
+        assert_eq!(x.uplink_bits, y.uplink_bits, "{what}: uplink_bits");
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{what}: uplink_bytes");
+        assert_eq!(x.transmitted, y.transmitted, "{what}: transmitted");
+        assert_eq!(
+            x.expected_budget.to_bits(),
+            y.expected_budget.to_bits(),
+            "{what}: expected_budget"
+        );
+        assert_eq!(x.alpha.to_bits(), y.alpha.to_bits(), "{what}: alpha");
+        assert_eq!(x.gamma.to_bits(), y.gamma.to_bits(), "{what}: gamma");
+    }
+    // the serialized artifact (what `--out` saves) is byte-identical too
+    assert_eq!(
+        a.to_json().to_pretty(),
+        b.to_json().to_pretty(),
+        "{what}: run JSON"
+    );
+}
+
+fn assert_stats_eq(a: &CoordStats, b: &CoordStats, what: &str) {
+    assert_eq!(a.shards_dropped, b.shards_dropped, "{what}: shards_dropped");
+    assert_eq!(a.shards_outaged, b.shards_outaged, "{what}: shards_outaged");
+    assert_eq!(a.noop_rounds, b.noop_rounds, "{what}: noop_rounds");
+    assert_eq!(a.rounds_run, b.rounds_run, "{what}: rounds_run");
+    assert_eq!(a.faults, b.faults, "{what}: fault counters");
+}
+
+/// The tentpole contract: kill at round k (early, mid, last) and resume
+/// — the stitched trajectory is bitwise identical to the uninterrupted
+/// one, on the secure and plain aggregation paths, single- and
+/// multi-shard, serial and pooled workers.
+#[test]
+fn kill_and_resume_is_bitwise_identical() {
+    for secure in [true, false] {
+        for (shards, workers) in [(1usize, 1usize), (4, 3)] {
+            let c = cfg(secure);
+            let (reference, ref_stats) =
+                run(&c, shards, workers, CheckpointOptions::default())
+                    .unwrap();
+            // kill rounds: first possible resume, mid-run, last round
+            for k in [1usize, 3, 5] {
+                let what = format!("secure={secure} s{shards} w{workers} k{k}");
+                let snap = temp_path(&format!(
+                    "kill_{secure}_{shards}_{workers}_{k}"
+                ));
+                let mut killed_cfg = c.clone();
+                killed_cfg.fault_plan =
+                    Some(parse_fault_spec(&format!("masterkill{k}")).unwrap());
+                let err = run(
+                    &killed_cfg,
+                    shards,
+                    workers,
+                    CheckpointOptions {
+                        every: 1,
+                        out: Some(snap.clone()),
+                        resume: None,
+                    },
+                )
+                .unwrap_err();
+                assert!(
+                    err.starts_with(MASTERKILL_ERR_PREFIX),
+                    "{what}: expected planned kill, got: {err}"
+                );
+                // the last snapshot stops exactly where the kill fired
+                let on_disk = Snapshot::load(&snap).unwrap();
+                assert_eq!(on_disk.next_round, k as u64, "{what}");
+
+                // resume with the *same* config (masterkill disarmed)
+                let (resumed, resumed_stats) = run(
+                    &killed_cfg,
+                    shards,
+                    workers,
+                    CheckpointOptions {
+                        resume: Some(snap.clone()),
+                        ..CheckpointOptions::default()
+                    },
+                )
+                .unwrap();
+                let _ = std::fs::remove_file(&snap);
+                assert_bitwise(&reference, &resumed, &what);
+                assert_stats_eq(&ref_stats, &resumed_stats, &what);
+            }
+        }
+    }
+}
+
+/// Feature-off contract: a run that checkpoints every other round is
+/// bitwise identical to one that never checkpoints.
+#[test]
+fn checkpointing_is_bitwise_inert() {
+    let c = cfg(true);
+    let snap = temp_path("inert");
+    let (off, off_stats) =
+        run(&c, 4, 3, CheckpointOptions::default()).unwrap();
+    let (on, on_stats) = run(
+        &c,
+        4,
+        3,
+        CheckpointOptions {
+            every: 2,
+            out: Some(snap.clone()),
+            resume: None,
+        },
+    )
+    .unwrap();
+    let _ = std::fs::remove_file(&snap);
+    assert_bitwise(&off, &on, "checkpoint on vs off");
+    assert_stats_eq(&off_stats, &on_stats, "checkpoint on vs off");
+}
+
+/// Kill-and-resume across no-op rounds: near-zero availability makes
+/// most rounds empty, exercising the no-op snapshot path (`continue`
+/// branch) through the same bitwise contract.
+#[test]
+fn resume_across_noop_rounds_is_bitwise_identical() {
+    let mut c = cfg(true);
+    c.availability = 0.05; // expected ~1 available client per round
+    let (reference, ref_stats) =
+        run(&c, 2, 2, CheckpointOptions::default()).unwrap();
+    assert!(ref_stats.noop_rounds > 0, "scenario produced no no-op rounds");
+
+    let snap = temp_path("noop");
+    let mut killed_cfg = c.clone();
+    killed_cfg.fault_plan = Some(parse_fault_spec("masterkill3").unwrap());
+    let err = run(
+        &killed_cfg,
+        2,
+        2,
+        CheckpointOptions { every: 1, out: Some(snap.clone()), resume: None },
+    )
+    .unwrap_err();
+    assert!(err.starts_with(MASTERKILL_ERR_PREFIX), "got: {err}");
+    let (resumed, resumed_stats) = run(
+        &killed_cfg,
+        2,
+        2,
+        CheckpointOptions {
+            resume: Some(snap.clone()),
+            ..CheckpointOptions::default()
+        },
+    )
+    .unwrap();
+    let _ = std::fs::remove_file(&snap);
+    assert_bitwise(&reference, &resumed, "noop resume");
+    assert_stats_eq(&ref_stats, &resumed_stats, "noop resume");
+}
+
+/// Resume refusals are typed and early: a snapshot from a different
+/// config (fingerprint) or a different model dimension never starts a
+/// silently divergent run.
+#[test]
+fn resume_rejects_config_and_dim_mismatch() {
+    let c = cfg(true);
+    let snap = temp_path("mismatch");
+    run(
+        &c,
+        1,
+        1,
+        CheckpointOptions { every: 3, out: Some(snap.clone()), resume: None },
+    )
+    .unwrap();
+
+    // same snapshot, different config → ConfigMismatch
+    let mut other = c.clone();
+    other.seed += 1;
+    let err = run(
+        &other,
+        1,
+        1,
+        CheckpointOptions {
+            resume: Some(snap.clone()),
+            ..CheckpointOptions::default()
+        },
+    )
+    .unwrap_err();
+    assert!(
+        err.contains("different experiment config"),
+        "expected ConfigMismatch, got: {err}"
+    );
+
+    // same config, doctored model dimension → DimMismatch
+    let mut doctored = Snapshot::load(&snap).unwrap();
+    doctored.x.push(0.0);
+    let bad = temp_path("mismatch_dim");
+    doctored.write_atomic(&bad).unwrap();
+    let err = run(
+        &c,
+        1,
+        1,
+        CheckpointOptions {
+            resume: Some(bad.clone()),
+            ..CheckpointOptions::default()
+        },
+    )
+    .unwrap_err();
+    let _ = std::fs::remove_file(&snap);
+    let _ = std::fs::remove_file(&bad);
+    assert!(
+        err.contains("model dimension"),
+        "expected DimMismatch, got: {err}"
+    );
+}

@@ -12,7 +12,7 @@ use fedsamp::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
 use fedsamp::fl::TrainOptions;
 use fedsamp::metrics::RunResult;
 use fedsamp::sim::build_native_engine;
-use fedsamp::telemetry::{TelemetryConfig, PHASE_NAMES};
+use fedsamp::telemetry::{TelemetryConfig, NUM_ROUND_PHASES, PHASE_NAMES};
 use fedsamp::util::json::Json;
 
 fn cfg() -> ExperimentConfig {
@@ -121,9 +121,11 @@ fn jsonl_export_parses_with_balanced_spans_and_counters() {
     for ((name, round), (b, e)) in &spans {
         assert_eq!(b, e, "unbalanced span {name} round {round}");
     }
-    // always-on availability: every round runs all six phases
+    // always-on availability: every round runs every protocol phase
+    // (the trailing "checkpoint" phase only fires when checkpointing is
+    // enabled, so it is excluded here)
     for round in 0..cfg().rounds {
-        for name in PHASE_NAMES {
+        for name in &PHASE_NAMES[..NUM_ROUND_PHASES] {
             assert!(
                 spans.contains_key(&(name.to_string(), round)),
                 "round {round} missing {name} span"
@@ -175,9 +177,9 @@ fn chrome_trace_loads_and_balances_phase_events() {
         }
     }
     assert_eq!(begins, ends, "unbalanced B/E trace events");
-    assert_eq!(begins, cfg().rounds * PHASE_NAMES.len());
+    assert_eq!(begins, cfg().rounds * NUM_ROUND_PHASES);
     assert!(complete > 0, "no X (job) events in trace");
-    for name in PHASE_NAMES {
+    for name in &PHASE_NAMES[..NUM_ROUND_PHASES] {
         assert!(phase_names_seen.contains(name), "trace missing {name}");
     }
 }
@@ -222,7 +224,7 @@ fn summary_is_internally_consistent() {
     let s = run.telemetry.as_ref().expect("summary-only still summarizes");
     let c = cfg();
     assert_eq!(s.rounds, c.rounds);
-    for name in PHASE_NAMES {
+    for name in &PHASE_NAMES[..NUM_ROUND_PHASES] {
         let p = s
             .phase(name)
             .unwrap_or_else(|| panic!("no phase summary for {name}"));
@@ -250,6 +252,53 @@ fn summary_is_internally_consistent() {
         j.get("telemetry").get("rounds").as_usize(),
         Some(c.rounds)
     );
+}
+
+#[test]
+fn checkpoint_counters_land_in_the_summary() {
+    use fedsamp::checkpoint::CheckpointOptions;
+    let snap = temp_path("ck_counters.bin");
+    let snap_s = snap.to_string_lossy().into_owned();
+    let c = cfg();
+    let telemetry = TelemetryConfig {
+        manual_clock: true,
+        ..TelemetryConfig::summary_only()
+    };
+
+    let run_once = |resume: Option<String>| {
+        let engine = build_native_engine(&c);
+        let mut runner = ParallelRunner::new(engine, 2);
+        let mut coordinator = Coordinator::new(CoordinatorOptions {
+            shards: 2,
+            ..CoordinatorOptions::default()
+        });
+        let opts = TrainOptions {
+            telemetry: telemetry.clone(),
+            checkpoint: CheckpointOptions {
+                every: 2,
+                out: Some(snap_s.clone()),
+                resume,
+            },
+            ..TrainOptions::default()
+        };
+        coordinator.run(&c, &mut runner, &opts).unwrap()
+    };
+
+    // rounds=4, every=2 → snapshots after rounds 1 and 3
+    let run = run_once(None);
+    let s = run.telemetry.as_ref().unwrap();
+    assert_eq!(s.counter("checkpoints_written"), 2);
+    assert!(s.counter("checkpoint_bytes") > 0, "no snapshot bytes metered");
+    assert_eq!(s.counter("resumes"), 0);
+    let p = s.phase("checkpoint").expect("checkpoint phase summary");
+    assert_eq!(p.n, 2, "one checkpoint span per snapshot");
+
+    // resuming restores the cumulative counters and bumps `resumes`
+    let resumed = run_once(Some(snap_s.clone()));
+    let _ = std::fs::remove_file(&snap);
+    let s = resumed.telemetry.as_ref().unwrap();
+    assert_eq!(s.counter("checkpoints_written"), 2);
+    assert_eq!(s.counter("resumes"), 1);
 }
 
 #[test]
