@@ -17,6 +17,14 @@
 //! group's secure-aggregation masked fold (`LocalRunner::secure_partials`
 //! — ring sums commute, so fanning the folds across workers is
 //! bit-exact; see DESIGN.md §6).
+//!
+//! Both job kinds parallelize *within* a shard, not just across shards:
+//! local passes are dispatched per client, and a group's masked fold is
+//! sub-chunked over its members when there are more idle workers than
+//! non-empty groups ([`chunk_ranges`]), so a 1-shard/N-worker run keeps
+//! all N workers busy. Chunk partials merge in ascending chunk order —
+//! and Z_2^64 addition commutes, so the merged bits equal the
+//! sequential member-order fold regardless (DESIGN.md §12).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -25,6 +33,7 @@ use std::thread::JoinHandle;
 use crate::fl::{ClientEngine, EvalOutcome, LocalOutcome};
 use crate::secure_agg::SecureAggregator;
 use crate::telemetry::{Clock, JobKind, JobTiming};
+use crate::tensor::kernels;
 use crate::tensor::kernels::Scratch;
 
 use super::aggregate::{fused_masked_partial, MaskBatch};
@@ -257,10 +266,14 @@ impl LocalRunner for EngineRunner<'_> {
 // worker pool (channel pattern from runtime::engine)
 // ---------------------------------------------------------------------------
 
-/// The job kinds a pool worker runs: one client's local pass, one shard
-/// group's masked vector fold (secure aggregation), or one shard
-/// group's masked scalar fold (the sharded AOCS negotiation). The first
-/// two use the worker's own scratch arena.
+/// The job kinds a pool worker runs: one client's local pass, one
+/// member sub-range of a shard group's masked vector fold (secure
+/// aggregation), or one shard group's masked scalar fold (the sharded
+/// AOCS negotiation). The first two use the worker's own scratch arena.
+///
+/// `ScalarFold` is never sub-chunked: a group folds dim-1 scalars, so
+/// one job is already cheaper than the dispatch it would take to split
+/// it.
 enum ShardJob {
     Local {
         shard: usize,
@@ -271,6 +284,13 @@ enum ShardJob {
     },
     MaskFold {
         group: usize,
+        /// member sub-range `lo..hi` of `batch.groups[group]` this job
+        /// folds (the whole group when the split plan is one chunk)
+        lo: usize,
+        hi: usize,
+        /// position of this sub-range in the group's split plan — the
+        /// merge slot the partial lands in
+        chunk: usize,
         batch: Arc<MaskBatch>,
     },
     ScalarFold {
@@ -278,6 +298,28 @@ enum ShardJob {
         round_seed: u64,
         groups: Arc<Vec<ScalarGroup>>,
     },
+}
+
+/// Split `len` members into `parts` contiguous near-equal ranges (the
+/// first `len % parts` ranges take the extra member). Never returns
+/// more ranges than members; `len == 0` yields one empty range so an
+/// empty group still produces its zero partial (and its one job, as
+/// before sub-chunking).
+fn chunk_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return vec![(0, 0)];
+    }
+    let parts = parts.clamp(1, len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let hi = lo + base + usize::from(p < extra);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
 }
 
 /// A queued job plus the telemetry context it travels with: the enqueue
@@ -298,6 +340,7 @@ enum ShardReply {
     },
     MaskFold {
         group: usize,
+        chunk: usize,
         partial: Vec<u64>,
     },
     ScalarFold {
@@ -359,17 +402,26 @@ impl ShardPool {
                                     1,
                                 )
                             }
-                            ShardJob::MaskFold { group, batch } => {
-                                let items = batch.groups[group].len() as u64;
+                            ShardJob::MaskFold {
+                                group,
+                                lo,
+                                hi,
+                                chunk,
+                                batch,
+                            } => {
                                 let partial = fused_masked_partial(
                                     &batch,
-                                    &batch.groups[group],
+                                    &batch.groups[group][lo..hi],
                                     &mut scratch,
                                 );
                                 (
-                                    ShardReply::MaskFold { group, partial },
+                                    ShardReply::MaskFold {
+                                        group,
+                                        chunk,
+                                        partial,
+                                    },
                                     JobKind::MaskFold,
-                                    items,
+                                    (hi - lo) as u64,
                                 )
                             }
                             ShardJob::ScalarFold {
@@ -430,6 +482,8 @@ impl Drop for ShardPool {
 pub struct ParallelRunner<C: ClientCompute> {
     compute: Arc<C>,
     pool: Option<ShardPool>,
+    /// pool width — the sub-chunking budget for under-sharded folds
+    workers: usize,
     /// arena for the inline (workers <= 1) path
     scratch: Scratch,
     /// telemetry clock; `None` (the default) keeps dispatch timing-free
@@ -449,6 +503,7 @@ impl<C: ClientCompute> ParallelRunner<C> {
         ParallelRunner {
             compute,
             pool,
+            workers: workers.max(1),
             scratch: Scratch::new(),
             clock: None,
             timings: Vec::new(),
@@ -548,12 +603,18 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
             .collect()
     }
 
-    /// Fan the per-shard masked folds out over the worker pool: one
-    /// `MaskFold` job per group, each worker folding its group
-    /// into one ring accumulator with its own scratch arena. Partials
-    /// land by group index, and ring sums commute, so the combined
-    /// result is bit-identical to the sequential fold for any worker
-    /// count or completion order.
+    /// Fan the per-shard masked folds out over the worker pool,
+    /// sub-chunking groups when workers outnumber non-empty groups:
+    /// each group's member list splits into `⌈workers / nonempty⌉`
+    /// contiguous ranges ([`chunk_ranges`]), one `MaskFold` job per
+    /// range, each worker folding its range into its own ring
+    /// accumulator with its own scratch arena. A well-sharded batch
+    /// (groups ≥ workers) keeps the historical one-job-per-group plan.
+    ///
+    /// Chunk partials land by (group, chunk) index and merge in
+    /// ascending chunk order; Z_2^64 addition commutes, so the merged
+    /// bits equal the sequential member-order fold for any worker
+    /// count, split plan or completion order (DESIGN.md §6, §12).
     fn secure_partials(&mut self, batch: MaskBatch) -> Vec<Vec<u64>> {
         if self.pool.is_none() {
             // inline path: the runner-owned arena, as in run_shards
@@ -571,30 +632,59 @@ impl<C: ClientCompute> LocalRunner for ParallelRunner<C> {
             return out;
         }
         let pool = self.pool.as_ref().expect("pool checked above");
-        let total = batch.groups.len();
+        let nonempty =
+            batch.groups.iter().filter(|g| !g.is_empty()).count().max(1);
+        let per_group = self.workers.div_ceil(nonempty);
+        let plans: Vec<Vec<(usize, usize)>> = batch
+            .groups
+            .iter()
+            .map(|g| chunk_ranges(g.len(), per_group))
+            .collect();
         let batch = Arc::new(batch);
-        for group in 0..total {
-            self.dispatch(
-                pool,
-                ShardJob::MaskFold { group, batch: Arc::clone(&batch) },
-            );
+        let mut total_jobs = 0usize;
+        for (group, plan) in plans.iter().enumerate() {
+            for (chunk, &(lo, hi)) in plan.iter().enumerate() {
+                self.dispatch(
+                    pool,
+                    ShardJob::MaskFold {
+                        group,
+                        lo,
+                        hi,
+                        chunk,
+                        batch: Arc::clone(&batch),
+                    },
+                );
+                total_jobs += 1;
+            }
         }
-        let mut out: Vec<Option<Vec<u64>>> = vec![None; total];
-        for _ in 0..total {
+        let mut parts: Vec<Vec<Option<Vec<u64>>>> =
+            plans.iter().map(|p| vec![None; p.len()]).collect();
+        for _ in 0..total_jobs {
             let Reply { reply, timing } =
                 pool.replies.recv().expect("shard pool dead");
             if let Some(t) = timing {
                 self.timings.push(t);
             }
             match reply {
-                ShardReply::MaskFold { group, partial } => {
-                    debug_assert!(out[group].is_none());
-                    out[group] = Some(partial);
+                ShardReply::MaskFold { group, chunk, partial } => {
+                    debug_assert!(parts[group][chunk].is_none());
+                    parts[group][chunk] = Some(partial);
                 }
                 _ => panic!("unexpected reply during mask fold"),
             }
         }
-        out.into_iter().map(Option::unwrap).collect()
+        parts
+            .into_iter()
+            .map(|chunks| {
+                let mut it =
+                    chunks.into_iter().map(|c| c.expect("chunk collected"));
+                let mut acc = it.next().expect("every group has a chunk");
+                for p in it {
+                    kernels::wrapping_accumulate(&mut acc, &[&p]);
+                }
+                acc
+            })
+            .collect()
     }
 
     /// Fan the sharded-negotiation scalar folds out over the worker
@@ -848,6 +938,125 @@ mod tests {
         let mut again = Vec::new();
         timed.drain_timings(&mut again);
         assert!(again.is_empty(), "drain clears the buffer");
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_balance() {
+        assert_eq!(chunk_ranges(0, 4), vec![(0, 0)]);
+        assert_eq!(chunk_ranges(3, 1), vec![(0, 3)]);
+        assert_eq!(chunk_ranges(2, 5), vec![(0, 1), (1, 2)], "≤ len ranges");
+        assert_eq!(chunk_ranges(7, 3), vec![(0, 3), (3, 5), (5, 7)]);
+        for (len, parts) in [(1usize, 1usize), (8, 3), (9, 4), (100, 7)] {
+            let r = chunk_ranges(len, parts);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, len);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert!(w[0].1 > w[0].0, "non-empty");
+            }
+        }
+    }
+
+    fn one_group_batch(members: usize, dim: usize) -> MaskBatch {
+        use super::super::aggregate::MaskUpload;
+        use crate::util::rng::Rng;
+        use crate::wire::Payload;
+        let mut rng = Rng::new(4242);
+        let roster: Vec<u64> = (0..members as u64).collect();
+        let group: Vec<MaskUpload> = roster
+            .iter()
+            .map(|&client| MaskUpload {
+                client,
+                factor: 0.5 + client as f32 * 0.1,
+                payload: Payload::Dense(
+                    (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                ),
+            })
+            .collect();
+        MaskBatch { dim, round_seed: 99, roster, groups: vec![group] }
+    }
+
+    #[test]
+    fn sub_chunked_secure_partials_bitwise_match_inline() {
+        // one fat group, more workers than groups: the fold must
+        // sub-chunk yet stay bit-identical to the sequential fold
+        let batch = one_group_batch(7, 300);
+        let mut inline = ParallelRunner::new(TagCompute { n: 8, dim: 300 }, 1);
+        let mut pooled = ParallelRunner::new(TagCompute { n: 8, dim: 300 }, 4);
+        let a = inline.secure_partials(batch.clone());
+        let b = pooled.secure_partials(batch);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn under_sharded_mask_fold_engages_all_workers() {
+        // the PR 9 regression pin: a 1-group/N-worker secure fold must
+        // produce N MaskFold jobs (one per worker, deterministic via
+        // job counts) whose item counts partition the group
+        use crate::telemetry::ManualClock;
+        let workers = 4;
+        let members = 7;
+        let mut pooled =
+            ParallelRunner::new(TagCompute { n: 8, dim: 64 }, workers);
+        pooled.set_clock(Some(Arc::new(ManualClock::new(3))));
+        let out = pooled.secure_partials(one_group_batch(members, 64));
+        assert_eq!(out.len(), 1);
+        let mut t = Vec::new();
+        pooled.drain_timings(&mut t);
+        let folds: Vec<_> = t
+            .iter()
+            .filter(|x| matches!(x.kind, JobKind::MaskFold))
+            .collect();
+        assert_eq!(
+            folds.len(),
+            workers,
+            "one sub-chunk job per worker on an under-sharded fold"
+        );
+        assert_eq!(
+            folds.iter().map(|x| x.items).sum::<u64>(),
+            members as u64,
+            "sub-chunks partition the group"
+        );
+        assert!(
+            folds.iter().all(|x| x.items > 0),
+            "no empty make-work chunks"
+        );
+    }
+
+    #[test]
+    fn well_sharded_mask_fold_keeps_one_job_per_group() {
+        use super::super::aggregate::MaskUpload;
+        use crate::telemetry::ManualClock;
+        use crate::util::rng::Rng;
+        use crate::wire::Payload;
+        let dim = 64;
+        let mut rng = Rng::new(17);
+        let roster: Vec<u64> = (0..6).collect();
+        let mut groups = vec![Vec::new(), Vec::new(), Vec::new()];
+        for (k, &client) in roster.iter().enumerate() {
+            groups[k % 3].push(MaskUpload {
+                client,
+                factor: 1.0,
+                payload: Payload::Dense(
+                    (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                ),
+            });
+        }
+        let batch = MaskBatch { dim, round_seed: 5, roster, groups };
+        let mut pooled = ParallelRunner::new(TagCompute { n: 8, dim }, 3);
+        pooled.set_clock(Some(Arc::new(ManualClock::new(3))));
+        let out = pooled.secure_partials(batch);
+        assert_eq!(out.len(), 3);
+        let mut t = Vec::new();
+        pooled.drain_timings(&mut t);
+        assert_eq!(
+            t.iter()
+                .filter(|x| matches!(x.kind, JobKind::MaskFold))
+                .count(),
+            3,
+            "groups ≥ workers: the historical one-job-per-group plan"
+        );
     }
 
     #[test]

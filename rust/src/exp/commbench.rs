@@ -278,6 +278,10 @@ pub fn run_comm_suite(quick: bool) -> Json {
         ("bench", Json::str("comm")),
         ("quick", Json::Bool(quick)),
         (
+            "kernel_backend",
+            Json::str(crate::tensor::dispatch::active().name()),
+        ),
+        (
             "fold",
             Json::Arr(folds.iter().map(FoldMeasurement::to_json).collect()),
         ),

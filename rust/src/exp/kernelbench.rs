@@ -10,19 +10,28 @@
 use std::hint::black_box;
 use std::time::Duration;
 
-use crate::bench::Bench;
+use crate::bench::{f, Bench, Table};
 use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use crate::data::ClientData;
 use crate::fl::{train, TrainOptions};
 use crate::model::logistic::Logistic;
 use crate::model::NativeModel;
 use crate::sim::build_native_engine;
+use crate::tensor::dispatch;
 use crate::tensor::kernels::{self, reference};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Vector lengths the micro-kernels are swept over.
-pub const DIMS: [usize; 3] = [64, 1_000, 100_000];
+/// Vector lengths the micro-kernels are swept over. The 1M arm stresses
+/// memory bandwidth rather than cache (ROADMAP item 3) — it is where
+/// the SIMD-vs-scalar gap on the reductions is widest.
+pub const DIMS: [usize; 4] = [64, 1_000, 100_000, 1_000_000];
+
+/// Vector lengths for the logistic `loss_grad` meso-bench. Capped at
+/// 100k: the bench materializes `BATCH × 4` dense rows per dim, so a 1M
+/// arm would allocate ~512 MB of synthetic data for a GEMM the vector
+/// sweep above already covers at 1M.
+const LOSS_GRAD_DIMS: [usize; 3] = [64, 1_000, 100_000];
 
 /// Members folded per accumulate measurement (a plausible shard size).
 const MEMBERS: usize = 8;
@@ -152,7 +161,7 @@ fn vector_measurements(quick: bool) -> Vec<Measurement> {
 /// kernel path, across [`DIMS`] input dimensions.
 fn loss_grad_measurements(quick: bool) -> Vec<Measurement> {
     let mut out = Vec::new();
-    for &dim in &DIMS {
+    for &dim in &LOSS_GRAD_DIMS {
         let b = bench(&format!("loss_grad/dim={dim}"), quick);
         let model = Logistic::new(dim, CLASSES, 1e-4);
         let data = dense_data(BATCH * 4, dim, CLASSES, dim as u64);
@@ -225,24 +234,38 @@ fn rounds_per_sec(quick: bool) -> (f64, usize) {
     (rounds as f64 / (ns * 1e-9), rounds)
 }
 
-/// Run the full suite; returns the `BENCH_kernels.json` document.
+/// Run the full suite; returns the `BENCH_kernels.json` document. The
+/// active kernel backend (scalar or simd — `--kernel-backend` /
+/// `FEDSAMP_KERNEL_BACKEND`) applies to the kernel arm of every
+/// comparison and is recorded in the document.
 pub fn run_kernel_suite(quick: bool) -> Json {
+    let backend = dispatch::active();
     let mut measurements = vector_measurements(quick);
     measurements.extend(loss_grad_measurements(quick));
     let (rps, rounds) = rounds_per_sec(quick);
     println!("\nsim throughput: {rps:.2} rounds/sec ({rounds}-round FedAvg, secure, pool=40)");
+    println!("kernel backend: {}", backend.name());
+    let mut table = Table::new(&[
+        "op",
+        "dim",
+        "scalar ns/op",
+        "kernel ns/op",
+        "speedup",
+    ]);
     for m in &measurements {
-        if m.op == "logistic_loss_grad" {
-            println!(
-                "loss_grad dim={}: {:.2}x kernel speedup",
-                m.dim,
-                m.speedup()
-            );
-        }
+        table.row(vec![
+            m.op.clone(),
+            m.dim.to_string(),
+            f(m.scalar_ns, 1),
+            f(m.kernel_ns, 1),
+            format!("{:.2}x", m.speedup()),
+        ]);
     }
+    table.print();
     Json::obj(vec![
         ("bench", Json::str("kernels")),
         ("quick", Json::Bool(quick)),
+        ("kernel_backend", Json::str(backend.name())),
         (
             "ops",
             Json::Arr(measurements.iter().map(Measurement::to_json).collect()),

@@ -19,12 +19,13 @@
 use std::hint::black_box;
 use std::time::Duration;
 
-use crate::bench::Bench;
+use crate::bench::{f, Bench, Table};
 use crate::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
 use crate::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
 use crate::fl::{train, TrainOptions};
 use crate::secure_agg::SecureAggregator;
 use crate::sim::build_native_engine;
+use crate::tensor::dispatch;
 use crate::tensor::kernels::{self, reference, Scratch};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -32,8 +33,9 @@ use crate::util::rng::Rng;
 /// Roster sizes the masking comparison is swept over.
 pub const PARTICIPANTS: [usize; 3] = [8, 32, 128];
 
-/// Update dimensions the masking comparison is swept over.
-pub const DIMS: [usize; 2] = [1_000, 100_000];
+/// Update dimensions the masking comparison is swept over. The 1M arm
+/// stresses memory bandwidth rather than cache (ROADMAP item 3).
+pub const DIMS: [usize; 3] = [1_000, 100_000, 1_000_000];
 
 /// One scalar-vs-kernel masking comparison: the cost of masking one
 /// participant's update against a roster of `participants` members.
@@ -195,8 +197,12 @@ fn sim_rounds_per_sec(
     (rounds as f64 / (ns * 1e-9), rounds)
 }
 
-/// Run the full suite; returns the `BENCH_secure.json` document.
+/// Run the full suite; returns the `BENCH_secure.json` document. The
+/// active kernel backend (scalar or simd — `--kernel-backend` /
+/// `FEDSAMP_KERNEL_BACKEND`) applies to the kernel arm of every
+/// comparison and is recorded in the document.
 pub fn run_secure_suite(quick: bool) -> Json {
+    let backend = dispatch::active();
     let masks = mask_measurements(quick);
     let (secure_rps, rounds) = sim_rounds_per_sec(true, 1, quick);
     let (pooled_rps, _) = sim_rounds_per_sec(true, POOLED_WORKERS, quick);
@@ -206,20 +212,28 @@ pub fn run_secure_suite(quick: bool) -> Json {
          {POOLED_WORKERS} workers/{POOLED_SHARDS} shards) vs plain \
          {plain_rps:.2} rounds/sec ({rounds}-round FedAvg, pool=40)"
     );
+    println!("kernel backend: {}", backend.name());
+    let mut table = Table::new(&[
+        "participants",
+        "dim",
+        "scalar ns/elem",
+        "kernel ns/elem",
+        "speedup",
+    ]);
     for m in &masks {
-        println!(
-            "mask m={:>3} d={:>6}: {:.2}x kernel speedup \
-             ({:.2} -> {:.2} ns/element)",
-            m.participants,
-            m.dim,
-            m.speedup(),
-            m.scalar_ns_per_element,
-            m.kernel_ns_per_element
-        );
+        table.row(vec![
+            m.participants.to_string(),
+            m.dim.to_string(),
+            f(m.scalar_ns_per_element, 2),
+            f(m.kernel_ns_per_element, 2),
+            format!("{:.2}x", m.speedup()),
+        ]);
     }
+    table.print();
     Json::obj(vec![
         ("bench", Json::str("secure")),
         ("quick", Json::Bool(quick)),
+        ("kernel_backend", Json::str(backend.name())),
         (
             "mask",
             Json::Arr(masks.iter().map(MaskMeasurement::to_json).collect()),

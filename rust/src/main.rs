@@ -28,6 +28,7 @@ use fedsamp::sampling::Sampler;
 use fedsamp::sim::build_native_engine;
 use fedsamp::sim::theory::{max_stable_eta, run_dsgd_quadratic};
 use fedsamp::telemetry::TelemetryConfig;
+use fedsamp::tensor::dispatch;
 use fedsamp::util::args::{Cli, Parsed};
 
 fn main() {
@@ -180,6 +181,27 @@ fn print_telemetry_summary(run: &RunResult) {
     }
 }
 
+/// The shared kernel-backend CLI surface (`train`, `coordinate`,
+/// `sweep`, `bench`): `--kernel-backend` selects the process-wide
+/// kernel implementation set before any hot loop runs (DESIGN.md §12).
+fn kernel_backend_cli(cli: Cli) -> Cli {
+    cli.opt(
+        "kernel-backend",
+        Some("auto"),
+        "kernel implementation set: auto|scalar|simd (auto = SIMD when \
+         the CPU supports AVX2; both backends are bit-identical, scalar \
+         pins the blocked reference path; forcing simd without AVX2 is \
+         an error)",
+    )
+}
+
+/// Resolve and install `--kernel-backend`, returning the active backend
+/// (for the summary lines) or the usage error (exit 2 at call sites).
+fn kernel_backend_from_cli(p: &Parsed) -> Result<dispatch::Backend, String> {
+    let choice = dispatch::parse_backend(&p.str("kernel-backend"))?;
+    dispatch::select(choice)
+}
+
 fn parse_or_exit(cli: &Cli, args: &[String]) -> Parsed {
     if args.iter().any(|a| a == "--help" || a == "-h") {
         println!("{}", cli.usage());
@@ -222,8 +244,12 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("out", None, "directory for JSON/CSV results")
         .opt("artifacts", None, "artifacts directory")
         .flag("verbose", "print per-round progress");
-    let cli = checkpoint_cli(telemetry_cli(cli));
+    let cli = kernel_backend_cli(checkpoint_cli(telemetry_cli(cli)));
     let p = parse_or_exit(&cli, args);
+    if let Err(e) = kernel_backend_from_cli(&p) {
+        eprintln!("{e}");
+        return 2;
+    }
 
     let mut cfg: ExperimentConfig = if let Some(path) = p.get("config") {
         match ExperimentConfig::load(path) {
@@ -378,8 +404,15 @@ fn cmd_coordinate(args: &[String]) -> i32 {
          the worker pool) instead of centrally",
     )
     .flag("verbose", "print per-round progress");
-    let cli = checkpoint_cli(telemetry_cli(cli));
+    let cli = kernel_backend_cli(checkpoint_cli(telemetry_cli(cli)));
     let p = parse_or_exit(&cli, args);
+    let backend = match kernel_backend_from_cli(&p) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
 
     let mut cfg = match preset_by_name(&p.str("preset")) {
         Some(c) => c,
@@ -453,9 +486,11 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         ..TrainOptions::default()
     };
     println!(
-        "coordinator: {} shards, {} workers, deadline-miss {miss}{}",
+        "coordinator: {} shards, {} workers, {} kernels, \
+         deadline-miss {miss}{}",
         shards,
         workers,
+        backend.name(),
         if p.flag("sharded-negotiation") {
             ", sharded negotiation"
         } else {
@@ -610,7 +645,12 @@ fn cmd_sweep(args: &[String]) -> i32 {
     .opt("m", Some("4"), "theory: budget (kind=stepsize)")
     .opt("rounds", Some("200"), "theory: rounds per run")
     .opt("seed", Some("1"), "seed");
+    let cli = kernel_backend_cli(cli);
     let p = parse_or_exit(&cli, args);
+    if let Err(e) = kernel_backend_from_cli(&p) {
+        eprintln!("{e}");
+        return 2;
+    }
 
     if p.str("kind") == "grid" {
         use fedsamp::exp::sweep::{
@@ -804,7 +844,12 @@ fn cmd_bench(args: &[String]) -> i32 {
     .opt("suite", None, "suite name (or positional): kernels, secure, comm")
     .opt("out", Some("."), "directory for BENCH_<suite>.json")
     .flag("quick", "1-ish iteration per bench (CI smoke mode)");
+    let cli = kernel_backend_cli(cli);
     let p = parse_or_exit(&cli, args);
+    if let Err(e) = kernel_backend_from_cli(&p) {
+        eprintln!("{e}");
+        return 2;
+    }
     let suite = p
         .get("suite")
         .map(String::from)

@@ -5,6 +5,11 @@
 //! its *own* [`Runtime`] at startup (one compile per worker, amortized
 //! over the whole run) and pulls `(round, client)` jobs from a shared
 //! queue; only plain `Vec<f32>` data crosses threads.
+//!
+//! Host-side folds here (delta math, the `EngineRunner` masked folds)
+//! ride `tensor::kernels` and therefore the process-wide kernel-backend
+//! selection of `tensor::dispatch` (DESIGN.md §12); the XLA executables
+//! themselves are untouched by that knob.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

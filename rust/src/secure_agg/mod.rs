@@ -24,6 +24,10 @@
 //! `scale_encode_mask_accumulate`); each pair stream is consumed in
 //! element order, so the block walk is bit-identical to the per-element
 //! scalar pipeline retained in `kernels::reference` (DESIGN.md §6).
+//! The ring folds those kernels bottom out in follow the process-wide
+//! backend selection of `tensor::dispatch` (AVX2 integer adds when
+//! selected — exact ops, so the protocol is backend-invariant; the PRG
+//! itself is serially state-dependent and always scalar, DESIGN.md §12).
 
 use crate::tensor::kernels::{self, MaskStream};
 use crate::util::rng::Rng;

@@ -1,0 +1,513 @@
+//! Runtime kernel-backend dispatch: one process-wide choice between the
+//! blocked scalar kernels and the explicit-SIMD (AVX2) implementations
+//! in [`avx2`], selected once at startup and read with a single relaxed
+//! atomic load on every kernel entry (DESIGN.md §12).
+//!
+//! **Selection rules.**
+//!
+//! * The library default is [`Backend::Scalar`]: a process that never
+//!   calls [`select`] (tests, library embedders) runs the exact blocked
+//!   kernels the seed trajectories were pinned on.
+//! * The CLI surfaces `--kernel-backend auto|scalar|simd` (default
+//!   `auto`) on every subcommand with a hot path and calls [`select`]
+//!   before any kernel runs. `auto` resolves to SIMD when the host has
+//!   AVX2 and the `simd` cargo feature is on; forcing `simd` on a host
+//!   without AVX2 is an error (exit 2), never a silent fallback.
+//! * The `FEDSAMP_KERNEL_BACKEND` environment variable supplies the
+//!   default for processes with no CLI surface (`cargo test`, the bench
+//!   binaries) — this is how CI runs the full tier-1 suite under both
+//!   backends. An explicit [`select`] (the CLI) always wins; a bogus
+//!   env value warns and falls back to scalar.
+//!
+//! **Exactness.** Every AVX2 kernel here is constructed to be *bitwise
+//! identical* to its blocked scalar counterpart in
+//! [`crate::tensor::kernels`] — see each function's comment and
+//! DESIGN.md §12 for the argument (no FMA, lane-mapped f64 partial
+//! accumulators sharing the scalar fold tree, exact integer ring ops).
+//! The published contract the rest of the crate relies on is weaker
+//! (reductions: ≤ 1e-6 relative vs the sequential reference), so a
+//! future port to a width where the lane mapping cannot be preserved
+//! stays within contract; the bitwise property tests pin what this
+//! implementation actually achieves.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel implementation set executes the hot loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The blocked/unrolled scalar kernels (the pinned reference path).
+    Scalar,
+    /// The AVX2 implementations in [`avx2`].
+    Simd,
+}
+
+impl Backend {
+    /// Stable lowercase name (CLI values, BENCH_*.json records).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Simd => "simd",
+        }
+    }
+}
+
+/// A parsed `--kernel-backend` request; `Auto` resolves in [`select`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    Auto,
+    Scalar,
+    Simd,
+}
+
+/// Parse a `--kernel-backend` / env value.
+pub fn parse_backend(s: &str) -> Result<BackendChoice, String> {
+    match s {
+        "auto" => Ok(BackendChoice::Auto),
+        "scalar" => Ok(BackendChoice::Scalar),
+        "simd" => Ok(BackendChoice::Simd),
+        other => Err(format!(
+            "unknown kernel backend '{other}' (expected auto, scalar or \
+             simd)"
+        )),
+    }
+}
+
+const UNINIT: u8 = 0;
+const SCALAR: u8 = 1;
+const SIMD: u8 = 2;
+
+/// The process-wide active backend. `UNINIT` until the first kernel
+/// call or [`select`], whichever comes first.
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// True iff the SIMD implementations can run on this build + host:
+/// the `simd` cargo feature is enabled, the target is x86_64, and the
+/// CPU reports AVX2 at runtime.
+pub fn simd_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Resolve `choice` and install it as the process-wide backend.
+/// Forcing `Simd` where [`simd_available`] is false is an error;
+/// `Auto` picks SIMD when available, scalar otherwise.
+pub fn select(choice: BackendChoice) -> Result<Backend, String> {
+    let backend = match choice {
+        BackendChoice::Scalar => Backend::Scalar,
+        BackendChoice::Simd => {
+            if !simd_available() {
+                return Err(
+                    "--kernel-backend simd: AVX2 unavailable (host CPU \
+                     without AVX2, non-x86_64 target, or the `simd` \
+                     cargo feature is disabled); use auto or scalar"
+                        .into(),
+                );
+            }
+            Backend::Simd
+        }
+        BackendChoice::Auto => {
+            if simd_available() {
+                Backend::Simd
+            } else {
+                Backend::Scalar
+            }
+        }
+    };
+    let code = match backend {
+        Backend::Scalar => SCALAR,
+        Backend::Simd => SIMD,
+    };
+    ACTIVE.store(code, Ordering::Relaxed);
+    Ok(backend)
+}
+
+/// The currently active backend (initializing from the environment on
+/// first use).
+pub fn active() -> Backend {
+    if simd_on() {
+        Backend::Simd
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Hot-path predicate: is the SIMD backend active? One relaxed atomic
+/// load on the steady state; the first call per process takes the cold
+/// env-init path.
+#[inline]
+pub fn simd_on() -> bool {
+    match ACTIVE.load(Ordering::Relaxed) {
+        SIMD => true,
+        SCALAR => false,
+        _ => init_from_env() == SIMD,
+    }
+}
+
+/// First-use initialization from `FEDSAMP_KERNEL_BACKEND`. The first
+/// writer wins (compare-exchange), so a race between threads cannot
+/// flip the backend mid-run.
+#[cold]
+#[inline(never)]
+fn init_from_env() -> u8 {
+    let var = std::env::var("FEDSAMP_KERNEL_BACKEND").ok();
+    let code = match var.as_deref() {
+        None | Some("") | Some("scalar") => SCALAR,
+        Some("auto") => {
+            if simd_available() {
+                SIMD
+            } else {
+                SCALAR
+            }
+        }
+        Some("simd") => {
+            if simd_available() {
+                SIMD
+            } else {
+                eprintln!(
+                    "FEDSAMP_KERNEL_BACKEND=simd: AVX2 unavailable on \
+                     this build/host, falling back to scalar"
+                );
+                SCALAR
+            }
+        }
+        Some(other) => {
+            eprintln!(
+                "FEDSAMP_KERNEL_BACKEND: unknown backend '{other}' \
+                 (expected auto, scalar or simd), using scalar"
+            );
+            SCALAR
+        }
+    };
+    match ACTIVE.compare_exchange(
+        UNINIT,
+        code,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    ) {
+        Ok(_) => code,
+        Err(prev) => prev,
+    }
+}
+
+/// AVX2 implementations of the hot kernels. Every function is
+/// `#[target_feature(enable = "avx2")]` and therefore `unsafe`: the
+/// caller must guarantee the CPU supports AVX2 (the dispatch layer
+/// only routes here after [`simd_available`] runtime detection).
+///
+/// Bit-exactness construction, per kernel class:
+///
+/// * **f32 elementwise** ([`avx2::axpy`], [`avx2::add_assign`],
+///   [`avx2::sub_into`]): packed single-precision multiply and add are
+///   IEEE-754 correctly rounded per lane, exactly like the scalar ops —
+///   no FMA is ever used, so each element sees the identical two
+///   roundings in the identical order.
+/// * **f64-accumulated reductions** ([`avx2::norm_sq`], [`avx2::dot`],
+///   [`avx2::axpy_norm_sq`]): the blocked scalar kernels keep 8 f64
+///   partial accumulators where lane `i` sums elements `8k + i`. Here
+///   two 4-wide f64 vectors hold lanes 0–3 (low f32 half, widened via
+///   `cvtps_pd`) and 4–7 (high half); f32→f64 widening is exact, and
+///   the per-lane multiply/add sequence is the scalar one. The eight
+///   lane sums are then spilled in lane order and folded through the
+///   *same* fixed pairwise tree ([`crate::tensor::kernels`]'s `fold`),
+///   so the result is bit-identical, tails included.
+/// * **Z_2^64 ring ops** ([`avx2::ring_add`], [`avx2::ring_sub`]):
+///   packed 64-bit wrapping add/sub are exact integer arithmetic.
+///
+/// What deliberately stays scalar: fixed-point `encode` (Rust's
+/// round-half-away-from-zero f64→i64 with saturation has no AVX2
+/// equivalent) and the xoshiro256++ PRG (serially state-dependent);
+/// see DESIGN.md §12.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    use crate::tensor::kernels::fold;
+
+    /// Lanes per f32 vector op.
+    const F32_LANES: usize = 8;
+    /// Lanes per u64 vector op.
+    const U64_LANES: usize = 4;
+
+    /// Widen the 8 f32 lanes of `v` to two 4-wide f64 vectors
+    /// `(lanes 0–3, lanes 4–7)` — exact, like the scalar `as f64`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen(v: __m256) -> (__m256d, __m256d) {
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+        (lo, hi)
+    }
+
+    /// Spill the two 4-wide accumulators into the scalar kernels' 8-lane
+    /// layout (`acc[i]` sums elements `8k + i`) and apply the shared
+    /// fixed fold tree.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold_acc(acc_lo: __m256d, acc_hi: __m256d) -> f64 {
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+        fold(&lanes)
+    }
+
+    /// Squared L2 norm; bit-identical to `kernels::norm_sq`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (runtime-detected by the dispatch
+    /// layer before routing here).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn norm_sq(x: &[f32]) -> f64 {
+        let n = x.len();
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + F32_LANES <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(j));
+            let (lo, hi) = widen(v);
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+            j += F32_LANES;
+        }
+        let mut tail = 0.0f64;
+        for &v in &x[j..] {
+            tail += (v as f64) * v as f64;
+        }
+        fold_acc(acc_lo, acc_hi) + tail
+    }
+
+    /// Dot product; bit-identical to `kernels::dot`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `a.len() == b.len()` (asserted by the
+    /// dispatching wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + F32_LANES <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(j));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+            let (alo, ahi) = widen(va);
+            let (blo, bhi) = widen(vb);
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+            j += F32_LANES;
+        }
+        let mut tail = 0.0f64;
+        for (&x, &y) in a[j..].iter().zip(&b[j..]) {
+            tail += (x as f64) * y as f64;
+        }
+        fold_acc(acc_lo, acc_hi) + tail
+    }
+
+    /// y += a·x; bit-identical to `kernels::axpy` (multiply then add,
+    /// two IEEE roundings per element, no FMA).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `y.len() == x.len()` (asserted by the
+    /// dispatching wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut j = 0;
+        while j + F32_LANES <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(j));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+            let r = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), r);
+            j += F32_LANES;
+        }
+        for (yi, &xi) in y[j..].iter_mut().zip(&x[j..]) {
+            *yi += a * xi;
+        }
+    }
+
+    /// y += x; bit-identical to `kernels::add_assign`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `y.len() == x.len()` (asserted by the
+    /// dispatching wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let mut j = 0;
+        while j + F32_LANES <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(j));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(vy, vx));
+            j += F32_LANES;
+        }
+        for (yi, &xi) in y[j..].iter_mut().zip(&x[j..]) {
+            *yi += xi;
+        }
+    }
+
+    /// out = a − b; bit-identical to `kernels::sub_into`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; all three slices must have equal
+    /// lengths (asserted by the dispatching wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert_eq!(out.len(), a.len());
+        debug_assert_eq!(a.len(), b.len());
+        let n = out.len();
+        let mut j = 0;
+        while j + F32_LANES <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(j));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_sub_ps(va, vb));
+            j += F32_LANES;
+        }
+        for ((o, &x), &y) in out[j..].iter_mut().zip(&a[j..]).zip(&b[j..]) {
+            *o = x - y;
+        }
+    }
+
+    /// Fused y += a·x and Σ y'²; bit-identical to
+    /// `kernels::axpy_norm_sq` (per element: update with mul-then-add,
+    /// then square-accumulate the updated value into its f64 lane).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `y.len() == x.len()` (asserted by the
+    /// dispatching wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_norm_sq(y: &mut [f32], a: f32, x: &[f32]) -> f64 {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + F32_LANES <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(j));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+            let upd = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), upd);
+            let (lo, hi) = widen(upd);
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+            j += F32_LANES;
+        }
+        let mut tail = 0.0f64;
+        for (yi, &xi) in y[j..].iter_mut().zip(&x[j..]) {
+            *yi += a * xi;
+            tail += (*yi as f64) * *yi as f64;
+        }
+        fold_acc(acc_lo, acc_hi) + tail
+    }
+
+    /// acc ⊞= m over Z_2^64 (packed wrapping add — exact).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `acc.len() == m.len()` (guaranteed by
+    /// the dispatching wrapper's window slicing).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ring_add(acc: &mut [u64], m: &[u64]) {
+        debug_assert_eq!(acc.len(), m.len());
+        let n = acc.len();
+        let mut j = 0;
+        while j + U64_LANES <= n {
+            let a =
+                _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            let b = _mm256_loadu_si256(m.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_add_epi64(a, b),
+            );
+            j += U64_LANES;
+        }
+        for (a, &b) in acc[j..].iter_mut().zip(&m[j..]) {
+            *a = a.wrapping_add(b);
+        }
+    }
+
+    /// acc ⊟= m over Z_2^64 (packed wrapping sub — exact).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `acc.len() == m.len()` (guaranteed by
+    /// the dispatching wrapper's window slicing).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ring_sub(acc: &mut [u64], m: &[u64]) {
+        debug_assert_eq!(acc.len(), m.len());
+        let n = acc.len();
+        let mut j = 0;
+        while j + U64_LANES <= n {
+            let a =
+                _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            let b = _mm256_loadu_si256(m.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_sub_epi64(a, b),
+            );
+            j += U64_LANES;
+        }
+        for (a, &b) in acc[j..].iter_mut().zip(&m[j..]) {
+            *a = a.wrapping_sub(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_three_values() {
+        assert_eq!(parse_backend("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(parse_backend("scalar").unwrap(), BackendChoice::Scalar);
+        assert_eq!(parse_backend("simd").unwrap(), BackendChoice::Simd);
+        assert!(parse_backend("avx512").is_err());
+        assert!(parse_backend("").is_err());
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(Backend::Simd.name(), "simd");
+    }
+
+    #[test]
+    fn select_respects_availability() {
+        // Transiently flipping the global is safe: both backends are
+        // bit-identical (the property tests in tensor::kernels pin it),
+        // so concurrent tests cannot observe a result difference.
+        let before = active();
+        assert_eq!(select(BackendChoice::Scalar).unwrap(), Backend::Scalar);
+        assert_eq!(active(), Backend::Scalar);
+        if simd_available() {
+            assert_eq!(select(BackendChoice::Simd).unwrap(), Backend::Simd);
+            assert_eq!(active(), Backend::Simd);
+            assert_eq!(
+                select(BackendChoice::Auto).unwrap(),
+                Backend::Simd,
+                "auto resolves to simd when available"
+            );
+        } else {
+            assert!(select(BackendChoice::Simd).is_err());
+            assert_eq!(
+                select(BackendChoice::Auto).unwrap(),
+                Backend::Scalar,
+                "auto falls back to scalar when simd is unavailable"
+            );
+        }
+        let restore = match before {
+            Backend::Scalar => BackendChoice::Scalar,
+            Backend::Simd => BackendChoice::Simd,
+        };
+        select(restore).unwrap();
+    }
+}

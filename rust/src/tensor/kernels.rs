@@ -18,8 +18,35 @@
 //!
 //! The scalar references live in [`reference`] and stay the baseline arm
 //! of `benches/micro_kernels.rs` / `fedsamp bench kernels`.
+//!
+//! **Backend dispatch.** Every kernel below first consults
+//! [`super::dispatch`]: when the SIMD backend is active (AVX2 detected
+//! and selected — see `--kernel-backend` and DESIGN.md §12) the hot
+//! loops run the explicit-intrinsics implementations in
+//! `dispatch::avx2`, which are constructed to be bit-identical to the
+//! blocked scalar bodies here (same per-element op order, same lane
+//! accumulator layout, same [`fold`] tree, no FMA). The scalar bodies
+//! remain the default and the pinned reference.
 
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use super::dispatch;
 use crate::util::rng::Rng;
+
+/// Route a kernel call to the AVX2 backend when it is active. Expands
+/// to nothing on builds without the `simd` feature or off x86_64, so
+/// the scalar body below is the whole function there.
+macro_rules! simd_dispatch {
+    ($($call:tt)*) => {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if dispatch::simd_on() {
+                // SAFETY: simd_on() is true only after runtime AVX2
+                // detection (dispatch::select / init_from_env).
+                return unsafe { dispatch::avx2::$($call)* };
+            }
+        }
+    };
+}
 
 /// Elements per unrolled lane group. Eight f32 lanes fill a 256-bit
 /// vector register; LLVM maps the fixed-size chunk bodies to packed ops.
@@ -41,6 +68,7 @@ const KC: usize = 64;
 
 /// Squared L2 norm, 8-lane unrolled with f64 partial accumulators.
 pub fn norm_sq(x: &[f32]) -> f64 {
+    simd_dispatch!(norm_sq(x));
     let mut acc = [0.0f64; LANES];
     let mut chunks = x.chunks_exact(LANES);
     for c in &mut chunks {
@@ -58,6 +86,7 @@ pub fn norm_sq(x: &[f32]) -> f64 {
 /// Dot product, 8-lane unrolled with f64 partial accumulators.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len(), "dot length mismatch");
+    simd_dispatch!(dot(a, b));
     let mut acc = [0.0f64; LANES];
     let mut ac = a.chunks_exact(LANES);
     let mut bc = b.chunks_exact(LANES);
@@ -74,8 +103,11 @@ pub fn dot(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Pairwise fold of the lane accumulators (fixed tree, deterministic).
+/// Shared with `dispatch::avx2` so both backends reduce their 8 lane
+/// sums through the identical tree — the keystone of the reductions'
+/// bit-exactness across backends.
 #[inline]
-fn fold(acc: &[f64; LANES]) -> f64 {
+pub(crate) fn fold(acc: &[f64; LANES]) -> f64 {
     ((acc[0] + acc[4]) + (acc[2] + acc[6]))
         + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
 }
@@ -88,6 +120,7 @@ fn fold(acc: &[f64; LANES]) -> f64 {
 /// loop (ascending index, one fused expression per element).
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    simd_dispatch!(axpy(y, a, x));
     let mut yc = y.chunks_exact_mut(LANES);
     let mut xc = x.chunks_exact(LANES);
     for (yb, xb) in (&mut yc).zip(&mut xc) {
@@ -103,6 +136,7 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
 /// y += x (the unit-weight accumulation step), 8-lane unrolled.
 pub fn add_assign(y: &mut [f32], x: &[f32]) {
     assert_eq!(y.len(), x.len(), "add_assign length mismatch");
+    simd_dispatch!(add_assign(y, x));
     let mut yc = y.chunks_exact_mut(LANES);
     let mut xc = x.chunks_exact(LANES);
     for (yb, xb) in (&mut yc).zip(&mut xc) {
@@ -119,6 +153,7 @@ pub fn add_assign(y: &mut [f32], x: &[f32]) {
 pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
     assert_eq!(out.len(), a.len(), "sub_into length mismatch");
     assert_eq!(a.len(), b.len(), "sub_into length mismatch");
+    simd_dispatch!(sub_into(out, a, b));
     let mut oc = out.chunks_exact_mut(LANES);
     let mut ac = a.chunks_exact(LANES);
     let mut bc = b.chunks_exact(LANES);
@@ -145,6 +180,7 @@ pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
 /// f32 squares cannot overflow f64).
 pub fn axpy_norm_sq(y: &mut [f32], a: f32, x: &[f32]) -> f64 {
     assert_eq!(y.len(), x.len(), "axpy_norm_sq length mismatch");
+    simd_dispatch!(axpy_norm_sq(y, a, x));
     let mut acc = [0.0f64; LANES];
     let mut yc = y.chunks_exact_mut(LANES);
     let mut xc = x.chunks_exact(LANES);
@@ -229,11 +265,31 @@ pub fn wrapping_accumulate(acc: &mut [u64], vecs: &[&[u64]]) {
     while j0 < n {
         let j1 = (j0 + CHUNK).min(n);
         for v in vecs {
-            for (a, &b) in acc[j0..j1].iter_mut().zip(&v[j0..j1]) {
-                *a = a.wrapping_add(b);
-            }
+            ring_add(&mut acc[j0..j1], &v[j0..j1]);
         }
         j0 = j1;
+    }
+}
+
+/// acc ⊞= m over Z_2^64 (elementwise wrapping add) — the shared inner
+/// loop of every ring fold below. Integer arithmetic, so both backends
+/// are exact and identical by construction.
+#[inline]
+fn ring_add(acc: &mut [u64], m: &[u64]) {
+    debug_assert_eq!(acc.len(), m.len());
+    simd_dispatch!(ring_add(acc, m));
+    for (a, &b) in acc.iter_mut().zip(m) {
+        *a = a.wrapping_add(b);
+    }
+}
+
+/// acc ⊟= m over Z_2^64 (elementwise wrapping sub); see [`ring_add`].
+#[inline]
+fn ring_sub(acc: &mut [u64], m: &[u64]) {
+    debug_assert_eq!(acc.len(), m.len());
+    simd_dispatch!(ring_sub(acc, m));
+    for (a, &b) in acc.iter_mut().zip(m) {
+        *a = a.wrapping_sub(b);
     }
 }
 
@@ -295,13 +351,9 @@ pub fn mask_stream_accumulate(acc: &mut [u64], prg: &mut Rng, add: bool) {
         let n = w.len();
         prg.fill_u64(&mut block[..n]);
         if add {
-            for (a, &m) in w.iter_mut().zip(&block[..n]) {
-                *a = a.wrapping_add(m);
-            }
+            ring_add(w, &block[..n]);
         } else {
-            for (a, &m) in w.iter_mut().zip(&block[..n]) {
-                *a = a.wrapping_sub(m);
-            }
+            ring_sub(w, &block[..n]);
         }
     }
 }
@@ -346,19 +398,13 @@ pub fn scale_encode_mask_accumulate(
         for s in streams.iter_mut() {
             s.rng.fill_u64(&mut prg[..n]);
             if s.add {
-                for (e, &m) in enc[..n].iter_mut().zip(&prg[..n]) {
-                    *e = e.wrapping_add(m);
-                }
+                ring_add(&mut enc[..n], &prg[..n]);
             } else {
-                for (e, &m) in enc[..n].iter_mut().zip(&prg[..n]) {
-                    *e = e.wrapping_sub(m);
-                }
+                ring_sub(&mut enc[..n], &prg[..n]);
             }
         }
         // fold the masked window into the shard partial
-        for (a, &e) in acc[j0..j1].iter_mut().zip(&enc[..n]) {
-            *a = a.wrapping_add(e);
-        }
+        ring_add(&mut acc[j0..j1], &enc[..n]);
         j0 = j1;
     }
 }
@@ -1184,5 +1230,192 @@ mod tests {
     #[should_panic(expected = "out of dim")]
     fn sparse_scatter_bounds_checked() {
         sparse_weighted_accumulate(&mut [0.0; 2], &[2], &[1.0], 1.0);
+    }
+
+    /// Backend-equivalence pins: every AVX2 kernel must be *bitwise*
+    /// identical to its blocked scalar counterpart (the stronger
+    /// achieved contract of DESIGN.md §12), across odd lengths,
+    /// remainder tails and non-finite inputs — and the reductions must
+    /// additionally satisfy the published ≤ 1e-6 relative tolerance
+    /// against the sequential [`reference`] fold.
+    ///
+    /// Each test is a no-op on hosts without AVX2. Non-finite probes
+    /// use only the std `NAN`/`INFINITY` constants: both backends
+    /// propagate those canonical payloads identically, whereas exotic
+    /// NaN payloads are outside every contract here.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    mod simd_backend {
+        use super::*;
+        use crate::tensor::dispatch;
+
+        /// Mostly finite values with occasional canonical non-finites
+        /// mixed in, so lanes and tails both see NaN/±Inf.
+        fn vecf_nf(rng: &mut Rng, n: usize) -> Vec<f32> {
+            (0..n)
+                .map(|_| match rng.below(16) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    2 => f32::NEG_INFINITY,
+                    _ => rng.normal_f32(0.0, 2.0),
+                })
+                .collect()
+        }
+
+        fn bits32(v: &[f32]) -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        }
+
+        #[test]
+        fn prop_avx2_reductions_bit_identical_to_scalar() {
+            if !dispatch::simd_available() {
+                return;
+            }
+            quick("avx2-reductions", |rng, case| {
+                // 0, sub-lane, exact-lane and multi-chunk-with-tail dims
+                let n = rng.range(0, 300);
+                let x = if case % 3 == 0 {
+                    vecf_nf(rng, n)
+                } else {
+                    vecf(rng, n)
+                };
+                let y = vecf(rng, n);
+                // SAFETY: AVX2 presence checked above.
+                let (ns, dt) =
+                    unsafe { (dispatch::avx2::norm_sq(&x), dispatch::avx2::dot(&x, &y)) };
+                if ns.to_bits() != norm_sq(&x).to_bits() {
+                    return Err(format!("norm_sq diverged at n={n}"));
+                }
+                if dt.to_bits() != dot(&x, &y).to_bits() {
+                    return Err(format!("dot diverged at n={n}"));
+                }
+                // published tolerance contract vs the sequential fold
+                if x.iter().all(|v| v.is_finite())
+                    && !rel_close(ns, reference::norm_sq(&x), 1e-6)
+                {
+                    return Err("norm_sq outside tolerance contract".into());
+                }
+                if x.iter().all(|v| v.is_finite())
+                    && !rel_close(dt, reference::dot(&x, &y), 1e-6)
+                {
+                    return Err("dot outside tolerance contract".into());
+                }
+                Ok(())
+            });
+        }
+
+        #[test]
+        fn prop_avx2_elementwise_bit_identical_to_scalar() {
+            if !dispatch::simd_available() {
+                return;
+            }
+            quick("avx2-elementwise", |rng, case| {
+                let n = rng.range(0, 120);
+                let a = if case % 5 == 0 {
+                    f32::NAN
+                } else {
+                    rng.normal_f32(0.0, 1.0)
+                };
+                let x = if case % 3 == 0 {
+                    vecf_nf(rng, n)
+                } else {
+                    vecf(rng, n)
+                };
+                let b = vecf(rng, n);
+                let y0 = vecf(rng, n);
+
+                let mut y_simd = y0.clone();
+                let mut y_scal = y0.clone();
+                // SAFETY: AVX2 presence checked above.
+                unsafe { dispatch::avx2::axpy(&mut y_simd, a, &x) };
+                axpy(&mut y_scal, a, &x);
+                if bits32(&y_simd) != bits32(&y_scal) {
+                    return Err(format!("axpy diverged at n={n}"));
+                }
+
+                let mut y_simd = y0.clone();
+                let mut y_scal = y0.clone();
+                // SAFETY: AVX2 presence checked above.
+                unsafe { dispatch::avx2::add_assign(&mut y_simd, &x) };
+                add_assign(&mut y_scal, &x);
+                if bits32(&y_simd) != bits32(&y_scal) {
+                    return Err(format!("add_assign diverged at n={n}"));
+                }
+
+                let mut o_simd = vec![0.0f32; n];
+                let mut o_scal = vec![0.0f32; n];
+                // SAFETY: AVX2 presence checked above.
+                unsafe { dispatch::avx2::sub_into(&mut o_simd, &x, &b) };
+                sub_into(&mut o_scal, &x, &b);
+                if bits32(&o_simd) != bits32(&o_scal) {
+                    return Err(format!("sub_into diverged at n={n}"));
+                }
+                Ok(())
+            });
+        }
+
+        #[test]
+        fn prop_avx2_axpy_norm_sq_bit_identical_to_scalar() {
+            if !dispatch::simd_available() {
+                return;
+            }
+            quick("avx2-axpy-norm-sq", |rng, case| {
+                let n = rng.range(0, 200);
+                let a = rng.normal_f32(0.0, 1.0);
+                let x = if case % 3 == 0 {
+                    vecf_nf(rng, n)
+                } else {
+                    vecf(rng, n)
+                };
+                let y0 = vecf(rng, n);
+                let mut y_simd = y0.clone();
+                let mut y_scal = y0;
+                // SAFETY: AVX2 presence checked above.
+                let ns_simd =
+                    unsafe { dispatch::avx2::axpy_norm_sq(&mut y_simd, a, &x) };
+                let ns_scal = axpy_norm_sq(&mut y_scal, a, &x);
+                if bits32(&y_simd) != bits32(&y_scal) {
+                    return Err(format!("updated y diverged at n={n}"));
+                }
+                if ns_simd.to_bits() != ns_scal.to_bits() {
+                    return Err(format!("norm diverged at n={n}"));
+                }
+                Ok(())
+            });
+        }
+
+        #[test]
+        fn prop_avx2_ring_ops_exact() {
+            if !dispatch::simd_available() {
+                return;
+            }
+            quick("avx2-ring", |rng, _| {
+                let n = rng.range(0, 40);
+                let m: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+                let acc0: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+
+                let mut a_simd = acc0.clone();
+                // SAFETY: AVX2 presence checked above.
+                unsafe { dispatch::avx2::ring_add(&mut a_simd, &m) };
+                let mut a_scal = acc0.clone();
+                for (a, &b) in a_scal.iter_mut().zip(&m) {
+                    *a = a.wrapping_add(b);
+                }
+                if a_simd != a_scal {
+                    return Err(format!("ring_add diverged at n={n}"));
+                }
+
+                let mut s_simd = acc0.clone();
+                // SAFETY: AVX2 presence checked above.
+                unsafe { dispatch::avx2::ring_sub(&mut s_simd, &m) };
+                let mut s_scal = acc0;
+                for (a, &b) in s_scal.iter_mut().zip(&m) {
+                    *a = a.wrapping_sub(b);
+                }
+                if s_simd != s_scal {
+                    return Err(format!("ring_sub diverged at n={n}"));
+                }
+                Ok(())
+            });
+        }
     }
 }

@@ -6,7 +6,10 @@
 //! functions delegate to the blocked/unrolled [`kernels`] layer (scalar
 //! references and measured speedups: EXPERIMENTS.md §Perf); this module
 //! keeps the small assorted helpers and the stable call-site names.
+//! [`dispatch`] selects the kernel backend (blocked scalar vs AVX2) once
+//! per process — DESIGN.md §12.
 
+pub mod dispatch;
 pub mod kernels;
 
 /// Squared L2 norm. f64 accumulators: client updates can have ~1e6

@@ -1,0 +1,130 @@
+//! Integration: the SIMD kernel backend reproduces the scalar backend's
+//! end-to-end trajectories bit-for-bit — plain and secure, single-shard
+//! pooled and inline (DESIGN.md §12).
+//!
+//! This is the whole point of the AVX2 construction (no FMA, lane-mapped
+//! f64 accumulators sharing the scalar fold tree, exact ring ops): the
+//! backend switch is a pure speed knob, never a semantics knob, so
+//! `--kernel-backend scalar` and `simd` emit identical artifacts.
+//!
+//! The backend selection is process-global, so the whole comparison runs
+//! in ONE test function (integration tests run in their own process;
+//! flipping the backend here cannot race the library's unit tests).
+
+use fedsamp::config::{Algorithm, DataSpec, ExperimentConfig, Strategy};
+use fedsamp::coordinator::{Coordinator, CoordinatorOptions, ParallelRunner};
+use fedsamp::fl::{train, TrainOptions};
+use fedsamp::metrics::RunResult;
+use fedsamp::sim::build_native_engine;
+use fedsamp::tensor::dispatch::{self, Backend, BackendChoice};
+
+fn cfg(name: &str, secure: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        seed: 9,
+        rounds: 6,
+        cohort: 16,
+        budget: 4,
+        strategy: Strategy::Aocs { j_max: 4 },
+        algorithm: Algorithm::FedAvg {
+            local_epochs: 1,
+            eta_g: 1.0,
+            eta_l: 0.05,
+        },
+        data: DataSpec::FemnistLike { pool: 40, variant: 1 },
+        model: "native:logistic".into(),
+        batch_size: 20,
+        eval_every: 3,
+        eval_examples: 128,
+        workers: 1,
+        secure_updates: secure,
+        availability: 1.0,
+        availability_trace: None,
+        compressor: None,
+        fault_plan: None,
+    }
+}
+
+fn train_run(c: &ExperimentConfig) -> RunResult {
+    let mut engine = build_native_engine(c);
+    train(c, &mut engine, &TrainOptions::default()).unwrap()
+}
+
+/// Single fat shard + multi-worker pool: under SIMD this also exercises
+/// the sub-chunked MaskFold fan-out on every secure round.
+fn coord_run(c: &ExperimentConfig, shards: usize, workers: usize) -> RunResult {
+    let engine = build_native_engine(c);
+    let mut runner = ParallelRunner::new(engine, workers);
+    let mut coordinator = Coordinator::new(CoordinatorOptions {
+        shards,
+        ..CoordinatorOptions::default()
+    });
+    coordinator.run(c, &mut runner, &TrainOptions::default()).unwrap()
+}
+
+fn assert_bitwise(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{tag}: train_loss round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.uplink_bits, rb.uplink_bits,
+            "{tag}: uplink_bits round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.transmitted, rb.transmitted,
+            "{tag}: transmitted round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.val_accuracy.to_bits(),
+            rb.val_accuracy.to_bits(),
+            "{tag}: val_accuracy round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.alpha.to_bits(),
+            rb.alpha.to_bits(),
+            "{tag}: alpha round {}",
+            ra.round
+        );
+    }
+}
+
+#[test]
+fn simd_backend_reproduces_scalar_trajectories_bitwise() {
+    if !dispatch::simd_available() {
+        eprintln!("AVX2 unavailable; backend equivalence not exercised");
+        return;
+    }
+    let plain = cfg("be_plain", false);
+    let secure = cfg("be_secure", true);
+
+    assert_eq!(
+        dispatch::select(BackendChoice::Scalar).unwrap(),
+        Backend::Scalar
+    );
+    let plain_scalar = train_run(&plain);
+    let secure_scalar = train_run(&secure);
+    let pooled_scalar = coord_run(&secure, 1, 4);
+
+    assert_eq!(
+        dispatch::select(BackendChoice::Simd).unwrap(),
+        Backend::Simd
+    );
+    let plain_simd = train_run(&plain);
+    let secure_simd = train_run(&secure);
+    let pooled_simd = coord_run(&secure, 1, 4);
+    dispatch::select(BackendChoice::Scalar).unwrap();
+
+    assert_bitwise(&plain_scalar, &plain_simd, "plain train");
+    assert_bitwise(&secure_scalar, &secure_simd, "secure train");
+    assert_bitwise(&pooled_scalar, &pooled_simd, "1-shard pooled secure");
+    // and the pooled secure run is itself pinned to the inline one
+    assert_bitwise(&secure_scalar, &pooled_scalar, "pooled vs inline");
+}
