@@ -8,7 +8,15 @@ use crate::faults::FaultPlan;
 use crate::fl::availability::Trace;
 use crate::util::json::Json;
 
-/// Client sampling strategy (the paper's comparison axis).
+/// Default AOCS/CAOCS rescaling-iteration cap when a spec gives none.
+pub const DEFAULT_J_MAX: usize = 4;
+/// Default cluster count for a bare `clustered` spec.
+pub const DEFAULT_CLUSTERS: usize = 4;
+/// Default group count for a bare `cyclic` spec.
+pub const DEFAULT_GROUPS: usize = 4;
+
+/// Client sampling strategy (the paper's comparison axis, plus the
+/// related-work zoo of DESIGN.md §13).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Strategy {
     /// Every cohort client communicates (upper baseline).
@@ -19,6 +27,67 @@ pub enum Strategy {
     Ocs,
     /// Approximate OCS, Algorithm 2 (secure-aggregation compatible).
     Aocs { j_max: usize },
+    /// Clustered sampling (arXiv 2105.05883): k-means grouping of the
+    /// cohort by update-norm history, mass-proportional per-cluster
+    /// quotas, uniform draws within a cluster.
+    Clustered { k: usize },
+    /// Regularized cyclic participation (arXiv 2302.03662): g fixed
+    /// seed-hashed client groups visited round-robin; the round's
+    /// cohort is restricted to the scheduled group at Announce.
+    Cyclic { g: usize },
+    /// Compression-aware AOCS (arXiv 2306.03240): Algorithm 2 run on
+    /// the *compressed* payload norms w_i‖C(U_i)‖, so the compressor
+    /// choice feeds the participation probabilities.
+    Caocs { j_max: usize },
+}
+
+/// Typed failure parsing a strategy spec — each variant carries the
+/// offending token, so `--strategy clusteredX` names `clusteredX`
+/// instead of dying with a generic message (the `--faults`
+/// [`crate::faults::FaultSpecError`] convention).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StrategySpecError {
+    /// Spec starts with no known strategy name.
+    UnknownStrategy { token: String },
+    /// An `aocs<j>` / `caocs<j>` suffix is not a non-negative integer.
+    BadJMax { token: String },
+    /// A `clustered<k>` suffix is not an integer ≥ 1.
+    BadClusterCount { token: String },
+    /// A `cyclic<g>` suffix is not an integer ≥ 1.
+    BadGroupCount { token: String },
+}
+
+impl std::fmt::Display for StrategySpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StrategySpecError::UnknownStrategy { token } => write!(
+                f,
+                "unknown strategy '{token}' (want full|uniform|ocs|\
+                 aocs[<j>]|caocs[<j>]|clustered[<k>]|cyclic[<g>])"
+            ),
+            StrategySpecError::BadJMax { token } => {
+                write!(f, "bad j_max suffix in strategy '{token}'")
+            }
+            StrategySpecError::BadClusterCount { token } => write!(
+                f,
+                "bad cluster count in strategy '{token}' (want an \
+                 integer >= 1)"
+            ),
+            StrategySpecError::BadGroupCount { token } => write!(
+                f,
+                "bad group count in strategy '{token}' (want an \
+                 integer >= 1)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StrategySpecError {}
+
+impl From<StrategySpecError> for String {
+    fn from(e: StrategySpecError) -> String {
+        e.to_string()
+    }
 }
 
 impl Strategy {
@@ -28,17 +97,73 @@ impl Strategy {
             Strategy::Uniform => "uniform",
             Strategy::Ocs => "ocs",
             Strategy::Aocs { .. } => "aocs",
+            Strategy::Clustered { .. } => "clustered",
+            Strategy::Cyclic { .. } => "cyclic",
+            Strategy::Caocs { .. } => "caocs",
         }
     }
 
-    pub fn parse(s: &str, j_max: usize) -> Result<Strategy, String> {
+    /// Parse a strategy spec — the single grammar behind config JSON,
+    /// `--strategy`, and the sweep `--strategies` arm list:
+    ///
+    /// `full | uniform | ocs | aocs[<j>] | caocs[<j>] |
+    ///  clustered[<k>] | cyclic[<g>]`
+    ///
+    /// Bare parameterized names take the defaults ([`DEFAULT_J_MAX`],
+    /// [`DEFAULT_CLUSTERS`], [`DEFAULT_GROUPS`]); `clustered0` /
+    /// `cyclic0` are rejected here (and again by
+    /// [`ExperimentConfig::validate`] for configs built in code).
+    pub fn parse(spec: &str) -> Result<Strategy, StrategySpecError> {
+        let s = spec.trim();
+        // exact names first: the unparameterized strategies take no
+        // suffix, so `ocs3` falls through to UnknownStrategy
         match s {
-            "full" => Ok(Strategy::Full),
-            "uniform" => Ok(Strategy::Uniform),
-            "ocs" => Ok(Strategy::Ocs),
-            "aocs" => Ok(Strategy::Aocs { j_max }),
-            other => Err(format!("unknown strategy '{other}'")),
+            "full" => return Ok(Strategy::Full),
+            "uniform" => return Ok(Strategy::Uniform),
+            "ocs" => return Ok(Strategy::Ocs),
+            _ => {}
         }
+        let token = || s.to_string();
+        // longest prefixes first; none of the parameterized names is a
+        // prefix of another, but `caocs` must not reach the bare-`ocs`
+        // exact match above (it cannot: exact match only)
+        if let Some(rest) = s.strip_prefix("clustered") {
+            if rest.is_empty() {
+                return Ok(Strategy::Clustered { k: DEFAULT_CLUSTERS });
+            }
+            return match rest.parse::<usize>() {
+                Ok(k) if k >= 1 => Ok(Strategy::Clustered { k }),
+                _ => Err(StrategySpecError::BadClusterCount { token: token() }),
+            };
+        }
+        if let Some(rest) = s.strip_prefix("cyclic") {
+            if rest.is_empty() {
+                return Ok(Strategy::Cyclic { g: DEFAULT_GROUPS });
+            }
+            return match rest.parse::<usize>() {
+                Ok(g) if g >= 1 => Ok(Strategy::Cyclic { g }),
+                _ => Err(StrategySpecError::BadGroupCount { token: token() }),
+            };
+        }
+        if let Some(rest) = s.strip_prefix("caocs") {
+            if rest.is_empty() {
+                return Ok(Strategy::Caocs { j_max: DEFAULT_J_MAX });
+            }
+            return match rest.parse::<usize>() {
+                Ok(j_max) => Ok(Strategy::Caocs { j_max }),
+                Err(_) => Err(StrategySpecError::BadJMax { token: token() }),
+            };
+        }
+        if let Some(rest) = s.strip_prefix("aocs") {
+            if rest.is_empty() {
+                return Ok(Strategy::Aocs { j_max: DEFAULT_J_MAX });
+            }
+            return match rest.parse::<usize>() {
+                Ok(j_max) => Ok(Strategy::Aocs { j_max }),
+                Err(_) => Err(StrategySpecError::BadJMax { token: token() }),
+            };
+        }
+        Err(StrategySpecError::UnknownStrategy { token: token() })
     }
 
     fn to_json(&self) -> Json {
@@ -47,14 +172,47 @@ impl Strategy {
                 ("kind", Json::str("aocs")),
                 ("j_max", Json::num(*j_max as f64)),
             ]),
+            Strategy::Caocs { j_max } => Json::obj(vec![
+                ("kind", Json::str("caocs")),
+                ("j_max", Json::num(*j_max as f64)),
+            ]),
+            Strategy::Clustered { k } => Json::obj(vec![
+                ("kind", Json::str("clustered")),
+                ("k", Json::num(*k as f64)),
+            ]),
+            Strategy::Cyclic { g } => Json::obj(vec![
+                ("kind", Json::str("cyclic")),
+                ("g", Json::num(*g as f64)),
+            ]),
             s => Json::obj(vec![("kind", Json::str(s.name()))]),
         }
     }
 
     fn from_json(v: &Json) -> Result<Strategy, String> {
         let kind = v.get("kind").as_str().ok_or("strategy.kind missing")?;
-        let j_max = v.get("j_max").as_usize().unwrap_or(4);
-        Strategy::parse(kind, j_max)
+        // the kind field goes through the one CLI grammar (so
+        // `"kind": "clustered3"` also works), then explicit parameter
+        // fields override the spec/defaults
+        let mut s = Strategy::parse(kind).map_err(String::from)?;
+        match &mut s {
+            Strategy::Aocs { j_max } | Strategy::Caocs { j_max } => {
+                if let Some(j) = v.get("j_max").as_usize() {
+                    *j_max = j;
+                }
+            }
+            Strategy::Clustered { k } => {
+                if let Some(x) = v.get("k").as_usize() {
+                    *k = x;
+                }
+            }
+            Strategy::Cyclic { g } => {
+                if let Some(x) = v.get("g").as_usize() {
+                    *g = x;
+                }
+            }
+            _ => {}
+        }
+        Ok(s)
     }
 }
 
@@ -218,6 +376,15 @@ impl ExperimentConfig {
         }
         if self.rounds == 0 {
             return Err("rounds must be positive".into());
+        }
+        match &self.strategy {
+            Strategy::Clustered { k } if *k == 0 => {
+                return Err("clustered strategy needs k >= 1 clusters".into());
+            }
+            Strategy::Cyclic { g } if *g == 0 => {
+                return Err("cyclic strategy needs g >= 1 groups".into());
+            }
+            _ => {}
         }
         if self.eval_every == 0 {
             return Err("eval_every must be positive".into());
@@ -469,13 +636,115 @@ mod tests {
     }
 
     #[test]
-    fn strategy_parse() {
-        assert_eq!(Strategy::parse("ocs", 4).unwrap(), Strategy::Ocs);
+    fn strategy_parse_accepts_every_spec_form() {
+        // every accepted spec of the grammar, bare and parameterized
+        assert_eq!(Strategy::parse("full").unwrap(), Strategy::Full);
+        assert_eq!(Strategy::parse("uniform").unwrap(), Strategy::Uniform);
+        assert_eq!(Strategy::parse("ocs").unwrap(), Strategy::Ocs);
         assert_eq!(
-            Strategy::parse("aocs", 7).unwrap(),
+            Strategy::parse("aocs").unwrap(),
+            Strategy::Aocs { j_max: DEFAULT_J_MAX }
+        );
+        assert_eq!(
+            Strategy::parse("aocs7").unwrap(),
             Strategy::Aocs { j_max: 7 }
         );
-        assert!(Strategy::parse("magic", 4).is_err());
+        assert_eq!(
+            Strategy::parse("caocs").unwrap(),
+            Strategy::Caocs { j_max: DEFAULT_J_MAX }
+        );
+        assert_eq!(
+            Strategy::parse("caocs2").unwrap(),
+            Strategy::Caocs { j_max: 2 }
+        );
+        assert_eq!(
+            Strategy::parse("clustered").unwrap(),
+            Strategy::Clustered { k: DEFAULT_CLUSTERS }
+        );
+        assert_eq!(
+            Strategy::parse("clustered3").unwrap(),
+            Strategy::Clustered { k: 3 }
+        );
+        assert_eq!(
+            Strategy::parse("cyclic").unwrap(),
+            Strategy::Cyclic { g: DEFAULT_GROUPS }
+        );
+        assert_eq!(
+            Strategy::parse("cyclic5").unwrap(),
+            Strategy::Cyclic { g: 5 }
+        );
+        // whitespace is trimmed (the sweep arm list splits on commas)
+        assert_eq!(Strategy::parse(" ocs ").unwrap(), Strategy::Ocs);
+    }
+
+    #[test]
+    fn strategy_parse_rejections_name_the_token() {
+        // unknown names — including suffixed unparameterized strategies
+        for bad in ["magic", "ocs3", "full2", "uniform0.5", ""] {
+            assert_eq!(
+                Strategy::parse(bad).unwrap_err(),
+                StrategySpecError::UnknownStrategy {
+                    token: bad.trim().to_string()
+                },
+                "{bad:?}"
+            );
+        }
+        // malformed parameter suffixes carry the whole offending token
+        assert_eq!(
+            Strategy::parse("aocsX").unwrap_err(),
+            StrategySpecError::BadJMax { token: "aocsX".into() }
+        );
+        assert_eq!(
+            Strategy::parse("caocs1.5").unwrap_err(),
+            StrategySpecError::BadJMax { token: "caocs1.5".into() }
+        );
+        assert_eq!(
+            Strategy::parse("clusteredX").unwrap_err(),
+            StrategySpecError::BadClusterCount { token: "clusteredX".into() }
+        );
+        assert_eq!(
+            Strategy::parse("clustered0").unwrap_err(),
+            StrategySpecError::BadClusterCount { token: "clustered0".into() }
+        );
+        assert_eq!(
+            Strategy::parse("cyclic0").unwrap_err(),
+            StrategySpecError::BadGroupCount { token: "cyclic0".into() }
+        );
+        assert_eq!(
+            Strategy::parse("cyclic-2").unwrap_err(),
+            StrategySpecError::BadGroupCount { token: "cyclic-2".into() }
+        );
+        // the Display form names the token (the CLI surfaces this)
+        let msg = Strategy::parse("clusteredX").unwrap_err().to_string();
+        assert!(msg.contains("clusteredX"), "{msg}");
+        let msg = Strategy::parse("gremlin").unwrap_err().to_string();
+        assert!(msg.contains("gremlin"), "{msg}");
+    }
+
+    #[test]
+    fn new_strategies_round_trip_through_json() {
+        for s in [
+            Strategy::Clustered { k: 3 },
+            Strategy::Cyclic { g: 5 },
+            Strategy::Caocs { j_max: 6 },
+        ] {
+            let mut c = sample();
+            c.strategy = s.clone();
+            let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(c2.strategy, s);
+            assert_eq!(c, c2);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_cluster_and_group_counts() {
+        let mut c = sample();
+        c.strategy = Strategy::Clustered { k: 0 };
+        assert!(c.validate().is_err());
+        c.strategy = Strategy::Cyclic { g: 0 };
+        assert!(c.validate().is_err());
+        c.strategy = Strategy::Cyclic { g: 1 };
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -56,7 +56,7 @@ pub mod registry;
 pub mod round;
 pub mod shard;
 
-pub use registry::{CohortPartition, Registry};
+pub use registry::{round_robin_slot, CohortPartition, Registry};
 pub use round::{Phase, RoundMachine};
 pub use shard::{ClientCompute, EngineRunner, LocalRunner, ParallelRunner};
 
@@ -295,6 +295,7 @@ impl Coordinator {
                 } else {
                     None
                 },
+                opts.compressor.as_ref(),
                 faults.as_mut(),
                 &mut meter,
                 &mut round_rng,

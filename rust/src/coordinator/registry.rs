@@ -22,6 +22,18 @@
 //! assert_eq!(part.clients.iter().map(Vec::len).sum::<usize>(), 4);
 //! ```
 
+/// The registry's ownership arithmetic (`client % groups`), factored
+/// out so *virtual* groupings can share the exact shard-map rule
+/// without carrying a registry: the clustered sampler seeds its
+/// centroids from `k` virtual round-robin shards through this function
+/// ([`crate::sampling::clustered`]), which keeps cluster trajectories
+/// independent of the physical shard count — the property that makes
+/// them bitwise stable across provisioning. `groups == 0` is treated
+/// as one group (the same clamp [`Registry::new`] applies).
+pub fn round_robin_slot(client: usize, groups: usize) -> usize {
+    client % groups.max(1)
+}
+
 /// Shard assignment over a fixed client pool.
 #[derive(Clone, Debug)]
 pub struct Registry {
@@ -63,7 +75,7 @@ impl Registry {
             "client {client} outside pool of {}",
             self.pool
         );
-        client % self.shards
+        round_robin_slot(client, self.shards)
     }
 
     /// Iterate `shard`'s pool clients in ascending order without
@@ -171,5 +183,16 @@ mod tests {
     #[should_panic(expected = "outside pool")]
     fn out_of_pool_client_rejected() {
         Registry::new(4, 2).shard_of(4);
+    }
+
+    #[test]
+    fn virtual_slots_match_physical_shards() {
+        // the factored-out arithmetic IS the registry rule: a virtual
+        // k-group map over any pool agrees with a k-shard registry
+        let r = Registry::new(40, 4);
+        for c in 0..40 {
+            assert_eq!(round_robin_slot(c, 4), r.shard_of(c));
+        }
+        assert_eq!(round_robin_slot(7, 0), 0, "0 groups clamps to 1");
     }
 }

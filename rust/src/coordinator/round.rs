@@ -30,13 +30,14 @@
 //! subtraction happens in the exact ring; with no faults the phase is a
 //! pass-through decode — bitwise identical to the pre-chaos pipeline.
 
-use crate::config::ExperimentConfig;
+use crate::compress::Compressor;
+use crate::config::{ExperimentConfig, Strategy};
 use crate::faults::{self, FaultCtx};
 use crate::fl::availability::{sample_round_cohort, Availability};
 use crate::fl::comm::BitMeter;
 use crate::fl::{EvalOutcome, LocalOutcome, TrainOptions};
 use crate::metrics::RoundRecord;
-use crate::sampling::{aocs, probability, variance, Decision, Sampler};
+use crate::sampling::{aocs, cyclic, probability, variance, Decision, Sampler};
 use crate::secure_agg::SecureAggregator;
 use crate::telemetry::{Counter, PhaseSpan, Telemetry};
 use crate::tensor;
@@ -57,6 +58,12 @@ const STRAGGLER_STREAM: u64 = 0x57A6_61E5;
 /// independent of the vector-masking round seed so the two secure
 /// exchanges of a round never share mask streams.
 const NEGOTIATION_STREAM: u64 = 0x4E60_71A7;
+
+/// Seed-stream label for the caocs compression *preview*: clients
+/// evaluate `‖C(U_i)‖` on a dedicated stream so the negotiation never
+/// consumes (or perturbs) the upload compressor's own draws — the
+/// transmitted payloads stay bitwise identical to an AOCS run.
+const CAOCS_STREAM: u64 = 0xCA0C_5EED;
 
 /// Integrity bound on a decoded upload's fold magnitudes: the
 /// fixed-point ring represents |x| < 2^39 per element, so a
@@ -203,6 +210,17 @@ impl RoundMachine {
         );
         self.outaged_shards = draw.outaged_shards;
         let mut cohort = draw.cohort;
+        // cyclic participation: only the round's scheduled group enters
+        // the cohort. Membership is a pure hash of (seed, client), so
+        // the restriction is O(cohort), never consumes RNG, and is
+        // identical across shard/worker provisioning. Applied before
+        // the announce count — unscheduled clients were never invited,
+        // which is different from being deadline-dropped.
+        if let Strategy::Cyclic { g } = cfg.strategy {
+            cohort.retain(|&c| {
+                cyclic::is_scheduled(cfg.seed, c, self.round, g)
+            });
+        }
         let announced = cohort.len();
         if let Some(policy) = deadline {
             if policy.miss_prob > 0.0 {
@@ -331,6 +349,7 @@ impl RoundMachine {
         sampler: &Sampler,
         cfg: &ExperimentConfig,
         sharded: Option<&mut dyn LocalRunner>,
+        compressor: Option<&Compressor>,
         faults: Option<&mut FaultCtx>,
         meter: &mut BitMeter,
         round_rng: &mut Rng,
@@ -340,6 +359,17 @@ impl RoundMachine {
         tel.span_begin(self.round, PhaseSpan::Negotiate);
         let m = cfg.budget.min(self.cohort.len());
         let decision = match (sampler, sharded) {
+            // compression-aware AOCS: the same Algorithm-2 solver, fed
+            // the norms of the payloads clients would actually send
+            // (`w_i‖C(U_i)‖`, previewed on a dedicated seed stream).
+            // Central-path only — the sharded sum-only negotiation
+            // stays AOCS over raw norms.
+            (Sampler::Caocs { j_max }, _) => {
+                let cnorms = self.compressed_norms(cfg, compressor);
+                Decision::from_aocs(aocs::aocs_probabilities(
+                    &cnorms, m, *j_max,
+                ))
+            }
             (Sampler::Aocs { j_max }, Some(runner)) => {
                 let groups: Vec<Vec<(u64, usize)>> = self
                     .shard_clients
@@ -444,7 +474,7 @@ impl RoundMachine {
                 }
                 decision
             }
-            _ => sampler.decide(&self.norms, m),
+            _ => sampler.decide_for_round(&self.cohort, &self.norms, m),
         };
         meter.add_negotiation(
             self.cohort.len(),
@@ -466,7 +496,14 @@ impl RoundMachine {
         // time (§Perf L3-2); full/uniform arms still pay one solve.
         self.alpha = if self.cohort.len() > m {
             match sampler {
-                Sampler::Ocs | Sampler::Aocs { .. } => {
+                // norm-adaptive arms: the decision probabilities are
+                // already (≈) the round's best-effort ones — report
+                // their realized variance ratio instead of solving
+                // Eq. (7) a second time
+                Sampler::Ocs
+                | Sampler::Aocs { .. }
+                | Sampler::Caocs { .. }
+                | Sampler::Clustered { .. } => {
                     let vu = variance::uniform_variance(&self.norms, m);
                     if vu <= 0.0 {
                         0.0
@@ -493,6 +530,39 @@ impl RoundMachine {
         self.decision = Some(decision);
         self.phase = Phase::SecureAggregate;
         tel.span_end(self.round, PhaseSpan::Negotiate);
+    }
+
+    /// Weighted norms of the *compressed* updates, `w_i‖C(U_i)‖` — the
+    /// caocs negotiation input. Each cohort client previews its upload
+    /// compression on the dedicated [`CAOCS_STREAM`] (forked per
+    /// (round, client), so the evaluation order can never matter and
+    /// the real upload compressor's stream is untouched). With no
+    /// compressor configured the preview is the identity and caocs
+    /// degrades to exactly AOCS.
+    fn compressed_norms(
+        &self,
+        cfg: &ExperimentConfig,
+        compressor: Option<&Compressor>,
+    ) -> Vec<f64> {
+        let Some(comp) = compressor else {
+            return self.norms.clone();
+        };
+        let stream = Rng::new(cfg.seed ^ CAOCS_STREAM)
+            .fork(self.round as u64);
+        let mut dense: Vec<f32> = Vec::new();
+        self.cohort
+            .iter()
+            .zip(&self.outcomes)
+            .zip(&self.weights)
+            .map(|((&c, o), &w)| {
+                let mut rng = stream.fork(c as u64);
+                let payload = comp.compress(&o.delta, &mut rng);
+                dense.clear();
+                dense.resize(o.delta.len(), 0.0);
+                payload.densify_into(&mut dense);
+                w * tensor::norm(&dense)
+            })
+            .collect()
     }
 
     /// (6) Participants upload `(w_i/p_i)·U_i`; shards fold their members
@@ -1080,6 +1150,7 @@ mod tests {
             &sampler,
             &c,
             None,
+            None,
             faults.as_deref_mut(),
             &mut meter,
             &mut round_rng,
@@ -1127,6 +1198,72 @@ mod tests {
         assert_eq!(x1, x4);
     }
 
+    /// Drive a round through Negotiate under `strategy` (single shard,
+    /// no compressor) and return the decision probabilities.
+    fn negotiated_probs(strategy: Strategy) -> Vec<f64> {
+        let mut c = cfg();
+        c.strategy = strategy;
+        let mut runner = FixedRunner { dim: 4, n: 12 };
+        let registry = Registry::new(12, 1);
+        let avail = Availability::AlwaysOn;
+        let sampler = Sampler::from_strategy(&c.strategy);
+        let mut meter = BitMeter::new();
+        let mut round_rng = Rng::new(c.seed).fork(0xF1).fork(0);
+        let x = runner.init_params(c.seed);
+        let mut tel = Telemetry::disabled();
+        let mut m = RoundMachine::new(0);
+        m.announce(&c, &avail, &registry, None, &mut round_rng, &mut tel);
+        m.local_compute(&mut runner, &x, &mut tel);
+        m.norm_report(&mut tel);
+        m.negotiate(
+            &sampler,
+            &c,
+            None,
+            None,
+            None,
+            &mut meter,
+            &mut round_rng,
+            &mut tel,
+        );
+        m.decision.clone().expect("negotiated").probs
+    }
+
+    #[test]
+    fn caocs_without_compressor_negotiates_exactly_as_aocs() {
+        // the preview is the identity when no compressor is configured,
+        // so the two strategies must be bitwise indistinguishable
+        let a = negotiated_probs(Strategy::Aocs { j_max: 4 });
+        let ca = negotiated_probs(Strategy::Caocs { j_max: 4 });
+        assert_eq!(a, ca);
+    }
+
+    #[test]
+    fn cyclic_announce_admits_exactly_the_scheduled_group() {
+        let g = 3usize;
+        let mut c = cfg();
+        c.strategy = Strategy::Cyclic { g };
+        c.cohort = 12; // cohort == pool + always-on: no uniform draw
+        let registry = Registry::new(12, 2);
+        let avail = Availability::AlwaysOn;
+        let mut tel = Telemetry::disabled();
+        let mut seen = vec![0usize; 12];
+        for round in 0..g {
+            let mut rng = Rng::new(c.seed).fork(round as u64);
+            let mut m = RoundMachine::new(round);
+            m.announce(&c, &avail, &registry, None, &mut rng, &mut tel);
+            for &client in &m.cohort {
+                assert_eq!(
+                    cyclic::group_of(c.seed, client, g),
+                    cyclic::active_group(round, g),
+                    "client {client} admitted off-schedule in round {round}"
+                );
+                seen[client] += 1;
+            }
+        }
+        // conservation: one full cycle visits every client exactly once
+        assert_eq!(seen, vec![1usize; 12], "{seen:?}");
+    }
+
     #[test]
     #[should_panic(expected = "out of order")]
     fn out_of_order_phase_panics() {
@@ -1139,6 +1276,7 @@ mod tests {
         m.negotiate(
             &sampler,
             &c,
+            None,
             None,
             None,
             &mut meter,
@@ -1169,6 +1307,7 @@ mod tests {
         m.negotiate(
             &sampler,
             c,
+            None,
             None,
             Some(ctx),
             &mut meter,

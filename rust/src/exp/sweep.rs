@@ -175,16 +175,20 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
-    /// The CI smoke grid: {full, uniform, aocs} × {none} ×
-    /// {alwayson, bern0.7} × {none, crash0.2+corrupt0.05} × {40}, one
-    /// seed, 6 rounds — seconds of work, every layer (the chaos layer
-    /// included) exercised.
+    /// The CI smoke grid: {full, uniform, aocs, caocs, clustered,
+    /// cyclic} × {none} × {alwayson, bern0.7} ×
+    /// {none, crash0.2+corrupt0.05} × {40}, one seed, 6 rounds —
+    /// seconds of work, every layer (the chaos layer and the whole
+    /// strategy zoo included) exercised.
     pub fn quick() -> SweepSpec {
         SweepSpec {
             strategies: vec![
                 Strategy::Full,
                 Strategy::Uniform,
                 Strategy::Aocs { j_max: 4 },
+                Strategy::Caocs { j_max: 4 },
+                Strategy::Clustered { k: 2 },
+                Strategy::Cyclic { g: 2 },
             ],
             compressors: vec![Compressor::None],
             availabilities: vec![
@@ -204,7 +208,7 @@ impl SweepSpec {
         }
     }
 
-    /// The default full grid: 4 strategies × {none, randk64} ×
+    /// The default full grid: 7 strategies × {none, randk64} ×
     /// {alwayson, bern0.7, diurnal0.8} × {60, 240}, 3 seeds, 30 rounds.
     pub fn default_grid() -> SweepSpec {
         SweepSpec {
@@ -213,6 +217,9 @@ impl SweepSpec {
                 Strategy::Uniform,
                 Strategy::Ocs,
                 Strategy::Aocs { j_max: 4 },
+                Strategy::Caocs { j_max: 4 },
+                Strategy::Clustered { k: 4 },
+                Strategy::Cyclic { g: 4 },
             ],
             compressors: vec![
                 Compressor::None,
@@ -776,10 +783,13 @@ mod tests {
     #[test]
     fn quick_spec_covers_the_acceptance_arms() {
         let spec = SweepSpec::quick();
-        assert_eq!(spec.arm_count(), 12);
+        assert_eq!(spec.arm_count(), 24);
         let names: Vec<&str> =
             spec.strategies.iter().map(Strategy::name).collect();
-        assert_eq!(names, vec!["full", "uniform", "aocs"]);
+        assert_eq!(
+            names,
+            vec!["full", "uniform", "aocs", "caocs", "clustered", "cyclic"]
+        );
         assert!(spec
             .availabilities
             .iter()
@@ -801,7 +811,7 @@ mod tests {
     #[test]
     fn default_grid_validates() {
         let spec = SweepSpec::default_grid();
-        assert_eq!(spec.arm_count(), 4 * 2 * 3 * 2);
+        assert_eq!(spec.arm_count(), 7 * 2 * 3 * 2);
         assert_eq!(spec.faults, vec![FaultArm::none()]);
         validate_grid(&spec);
     }

@@ -220,7 +220,7 @@ fn cmd_train(args: &[String]) -> i32 {
     let cli = Cli::new("fedsamp train", "run one federated experiment")
         .opt("config", None, "JSON config file (see config module schema)")
         .opt("preset", None, "preset: femnist<V>, shakespeare<N>, cifar")
-        .opt("strategy", Some("aocs"), "full|uniform|ocs|aocs")
+        .opt("strategy", Some("aocs"), "full|uniform|ocs|aocs[<j>]|caocs[<j>]|clustered[<k>]|cyclic[<g>]")
         .opt("rounds", None, "override communication rounds")
         .opt("m", None, "override expected budget m")
         .opt("seed", Some("1"), "RNG seed")
@@ -266,7 +266,7 @@ fn cmd_train(args: &[String]) -> i32 {
         }
     };
 
-    let strategy = match Strategy::parse(&p.str("strategy"), 4) {
+    let strategy = match Strategy::parse(&p.str("strategy")) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -379,7 +379,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         "run the sharded round coordinator over the sim engine",
     )
     .opt("preset", Some("femnist1"), "preset: femnist<V>, shakespeare<N>, cifar")
-    .opt("strategy", Some("aocs"), "full|uniform|ocs|aocs")
+    .opt("strategy", Some("aocs"), "full|uniform|ocs|aocs[<j>]|caocs[<j>]|clustered[<k>]|cyclic[<g>]")
     .opt("rounds", None, "override communication rounds")
     .opt("m", None, "override expected budget m")
     .opt("seed", Some("1"), "RNG seed")
@@ -418,7 +418,7 @@ fn cmd_coordinate(args: &[String]) -> i32 {
         Some(c) => c,
         None => return 2,
     };
-    let strategy = match Strategy::parse(&p.str("strategy"), 4) {
+    let strategy = match Strategy::parse(&p.str("strategy")) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -596,7 +596,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
     .opt(
         "strategies",
         Some("full,uniform,ocs,aocs"),
-        "grid: comma list of full|uniform|ocs|aocs",
+        "grid: comma list of full|uniform|ocs|aocs[<j>]|caocs[<j>]|clustered[<k>]|cyclic[<g>]",
     )
     .opt(
         "compressors",
@@ -663,7 +663,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
             let mut strategies = Vec::new();
             for s in p.str("strategies").split(',').filter(|s| !s.is_empty())
             {
-                match Strategy::parse(s.trim(), 4) {
+                match Strategy::parse(s.trim()) {
                     Ok(s) => strategies.push(s),
                     Err(e) => {
                         eprintln!("{e}");

@@ -1,0 +1,325 @@
+//! Clustered client sampling (arXiv 2105.05883): low-variance cohorts
+//! by stratifying the draw over clusters of similar clients.
+//!
+//! Clients are grouped by their **update-norm history** — an EWMA of
+//! the weighted norms `ũ_i = w_i‖U_i‖` the master already observes
+//! every round ([`NormHistory`], O(1) scalars per seen client) — with
+//! a deterministic 1-D k-means: a fixed number of Lloyd iterations, no
+//! RNG, distance ties to the lower centroid index. Centroids are
+//! seeded from the **shard map**: member `i` belongs to virtual
+//! round-robin shard [`round_robin_slot`]`(client_i, k)` (the
+//! registry's exact ownership arithmetic over `k` *virtual* shards),
+//! and centroid `j` starts at the ((2j+1)/2k)-quantile of shard `j`'s
+//! feature values. Round-robin shards are representative samples of
+//! the pool, so striding the quantile across shards spreads the
+//! initial centroids over the feature range; using *virtual* shards —
+//! not the physical shard count — is what keeps cluster trajectories
+//! bitwise identical across deployment provisioning (the §13
+//! determinism contract).
+//!
+//! The draw itself stays independent Bernoulli: cluster `c` with
+//! current mass `S_c = Σ_{i∈c} ũ_i` receives quota `m·S_c/S`, spread
+//! uniformly over its `n_c` members — `p_i = min(m·S_c/(S·n_c), 1)`.
+//! For within-cluster-homogeneous norms this gives estimator variance
+//! `S²/m − Σũ²` ≤ uniform's `(n/m)Σũ² − Σũ²` (Cauchy–Schwarz, equality
+//! iff all norms equal) — the paper's representativity claim, pinned
+//! statistically in `tests/strategy_properties.rs`. Zero-mass clusters
+//! get `p = 0` (their members' updates are zero — the OCS convention),
+//! and a zero total mass degrades to the uniform `m/n` draw.
+
+use crate::coordinator::registry::round_robin_slot;
+use std::collections::HashMap;
+
+/// EWMA smoothing factor: weight on the *new* observation. 0.5 keeps
+/// enough memory to stabilize clusters while tracking norm decay.
+pub const HISTORY_DECAY: f64 = 0.5;
+
+/// Fixed Lloyd iteration count — enough for 1-D k-means to settle on
+/// the profiles a cohort produces; fixed (not convergence-tested) so
+/// the work per round is deterministic and bounded.
+pub const LLOYD_ITERS: usize = 8;
+
+/// Per-client EWMA of observed weighted update norms — the clustering
+/// feature. O(1) scalars per client ever seen in a cohort.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NormHistory {
+    ewma: HashMap<usize, f64>,
+}
+
+impl NormHistory {
+    pub fn new() -> NormHistory {
+        NormHistory::default()
+    }
+
+    /// Fold this round's observed norm into `client`'s EWMA and return
+    /// the updated feature value (first observation seeds the EWMA).
+    pub fn observe(&mut self, client: usize, norm: f64) -> f64 {
+        let f = match self.ewma.get(&client) {
+            Some(&prev) => {
+                prev + HISTORY_DECAY * (norm - prev)
+            }
+            None => norm,
+        };
+        self.ewma.insert(client, f);
+        f
+    }
+
+    /// Clients tracked so far (test/diagnostic surface).
+    pub fn len(&self) -> usize {
+        self.ewma.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ewma.is_empty()
+    }
+}
+
+/// One round's clustering outcome (assignments exposed for tests and
+/// the §13 docs' worked examples).
+#[derive(Clone, Debug)]
+pub struct ClusteredPlan {
+    /// Cluster index per cohort position.
+    pub assignment: Vec<usize>,
+    /// Final centroid per cluster (feature space).
+    pub centroids: Vec<f64>,
+    /// Inclusion probability per cohort position.
+    pub probs: Vec<f64>,
+}
+
+/// Index of the q=(2j+1)/(2k) quantile in a sorted slice of `len`
+/// elements (integer arithmetic — deterministic, no float rounding).
+fn quantile_idx(len: usize, j: usize, k: usize) -> usize {
+    debug_assert!(len > 0 && k > 0 && j < k);
+    ((len - 1) * (2 * j + 1)) / (2 * k)
+}
+
+/// Shard-map-seeded centroids: centroid `j` = the strided quantile of
+/// virtual shard `j`'s sorted feature values (whole-cohort fallback
+/// when the virtual shard has no cohort member this round).
+fn seed_centroids(cohort: &[usize], features: &[f64], kk: usize) -> Vec<f64> {
+    let mut all: Vec<f64> = features.to_vec();
+    all.sort_by(f64::total_cmp);
+    let mut centroids = Vec::with_capacity(kk);
+    for j in 0..kk {
+        let mut shard: Vec<f64> = cohort
+            .iter()
+            .zip(features)
+            .filter(|(&c, _)| round_robin_slot(c, kk) == j)
+            .map(|(_, &f)| f)
+            .collect();
+        let pool = if shard.is_empty() {
+            &all
+        } else {
+            shard.sort_by(f64::total_cmp);
+            &shard
+        };
+        centroids.push(pool[quantile_idx(pool.len(), j, kk)]);
+    }
+    centroids
+}
+
+/// Nearest centroid by absolute distance, ties to the lower index —
+/// the deterministic assignment rule.
+fn nearest(centroids: &[f64], f: f64) -> usize {
+    let mut best = 0usize;
+    let mut best_d = (f - centroids[0]).abs();
+    for (j, &c) in centroids.iter().enumerate().skip(1) {
+        let d = (f - c).abs();
+        if d < best_d {
+            best = j;
+            best_d = d;
+        }
+    }
+    best
+}
+
+/// Cluster the cohort and compute this round's inclusion
+/// probabilities.
+///
+/// * `cohort` — global client ids in cohort order (the shard-map seed
+///   input).
+/// * `features` — clustering feature per cohort position (the
+///   [`NormHistory`] EWMAs).
+/// * `norms` — this round's weighted norms `ũ_i` (the quota masses).
+/// * `k` — requested cluster count (clamped to the cohort size).
+/// * `m` — expected communication budget.
+///
+/// Pure and deterministic: same inputs, same plan, bit for bit.
+pub fn clustered_probabilities(
+    cohort: &[usize],
+    features: &[f64],
+    norms: &[f64],
+    k: usize,
+    m: usize,
+) -> ClusteredPlan {
+    let n = cohort.len();
+    assert!(n > 0, "empty cohort");
+    assert_eq!(features.len(), n, "feature arity mismatch");
+    assert_eq!(norms.len(), n, "norm arity mismatch");
+    assert!(k >= 1, "clustered needs k >= 1");
+    assert!(
+        norms.iter().all(|u| u.is_finite() && *u >= 0.0),
+        "norms must be finite and non-negative"
+    );
+    let kk = k.min(n);
+    let mut centroids = seed_centroids(cohort, features, kk);
+    let mut assignment: Vec<usize> = vec![0; n];
+    for _ in 0..LLOYD_ITERS {
+        for (a, &f) in assignment.iter_mut().zip(features) {
+            *a = nearest(&centroids, f);
+        }
+        let mut sums = vec![0.0f64; kk];
+        let mut counts = vec![0usize; kk];
+        for (&a, &f) in assignment.iter().zip(features) {
+            sums[a] += f;
+            counts[a] += 1;
+        }
+        for j in 0..kk {
+            if counts[j] > 0 {
+                // empty clusters keep their centroid (they may capture
+                // members again as others move)
+                centroids[j] = sums[j] / counts[j] as f64;
+            }
+        }
+    }
+    // final assignment against the settled centroids
+    for (a, &f) in assignment.iter_mut().zip(features) {
+        *a = nearest(&centroids, f);
+    }
+
+    // mass-proportional quotas over this round's actual norms
+    let total: f64 = norms.iter().sum();
+    let uniform = (m as f64 / n as f64).min(1.0);
+    let probs = if total <= 0.0 {
+        // no signal at all: degrade to the uniform draw
+        vec![uniform; n]
+    } else {
+        let mut mass = vec![0.0f64; kk];
+        let mut size = vec![0usize; kk];
+        for (&a, &u) in assignment.iter().zip(norms) {
+            mass[a] += u;
+            size[a] += 1;
+        }
+        assignment
+            .iter()
+            .map(|&a| {
+                if mass[a] <= 0.0 {
+                    // zero-mass cluster: its members' updates are all
+                    // zero, so spending budget there is pure waste
+                    // (exactly OCS's p_i = m·0/S = 0 for ũ_i = 0)
+                    0.0
+                } else {
+                    (m as f64 * mass[a] / (total * size[a] as f64)).min(1.0)
+                }
+            })
+            .collect()
+    };
+    ClusteredPlan { assignment, centroids, probs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::probability::expected_size;
+    use crate::sampling::variance::{sampling_variance, uniform_variance};
+
+    /// Three well-separated norm bands assigned by id range, 24
+    /// clients — the §13 worked profile.
+    fn banded() -> (Vec<usize>, Vec<f64>) {
+        let cohort: Vec<usize> = (0..24).collect();
+        let feats: Vec<f64> = cohort
+            .iter()
+            .map(|&c| match c {
+                0..=7 => 0.2 + 0.01 * c as f64,
+                8..=15 => 2.0 + 0.01 * c as f64,
+                _ => 8.0 + 0.01 * c as f64,
+            })
+            .collect();
+        (cohort, feats)
+    }
+
+    #[test]
+    fn kmeans_recovers_separated_bands() {
+        let (cohort, feats) = banded();
+        let plan = clustered_probabilities(&cohort, &feats, &feats, 3, 6);
+        // every band lands in one cluster
+        for band in [0..8usize, 8..16, 16..24] {
+            let first = plan.assignment[band.start];
+            for i in band {
+                assert_eq!(plan.assignment[i], first, "client {i}");
+            }
+        }
+        // and the three bands occupy three distinct clusters
+        let mut reps: Vec<usize> =
+            vec![plan.assignment[0], plan.assignment[8], plan.assignment[16]];
+        reps.dedup();
+        assert_eq!(reps.len(), 3, "{:?}", plan.assignment);
+    }
+
+    #[test]
+    fn quota_probs_are_proper_and_budgeted() {
+        let (cohort, feats) = banded();
+        let m = 6;
+        let plan = clustered_probabilities(&cohort, &feats, &feats, 3, m);
+        for (&p, &u) in plan.probs.iter().zip(&feats) {
+            assert!((0.0..=1.0).contains(&p));
+            assert!(u <= 0.0 || p > 0.0, "positive norm must keep p > 0");
+        }
+        // caps only ever *reduce* the expected size below m
+        assert!(expected_size(&plan.probs) <= m as f64 + 1e-9);
+        assert!(expected_size(&plan.probs) > m as f64 * 0.5);
+    }
+
+    #[test]
+    fn clustered_variance_beats_uniform_on_heterogeneous_bands() {
+        let (cohort, feats) = banded();
+        let m = 6;
+        let plan = clustered_probabilities(&cohort, &feats, &feats, 3, m);
+        let v_clu = sampling_variance(&feats, &plan.probs);
+        let v_uni = uniform_variance(&feats, m);
+        assert!(
+            v_clu < v_uni,
+            "clustered {v_clu} must beat uniform {v_uni} on bands"
+        );
+    }
+
+    #[test]
+    fn zero_mass_degrades_to_uniform() {
+        let cohort: Vec<usize> = (0..8).collect();
+        let zeros = vec![0.0; 8];
+        let plan = clustered_probabilities(&cohort, &zeros, &zeros, 3, 4);
+        assert_eq!(plan.probs, vec![0.5; 8]);
+    }
+
+    #[test]
+    fn cluster_seeding_ignores_physical_shard_count() {
+        // the plan is a pure function of (cohort, features, norms, k,
+        // m) — no registry in sight — so two deployments of the same
+        // experiment can never diverge here
+        let (cohort, feats) = banded();
+        let a = clustered_probabilities(&cohort, &feats, &feats, 3, 6);
+        let b = clustered_probabilities(&cohort, &feats, &feats, 3, 6);
+        assert_eq!(a.probs, b.probs);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn more_clusters_than_clients_is_clamped() {
+        let cohort = vec![3usize, 7];
+        let feats = vec![1.0, 5.0];
+        let plan = clustered_probabilities(&cohort, &feats, &feats, 9, 1);
+        assert_eq!(plan.centroids.len(), 2);
+        assert_eq!(plan.probs.len(), 2);
+    }
+
+    #[test]
+    fn history_ewma_tracks_and_seeds() {
+        let mut h = NormHistory::new();
+        assert_eq!(h.observe(4, 2.0), 2.0, "first observation seeds");
+        let f = h.observe(4, 4.0);
+        assert!((f - 3.0).abs() < 1e-12, "0.5-EWMA of 2 then 4 is 3: {f}");
+        assert_eq!(h.len(), 1);
+        h.observe(9, 1.0);
+        assert_eq!(h.len(), 2);
+    }
+}

@@ -1,10 +1,14 @@
 //! Client sampling schemes — the paper's contribution (Section 2).
 //!
-//! [`Sampler`] unifies the four strategies compared in the evaluation:
+//! [`Sampler`] unifies the strategy zoo compared in the evaluation:
 //! full participation, independent uniform sampling, exact OCS
-//! (Algorithm 1 / Eq. 7) and approximate OCS (Algorithm 2). All of them
-//! consume the per-round weighted update norms `ũ_i = w_i‖U_i^k‖` and
-//! produce inclusion probabilities for an independent sampling.
+//! (Algorithm 1 / Eq. 7), approximate OCS (Algorithm 2), and three
+//! DESIGN.md §13 extensions — [`clustered`] stratified draws over
+//! norm-history clusters, [`cyclic`] regularized group participation,
+//! and compression-aware AOCS (`caocs`, the Algorithm-2 solver fed the
+//! *compressed* payload norms `w_i‖C(U_i^k)‖`). All of them consume
+//! per-round weighted update norms and produce inclusion probabilities
+//! for an independent sampling.
 //!
 //! The supporting modules: [`ocs`] solves Eq. (7) exactly, [`aocs`]
 //! reaches the same fixed point through sum-only exchanges (including
@@ -23,11 +27,15 @@
 //! ```
 
 pub mod aocs;
+pub mod clustered;
+pub mod cyclic;
 pub mod ocs;
 pub mod probability;
 pub mod variance;
 
 use crate::config::Strategy;
+use clustered::NormHistory;
+use std::cell::RefCell;
 
 /// Per-round sampling decision handed to the FL round driver.
 #[derive(Clone, Debug)]
@@ -64,7 +72,29 @@ pub enum Sampler {
     Full,
     Uniform,
     Ocs,
-    Aocs { j_max: usize },
+    Aocs {
+        j_max: usize,
+    },
+    /// Compression-aware AOCS: the same Algorithm-2 solver, fed the
+    /// norms of the *compressed* payloads the clients would actually
+    /// transmit (the coordinator resolves those norms; the sampler
+    /// math is identical to [`Sampler::Aocs`]).
+    Caocs {
+        j_max: usize,
+    },
+    /// Stratified draw over norm-history clusters. The EWMA history is
+    /// interior state behind a [`RefCell`] so observing a round's
+    /// norms stays compatible with the `&self` decide surface.
+    Clustered {
+        k: usize,
+        history: RefCell<NormHistory>,
+    },
+    /// Regularized cyclic participation: the coordinator restricts the
+    /// cohort to the scheduled group at Announce; within the group the
+    /// draw is uniform.
+    Cyclic {
+        g: usize,
+    },
 }
 
 impl Sampler {
@@ -74,6 +104,12 @@ impl Sampler {
             Strategy::Uniform => Sampler::Uniform,
             Strategy::Ocs => Sampler::Ocs,
             Strategy::Aocs { j_max } => Sampler::Aocs { j_max: *j_max },
+            Strategy::Caocs { j_max } => Sampler::Caocs { j_max: *j_max },
+            Strategy::Clustered { k } => Sampler::Clustered {
+                k: *k,
+                history: RefCell::new(NormHistory::new()),
+            },
+            Strategy::Cyclic { g } => Sampler::Cyclic { g: *g },
         }
     }
 
@@ -83,6 +119,9 @@ impl Sampler {
             Sampler::Uniform => "uniform",
             Sampler::Ocs => "ocs",
             Sampler::Aocs { .. } => "aocs",
+            Sampler::Caocs { .. } => "caocs",
+            Sampler::Clustered { .. } => "clustered",
+            Sampler::Cyclic { .. } => "cyclic",
         }
     }
 
@@ -115,6 +154,71 @@ impl Sampler {
             Sampler::Aocs { j_max } => Decision::from_aocs(
                 aocs::aocs_probabilities(norms, m.min(n), *j_max),
             ),
+            // caocs is AOCS over whatever norms the caller supplies;
+            // the coordinator substitutes compressed-payload norms
+            // (with no compressor configured the two coincide), and
+            // the Remark-3 accounting is identical
+            Sampler::Caocs { j_max } => Decision::from_aocs(
+                aocs::aocs_probabilities(norms, m.min(n), *j_max),
+            ),
+            // within the scheduled group (the cohort the coordinator
+            // retained at Announce) cyclic draws uniformly — the m/n
+            // budget contract, with full group participation back
+            // whenever m covers the group
+            Sampler::Cyclic { .. } => Decision {
+                probs: vec![(m as f64 / n as f64).min(1.0); n],
+                extra_uplink_floats_per_client: 0,
+                negotiation_rounds: 0,
+            },
+            // without cohort ids (theory-tool path), treat positions
+            // as ids — decide_for_round carries the real ids
+            Sampler::Clustered { .. } => {
+                let ids: Vec<usize> = (0..n).collect();
+                self.decide_for_round(&ids, norms, m)
+            }
+        }
+    }
+
+    /// [`Sampler::decide`] with the cohort's global client ids in
+    /// scope — the entry point the coordinator uses. Only the
+    /// clustered strategy needs the ids (its norm history and virtual
+    /// shard seeding are keyed by client, not cohort position); every
+    /// other strategy falls through to [`Sampler::decide`].
+    pub fn decide_for_round(
+        &self,
+        cohort: &[usize],
+        norms: &[f64],
+        m: usize,
+    ) -> Decision {
+        match self {
+            Sampler::Clustered { k, history } => {
+                let n = norms.len();
+                assert!(n > 0, "empty cohort");
+                assert_eq!(cohort.len(), n, "cohort/norm arity mismatch");
+                let features: Vec<f64> = {
+                    let mut h = history.borrow_mut();
+                    cohort
+                        .iter()
+                        .zip(norms)
+                        .map(|(&c, &u)| h.observe(c, u))
+                        .collect()
+                };
+                let plan = clustered::clustered_probabilities(
+                    cohort,
+                    &features,
+                    norms,
+                    *k,
+                    m.min(n),
+                );
+                Decision {
+                    probs: plan.probs,
+                    // like exact OCS: one norm float uplinked per
+                    // client, one negotiation round to return probs
+                    extra_uplink_floats_per_client: 1,
+                    negotiation_rounds: 1,
+                }
+            }
+            _ => self.decide(norms, m),
         }
     }
 }
@@ -142,9 +246,74 @@ mod tests {
             Strategy::Uniform,
             Strategy::Ocs,
             Strategy::Aocs { j_max: 4 },
+            Strategy::Caocs { j_max: 4 },
+            Strategy::Clustered { k: 3 },
+            Strategy::Cyclic { g: 2 },
         ] {
             let smp = Sampler::from_strategy(&s);
             assert_eq!(smp.name(), s.name());
+        }
+    }
+
+    #[test]
+    fn caocs_matches_aocs_on_identical_norms() {
+        // the solver is shared; only the coordinator's norm source
+        // differs, so on equal inputs the decisions are bitwise equal
+        let norms = [3.0, 1.0, 0.5, 2.0, 0.0, 4.0];
+        let a = Sampler::Aocs { j_max: 4 }.decide(&norms, 3);
+        let c = Sampler::Caocs { j_max: 4 }.decide(&norms, 3);
+        assert_eq!(a.probs, c.probs);
+        assert_eq!(
+            a.extra_uplink_floats_per_client,
+            c.extra_uplink_floats_per_client
+        );
+        assert_eq!(a.negotiation_rounds, c.negotiation_rounds);
+    }
+
+    #[test]
+    fn cyclic_draws_uniform_within_the_scheduled_group() {
+        let norms = [9.0, 1.0, 4.0, 2.0];
+        let d = Sampler::Cyclic { g: 3 }.decide(&norms, 2);
+        assert_eq!(d.probs, vec![0.5; 4]);
+        assert_eq!(d.extra_uplink_floats_per_client, 0);
+        assert_eq!(d.negotiation_rounds, 0);
+        // budget beyond the group size → everyone in the group runs
+        let full = Sampler::Cyclic { g: 3 }.decide(&norms, 9);
+        assert_eq!(full.probs, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn clustered_decides_through_ids_and_charges_like_ocs() {
+        let smp = Sampler::from_strategy(&Strategy::Clustered { k: 2 });
+        let cohort = [10usize, 11, 12, 13];
+        let norms = [0.1, 0.1, 5.0, 5.0];
+        let d = smp.decide_for_round(&cohort, &norms, 2);
+        assert_eq!(d.probs.len(), 4);
+        assert_eq!(d.extra_uplink_floats_per_client, 1);
+        assert_eq!(d.negotiation_rounds, 1);
+        // heavy band gets at least the light band's probability
+        assert!(d.probs[2] >= d.probs[0]);
+        // id-less path is the identity-cohort special case
+        let d2 = Sampler::from_strategy(&Strategy::Clustered { k: 2 })
+            .decide(&norms, 2);
+        assert_eq!(d2.probs.len(), 4);
+    }
+
+    #[test]
+    fn non_clustered_decide_for_round_ignores_ids() {
+        let norms = [5.0, 1.0, 1.0, 1.0];
+        let cohort = [40usize, 2, 17, 33];
+        for smp in [
+            Sampler::Full,
+            Sampler::Uniform,
+            Sampler::Ocs,
+            Sampler::Aocs { j_max: 4 },
+            Sampler::Caocs { j_max: 4 },
+            Sampler::Cyclic { g: 2 },
+        ] {
+            let a = smp.decide_for_round(&cohort, &norms, 2);
+            let b = smp.decide(&norms, 2);
+            assert_eq!(a.probs, b.probs, "{}", smp.name());
         }
     }
 

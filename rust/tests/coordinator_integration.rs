@@ -447,6 +447,7 @@ fn outage_and_deadline_drop_accounting_is_consistent() {
             &c,
             None,
             None,
+            None,
             &mut meter,
             &mut round_rng,
             &mut tel,
